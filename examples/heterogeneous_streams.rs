@@ -1,0 +1,61 @@
+//! Heterogeneous streams: ScaDLES vs conventional DDL, side by side.
+//!
+//! ```sh
+//! cargo run --release --offline --example heterogeneous_streams [preset] [rounds]
+//! ```
+//!
+//! Reproduces the Fig. 7 comparison on one preset (default S1): the same
+//! 6-device cluster trains with (a) ScaDLES's stream-proportional batches +
+//! weighted aggregation + linear LR scaling and (b) DDL's fixed b=64 with
+//! straggler waits — then prints per-system wall-clock, throughput, buffer
+//! growth and the time-to-accuracy speedup.
+
+use scadles::config::{ExperimentConfig, StreamPreset, TrainMode};
+use scadles::coordinator::Trainer;
+
+fn parse_preset(s: &str) -> StreamPreset {
+    match s.to_lowercase().as_str() {
+        "s2" => StreamPreset::S2,
+        "s1p" => StreamPreset::S1Prime,
+        "s2p" => StreamPreset::S2Prime,
+        _ => StreamPreset::S1,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = parse_preset(args.first().map(String::as_str).unwrap_or("s1"));
+    let rounds: usize = args.get(1).and_then(|r| r.parse().ok()).unwrap_or(20);
+
+    let mut outs = Vec::new();
+    for mode in [TrainMode::Scadles, TrainMode::Ddl] {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(6)
+            .rounds(rounds)
+            .preset(preset)
+            .mode(mode)
+            .eval_every(5)
+            .echo_every(5)
+            .build()?;
+        eprintln!("\n=== {} on {} ===", mode.name(), preset.name());
+        let mut t = Trainer::from_config(&cfg)?;
+        eprintln!("rates: {:?}", t.rates().iter().map(|r| r.round()).collect::<Vec<_>>());
+        outs.push(t.run()?);
+    }
+
+    let (s, d) = (&outs[0], &outs[1]);
+    println!("\n{:<22} {:>12} {:>12}", "metric", "scadles", "ddl");
+    println!("{:<22} {:>12.1} {:>12.1}", "wall_clock (s)", s.report.wall_clock_s, d.report.wall_clock_s);
+    let tput = |o: &scadles::coordinator::TrainerOutput| {
+        o.logs.rounds().iter().map(|r| r.global_batch).sum::<usize>() as f64
+            / o.report.wall_clock_s
+    };
+    println!("{:<22} {:>12.0} {:>12.0}", "samples/s", tput(s), tput(d));
+    println!("{:<22} {:>11.1}% {:>11.1}%", "best top5",
+             100.0 * s.report.best_test_top5, 100.0 * d.report.best_test_top5);
+    println!("{:<22} {:>12} {:>12}", "final buffer (smp)",
+             s.report.buffer.final_samples, d.report.buffer.final_samples);
+    println!("{:<22} {:>12.2}x {:>12}", "speedup to target",
+             s.report.speedup_over(&d.report), "1.00x");
+    Ok(())
+}

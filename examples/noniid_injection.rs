@@ -1,0 +1,58 @@
+//! Non-IID streams + randomized data injection (paper §IV, Figs. 9–10).
+//!
+//! ```sh
+//! cargo run --release --offline --example noniid_injection [rounds]
+//! ```
+//!
+//! Ten devices each stream a SINGLE class (the paper's CIFAR10 skew from
+//! Table III). We train three ways — IID baseline, non-IID without help,
+//! and non-IID with (α=0.25, β=0.25) data injection — and report accuracy
+//! plus the injection network overhead.
+
+use scadles::config::{ExperimentConfig, InjectionConfig, StreamPreset, TrainMode};
+use scadles::coordinator::Trainer;
+use scadles::data::LabelMap;
+
+fn main() -> anyhow::Result<()> {
+    let rounds: usize = std::env::args()
+        .nth(1)
+        .and_then(|r| r.parse().ok())
+        .unwrap_or(25);
+
+    let cases: Vec<(&str, LabelMap, Option<InjectionConfig>)> = vec![
+        ("iid", LabelMap::Iid, None),
+        ("non-iid", LabelMap::NonIid { labels_per_device: 1 }, None),
+        (
+            "non-iid + inject(.25,.25)",
+            LabelMap::NonIid { labels_per_device: 1 },
+            Some(InjectionConfig::new(0.25, 0.25)),
+        ),
+    ];
+
+    println!("{:<28} {:>10} {:>10} {:>14}", "setting", "top1", "top5", "KB/iter moved");
+    for (name, map, inj) in cases {
+        let mut b = ExperimentConfig::builder("resnet_tiny_c10")
+            .devices(10)
+            .rounds(rounds)
+            .preset(StreamPreset::S1Prime)
+            .mode(TrainMode::Scadles)
+            .label_map(map)
+            .eval_every(5)
+            .echo_every(10);
+        if let Some(i) = inj {
+            b = b.injection(i);
+        }
+        let cfg = b.build()?;
+        let out = Trainer::from_config(&cfg)?.run()?;
+        let kb_per_iter = out.report.injection_bytes as f64 / 1024.0 / rounds as f64;
+        println!(
+            "{:<28} {:>9.1}% {:>9.1}% {:>14.0}",
+            name,
+            100.0 * out.report.final_test_top1,
+            100.0 * out.report.best_test_top5,
+            kb_per_iter
+        );
+    }
+    println!("\n(paper: non-IID degrades sharply; injection recovers most of it\n at 150–2000 KB/iteration of overhead)");
+    Ok(())
+}

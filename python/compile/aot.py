@@ -1,0 +1,185 @@
+"""AOT compiler: lower the L2/L1 JAX graphs to HLO-text artifacts.
+
+This is the ONLY place Python touches the pipeline; it runs once at build
+time (`make artifacts`) and emits, per model:
+
+  train_step_{model}_b{B}.hlo.txt   for every batch bucket B
+  eval_step_{model}_b{Bmax}.hlo.txt (one bucket; eval batches are padded)
+  update_{model}.hlo.txt            fused momentum-SGD parameter update
+  wagg_{model}_n{N}.hlo.txt         Pallas weighted aggregation, N devices
+  topk_{model}.hlo.txt              Pallas top-k mask + compression stats
+  {model}.init.bin                  raw little-endian f32 initial params
+
+plus a single `manifest.json` describing shapes/buckets so the Rust
+runtime (rust/src/runtime/artifact.rs) can load everything without
+reparsing Python.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.topk import topk_mask_stats
+from .kernels.wagg import weighted_aggregate
+
+DEFAULT_BUCKETS = [8, 16, 32, 64, 128, 256]
+#: wagg/topk artifacts run on gradients padded to a multiple of this, so
+#: the Pallas grid gets full-width tiles regardless of the model's exact
+#: parameter count (820874 has no divisor between 58 and 4096, which would
+#: otherwise force 58-wide tiles — see EXPERIMENTS.md §Perf L1).
+PAD_MULTIPLE = 4096
+DEFAULT_MODELS = ["mlp_c10", "resnet_tiny_c10", "vgg_tiny_c100"]
+DEFAULT_DEVICES = [4, 8, 10, 16, 25]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, name: str, text: str, manifest_files: dict, kind: str, meta: dict):
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest_files[name] = {"kind": kind, **meta}
+    return path
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_model(model: str, buckets, device_counts, out_dir, manifest, verbose=True):
+    d = M.param_count(model)
+    _, ncls, momentum, wd = M.MODELS[model]
+    files = manifest["files"]
+    dp = (d + PAD_MULTIPLE - 1) // PAD_MULTIPLE * PAD_MULTIPLE
+    entry = {
+        "param_count": d,
+        "padded_dim": dp,
+        "num_classes": ncls,
+        "momentum": momentum,
+        "weight_decay": wd,
+        "buckets": list(buckets),
+        "eval_bucket": max(buckets),
+        "image": list(M.IMG),
+        "spec": [[n, list(s)] for n, s in M.spec(model)],
+    }
+    manifest["models"][model] = entry
+
+    def log(msg):
+        if verbose:
+            print(f"[aot] {model}: {msg}", flush=True)
+
+    # --- train steps, one per bucket -------------------------------------
+    for b in buckets:
+        t0 = time.time()
+        lowered = jax.jit(M.train_step(model)).lower(
+            f32(d), f32(b, *M.IMG), i32(b), f32(b)
+        )
+        name = f"train_step_{model}_b{b}.hlo.txt"
+        _write(out_dir, name, to_hlo_text(lowered), files, "train_step",
+               {"model": model, "bucket": b})
+        log(f"train_step b={b} ({time.time() - t0:.1f}s)")
+
+    # --- eval step (max bucket only) --------------------------------------
+    eb = max(buckets)
+    lowered = jax.jit(M.eval_step(model)).lower(f32(d), f32(eb, *M.IMG), i32(eb), f32(eb))
+    _write(out_dir, f"eval_step_{model}_b{eb}.hlo.txt", to_hlo_text(lowered),
+           files, "eval_step", {"model": model, "bucket": eb})
+    log(f"eval_step b={eb}")
+
+    # --- fused optimizer update -------------------------------------------
+    lowered = jax.jit(M.update_step(model)).lower(f32(d), f32(d), f32(d), f32())
+    _write(out_dir, f"update_{model}.hlo.txt", to_hlo_text(lowered),
+           files, "update", {"model": model})
+    log("update")
+
+    # --- weighted aggregation (L1 Pallas), per device-count ---------------
+    # padded to PAD_MULTIPLE so the kernels tile at full width
+    for n in device_counts:
+        lowered = jax.jit(weighted_aggregate).lower(f32(n, dp), f32(n))
+        _write(out_dir, f"wagg_{model}_n{n}.hlo.txt", to_hlo_text(lowered),
+               files, "wagg", {"model": model, "devices": n, "bucket": dp})
+        log(f"wagg n={n} (padded d={dp})")
+
+    # --- top-k mask + stats (L1 Pallas) ------------------------------------
+    lowered = jax.jit(topk_mask_stats).lower(f32(dp), f32(1))
+    _write(out_dir, f"topk_{model}.hlo.txt", to_hlo_text(lowered),
+           files, "topk", {"model": model, "bucket": dp})
+    log(f"topk (padded d={dp})")
+
+    # --- initial parameters -------------------------------------------------
+    seed = manifest["seed"]
+    init = np.asarray(M.init_params(model, seed), dtype="<f4")
+    init.tofile(os.path.join(out_dir, f"{model}.init.bin"))
+    files[f"{model}.init.bin"] = {"kind": "init", "model": model, "seed": seed}
+    log("init params")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)))
+    ap.add_argument("--devices", default=",".join(map(str, DEFAULT_DEVICES)),
+                    help="device counts to emit wagg artifacts for")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    buckets = sorted({int(b) for b in args.buckets.split(",")})
+    device_counts = sorted({int(n) for n in args.devices.split(",")})
+    for m in models:
+        if m not in M.MODELS:
+            ap.error(f"unknown model {m}; choices: {sorted(M.MODELS)}")
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "seed": args.seed,
+        "jax_version": jax.__version__,
+        "buckets": buckets,
+        "device_counts": device_counts,
+        "models": {},
+        "files": {},
+    }
+    t0 = time.time()
+    for m in models:
+        lower_model(m, buckets, device_counts, out_dir, manifest,
+                    verbose=not args.quiet)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if not args.quiet:
+        n = len(manifest["files"])
+        print(f"[aot] wrote {n} artifacts + manifest.json in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

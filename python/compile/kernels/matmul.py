@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: tiled matmul with f32 VMEM accumulator.
+
+This is the dense-head hot-spot of every model in the zoo. The tiling is
+written the way a TPU Pallas kernel would be: `(bm, bn)` output tiles
+matching the 128x128 MXU systolic array where the operands allow it, the
+K dimension streamed through VMEM in `bk` slabs, and a float32 scratch
+accumulator that only spills to the output ref on the final K step.
+
+Lowered with ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode traces the kernel into plain HLO
+(same numerics, same schedule structure). DESIGN.md §Hardware-Adaptation
+records the VMEM/MXU estimate for the real-TPU variant.
+
+Differentiability: ``pallas_call`` has no autodiff rule, so ``matmul`` is a
+``jax.custom_vjp`` whose backward pass reuses the same kernel
+(dx = dy @ w.T, dw = x.T @ dy) — the whole fwd/bwd graph stays on the
+Pallas path and lowers into one HLO artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (keeps the grid exact)."""
+    target = min(dim, target)
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (i, j, k) grid step: o += x_tile @ w_tile.
+
+    K is the innermost grid axis, so the (i, j) output block stays resident
+    in VMEM across the whole K loop — the f32 output block doubles as the
+    MXU accumulator (zeroed on the first K step).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_pallas(x: jax.Array, w: jax.Array, *, bm=128, bn=128, bk=512) -> jax.Array:
+    """[m, k] @ [k, n] -> [m, n] via the tiled Pallas kernel."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {w.shape}"
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable Pallas matmul (see module docstring)."""
+    return matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    dx = matmul_pallas(dy, w.T)
+    dw = matmul_pallas(x.T, dy)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact pure-`jax.numpy`
+counterpart here. The pytest suite (python/tests/test_kernels.py) sweeps
+shapes/dtypes with hypothesis and asserts `allclose(kernel, ref)` — this is
+the CORE correctness signal for Layer 1; the AOT artifacts embed the Pallas
+versions, so if these match, the Rust runtime computes the same numbers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference for kernels.matmul.matmul: plain f32 matmul."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def wagg_ref(grads: jax.Array, weights: jax.Array) -> jax.Array:
+    """Reference for kernels.wagg.weighted_aggregate.
+
+    grads:   [n, d]  per-device flat gradients
+    weights: [n]     aggregation weights r_i (ScaDLES Eqn. 4a; sum to 1
+                     for active devices, 0 for padded slots)
+    returns: [d]     g_tilde = sum_i r_i * g_i   (Eqn. 4b)
+    """
+    return jnp.einsum("nd,n->d", grads.astype(jnp.float32), weights.astype(jnp.float32))
+
+
+def topk_mask_ref(g: jax.Array, thresh: jax.Array):
+    """Reference for kernels.topk.topk_mask_stats.
+
+    Applies a magnitude threshold (|g_j| >= thresh keeps the element) and
+    returns the statistics ScaDLES's adaptive-compression rule needs:
+
+      masked : g with sub-threshold entries zeroed
+      norm2  : |g|^2           (uncompressed energy)
+      knorm2 : |Topk(g)|^2     (compressed energy)
+      nnz    : number of kept elements (as f32)
+
+    The k-th magnitude selection itself happens in the Rust coordinator
+    (O(d) select_nth); the kernel only applies the resulting threshold so
+    it stays a single streaming pass.
+    """
+    g = g.astype(jnp.float32)
+    keep = jnp.abs(g) >= thresh
+    masked = jnp.where(keep, g, 0.0)
+    norm2 = jnp.sum(g * g)
+    knorm2 = jnp.sum(masked * masked)
+    nnz = jnp.sum(keep.astype(jnp.float32))
+    return masked, norm2, knorm2, nnz
+
+
+def sgd_momentum_ref(params, mom, grad, lr, momentum, weight_decay):
+    """Reference for the fused momentum-SGD update (PyTorch semantics).
+
+    v' = mu * v + (g + wd * w);  w' = w - lr * v'
+    """
+    params = params.astype(jnp.float32)
+    g = grad.astype(jnp.float32) + weight_decay * params
+    mom_new = momentum * mom.astype(jnp.float32) + g
+    return params - lr * mom_new, mom_new

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: Top-k magnitude mask + adaptive-compression statistics.
+
+ScaDLES's adaptive compression rule (paper §IV) needs, per iteration and
+per gradient vector g:
+
+    send(Topk(g))  if  | |g|^2 - |Topk(g)|^2 | / |g|^2  <= delta
+    send(g)        otherwise
+
+Given the k-th magnitude threshold (computed O(d) in the Rust coordinator
+with select_nth — on real TPU this would be a two-pass histogram kernel),
+this kernel produces in ONE streaming pass over g:
+
+    masked  [d] : g with sub-threshold entries zeroed (the Topk(g) tensor)
+    norm2   [1] : |g|^2
+    knorm2  [1] : |Topk(g)|^2
+    nnz     [1] : number of surviving elements
+
+TPU mapping: `(TILE_D,)` slabs HBM→VMEM, elementwise compare + multiply on
+the VPU, with the three scalars accumulated across grid steps in SMEM-like
+(1,) output refs (sequential grid ⇒ safe accumulation). interpret=True for
+CPU-PJRT (see matmul.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 8192
+
+
+def _block(dim: int, target: int) -> int:
+    target = min(dim, target)
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _topk_kernel(g_ref, t_ref, m_ref, n2_ref, k2_ref, nnz_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        n2_ref[...] = jnp.zeros_like(n2_ref)
+        k2_ref[...] = jnp.zeros_like(k2_ref)
+        nnz_ref[...] = jnp.zeros_like(nnz_ref)
+
+    g = g_ref[...]
+    thresh = t_ref[0]
+    keep = jnp.abs(g) >= thresh
+    masked = jnp.where(keep, g, 0.0)
+    m_ref[...] = masked
+    n2_ref[...] += jnp.sum(g * g, keepdims=True)
+    k2_ref[...] += jnp.sum(masked * masked, keepdims=True)
+    nnz_ref[...] += jnp.sum(keep.astype(jnp.float32), keepdims=True)
+
+
+def topk_mask_stats(g: jax.Array, thresh: jax.Array, *, tile_d: int = TILE_D):
+    """Apply magnitude threshold and compute compression statistics.
+
+    g:      [d] flat gradient
+    thresh: [1] magnitude threshold (k-th largest |g|)
+    returns (masked [d], norm2 [1], knorm2 [1], nnz [1])
+    """
+    (d,) = g.shape
+    bd = _block(d, tile_d)
+    return pl.pallas_call(
+        _topk_kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(g, thresh)

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: ScaDLES weighted gradient aggregation (Eqn. 4b).
+
+Computes g_tilde = sum_i r_i * g_i over the device axis. This is the
+bandwidth-bound hot-spot of every synchronization round: n flat gradient
+vectors of length d (d = model parameter count) are reduced with per-device
+weights r_i = S_i / sum_j S_j (Eqn. 4a).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel streams
+`(n, TILE_D)` slabs HBM→VMEM so the device-axis reduction happens entirely
+in VMEM — one pass over the n*d gradient matrix, VPU-bound, no MXU needed.
+The weight vector is tiny and pinned for the whole grid. `interpret=True`
+for CPU-PJRT execution (see matmul.py for why).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default tile along the parameter axis. 16 devices x 4096 f32 = 256 KiB
+#: per slab — comfortably inside a 16 MiB VMEM with double-buffering.
+TILE_D = 4096
+
+
+def _block(dim: int, target: int) -> int:
+    target = min(dim, target)
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _wagg_kernel(g_ref, r_ref, o_ref):
+    """One grid step: o[tile] = r @ g[:, tile] (device-axis reduction)."""
+    # g_ref: [n, bd], r_ref: [n], o_ref: [bd]
+    o_ref[...] = jnp.einsum(
+        "nd,n->d", g_ref[...], r_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def weighted_aggregate(grads: jax.Array, weights: jax.Array, *, tile_d: int = TILE_D) -> jax.Array:
+    """[n, d] gradients + [n] weights -> [d] aggregated gradient."""
+    n, d = grads.shape
+    assert weights.shape == (n,), f"weights {weights.shape} != ({n},)"
+    bd = _block(d, tile_d)
+    return pl.pallas_call(
+        _wagg_kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((n, bd), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(grads, weights)

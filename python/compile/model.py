@@ -1,0 +1,295 @@
+"""L2: JAX model zoo for the ScaDLES reproduction (build-time only).
+
+Defines the forward/backward computation graphs that `aot.py` lowers to
+HLO-text artifacts executed by the Rust coordinator. Three families:
+
+  * ``mlp``         — 3072→256→128→C, all Pallas-matmul dense layers.
+                      Fast; used by the test suite and quickstart.
+  * ``resnet_tiny`` — CIFAR-style residual network (proxy for the paper's
+                      ResNet152; same optimizer family: momentum 0.9,
+                      weight-decay 1e-4).
+  * ``vgg_tiny``    — plain conv stack + big dense head (proxy for VGG19;
+                      momentum 0.9, weight-decay 5e-4). The oversized dense
+                      head reproduces VGG's parameter skew, which drives
+                      the paper's communication results.
+
+Every dense layer runs through the L1 Pallas ``matmul`` kernel so the
+kernels lower into the same HLO artifacts the Rust runtime loads.
+
+Parameter handling: the Rust boundary sees ONE flat f32 vector. ``spec()``
+gives the ordered (name, shape) layout; ``flatten``/``unflatten`` convert.
+All train/eval entry points take padded batches plus a ``mask`` so the
+fixed-shape artifacts serve any batch ≤ bucket (DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax, random
+
+from .kernels.matmul import matmul
+
+# ---------------------------------------------------------------------------
+# Model registry
+# ---------------------------------------------------------------------------
+
+#: name -> (family, num_classes, momentum, weight_decay)
+MODELS: Dict[str, Tuple[str, int, float, float]] = {
+    "mlp_c10": ("mlp", 10, 0.9, 1e-4),
+    "mlp_c100": ("mlp", 100, 0.9, 1e-4),
+    "resnet_tiny_c10": ("resnet", 10, 0.9, 1e-4),
+    "resnet_tiny_c100": ("resnet", 100, 0.9, 1e-4),
+    "vgg_tiny_c10": ("vgg", 10, 0.9, 5e-4),
+    "vgg_tiny_c100": ("vgg", 100, 0.9, 5e-4),
+}
+
+IMG = (32, 32, 3)  # CIFAR-shaped inputs (NHWC)
+
+_RESNET_STAGES = [(16, 2, 1), (32, 2, 2), (64, 2, 2)]  # (channels, blocks, stride)
+_VGG_CFG = [32, 32, "M", 64, 64, "M", 128, 128, "M"]
+_GN_GROUPS = 8
+
+
+def spec(model: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    family, ncls, _, _ = MODELS[model]
+    out: List[Tuple[str, Tuple[int, ...]]] = []
+    if family == "mlp":
+        out += [("fc1.w", (3072, 256)), ("fc1.b", (256,)),
+                ("fc2.w", (256, 128)), ("fc2.b", (128,)),
+                ("head.w", (128, ncls)), ("head.b", (ncls,))]
+    elif family == "resnet":
+        cin = 3
+        out.append(("stem.w", (3, 3, cin, 16)))
+        cin = 16
+        for si, (ch, blocks, _stride) in enumerate(_RESNET_STAGES):
+            for bi in range(blocks):
+                pre = f"s{si}.b{bi}"
+                out += [(f"{pre}.gn1.g", (cin,)), (f"{pre}.gn1.b", (cin,)),
+                        (f"{pre}.conv1.w", (3, 3, cin, ch)),
+                        (f"{pre}.gn2.g", (ch,)), (f"{pre}.gn2.b", (ch,)),
+                        (f"{pre}.conv2.w", (3, 3, ch, ch))]
+                if cin != ch:
+                    out.append((f"{pre}.proj.w", (1, 1, cin, ch)))
+                cin = ch
+        out += [("final.gn.g", (cin,)), ("final.gn.b", (cin,)),
+                ("head.w", (cin, ncls)), ("head.b", (ncls,))]
+    elif family == "vgg":
+        cin = 3
+        li = 0
+        for v in _VGG_CFG:
+            if v == "M":
+                continue
+            out += [(f"conv{li}.w", (3, 3, cin, v)),
+                    (f"conv{li}.gn.g", (v,)), (f"conv{li}.gn.b", (v,))]
+            cin = v
+            li += 1
+        flat = 128 * 4 * 4
+        out += [("fc1.w", (flat, 256)), ("fc1.b", (256,)),
+                ("head.w", (256, ncls)), ("head.b", (ncls,))]
+    else:  # pragma: no cover
+        raise ValueError(f"unknown family {family}")
+    return out
+
+
+def param_count(model: str) -> int:
+    return sum(int(np.prod(s)) for _, s in spec(model))
+
+
+def flatten(params: Dict[str, jax.Array], model: str) -> jax.Array:
+    return jnp.concatenate([params[n].reshape(-1) for n, _ in spec(model)])
+
+
+def unflatten(flat: jax.Array, model: str) -> Dict[str, jax.Array]:
+    out, off = {}, 0
+    for name, shape in spec(model):
+        size = int(np.prod(shape))
+        out[name] = lax.slice_in_dim(flat, off, off + size).reshape(shape)
+        off += size
+    return out
+
+
+def init_params(model: str, seed: int = 42) -> jax.Array:
+    """He-initialized flat parameter vector (written to artifacts/*.init.bin)."""
+    key = random.PRNGKey(seed)
+    chunks = []
+    for name, shape in spec(model):
+        key, sub = random.split(key)
+        if ".gn" in name or name.startswith("final.gn"):
+            # GroupNorm gamma -> 1, beta -> 0
+            fill = 1.0 if name.endswith(".g") else 0.0
+            chunks.append(jnp.full(shape, fill, jnp.float32))
+        elif name.endswith(".b"):
+            chunks.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = float(np.sqrt(2.0 / max(fan_in, 1)))
+            chunks.append(std * random.normal(sub, shape, jnp.float32))
+    return jnp.concatenate([c.reshape(-1) for c in chunks])
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, stride=1):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _groupnorm(x, gamma, beta, groups=_GN_GROUPS, eps=1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * lax.rsqrt(var + eps)
+    return xg.reshape(n, h, w, c) * gamma + beta
+
+
+def _dense(x, w, b):
+    """Dense layer on the L1 Pallas matmul kernel."""
+    return matmul(x, w) + b
+
+
+def _forward_mlp(p, x):
+    h = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(_dense(h, p["fc1.w"], p["fc1.b"]))
+    h = jax.nn.relu(_dense(h, p["fc2.w"], p["fc2.b"]))
+    return _dense(h, p["head.w"], p["head.b"])
+
+
+def _forward_resnet(p, x):
+    h = _conv(x, p["stem.w"])
+    cin = 16
+    for si, (ch, blocks, stride) in enumerate(_RESNET_STAGES):
+        for bi in range(blocks):
+            pre = f"s{si}.b{bi}"
+            st = stride if bi == 0 else 1
+            z = _groupnorm(h, p[f"{pre}.gn1.g"], p[f"{pre}.gn1.b"])
+            z = jax.nn.relu(z)
+            z = _conv(z, p[f"{pre}.conv1.w"], st)
+            z = _groupnorm(z, p[f"{pre}.gn2.g"], p[f"{pre}.gn2.b"])
+            z = jax.nn.relu(z)
+            z = _conv(z, p[f"{pre}.conv2.w"])
+            skip = h
+            if cin != ch:
+                skip = _conv(h, p[f"{pre}.proj.w"], st)
+            h = skip + z
+            cin = ch
+    h = jax.nn.relu(_groupnorm(h, p["final.gn.g"], p["final.gn.b"]))
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return _dense(h, p["head.w"], p["head.b"])
+
+
+def _forward_vgg(p, x):
+    h = x
+    li = 0
+    for v in _VGG_CFG:
+        if v == "M":
+            h = _maxpool2(h)
+        else:
+            h = _conv(h, p[f"conv{li}.w"])
+            h = _groupnorm(h, p[f"conv{li}.gn.g"], p[f"conv{li}.gn.b"])
+            h = jax.nn.relu(h)
+            li += 1
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(_dense(h, p["fc1.w"], p["fc1.b"]))
+    return _dense(h, p["head.w"], p["head.b"])
+
+
+_FORWARDS = {"mlp": _forward_mlp, "resnet": _forward_resnet, "vgg": _forward_vgg}
+
+
+def forward(model: str, flat: jax.Array, x: jax.Array) -> jax.Array:
+    family, _, _, _ = MODELS[model]
+    return _FORWARDS[family](unflatten(flat, model), x)
+
+
+# ---------------------------------------------------------------------------
+# Train / eval / update entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def _masked_ce(logits, y, mask, ncls):
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.sum(logp * jax.nn.one_hot(y, ncls, dtype=logits.dtype), axis=-1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(ce * mask) / denom
+
+
+def _masked_topk_correct(logits, y, mask, k):
+    # rank of the true class = #logits strictly greater; top-k hit ⇔ rank < k.
+    # (avoids lax.top_k: xla_extension 0.5.1's HLO parser rejects the TopK
+    # instruction's `largest` attribute emitted by newer jax)
+    true_logit = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)
+    rank = jnp.sum((logits > true_logit).astype(jnp.int32), axis=-1)
+    hit = (rank < k).astype(jnp.float32)
+    return jnp.sum(hit * mask)
+
+
+def train_step(model: str):
+    """(params[d], x[b,32,32,3], y[b] i32, mask[b]) ->
+    (loss[], grads[d], top1_correct[], top5_correct[])
+
+    Loss/gradient are masked means over valid samples — the device-local
+    g_i of ScaDLES Eqn. 4b; the Rust coordinator owns the r_i weighting.
+    """
+    _, ncls, _, _ = MODELS[model]
+
+    def fn(flat, x, y, mask):
+        def loss_fn(f):
+            logits = forward(model, f, x)
+            return _masked_ce(logits, y, mask, ncls), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        top1 = _masked_topk_correct(logits, y, mask, 1)
+        top5 = _masked_topk_correct(logits, y, mask, min(5, ncls))
+        return loss, grads, top1, top5
+
+    return fn
+
+
+def eval_step(model: str):
+    """(params, x, y, mask) -> (sum_loss[], top1_correct[], top5_correct[])."""
+    _, ncls, _, _ = MODELS[model]
+
+    def fn(flat, x, y, mask):
+        logits = forward(model, flat, x)
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.sum(logp * jax.nn.one_hot(y, ncls, dtype=logits.dtype), axis=-1)
+        return (
+            jnp.sum(ce * mask),
+            _masked_topk_correct(logits, y, mask, 1),
+            _masked_topk_correct(logits, y, mask, min(5, ncls)),
+        )
+
+    return fn
+
+
+def update_step(model: str):
+    """(params[d], mom[d], grad[d], lr[]) -> (params'[d], mom'[d]).
+
+    PyTorch-semantics momentum SGD with the paper's per-model weight decay
+    (coupled, applied to the gradient): v' = mu v + (g + wd w); w' = w - lr v'.
+    """
+    _, _, mu, wd = MODELS[model]
+
+    def fn(flat, mom, grad, lr):
+        g = grad + wd * flat
+        mom_new = mu * mom + g
+        return flat - lr * mom_new, mom_new
+
+    return fn

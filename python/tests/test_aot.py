@@ -1,0 +1,97 @@
+"""AOT pipeline: manifest contents, HLO-text validity, init params."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def out(tmp_path_factory):
+    """Emit a minimal artifact set once for the whole module."""
+    d = str(tmp_path_factory.mktemp("artifacts"))
+    rc = aot.main([
+        "--out-dir", d,
+        "--models", "mlp_c10",
+        "--buckets", "8,16",
+        "--devices", "4",
+        "--seed", "7",
+        "--quiet",
+    ])
+    assert rc == 0
+    return d
+
+
+def test_manifest_schema(out):
+    with open(os.path.join(out, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    assert m["buckets"] == [8, 16]
+    assert m["device_counts"] == [4]
+    mm = m["models"]["mlp_c10"]
+    assert mm["param_count"] == M.param_count("mlp_c10")
+    assert mm["num_classes"] == 10
+    assert mm["eval_bucket"] == 16
+    assert [n for n, _ in mm["spec"]] == [n for n, _ in M.spec("mlp_c10")]
+
+
+def test_expected_files_exist(out):
+    with open(os.path.join(out, "manifest.json")) as f:
+        m = json.load(f)
+    expected = {
+        "train_step_mlp_c10_b8.hlo.txt": "train_step",
+        "train_step_mlp_c10_b16.hlo.txt": "train_step",
+        "eval_step_mlp_c10_b16.hlo.txt": "eval_step",
+        "update_mlp_c10.hlo.txt": "update",
+        "wagg_mlp_c10_n4.hlo.txt": "wagg",
+        "topk_mlp_c10.hlo.txt": "topk",
+        "mlp_c10.init.bin": "init",
+    }
+    for name, kind in expected.items():
+        assert name in m["files"], name
+        assert m["files"][name]["kind"] == kind
+        assert os.path.exists(os.path.join(out, name)), name
+
+
+def test_hlo_text_is_parsable_hlo(out):
+    """The interchange contract: HLO *text* with an ENTRY computation and
+    no serialized-proto artifacts (xla_extension 0.5.1 requirement)."""
+    path = os.path.join(out, "train_step_mlp_c10_b8.hlo.txt")
+    text = open(path).read()
+    assert "HloModule" in text.splitlines()[0]
+    assert "ENTRY" in text
+    # the Pallas matmul kernel lowers to dot ops inside
+    assert " dot(" in text or " dot." in text
+    # no TopK instruction (rejected by the 0.5.1 parser)
+    assert "topk(" not in text
+
+
+def test_init_params_roundtrip(out):
+    d = M.param_count("mlp_c10")
+    raw = np.fromfile(os.path.join(out, "mlp_c10.init.bin"), dtype="<f4")
+    assert raw.shape == (d,)
+    np.testing.assert_allclose(raw, np.asarray(M.init_params("mlp_c10", 7)), rtol=1e-7)
+
+
+def test_init_seed_changes_params(out):
+    a = np.asarray(M.init_params("mlp_c10", 1))
+    b = np.asarray(M.init_params("mlp_c10", 2))
+    assert not np.allclose(a, b)
+
+
+def test_unknown_model_rejected(tmp_path):
+    with pytest.raises(SystemExit):
+        aot.main(["--out-dir", str(tmp_path), "--models", "nonexistent"])
+
+
+def test_update_artifact_is_small(out):
+    """The fused optimizer update must stay a lean elementwise module."""
+    size = os.path.getsize(os.path.join(out, "update_mlp_c10.hlo.txt"))
+    assert size < 64 * 1024, size

@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/dtypes; every case asserts allclose against
+`compile.kernels.ref`. If these pass, the HLO artifacts embed kernels that
+compute exactly what the reference math says.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul, matmul_pallas
+from compile.kernels.topk import topk_mask_stats
+from compile.kernels.wagg import weighted_aggregate
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Keep hypothesis deadlines generous: pallas interpret tracing is slow.
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rnd(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 3, 8, 16, 100, 128]),
+    k=st.sampled_from([1, 7, 64, 200, 512]),
+    n=st.sampled_from([1, 10, 100, 128]),
+)
+def test_matmul_matches_ref(m, k, n):
+    x, w = rnd(0, m, k), rnd(1, k, n)
+    np.testing.assert_allclose(
+        matmul_pallas(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([2, 8, 32]),
+    k=st.sampled_from([16, 96]),
+    n=st.sampled_from([4, 48]),
+)
+def test_matmul_gradients_match_ref(m, k, n):
+    x, w = rnd(2, m, k), rnd(3, k, n)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.tanh(matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.tanh(ref.matmul_ref(x, w)))
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-4)
+
+
+def test_matmul_bf16_inputs_accumulate_f32():
+    x = rnd(4, 16, 64).astype(jnp.bfloat16)
+    w = rnd(5, 64, 8).astype(jnp.bfloat16)
+    out = matmul_pallas(x, w)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, ref.matmul_ref(x, w), rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_rejects_mismatched_shapes():
+    with pytest.raises(AssertionError):
+        matmul_pallas(rnd(0, 4, 5), rnd(1, 6, 3))
+
+
+# ---------------------------------------------------------------------------
+# weighted aggregation (Eqn. 4b)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 4, 16, 25]),
+    d=st.sampled_from([1, 17, 512, 4096, 5000]),
+)
+def test_wagg_matches_ref(n, d):
+    g = rnd(6, n, d)
+    r = jax.nn.softmax(rnd(7, n))
+    np.testing.assert_allclose(
+        weighted_aggregate(g, r), ref.wagg_ref(g, r), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_wagg_zero_weights_drop_devices():
+    g = rnd(8, 4, 100)
+    r = jnp.array([0.0, 1.0, 0.0, 0.0])
+    np.testing.assert_allclose(weighted_aggregate(g, r), g[1], rtol=1e-5, atol=1e-6)
+
+
+def test_wagg_weights_need_not_sum_to_one():
+    g = rnd(9, 3, 64)
+    r = jnp.array([2.0, -1.0, 0.5])
+    np.testing.assert_allclose(
+        weighted_aggregate(g, r), ref.wagg_ref(g, r), rtol=1e-4, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# top-k mask + stats
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.sampled_from([1, 9, 100, 4096, 10000]),
+    q=st.sampled_from([0.0, 0.3, 0.9, 1.5]),
+)
+def test_topk_matches_ref(d, q):
+    g = rnd(10, d)
+    thresh = jnp.array([q], jnp.float32)
+    m, n2, k2, nnz = topk_mask_stats(g, thresh)
+    mr, n2r, k2r, nnzr = ref.topk_mask_ref(g, thresh[0])
+    np.testing.assert_allclose(m, mr, atol=0)
+    np.testing.assert_allclose(n2[0], n2r, rtol=1e-5)
+    np.testing.assert_allclose(k2[0], k2r, rtol=1e-5)
+    assert nnz[0] == nnzr
+
+
+def test_topk_extreme_thresholds():
+    g = rnd(11, 1000)
+    m, n2, k2, nnz = topk_mask_stats(g, jnp.array([jnp.inf], jnp.float32))
+    assert nnz[0] == 0 and k2[0] == 0
+    np.testing.assert_allclose(m, jnp.zeros_like(g))
+    m, n2, k2, nnz = topk_mask_stats(g, jnp.array([0.0], jnp.float32))
+    assert nnz[0] == 1000
+    np.testing.assert_allclose(k2[0], n2[0], rtol=1e-6)
+
+
+def test_topk_energy_is_monotone_in_threshold():
+    g = rnd(12, 5000)
+    energies = []
+    for q in [0.0, 0.5, 1.0, 2.0]:
+        _, _, k2, _ = topk_mask_stats(g, jnp.array([q], jnp.float32))
+        energies.append(float(k2[0]))
+    assert energies == sorted(energies, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# fused optimizer update (mirrors the update artifact)
+# ---------------------------------------------------------------------------
+
+
+def test_sgd_momentum_ref_matches_manual():
+    p = jnp.array([1.0, -2.0])
+    v = jnp.array([0.1, 0.0])
+    g = jnp.array([0.5, 0.5])
+    p2, v2 = ref.sgd_momentum_ref(p, v, g, lr=0.1, momentum=0.9, weight_decay=0.01)
+    v_hand = 0.9 * v + (g + 0.01 * p)
+    np.testing.assert_allclose(v2, v_hand, rtol=1e-6)
+    np.testing.assert_allclose(p2, p - 0.1 * v_hand, rtol=1e-6)

@@ -1,0 +1,147 @@
+"""L2 model-zoo correctness: shapes, flatten/unflatten, training entry points."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, *M.IMG))
+    y = jnp.arange(8, dtype=jnp.int32) % 10
+    mask = jnp.ones(8)
+    return x, y, mask
+
+
+ALL_MODELS = list(M.MODELS)
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_spec_matches_param_count(name):
+    d = M.param_count(name)
+    total = sum(int(np.prod(s)) for _, s in M.spec(name))
+    assert d == total
+    p = M.init_params(name)
+    assert p.shape == (d,) and p.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_flatten_unflatten_roundtrip(name):
+    flat = M.init_params(name, seed=7)
+    tree = M.unflatten(flat, name)
+    assert set(tree) == {n for n, _ in M.spec(name)}
+    np.testing.assert_array_equal(M.flatten(tree, name), flat)
+
+
+@pytest.mark.parametrize("name", ["mlp_c10", "resnet_tiny_c10", "vgg_tiny_c100"])
+def test_forward_shapes_and_finite(name, batch):
+    x, _, _ = batch
+    _, ncls, _, _ = M.MODELS[name]
+    logits = M.forward(name, M.init_params(name), x)
+    assert logits.shape == (8, ncls)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("name", ["mlp_c10", "resnet_tiny_c10"])
+def test_train_step_outputs(name, batch):
+    x, y, mask = batch
+    loss, grads, top1, top5 = jax.jit(M.train_step(name))(M.init_params(name), x, y, mask)
+    d = M.param_count(name)
+    assert grads.shape == (d,)
+    assert bool(jnp.isfinite(loss)) and loss > 0
+    assert 0 <= float(top1) <= 8 and float(top1) <= float(top5) <= 8
+    assert float(jnp.linalg.norm(grads)) > 0
+
+
+def test_mask_neutralizes_padding(batch):
+    """Padded rows must not affect loss or gradients — the batch-bucket
+    contract the Rust runtime relies on."""
+    x, y, _ = batch
+    ts = jax.jit(M.train_step("mlp_c10"))
+    p = M.init_params("mlp_c10")
+    mask_half = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    # corrupt the masked rows wildly
+    x_bad = x.at[4:].set(99.0)
+    y_bad = y.at[4:].set(3)
+    l1, g1, t1, t5 = ts(p, x, y, mask_half)
+    l2, g2, u1, u5 = ts(p, x_bad, y_bad, mask_half)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-7)
+    assert t1 == u1 and t5 == u5
+
+
+def test_loss_is_mean_over_valid_only(batch):
+    x, y, _ = batch
+    ts = jax.jit(M.train_step("mlp_c10"))
+    p = M.init_params("mlp_c10")
+    full, _, _, _ = ts(p, x, y, jnp.ones(8))
+    # same data duplicated into half the slots → same mean loss
+    half_mask = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    half, _, _, _ = ts(p, x, y, half_mask)
+    assert bool(jnp.isfinite(half))
+    # mean over 4 of the same distribution: close, not equal
+    assert abs(float(full) - float(half)) < 1.0
+
+
+def test_empty_mask_is_safe(batch):
+    x, y, _ = batch
+    loss, grads, t1, t5 = jax.jit(M.train_step("mlp_c10"))(
+        M.init_params("mlp_c10"), x, y, jnp.zeros(8)
+    )
+    assert float(loss) == 0.0
+    assert float(t1) == 0.0 and float(t5) == 0.0
+    np.testing.assert_allclose(grads, jnp.zeros_like(grads), atol=1e-8)
+
+
+def test_update_step_matches_reference(batch):
+    from compile.kernels import ref
+
+    name = "vgg_tiny_c100"
+    _, _, mu, wd = M.MODELS[name]
+    d = M.param_count(name)
+    key = jax.random.PRNGKey(3)
+    p = jax.random.normal(key, (d,)) * 0.01
+    v = jnp.zeros(d)
+    g = jax.random.normal(jax.random.PRNGKey(4), (d,)) * 0.1
+    p2, v2 = jax.jit(M.update_step(name))(p, v, g, jnp.float32(0.05))
+    pr, vr = ref.sgd_momentum_ref(p, v, g, 0.05, mu, wd)
+    np.testing.assert_allclose(p2, pr, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(v2, vr, rtol=1e-5, atol=1e-7)
+
+
+def test_sgd_reduces_loss_quickly():
+    """Ten steps of momentum SGD on one batch must overfit it."""
+    name = "mlp_c10"
+    ts = jax.jit(M.train_step(name))
+    us = jax.jit(M.update_step(name))
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (16, *M.IMG))
+    y = jnp.arange(16, dtype=jnp.int32) % 10
+    mask = jnp.ones(16)
+    p = M.init_params(name)
+    v = jnp.zeros_like(p)
+    l0, *_ = ts(p, x, y, mask)
+    for _ in range(10):
+        _, g, _, _ = ts(p, x, y, mask)
+        p, v = us(p, v, g, jnp.float32(0.1))
+    l1, *_ = ts(p, x, y, mask)
+    assert float(l1) < float(l0) * 0.5, (l0, l1)
+
+
+def test_top5_counts_rank_correctly():
+    name = "mlp_c10"
+    # craft logits via a linear probe: use the internal helper directly
+    from compile.model import _masked_topk_correct
+
+    logits = jnp.array([[5.0, 4.0, 3.0, 2.0, 1.0, 0.0, -1.0, -2.0, -3.0, -4.0]])
+    mask = jnp.ones(1)
+    assert float(_masked_topk_correct(logits, jnp.array([0]), mask, 1)) == 1.0
+    assert float(_masked_topk_correct(logits, jnp.array([4]), mask, 5)) == 1.0
+    assert float(_masked_topk_correct(logits, jnp.array([5]), mask, 5)) == 0.0
+    _ = name

@@ -1,0 +1,142 @@
+//! Hot-path micro-benchmarks (§Perf in EXPERIMENTS.md).
+//!
+//! Covers every per-round operation of the coordinator, plus
+//! kernel-vs-native ablations for the Pallas artifacts:
+//!
+//!   * weighted aggregation        (L1 wagg kernel vs native Rust loop)
+//!   * top-k threshold + mask      (select-nth + L1 topk kernel vs native)
+//!   * momentum update             (update artifact vs native loop)
+//!   * train-step dispatch         (PJRT end-to-end per bucket)
+//!   * stream substrate            (produce/poll throughput)
+//!   * synthetic batch generation
+//!
+//! Run with `cargo bench --offline` (artifacts required for the PJRT cases;
+//! they are skipped with a notice when missing).
+
+use std::sync::Arc;
+
+use scadles::compress::{mask_stats_native, threshold_for_ratio};
+use scadles::coordinator::aggregate_native;
+use scadles::data::{materialize, Synthetic};
+use scadles::rng::Pcg64;
+use scadles::runtime::Runtime;
+use scadles::stream::{Consumer, Record, Retention, Topic};
+use scadles::util::bench::Bench;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 0);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- native coordinator paths (no artifacts needed) -------------------
+    let d = 820_874; // mlp_c10 gradient size
+    let n = 8;
+    let grads = randvec(n * d, 1);
+    let weights: Vec<f32> = (0..n).map(|i| (i + 1) as f32 / 36.0).collect();
+
+    b.header("aggregation (n=8, d=820874)");
+    b.case("wagg/native", || aggregate_native(&grads, &weights, d));
+
+    b.header("top-k compression (d=820874, CR=0.1)");
+    let g = randvec(d, 2);
+    b.case("topk/select-threshold", || threshold_for_ratio(&g, 0.1));
+    let (_, thresh) = threshold_for_ratio(&g, 0.1);
+    b.case("topk/mask-stats-native", || {
+        let mut gm = g.clone();
+        mask_stats_native(&mut gm, thresh)
+    });
+    b.case("topk/clone-baseline", || g.clone());
+
+    b.header("momentum update (native, d=820874)");
+    let mut params = randvec(d, 3);
+    let mut mom = vec![0f32; d];
+    b.case("update/native", || {
+        for ((p, m), gv) in params.iter_mut().zip(mom.iter_mut()).zip(&g) {
+            *m = 0.9 * *m + (gv + 1e-4 * *p);
+            *p -= 0.05 * *m;
+        }
+    });
+
+    // --- stream substrate --------------------------------------------------
+    b.header("stream substrate");
+    let topic = Topic::new("bench", Retention::Truncate { keep: 100_000 });
+    let mut seq = 0u64;
+    b.case("produce/record", || {
+        seq += 1;
+        topic.produce([Record { offset: 0, timestamp_us: 0, label: 0, seed: seq }])
+    });
+    let topic2 = Topic::new("bench2", Retention::Persist);
+    topic2.produce((0..100_000u64).map(|s| Record {
+        offset: 0,
+        timestamp_us: 0,
+        label: (s % 10) as u32,
+        seed: s,
+    }));
+    let mut consumer = Consumer::new(topic2.clone()).without_purge();
+    b.case("poll/256-records", || {
+        let got = consumer.poll(256);
+        if got.len() < 256 {
+            consumer = Consumer::new(topic2.clone()).without_purge();
+        }
+        got.len()
+    });
+
+    // --- data generation ----------------------------------------------------
+    b.header("synthetic data");
+    let data = Synthetic::standard(10, 42);
+    let recs: Vec<Record> = (0..64)
+        .map(|s| Record { offset: s, timestamp_us: 0, label: (s % 10) as u32, seed: s })
+        .collect();
+    b.case("materialize/64x3072", || materialize(&data, &recs));
+
+    // --- PJRT dispatch (artifacts required) ---------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Arc::new(Runtime::load("artifacts").unwrap());
+        let model = rt.model("mlp_c10").unwrap();
+        let p = model.init_params().unwrap();
+        let dm = model.param_count();
+
+        b.header("PJRT dispatch (mlp_c10)");
+        let (x64, y64) = {
+            let recs: Vec<Record> = (0..64)
+                .map(|s| Record { offset: s, timestamp_us: 0, label: (s % 10) as u32, seed: s })
+                .collect();
+            materialize(&data, &recs)
+        };
+        b.case("train_step/b64", || model.train_step(&p, &x64, &y64, 64).unwrap());
+        let (x8, y8) = {
+            let recs: Vec<Record> = (0..8)
+                .map(|s| Record { offset: s, timestamp_us: 0, label: (s % 10) as u32, seed: s })
+                .collect();
+            materialize(&data, &recs)
+        };
+        b.case("train_step/b8", || model.train_step(&p, &x8, &y8, 8).unwrap());
+
+        let gk = randvec(dm, 7);
+        let (_, th) = threshold_for_ratio(&gk, 0.1);
+        b.case("topk/kernel-artifact", || model.topk_mask_stats(&gk, th).unwrap());
+
+        let wg = randvec(4 * dm, 8);
+        let w4 = vec![0.25f32; 4];
+        b.case("wagg/kernel-artifact-n4", || {
+            model.weighted_aggregate(&wg, &w4).unwrap()
+        });
+
+        let mut pp = p.clone();
+        let mut mm = vec![0f32; dm];
+        b.case("update/kernel-artifact", || {
+            model.update(&mut pp, &mut mm, &gk, 0.01).unwrap()
+        });
+
+        // how much of a train step is the params upload? (the
+        // buffer-resident-params optimization would save exactly this)
+        b.case("literal/params-upload-3.3MB", || xla::Literal::vec1(&p));
+    } else {
+        eprintln!("\nNOTE: artifacts missing — PJRT benches skipped (run `make artifacts`)");
+    }
+
+    println!("\n{} cases measured.", b.results().len());
+}

@@ -1,0 +1,13 @@
+//! Buffer policies + accounting (paper §IV "Limited memory and storage").
+//!
+//! [`policy::BufferPolicy`] is the user-facing knob (Persistence vs
+//! Truncation) that maps onto the stream substrate's retention;
+//! [`accounting::BufferTracker`] records per-round queue sizes across
+//! devices and produces the numbers behind Fig. 8 (buffer growth), Table
+//! IV (truncation reduction factors) and Table VI (GB saved).
+
+pub mod accounting;
+pub mod policy;
+
+pub use accounting::{BufferReport, BufferTracker};
+pub use policy::BufferPolicy;

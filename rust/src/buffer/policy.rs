@@ -1,0 +1,60 @@
+//! The two storage policies ScaDLES compares.
+
+
+use crate::stream::Retention;
+
+/// Device buffer policy (paper §IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BufferPolicy {
+    /// *Stream Persistence*: keep every sample until consumed —
+    /// O(S⁽ⁱ⁾·T) storage (Eqn. 2).
+    #[default]
+    Persistence,
+    /// *Stream Truncation*: keep only ≈ one second of stream (the newest
+    /// S⁽ⁱ⁾ samples) — O(S⁽ⁱ⁾) storage.
+    Truncation,
+}
+
+impl BufferPolicy {
+    /// Retention for a device whose streaming rate is `rate` samples/s.
+    ///
+    /// Truncation keeps `⌈rate⌉` records: "data in buffer exceeding the
+    /// samples that just streamed in is simply discarded".
+    pub fn retention(&self, rate: f64) -> Retention {
+        match self {
+            BufferPolicy::Persistence => Retention::Persist,
+            BufferPolicy::Truncation => Retention::Truncate {
+                keep: rate.ceil().max(1.0) as usize,
+            },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BufferPolicy::Persistence => "persistence",
+            BufferPolicy::Truncation => "truncation",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn persistence_unbounded() {
+        assert_eq!(BufferPolicy::Persistence.retention(300.0), Retention::Persist);
+    }
+
+    #[test]
+    fn truncation_keeps_one_second_of_stream() {
+        assert_eq!(
+            BufferPolicy::Truncation.retention(37.4),
+            Retention::Truncate { keep: 38 }
+        );
+        assert_eq!(
+            BufferPolicy::Truncation.retention(0.2),
+            Retention::Truncate { keep: 1 }
+        );
+    }
+}

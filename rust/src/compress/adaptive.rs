@@ -1,0 +1,140 @@
+//! The adaptive send rule: EWMA-tracked relative compression error vs δ.
+//!
+//! Paper §IV:  `send(Topk(g))  if  ||g|² − |Topk(g)|²| / |g|² ≤ δ  else
+//! send(g)`, with the error tracked as an exponentially weighted moving
+//! average so single noisy iterations don't flap the decision. Early in
+//! training gradients are large and dense (critical region — error high ⇒
+//! dense sends); as training settles the top-k energy share rises and
+//! compression switches on — reproducing Table V's CNC behaviour.
+
+
+use crate::config::CompressionConfig;
+use crate::metrics::Ewma;
+
+/// Gate deciding compressed-vs-dense each round per device.
+#[derive(Debug, Clone)]
+pub struct AdaptiveGate {
+    cfg: CompressionConfig,
+    err_ewma: Ewma,
+    decisions: u64,
+    compressed: u64,
+}
+
+/// One gating decision with its inputs (logged for Table V debugging).
+#[derive(Debug, Clone, Copy)]
+pub struct GateDecision {
+    pub rel_err: f64,
+    pub ewma_err: f64,
+    pub compress: bool,
+}
+
+impl AdaptiveGate {
+    pub fn new(cfg: CompressionConfig) -> Self {
+        Self {
+            cfg,
+            err_ewma: Ewma::new(cfg.ewma_alpha),
+            decisions: 0,
+            compressed: 0,
+        }
+    }
+
+    pub fn config(&self) -> &CompressionConfig {
+        &self.cfg
+    }
+
+    /// Decide from the kernel's energy statistics.
+    ///
+    /// `norm2 = |g|²`, `knorm2 = |Topk(g)|²` (both from the Pallas kernel
+    /// or its native mirror).
+    pub fn decide(&mut self, norm2: f64, knorm2: f64) -> GateDecision {
+        let rel_err = if norm2 <= 0.0 {
+            0.0 // zero gradient: compression is lossless
+        } else {
+            ((norm2 - knorm2).abs() / norm2).clamp(0.0, 1.0)
+        };
+        let ewma_err = self.err_ewma.update(rel_err);
+        let compress = ewma_err <= self.cfg.delta;
+        self.decisions += 1;
+        if compress {
+            self.compressed += 1;
+        }
+        GateDecision {
+            rel_err,
+            ewma_err,
+            compress,
+        }
+    }
+
+    /// Fraction of decisions that chose compression so far.
+    pub fn compress_fraction(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.compressed as f64 / self.decisions as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(delta: f64) -> AdaptiveGate {
+        AdaptiveGate::new(CompressionConfig::new(0.1, delta))
+    }
+
+    #[test]
+    fn low_error_compresses() {
+        let mut g = gate(0.3);
+        // top-k captures 90% of energy → rel err 0.1 ≤ 0.3
+        let d = g.decide(100.0, 90.0);
+        assert!(d.compress);
+    }
+
+    #[test]
+    fn high_error_sends_dense() {
+        let mut g = gate(0.1);
+        let d = g.decide(100.0, 50.0);
+        assert!(!d.compress);
+    }
+
+    #[test]
+    fn zero_gradient_is_lossless() {
+        let mut g = gate(0.01);
+        assert!(g.decide(0.0, 0.0).compress);
+    }
+
+    #[test]
+    fn ewma_smooths_flapping() {
+        let mut g = gate(0.3);
+        for _ in 0..20 {
+            g.decide(100.0, 95.0); // err 0.05, well under
+        }
+        // one noisy spike shouldn't immediately flip the decision
+        let d = g.decide(100.0, 40.0); // instantaneous err 0.6
+        assert!(d.ewma_err < 0.3, "ewma {}", d.ewma_err);
+        assert!(d.compress);
+    }
+
+    #[test]
+    fn error_improves_enables_compression_over_time() {
+        // training progression: energy share of top-k rises
+        let mut g = gate(0.2);
+        let mut first = true;
+        let mut switched_at = None;
+        for i in 0..50 {
+            let share = 0.4 + 0.012 * i as f64; // 0.4 → 1.0
+            let d = g.decide(1.0, share.min(1.0));
+            if first {
+                assert!(!d.compress, "must start dense");
+                first = false;
+            }
+            if d.compress && switched_at.is_none() {
+                switched_at = Some(i);
+            }
+        }
+        let s = switched_at.expect("gate never switched to compression");
+        assert!(s > 5 && s < 45, "switch round {s}");
+        assert!(g.compress_fraction() > 0.1 && g.compress_fraction() < 0.9);
+    }
+}

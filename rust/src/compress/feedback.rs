@@ -1,0 +1,142 @@
+//! Error feedback (residual accumulation) for sparsified gradients.
+//!
+//! Top-k discards `(1 − CR)·d` coordinates each round; DGC (Lin et al.,
+//! cited in paper §III-C) shows convergence is preserved when the dropped
+//! mass is *accumulated locally* and re-added to the next round's gradient
+//! instead of lost. This is the standard error-feedback (EF-SGD) loop:
+//!
+//! ```text
+//!   corrected = g + residual
+//!   sent      = Topk(corrected)
+//!   residual  = corrected − sent
+//! ```
+//!
+//! Optional in ScaDLES runs (`CompressionConfig::error_feedback`); the
+//! ablation bench compares accuracy with/without it at aggressive CRs.
+
+/// Per-device residual accumulator.
+#[derive(Debug, Clone)]
+pub struct ErrorFeedback {
+    residual: Vec<f32>,
+    /// L2² of the current residual (diagnostic; decays when compression
+    /// is healthy, grows when CR is too aggressive).
+    pub residual_norm2: f64,
+}
+
+impl ErrorFeedback {
+    pub fn new(d: usize) -> Self {
+        Self {
+            residual: vec![0.0; d],
+            residual_norm2: 0.0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.residual.len()
+    }
+
+    /// Add the stored residual into `g` (call before thresholding).
+    pub fn correct(&self, g: &mut [f32]) {
+        debug_assert_eq!(g.len(), self.residual.len());
+        for (v, r) in g.iter_mut().zip(&self.residual) {
+            *v += r;
+        }
+    }
+
+    /// Record what was *not* sent: `residual = corrected − sent`.
+    ///
+    /// `corrected` is the gradient after [`correct`]; `sent` is the masked
+    /// tensor that actually crossed the wire.
+    pub fn absorb(&mut self, corrected: &[f32], sent: &[f32]) {
+        debug_assert_eq!(corrected.len(), self.residual.len());
+        let mut n2 = 0f64;
+        for ((r, c), s) in self.residual.iter_mut().zip(corrected).zip(sent) {
+            *r = c - s;
+            n2 += (*r as f64) * (*r as f64);
+        }
+        self.residual_norm2 = n2;
+    }
+
+    /// Dense round: everything was sent, residual clears.
+    pub fn clear(&mut self) {
+        self.residual.iter_mut().for_each(|r| *r = 0.0);
+        self.residual_norm2 = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{mask_stats_native, threshold_for_ratio};
+    use crate::rng::Pcg64;
+
+    fn grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 0);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn residual_is_exactly_the_dropped_mass() {
+        let d = 1000;
+        let g = grad(d, 1);
+        let mut ef = ErrorFeedback::new(d);
+        let mut corrected = g.clone();
+        ef.correct(&mut corrected); // residual 0 → no-op
+        assert_eq!(corrected, g);
+        let (_k, t) = threshold_for_ratio(&corrected, 0.1);
+        let mut sent = corrected.clone();
+        mask_stats_native(&mut sent, t);
+        ef.absorb(&corrected, &sent);
+        // residual + sent == corrected
+        for i in 0..d {
+            let rebuilt = sent[i] + (corrected[i] - sent[i]);
+            assert!((rebuilt - corrected[i]).abs() < 1e-7);
+        }
+        assert!(ef.residual_norm2 > 0.0);
+    }
+
+    #[test]
+    fn no_signal_is_lost_over_rounds() {
+        // sum of all sent tensors + final residual == sum of all gradients
+        let d = 500;
+        let mut ef = ErrorFeedback::new(d);
+        let mut total_g = vec![0f64; d];
+        let mut total_sent = vec![0f64; d];
+        for round in 0..20 {
+            let g = grad(d, 100 + round);
+            for (t, v) in total_g.iter_mut().zip(&g) {
+                *t += *v as f64;
+            }
+            let mut corrected = g.clone();
+            ef.correct(&mut corrected);
+            let (_k, t) = threshold_for_ratio(&corrected, 0.05);
+            let mut sent = corrected.clone();
+            mask_stats_native(&mut sent, t);
+            ef.absorb(&corrected, &sent);
+            for (s, v) in total_sent.iter_mut().zip(&sent) {
+                *s += *v as f64;
+            }
+        }
+        for i in 0..d {
+            let residual_i = total_g[i] - total_sent[i];
+            // final residual must equal the accounting difference
+            assert!(
+                (residual_i - ef.residual[i] as f64).abs() < 1e-3,
+                "coord {i}: {residual_i} vs {}",
+                ef.residual[i]
+            );
+        }
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut ef = ErrorFeedback::new(10);
+        ef.absorb(&vec![1.0; 10], &vec![0.0; 10]);
+        assert!(ef.residual_norm2 > 0.0);
+        ef.clear();
+        assert_eq!(ef.residual_norm2, 0.0);
+        let mut g = vec![2.0f32; 10];
+        ef.correct(&mut g);
+        assert!(g.iter().all(|&v| v == 2.0));
+    }
+}

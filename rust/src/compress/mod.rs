@@ -1,0 +1,29 @@
+//! Gradient compression (paper §IV "High communication cost", §V-G).
+//!
+//! ScaDLES uses **adaptive Top-k sparsification**: each round, every
+//! device's gradient is masked to its top `CR·d` magnitudes (the L1 Pallas
+//! `topk` kernel applies the mask and returns `|g|²`/`|Topk(g)|²`), and the
+//! compressed tensor is exchanged only while the EWMA of the relative
+//! compression error stays below δ; otherwise the dense gradient is sent.
+//!
+//! * [`topk`]     — O(d) k-th-magnitude threshold selection (select-nth)
+//!   plus a pure-Rust mask/stats fallback mirroring the Pallas kernel.
+//! * [`adaptive`] — the EWMA-gated send rule.
+//! * [`cnc`]      — Compression-to-No-Compression ratio + floats-sent
+//!   accounting (Table V's metrics).
+//! * [`schemes`]  — `None` / `StaticTopk` / `AdaptiveTopk` policy objects
+//!   the coordinator drives.
+
+pub mod adaptive;
+pub mod baselines;
+pub mod cnc;
+pub mod feedback;
+pub mod schemes;
+pub mod topk;
+
+pub use adaptive::AdaptiveGate;
+pub use baselines::{fp16_roundtrip, qsgd, terngrad, Encoded};
+pub use cnc::CncCounter;
+pub use feedback::ErrorFeedback;
+pub use schemes::{CompressionDecision, CompressionScheme};
+pub use topk::{mask_stats_native, threshold_for_ratio, topk_threshold};

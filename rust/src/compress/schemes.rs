@@ -1,0 +1,137 @@
+//! Compression policy objects the coordinator drives.
+//!
+//! Three schemes spanning the paper's comparison space:
+//! * `None`       — dense exchange every round (conventional DDL).
+//! * `StaticTopk` — always send Top-k at a fixed CR (prior work:
+//!   Aji & Heafield / DGC-style fixed-ratio sparsification).
+//! * `AdaptiveTopk` — ScaDLES: Top-k gated by the EWMA error rule.
+//!
+//! The flow is two-phase so the actual mask/stats pass can run on the L1
+//! Pallas kernel: `threshold()` gives the magnitude cut for this gradient;
+//! the caller runs the kernel (or the native mirror) to get
+//! `(masked, |g|², |Topk(g)|²)`; `decide()` then picks the tensor to
+//! exchange and does the accounting.
+
+
+use super::adaptive::AdaptiveGate;
+use super::topk::threshold_for_ratio;
+use crate::config::CompressionConfig;
+
+/// Per-round, per-device compression decision.
+#[derive(Debug, Clone, Copy)]
+pub struct CompressionDecision {
+    /// Exchange the masked (sparse) tensor?
+    pub compress: bool,
+    /// Elements that would survive the mask.
+    pub kept: u64,
+    /// Dense gradient size.
+    pub dense: u64,
+    /// Floats this exchange contributes to the communication volume.
+    pub floats_sent: u64,
+}
+
+/// A device's compression policy.
+#[derive(Debug, Clone)]
+pub enum CompressionScheme {
+    None,
+    StaticTopk { ratio: f64 },
+    AdaptiveTopk { gate: AdaptiveGate },
+}
+
+impl CompressionScheme {
+    /// ScaDLES configuration: adaptive when a config is present.
+    pub fn from_config(cfg: Option<CompressionConfig>) -> Self {
+        match cfg {
+            None => CompressionScheme::None,
+            Some(c) => CompressionScheme::AdaptiveTopk {
+                gate: AdaptiveGate::new(c),
+            },
+        }
+    }
+
+    /// Compression ratio in play, if any.
+    pub fn ratio(&self) -> Option<f64> {
+        match self {
+            CompressionScheme::None => None,
+            CompressionScheme::StaticTopk { ratio } => Some(*ratio),
+            CompressionScheme::AdaptiveTopk { gate } => Some(gate.config().ratio),
+        }
+    }
+
+    /// Phase 1: `(k, magnitude threshold)` for this gradient, or `None`
+    /// when the scheme never compresses.
+    pub fn threshold(&self, g: &[f32]) -> Option<(usize, f32)> {
+        self.ratio().map(|r| threshold_for_ratio(g, r))
+    }
+
+    /// Phase 2: decide from the kernel's stats. For `None` this is the
+    /// dense fallthrough (callers shouldn't normally get here).
+    pub fn decide(&mut self, norm2: f64, knorm2: f64, kept: u64, dense: u64) -> CompressionDecision {
+        let compress = match self {
+            CompressionScheme::None => false,
+            CompressionScheme::StaticTopk { .. } => true,
+            CompressionScheme::AdaptiveTopk { gate } => gate.decide(norm2, knorm2).compress,
+        };
+        CompressionDecision {
+            compress,
+            kept,
+            dense,
+            floats_sent: if compress { kept } else { dense },
+        }
+    }
+
+    /// Dense decision for schemes/rounds without compression.
+    pub fn dense_decision(dense: u64) -> CompressionDecision {
+        CompressionDecision {
+            compress: false,
+            kept: dense,
+            dense,
+            floats_sent: dense,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionScheme::None => "none",
+            CompressionScheme::StaticTopk { .. } => "static-topk",
+            CompressionScheme::AdaptiveTopk { .. } => "adaptive-topk",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_compresses() {
+        let mut s = CompressionScheme::None;
+        assert!(s.threshold(&[1.0, 2.0]).is_none());
+        let d = s.decide(10.0, 1.0, 1, 2);
+        assert!(!d.compress);
+        assert_eq!(d.floats_sent, 2);
+    }
+
+    #[test]
+    fn static_always_compresses() {
+        let mut s = CompressionScheme::StaticTopk { ratio: 0.5 };
+        let (k, _) = s.threshold(&[1.0, -4.0, 2.0, 0.5]).unwrap();
+        assert_eq!(k, 2);
+        let d = s.decide(100.0, 1.0, 2, 4); // terrible error, still compresses
+        assert!(d.compress);
+        assert_eq!(d.floats_sent, 2);
+    }
+
+    #[test]
+    fn adaptive_follows_gate() {
+        let mut s =
+            CompressionScheme::from_config(Some(CompressionConfig::new(0.1, 0.2)));
+        let good = s.decide(100.0, 95.0, 10, 100);
+        assert!(good.compress);
+        let mut s =
+            CompressionScheme::from_config(Some(CompressionConfig::new(0.1, 0.2)));
+        let bad = s.decide(100.0, 10.0, 10, 100);
+        assert!(!bad.compress);
+        assert_eq!(bad.floats_sent, 100);
+    }
+}

@@ -1,0 +1,131 @@
+//! Top-k threshold selection + native mask/stats fallback.
+//!
+//! The magnitude threshold is found with `select_nth_unstable` — O(d)
+//! average, no full sort — in the coordinator; the Pallas kernel (or
+//! [`mask_stats_native`], its bit-exact Rust mirror used by tests and the
+//! kernel-ablation bench) then applies the mask in one streaming pass.
+
+/// k-th largest magnitude of `g` (the mask keeps `|g_j| >= thresh`).
+/// `k = 0` returns +inf (nothing survives); `k >= d` returns 0 (all pass).
+pub fn topk_threshold(g: &[f32], k: usize) -> f32 {
+    let d = g.len();
+    if k == 0 || d == 0 {
+        return f32::INFINITY;
+    }
+    if k >= d {
+        return 0.0;
+    }
+    let mut mags: Vec<f32> = g.iter().map(|v| v.abs()).collect();
+    // nth element in descending order = index k-1
+    let (_, nth, _) = mags.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
+    *nth
+}
+
+/// Threshold for keeping a `ratio` fraction (CR) of `g`'s elements.
+pub fn threshold_for_ratio(g: &[f32], ratio: f64) -> (usize, f32) {
+    let k = ((g.len() as f64 * ratio).ceil() as usize).clamp(1, g.len().max(1));
+    (k, topk_threshold(g, k))
+}
+
+/// Native mirror of the Pallas `topk_mask_stats` kernel: zero sub-threshold
+/// entries in place and return `(|g|², |Topk(g)|², nnz)`.
+pub fn mask_stats_native(g: &mut [f32], thresh: f32) -> (f64, f64, usize) {
+    let mut norm2 = 0f64;
+    let mut knorm2 = 0f64;
+    let mut nnz = 0usize;
+    for v in g.iter_mut() {
+        let x = *v as f64;
+        norm2 += x * x;
+        if v.abs() >= thresh {
+            knorm2 += x * x;
+            nnz += 1;
+        } else {
+            *v = 0.0;
+        }
+    }
+    (norm2, knorm2, nnz)
+}
+
+/// Sparse view of a masked gradient: (indices, values) of survivors.
+/// What actually crosses the network at 8 bytes/element.
+pub fn sparsify(g: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    for (i, &v) in g.iter().enumerate() {
+        if v != 0.0 {
+            idx.push(i as u32);
+            val.push(v);
+        }
+    }
+    (idx, val)
+}
+
+/// Reassemble a dense gradient from its sparse view.
+pub fn densify(d: usize, idx: &[u32], val: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; d];
+    for (&i, &v) in idx.iter().zip(val) {
+        out[i as usize] = v;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_selects_exactly_k_distinct_magnitudes() {
+        let g = [0.1f32, -5.0, 3.0, 0.2, -0.4, 2.0];
+        let t = topk_threshold(&g, 3);
+        assert_eq!(t, 2.0);
+        let kept = g.iter().filter(|v| v.abs() >= t).count();
+        assert_eq!(kept, 3);
+    }
+
+    #[test]
+    fn threshold_edges() {
+        let g = [1f32, 2.0, 3.0];
+        assert_eq!(topk_threshold(&g, 0), f32::INFINITY);
+        assert_eq!(topk_threshold(&g, 3), 0.0);
+        assert_eq!(topk_threshold(&[], 1), f32::INFINITY);
+    }
+
+    #[test]
+    fn ratio_keeps_cr_fraction() {
+        // distinct magnitudes 1..=1000 with alternating signs
+        let g: Vec<f32> = (0..1000)
+            .map(|i| (i + 1) as f32 * if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let (k, t) = threshold_for_ratio(&g, 0.1);
+        assert_eq!(k, 100);
+        let kept = g.iter().filter(|v| v.abs() >= t).count();
+        assert_eq!(kept, 100);
+    }
+
+    #[test]
+    fn mask_stats_match_definition() {
+        let mut g = vec![1f32, -2.0, 0.5, 4.0];
+        let (n2, k2, nnz) = mask_stats_native(&mut g, 2.0);
+        assert_eq!(n2, 1.0 + 4.0 + 0.25 + 16.0);
+        assert_eq!(k2, 4.0 + 16.0);
+        assert_eq!(nnz, 2);
+        assert_eq!(g, vec![0.0, -2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn sparsify_roundtrip() {
+        let g = vec![0f32, 3.0, 0.0, -1.0, 0.0];
+        let (i, v) = sparsify(&g);
+        assert_eq!(i, vec![1, 3]);
+        assert_eq!(densify(5, &i, &v), g);
+    }
+
+    #[test]
+    fn ties_at_threshold_keep_at_least_k() {
+        // duplicated magnitudes: mask keeps >= k (all ties pass)
+        let g = [2f32, 2.0, 2.0, 1.0];
+        let t = topk_threshold(&g, 2);
+        assert_eq!(t, 2.0);
+        assert_eq!(g.iter().filter(|v| v.abs() >= t).count(), 3);
+    }
+}

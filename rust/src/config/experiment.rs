@@ -1,0 +1,387 @@
+//! Experiment configuration + builder (the crate's main entry surface).
+
+use std::path::PathBuf;
+
+use anyhow::ensure;
+
+use super::cluster::ClusterConfig;
+use super::presets::StreamPreset;
+use crate::buffer::BufferPolicy;
+use crate::data::LabelMap;
+use crate::Result;
+
+/// Which trainer coordinates the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMode {
+    /// ScaDLES: `b_i ∝ S_i`, weighted aggregation, linear LR scaling.
+    Scadles,
+    /// Conventional DDL: fixed batch per device, uniform 1/N averaging;
+    /// devices *wait* for slow streams (the straggler effect of §II-A).
+    Ddl,
+}
+
+impl TrainMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainMode::Scadles => "scadles",
+            TrainMode::Ddl => "ddl",
+        }
+    }
+}
+
+/// Adaptive Top-k compression settings (paper §IV, Table V).
+#[derive(Debug, Clone, Copy)]
+pub struct CompressionConfig {
+    /// Compression ratio CR: surviving fraction of gradient elements
+    /// (0.1 ⇒ Top-10%).
+    pub ratio: f64,
+    /// Relative-error threshold δ: compressed tensors are sent when the
+    /// EWMA of `||g|² − |Topk(g)|²| / |g|²` is ≤ δ.
+    pub delta: f64,
+    /// EWMA smoothing for the error tracker.
+    pub ewma_alpha: f64,
+    /// DGC-style error feedback: accumulate the dropped (1−CR) mass per
+    /// device and re-add it next round (compress::feedback).
+    pub error_feedback: bool,
+}
+
+impl CompressionConfig {
+    pub fn new(ratio: f64, delta: f64) -> Self {
+        Self {
+            ratio,
+            delta,
+            ewma_alpha: 0.3,
+            error_feedback: false,
+        }
+    }
+
+    /// Enable DGC-style residual accumulation.
+    pub fn with_error_feedback(mut self) -> Self {
+        self.error_feedback = true;
+        self
+    }
+
+    /// The paper's final-evaluation configuration (§V-H): CR 0.1, δ 0.3.
+    pub fn paper_final() -> Self {
+        Self::new(0.1, 0.3)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.ratio > 0.0 && self.ratio <= 1.0, "CR must be in (0,1]");
+        ensure!(self.delta > 0.0, "delta must be positive");
+        ensure!(
+            self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0,
+            "ewma_alpha must be in (0,1]"
+        );
+        Ok(())
+    }
+}
+
+/// Randomized data injection (α, β) for non-IID streams (paper §IV).
+#[derive(Debug, Clone, Copy)]
+pub struct InjectionConfig {
+    /// Fraction of devices that share data each round.
+    pub alpha: f64,
+    /// Fraction of a sharing device's fresh samples broadcast to others.
+    pub beta: f64,
+}
+
+impl InjectionConfig {
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        Self { alpha, beta }
+    }
+
+    /// The four configurations of Fig. 9.
+    pub fn paper_sweep() -> [Self; 4] {
+        [
+            Self::new(0.5, 0.5),
+            Self::new(0.25, 0.25),
+            Self::new(0.1, 0.1),
+            Self::new(0.05, 0.05),
+        ]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!((0.0..=1.0).contains(&self.alpha), "alpha in [0,1]");
+        ensure!((0.0..=1.0).contains(&self.beta), "beta in [0,1]");
+        Ok(())
+    }
+}
+
+/// Full configuration of one training run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Model artifact family (e.g. `resnet_tiny_c10`).
+    pub model: String,
+    /// Artifacts directory (`make artifacts` output).
+    pub artifacts_dir: PathBuf,
+    pub devices: usize,
+    pub rounds: usize,
+    pub seed: u64,
+    /// Streaming-rate preset (Table I).
+    pub preset: StreamPreset,
+    /// Per-round multiplicative jitter std on device rates (intra-device
+    /// heterogeneity, §II-A; 0 = constant rates).
+    pub rate_jitter: f64,
+    pub label_map: LabelMap,
+    pub mode: TrainMode,
+    pub buffer_policy: BufferPolicy,
+    pub compression: Option<CompressionConfig>,
+    pub injection: Option<InjectionConfig>,
+    /// ScaDLES batch bounds (paper: 8 / 1024; CPU default caps at the
+    /// compiled bucket ladder's top).
+    pub b_min: usize,
+    pub b_max: usize,
+    /// Fixed per-device batch for the DDL baseline (paper: 64).
+    pub ddl_batch: usize,
+    /// Base learning rate η and the base global batch B for the linear
+    /// scaling rule γ = ΣS_j / B.
+    pub base_lr: f64,
+    pub base_global_batch: f64,
+    /// LR decay points: (round, multiplicative factor).
+    pub lr_decay: Vec<(usize, f64)>,
+    /// Evaluate held-out accuracy every `eval_every` rounds.
+    pub eval_every: usize,
+    /// Held-out samples per class.
+    pub eval_per_class: usize,
+    /// Top-5 accuracy target for time-to-accuracy reporting.
+    pub target_top5: f64,
+    /// Progress echo period (0 = silent).
+    pub echo_every: usize,
+}
+
+impl ExperimentConfig {
+    /// Start a builder with CPU-friendly defaults for `model`.
+    pub fn builder(model: &str) -> ExperimentBuilder {
+        ExperimentBuilder::new(model)
+    }
+
+    /// The virtual cluster this config runs on (paper-scale costs).
+    pub fn cluster(&self) -> ClusterConfig {
+        ClusterConfig::paper_for_model(&self.model, self.devices)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.devices > 0, "need at least one device");
+        ensure!(self.rounds > 0, "need at least one round");
+        ensure!(self.b_min >= 1 && self.b_min <= self.b_max, "b_min ≤ b_max required");
+        ensure!(self.ddl_batch >= 1, "ddl_batch ≥ 1");
+        ensure!(self.base_lr > 0.0, "base_lr > 0");
+        ensure!(self.base_global_batch > 0.0, "base_global_batch > 0");
+        ensure!(self.rate_jitter >= 0.0, "rate_jitter ≥ 0");
+        if let Some(c) = &self.compression {
+            c.validate()?;
+        }
+        if let Some(i) = &self.injection {
+            i.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Learning-rate multiplier accumulated up to `round` (schedule decay).
+    pub fn lr_factor_at(&self, round: usize) -> f64 {
+        self.lr_decay
+            .iter()
+            .filter(|(r, _)| round >= *r)
+            .map(|(_, f)| f)
+            .product()
+    }
+}
+
+/// Builder for [`ExperimentConfig`].
+#[derive(Debug, Clone)]
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+}
+
+impl ExperimentBuilder {
+    pub fn new(model: &str) -> Self {
+        let is_vgg = model.contains("vgg");
+        Self {
+            cfg: ExperimentConfig {
+                model: model.to_string(),
+                artifacts_dir: PathBuf::from("artifacts"),
+                devices: 16,
+                rounds: 200,
+                seed: 42,
+                preset: StreamPreset::S1,
+                rate_jitter: 0.0,
+                label_map: LabelMap::Iid,
+                mode: TrainMode::Scadles,
+                buffer_policy: BufferPolicy::Persistence,
+                compression: None,
+                injection: None,
+                b_min: 8,
+                b_max: 1024, // paper bound; runtime clamps to the compiled ladder top
+                ddl_batch: 64,
+                // paper: resnet lr 0.1 (decay 0.2), vgg lr 0.01 (decay 0.3);
+                // vgg_tiny trains stably one notch below the paper's vgg lr.
+                base_lr: if is_vgg {
+                    0.005
+                } else if model.contains("resnet") {
+                    0.1
+                } else {
+                    0.05
+                },
+                base_global_batch: 16.0 * 64.0,
+                lr_decay: Vec::new(), // derived in build() if empty
+                eval_every: 10,
+                eval_per_class: 16,
+                target_top5: 0.9,
+                echo_every: 0,
+            },
+        }
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+    pub fn devices(mut self, n: usize) -> Self {
+        self.cfg.devices = n;
+        self
+    }
+    pub fn rounds(mut self, r: usize) -> Self {
+        self.cfg.rounds = r;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+    pub fn preset(mut self, p: StreamPreset) -> Self {
+        self.cfg.preset = p;
+        self
+    }
+    pub fn rate_jitter(mut self, j: f64) -> Self {
+        self.cfg.rate_jitter = j;
+        self
+    }
+    pub fn label_map(mut self, m: LabelMap) -> Self {
+        self.cfg.label_map = m;
+        self
+    }
+    pub fn mode(mut self, m: TrainMode) -> Self {
+        self.cfg.mode = m;
+        self
+    }
+    pub fn buffer_policy(mut self, p: BufferPolicy) -> Self {
+        self.cfg.buffer_policy = p;
+        self
+    }
+    pub fn compression(mut self, c: CompressionConfig) -> Self {
+        self.cfg.compression = Some(c);
+        self
+    }
+    pub fn injection(mut self, i: InjectionConfig) -> Self {
+        self.cfg.injection = Some(i);
+        self
+    }
+    pub fn batch_bounds(mut self, b_min: usize, b_max: usize) -> Self {
+        self.cfg.b_min = b_min;
+        self.cfg.b_max = b_max;
+        self
+    }
+    pub fn ddl_batch(mut self, b: usize) -> Self {
+        self.cfg.ddl_batch = b;
+        self
+    }
+    pub fn base_lr(mut self, lr: f64) -> Self {
+        self.cfg.base_lr = lr;
+        self
+    }
+    pub fn base_global_batch(mut self, b: f64) -> Self {
+        self.cfg.base_global_batch = b;
+        self
+    }
+    pub fn lr_decay(mut self, decay: Vec<(usize, f64)>) -> Self {
+        self.cfg.lr_decay = decay;
+        self
+    }
+    pub fn eval_every(mut self, e: usize) -> Self {
+        self.cfg.eval_every = e.max(1);
+        self
+    }
+    pub fn eval_per_class(mut self, e: usize) -> Self {
+        self.cfg.eval_per_class = e.max(1);
+        self
+    }
+    pub fn target_top5(mut self, t: f64) -> Self {
+        self.cfg.target_top5 = t;
+        self
+    }
+    pub fn echo_every(mut self, e: usize) -> Self {
+        self.cfg.echo_every = e;
+        self
+    }
+
+    /// Validate and finish. An empty `lr_decay` gets the paper's schedule
+    /// shape (decay at 40/60/80% of the run; ×0.2 ResNet-class, ×0.3
+    /// VGG-class).
+    pub fn build(mut self) -> Result<ExperimentConfig> {
+        if self.cfg.lr_decay.is_empty() {
+            let f = if self.cfg.model.contains("vgg") { 0.3 } else { 0.2 };
+            let r = self.cfg.rounds;
+            // paper shape (decay at 75/150/225 of ~300 epochs) for long
+            // runs; short CPU-scale runs get one late decay so the model
+            // still sees a full-LR phase.
+            self.cfg.lr_decay = if r >= 60 {
+                vec![(r * 2 / 5, f), (r * 3 / 5, f), (r * 4 / 5, f)]
+            } else {
+                vec![(r * 4 / 5, f)]
+            };
+        }
+        self.cfg.base_global_batch = self.cfg.devices as f64 * self.cfg.ddl_batch as f64;
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_valid() {
+        let cfg = ExperimentConfig::builder("mlp_c10").build().unwrap();
+        assert_eq!(cfg.devices, 16);
+        assert_eq!(cfg.base_global_batch, 16.0 * 64.0);
+        assert_eq!(cfg.lr_decay.len(), 3);
+    }
+
+    #[test]
+    fn lr_factor_accumulates() {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .rounds(100)
+            .lr_decay(vec![(40, 0.2), (60, 0.2)])
+            .build()
+            .unwrap();
+        assert_eq!(cfg.lr_factor_at(0), 1.0);
+        assert_eq!(cfg.lr_factor_at(40), 0.2);
+        assert!((cfg.lr_factor_at(99) - 0.04).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(ExperimentConfig::builder("mlp_c10").devices(0).build().is_err());
+        assert!(ExperimentConfig::builder("mlp_c10")
+            .batch_bounds(64, 8)
+            .build()
+            .is_err());
+        assert!(ExperimentConfig::builder("mlp_c10")
+            .compression(CompressionConfig::new(1.5, 0.3))
+            .build()
+            .is_err());
+        assert!(ExperimentConfig::builder("mlp_c10")
+            .injection(InjectionConfig::new(2.0, 0.5))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn vgg_gets_its_own_hyperparams() {
+        let cfg = ExperimentConfig::builder("vgg_tiny_c100").build().unwrap();
+        assert!(cfg.base_lr < 0.05);
+        assert!((cfg.lr_decay[0].1 - 0.3).abs() < 1e-12);
+    }
+}

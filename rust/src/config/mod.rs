@@ -1,0 +1,9 @@
+//! Configuration: Table I stream presets, virtual cluster, experiments.
+
+pub mod cluster;
+pub mod experiment;
+pub mod presets;
+
+pub use cluster::{ClusterConfig, VirtualCost};
+pub use experiment::{CompressionConfig, ExperimentConfig, InjectionConfig, TrainMode};
+pub use presets::StreamPreset;

@@ -1,0 +1,100 @@
+//! Table I streaming-rate presets: S1, S2, S1', S2'.
+
+
+use crate::rng::RateDistribution;
+
+/// The four device-rate distributions the paper evaluates (Table I).
+///
+/// Uniform sets (S1, S2) are *more* heterogeneous — rates spread evenly
+/// over a wide range; normal sets (S1', S2') cluster near the mean
+/// (§V-D: "2/3rd values lie within 1 standard deviation"). Primed/unprimed
+/// pairs differ in volume: S2/S2' are high-rate streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamPreset {
+    /// Uniform, mean 38, std 24 — low volume, high heterogeneity.
+    S1,
+    /// Uniform, mean 300, std 112 — high volume, high heterogeneity.
+    S2,
+    /// Normal, mean 64, std 24 — low volume, low heterogeneity.
+    S1Prime,
+    /// Normal, mean 256, std 28 — high volume, low heterogeneity.
+    S2Prime,
+}
+
+impl StreamPreset {
+    pub fn all() -> [StreamPreset; 4] {
+        [
+            StreamPreset::S1,
+            StreamPreset::S2,
+            StreamPreset::S1Prime,
+            StreamPreset::S2Prime,
+        ]
+    }
+
+    /// The Table I distribution behind this preset.
+    pub fn distribution(&self) -> RateDistribution {
+        match self {
+            StreamPreset::S1 => RateDistribution::Uniform { mean: 38.0, std: 24.0 },
+            StreamPreset::S2 => RateDistribution::Uniform { mean: 300.0, std: 112.0 },
+            StreamPreset::S1Prime => RateDistribution::Normal { mean: 64.0, std: 24.0 },
+            StreamPreset::S2Prime => RateDistribution::Normal { mean: 256.0, std: 28.0 },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamPreset::S1 => "S1",
+            StreamPreset::S2 => "S2",
+            StreamPreset::S1Prime => "S1'",
+            StreamPreset::S2Prime => "S2'",
+        }
+    }
+
+    /// High-volume presets accumulate buffer fastest (S2, S2').
+    pub fn is_high_volume(&self) -> bool {
+        matches!(self, StreamPreset::S2 | StreamPreset::S2Prime)
+    }
+}
+
+impl std::fmt::Display for StreamPreset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn table1_parameters() {
+        assert_eq!(
+            StreamPreset::S1.distribution(),
+            RateDistribution::Uniform { mean: 38.0, std: 24.0 }
+        );
+        assert_eq!(
+            StreamPreset::S2Prime.distribution(),
+            RateDistribution::Normal { mean: 256.0, std: 28.0 }
+        );
+    }
+
+    #[test]
+    fn uniform_more_heterogeneous_than_normal() {
+        // coefficient of variation: S1 (24/38) ≫ S1' at similar volume (24/64)
+        let cv = |p: StreamPreset| p.distribution().std() / p.distribution().mean();
+        assert!(cv(StreamPreset::S1) > cv(StreamPreset::S1Prime));
+        assert!(cv(StreamPreset::S2) > cv(StreamPreset::S2Prime));
+    }
+
+    #[test]
+    fn sampling_respects_volume_ordering() {
+        let mut rng = Pcg64::new(1, 0);
+        let mut mean = |p: StreamPreset| {
+            let xs = p.distribution().sample_n(&mut rng, 5000);
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(mean(StreamPreset::S2) > mean(StreamPreset::S1) * 4.0);
+        assert!(mean(StreamPreset::S2Prime) > mean(StreamPreset::S1Prime) * 2.0);
+    }
+}

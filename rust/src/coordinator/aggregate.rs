@@ -1,0 +1,100 @@
+//! Weighted gradient aggregation (paper Eqn. 4a/4b).
+//!
+//! The Pallas `wagg` artifact does this on the hot path; the functions
+//! here compute the weights, provide the native mirror (tests + the
+//! kernel-vs-native ablation bench), and define the DDL baseline's
+//! uniform weighting.
+
+/// ScaDLES weights: `r_i = b_i / Σ_j b_j` (Eqn. 4a, with the *actual*
+/// trained batch b_i — equal to S_i unless clamped by [b_min, b_max]).
+/// Devices with an empty batch get weight 0; weights of active devices
+/// sum to 1.
+pub fn weights_from_batches(batches: &[usize]) -> Vec<f32> {
+    let total: usize = batches.iter().sum();
+    if total == 0 {
+        return vec![0.0; batches.len()];
+    }
+    batches
+        .iter()
+        .map(|&b| b as f32 / total as f32)
+        .collect()
+}
+
+/// DDL baseline weights: uniform 1/N over devices that trained (Eqn. 1).
+pub fn uniform_weights(batches: &[usize]) -> Vec<f32> {
+    let active = batches.iter().filter(|&&b| b > 0).count();
+    if active == 0 {
+        return vec![0.0; batches.len()];
+    }
+    batches
+        .iter()
+        .map(|&b| if b > 0 { 1.0 / active as f32 } else { 0.0 })
+        .collect()
+}
+
+/// Native weighted aggregation: `g̃ = Σ_i r_i · g_i` over row-major
+/// `[n, d]` gradients. Mirror of the Pallas `wagg` kernel.
+pub fn aggregate_native(grads: &[f32], weights: &[f32], d: usize) -> Vec<f32> {
+    let n = weights.len();
+    debug_assert_eq!(grads.len(), n * d);
+    let mut out = vec![0f32; d];
+    for (i, &w) in weights.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        let row = &grads[i * d..(i + 1) * d];
+        for (o, &g) in out.iter_mut().zip(row) {
+            *o += w * g;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_one_and_track_batches() {
+        let w = weights_from_batches(&[100, 300, 600]);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((w[2] / w[0] - 6.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_devices_get_zero_weight() {
+        let w = weights_from_batches(&[0, 50, 50]);
+        assert_eq!(w[0], 0.0);
+        assert!((w[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_empty_is_all_zero() {
+        assert_eq!(weights_from_batches(&[0, 0]), vec![0.0, 0.0]);
+        assert_eq!(uniform_weights(&[0, 0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn uniform_ignores_batch_size() {
+        let w = uniform_weights(&[10, 1000, 0]);
+        assert_eq!(w, vec![0.5, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn aggregate_matches_hand_computation() {
+        // g0 = [1,2], g1 = [3,4], r = [0.25, 0.75]
+        let g = vec![1f32, 2.0, 3.0, 4.0];
+        let out = aggregate_native(&g, &[0.25, 0.75], 2);
+        assert_eq!(out, vec![0.25 + 2.25, 0.5 + 3.0]);
+    }
+
+    #[test]
+    fn aggregation_is_convex_combination() {
+        // with weights summing to 1, each output coord lies in the hull
+        let g = vec![1f32, -1.0, 3.0, 5.0, 2.0, 0.0];
+        let w = weights_from_batches(&[1, 2, 3]);
+        let out = aggregate_native(&g, &w, 2);
+        assert!(out[0] >= 1.0 && out[0] <= 3.0);
+        assert!(out[1] >= -1.0 && out[1] <= 5.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Execution backend abstraction: real PJRT artifacts or a mock.
+//!
+//! The trainer only needs six operations; [`crate::runtime::ModelRuntime`]
+//! provides them over the compiled HLO artifacts, and [`MockBackend`]
+//! provides a deterministic, artifact-free substitute (a noisy quadratic
+//! bowl) so coordinator logic — batching, weighting, compression gating,
+//! buffer policies, timing — is unit- and property-testable in
+//! milliseconds.
+
+use crate::runtime::{BucketLadder, EvalOut, ModelRuntime, TrainOut};
+use crate::Result;
+
+/// What the trainer requires of an execution substrate.
+pub trait Backend {
+    fn param_count(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    fn init_params(&self) -> Result<Vec<f32>>;
+    fn ladder(&self) -> &BucketLadder;
+    fn eval_bucket(&self) -> usize;
+    /// Device-local fwd+bwd on `y.len()` valid samples padded to `bucket`.
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32], bucket: usize)
+        -> Result<TrainOut>;
+    fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut>;
+    /// In-place momentum-SGD update.
+    fn update(&self, params: &mut [f32], mom: &mut [f32], grad: &[f32], lr: f32) -> Result<()>;
+    /// `g̃ = Σ r_i g_i` over row-major `[n, d]`.
+    fn weighted_aggregate(&self, grads: &[f32], weights: &[f32]) -> Result<Vec<f32>>;
+    /// Masked gradient + `(|g|², |Topk|², nnz)` at a magnitude threshold.
+    fn topk_mask_stats(&self, g: &[f32], thresh: f32) -> Result<(Vec<f32>, f64, f64, u64)>;
+}
+
+impl Backend for ModelRuntime {
+    fn param_count(&self) -> usize {
+        self.meta().param_count
+    }
+    fn num_classes(&self) -> usize {
+        self.meta().num_classes
+    }
+    fn init_params(&self) -> Result<Vec<f32>> {
+        ModelRuntime::init_params(self)
+    }
+    fn ladder(&self) -> &BucketLadder {
+        ModelRuntime::ladder(self)
+    }
+    fn eval_bucket(&self) -> usize {
+        self.meta().eval_bucket
+    }
+    fn train_step(&self, params: &[f32], x: &[f32], y: &[i32], bucket: usize)
+        -> Result<TrainOut> {
+        ModelRuntime::train_step(self, params, x, y, bucket)
+    }
+    fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        ModelRuntime::eval_step(self, params, x, y)
+    }
+    fn update(&self, params: &mut [f32], mom: &mut [f32], grad: &[f32], lr: f32) -> Result<()> {
+        ModelRuntime::update(self, params, mom, grad, lr)
+    }
+    fn weighted_aggregate(&self, grads: &[f32], weights: &[f32]) -> Result<Vec<f32>> {
+        ModelRuntime::weighted_aggregate(self, grads, weights)
+    }
+    fn topk_mask_stats(&self, g: &[f32], thresh: f32) -> Result<(Vec<f32>, f64, f64, u64)> {
+        let out = ModelRuntime::topk_mask_stats(self, g, thresh)?;
+        Ok((out.masked, out.norm2 as f64, out.knorm2 as f64, out.nnz as u64))
+    }
+}
+
+/// Deterministic artifact-free backend: loss = ½‖p − t‖² on a fixed
+/// target, gradient = (p − t) + batch-scaled noise. "Accuracy" is a
+/// monotone map of distance-to-target so convergence ordering tests work.
+#[derive(Debug, Clone)]
+pub struct MockBackend {
+    d: usize,
+    ncls: usize,
+    target: Vec<f32>,
+    ladder: BucketLadder,
+    momentum: f32,
+}
+
+impl MockBackend {
+    pub fn new(d: usize, ncls: usize) -> Self {
+        let target: Vec<f32> = (0..d).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
+        Self {
+            d,
+            ncls,
+            target,
+            ladder: BucketLadder::new(vec![8, 16, 32, 64, 128, 256, 512, 1024]).unwrap(),
+            momentum: 0.9,
+        }
+    }
+
+    fn distance(&self, params: &[f32]) -> f64 {
+        params
+            .iter()
+            .zip(&self.target)
+            .map(|(p, t)| ((p - t) as f64).powi(2))
+            .sum::<f64>()
+    }
+
+    fn pseudo_accuracy(&self, params: &[f32]) -> f64 {
+        // 1/ncls at init (params=0 → dist = Σt²), → 1.0 at the optimum
+        let base = 1.0 / self.ncls as f64;
+        let d0: f64 = self.target.iter().map(|t| (*t as f64).powi(2)).sum();
+        let frac = (self.distance(params) / d0.max(1e-12)).min(1.0);
+        base + (1.0 - base) * (1.0 - frac)
+    }
+}
+
+impl Backend for MockBackend {
+    fn param_count(&self) -> usize {
+        self.d
+    }
+    fn num_classes(&self) -> usize {
+        self.ncls
+    }
+    fn init_params(&self) -> Result<Vec<f32>> {
+        Ok(vec![0.0; self.d])
+    }
+    fn ladder(&self) -> &BucketLadder {
+        &self.ladder
+    }
+    fn eval_bucket(&self) -> usize {
+        256
+    }
+
+    fn train_step(&self, params: &[f32], _x: &[f32], y: &[i32], bucket: usize)
+        -> Result<TrainOut> {
+        let b = y.len().min(bucket).max(1);
+        // SGD noise shrinks with batch size: scale 1/sqrt(b), seeded by batch
+        let mut rng = crate::rng::Pcg64::new(y.iter().map(|&v| v as u64).sum::<u64>() + b as u64, 11);
+        let noise = 0.05 / (b as f64).sqrt();
+        let grads: Vec<f32> = params
+            .iter()
+            .zip(&self.target)
+            .map(|(p, t)| (p - t) + (noise * rng.normal()) as f32)
+            .collect();
+        let loss = (0.5 * self.distance(params) / self.d as f64) as f32;
+        let acc = self.pseudo_accuracy(params);
+        Ok(TrainOut {
+            loss,
+            grads,
+            top1_correct: (acc * b as f64) as f32,
+            top5_correct: ((acc * 2.0).min(1.0) * b as f64) as f32,
+        })
+    }
+
+    fn eval_step(&self, params: &[f32], _x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        let b = y.len() as f64;
+        let acc = self.pseudo_accuracy(params);
+        Ok(EvalOut {
+            sum_loss: (0.5 * self.distance(params) / self.d as f64 * b) as f32,
+            top1_correct: (acc * b) as f32,
+            top5_correct: ((acc * 2.0).min(1.0) * b) as f32,
+        })
+    }
+
+    fn update(&self, params: &mut [f32], mom: &mut [f32], grad: &[f32], lr: f32) -> Result<()> {
+        for ((p, m), g) in params.iter_mut().zip(mom.iter_mut()).zip(grad) {
+            *m = self.momentum * *m + g;
+            *p -= lr * *m;
+        }
+        Ok(())
+    }
+
+    fn weighted_aggregate(&self, grads: &[f32], weights: &[f32]) -> Result<Vec<f32>> {
+        Ok(super::aggregate::aggregate_native(grads, weights, self.d))
+    }
+
+    fn topk_mask_stats(&self, g: &[f32], thresh: f32) -> Result<(Vec<f32>, f64, f64, u64)> {
+        let mut masked = g.to_vec();
+        let (n2, k2, nnz) = crate::compress::mask_stats_native(&mut masked, thresh);
+        Ok((masked, n2, k2, nnz as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_converges_under_sgd() {
+        let be = MockBackend::new(64, 10);
+        let mut p = be.init_params().unwrap();
+        let mut m = vec![0.0; 64];
+        let x = vec![0f32; 0];
+        let y: Vec<i32> = (0..32).map(|i| i % 10).collect();
+        let l0 = be.train_step(&p, &x, &y, 32).unwrap().loss;
+        for _ in 0..50 {
+            let out = be.train_step(&p, &x, &y, 32).unwrap();
+            be.update(&mut p, &mut m, &out.grads, 0.05).unwrap();
+        }
+        let l1 = be.train_step(&p, &x, &y, 32).unwrap().loss;
+        assert!(l1 < l0 * 0.2, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn mock_accuracy_monotone_in_distance() {
+        let be = MockBackend::new(16, 10);
+        let zero = be.init_params().unwrap();
+        let near: Vec<f32> = be.target.iter().map(|t| t * 0.9).collect();
+        assert!(be.pseudo_accuracy(&near) > be.pseudo_accuracy(&zero));
+    }
+
+    #[test]
+    fn larger_batches_less_noise() {
+        let be = MockBackend::new(256, 10);
+        let p = vec![0.5f32; 256];
+        let noise_of = |b: usize| {
+            let y: Vec<i32> = vec![0; b];
+            let g = be.train_step(&p, &[], &y, 256).unwrap().grads;
+            // residual after removing the deterministic part
+            g.iter()
+                .zip(&be.target)
+                .map(|(g, t)| (g - (0.5 - t)).abs() as f64)
+                .sum::<f64>()
+                / 256.0
+        };
+        assert!(noise_of(256) < noise_of(8));
+    }
+}

@@ -1,0 +1,73 @@
+//! Virtual wall clock for like-for-like timing.
+//!
+//! Training *numerics* run for real; *time* is priced by the cluster cost
+//! model (DESIGN.md §5.3). The clock advances by the same formula for
+//! ScaDLES and the DDL baseline, so speedups (Table VI) compare the two
+//! systems exactly the way the paper's wall-clock measurements do.
+
+/// Monotone virtual clock (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `dt` seconds (panics on negative dt in debug builds).
+    pub fn advance(&mut self, dt: f64) -> f64 {
+        debug_assert!(dt >= 0.0, "clock cannot go backwards: {dt}");
+        self.now += dt.max(0.0);
+        self.now
+    }
+}
+
+/// Breakdown of one round's virtual duration.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoundTiming {
+    /// Streaming latency: longest wait for a device to fill its batch.
+    pub wait_s: f64,
+    /// Compute: slowest device's forward+backward (synchronous barrier).
+    pub compute_s: f64,
+    /// Gradient synchronization (dense or sparse allreduce).
+    pub sync_s: f64,
+    /// Data-injection transfers.
+    pub injection_s: f64,
+}
+
+impl RoundTiming {
+    pub fn total(&self) -> f64 {
+        self.wait_s + self.compute_s + self.sync_s + self.injection_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = VirtualClock::new();
+        c.advance(1.5);
+        c.advance(0.0);
+        c.advance(2.5);
+        assert_eq!(c.now(), 4.0);
+    }
+
+    #[test]
+    fn timing_totals() {
+        let t = RoundTiming {
+            wait_s: 1.0,
+            compute_s: 0.5,
+            sync_s: 0.8,
+            injection_s: 0.2,
+        };
+        assert!((t.total() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,140 @@
+//! A virtual edge device: stream topic + producer + consumer + rate state.
+
+use crate::buffer::BufferPolicy;
+use crate::rng::Pcg64;
+use crate::stream::{Broker, Consumer, Producer, ProducerConfig, Record};
+
+/// One training device of the virtual cluster.
+///
+/// Owns its stream end-to-end: the topic on the broker, the producer
+/// filling it at S⁽ⁱ⁾ samples/s (virtual time), and the consumer the
+/// training loop polls. `rate` can jitter per round (intra-device
+/// heterogeneity, §II-A).
+#[derive(Debug)]
+pub struct Device {
+    pub id: usize,
+    /// Nominal streaming rate S⁽ⁱ⁾ sampled from the preset distribution.
+    pub base_rate: f64,
+    /// Rate in effect this round (= base_rate unless jittered).
+    pub rate: f64,
+    /// Labels this device's stream carries (non-IID skew).
+    pub labels: Vec<u32>,
+    producer: Producer,
+    consumer: Consumer,
+    rng: Pcg64,
+}
+
+impl Device {
+    /// Create the device and its `device-{id}` topic on `broker`.
+    pub fn new(
+        broker: &Broker,
+        id: usize,
+        base_rate: f64,
+        labels: Vec<u32>,
+        policy: BufferPolicy,
+        seed: u64,
+    ) -> Self {
+        let topic = broker.ensure_topic(&format!("device-{id}"), policy.retention(base_rate));
+        let producer = Producer::new(
+            topic.clone(),
+            ProducerConfig {
+                rate: base_rate,
+                labels: labels.clone(),
+                seed: seed ^ (id as u64).wrapping_mul(0x9E37_79B9),
+            },
+        );
+        let consumer = Consumer::new(topic);
+        Self {
+            id,
+            base_rate,
+            rate: base_rate,
+            labels,
+            producer,
+            consumer,
+            rng: Pcg64::new(seed, 0xDE1C_E000 + id as u64),
+        }
+    }
+
+    /// Apply per-round multiplicative jitter (lognormal-ish, mean 1).
+    pub fn jitter_rate(&mut self, jitter_std: f64) {
+        if jitter_std <= 0.0 {
+            self.rate = self.base_rate;
+            return;
+        }
+        let f = (1.0 + jitter_std * self.rng.normal()).clamp(0.2, 5.0);
+        self.rate = (self.base_rate * f).max(1.0);
+    }
+
+    /// Advance this device's stream by `dt` virtual seconds.
+    pub fn advance_stream(&mut self, dt: f64) -> usize {
+        self.producer.advance(dt)
+    }
+
+    /// Unread samples queued (Q_i).
+    pub fn backlog(&self) -> usize {
+        self.consumer.backlog()
+    }
+
+    /// Poll up to `max` records for training.
+    pub fn poll(&mut self, max: usize) -> Vec<Record> {
+        self.consumer.poll(max)
+    }
+
+    /// Records dropped by retention so far (truncation policy accounting).
+    pub fn dropped(&self) -> u64 {
+        self.consumer.topic().dropped()
+    }
+
+    pub fn consumed(&self) -> u64 {
+        self.consumer.consumed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device(rate: f64, policy: BufferPolicy) -> Device {
+        let broker = Broker::new();
+        Device::new(&broker, 0, rate, vec![0, 1], policy, 42)
+    }
+
+    #[test]
+    fn stream_feeds_backlog() {
+        let mut d = device(100.0, BufferPolicy::Persistence);
+        d.advance_stream(2.0);
+        assert_eq!(d.backlog(), 200);
+        let got = d.poll(64);
+        assert_eq!(got.len(), 64);
+        assert_eq!(d.backlog(), 136);
+    }
+
+    #[test]
+    fn truncation_bounds_backlog_to_rate() {
+        let mut d = device(50.0, BufferPolicy::Truncation);
+        d.advance_stream(100.0); // 5000 samples in
+        assert!(d.backlog() <= 50);
+        assert!(d.dropped() > 4000);
+    }
+
+    #[test]
+    fn jitter_stays_positive_and_centered() {
+        let mut d = device(100.0, BufferPolicy::Persistence);
+        let mut sum = 0.0;
+        for _ in 0..200 {
+            d.jitter_rate(0.2);
+            assert!(d.rate >= 1.0);
+            sum += d.rate;
+        }
+        let mean = sum / 200.0;
+        assert!((mean - 100.0).abs() < 10.0, "mean {mean}");
+    }
+
+    #[test]
+    fn zero_jitter_restores_base() {
+        let mut d = device(100.0, BufferPolicy::Persistence);
+        d.jitter_rate(0.5);
+        d.jitter_rate(0.0);
+        assert_eq!(d.rate, 100.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! FedAvg-style local training: the low-frequency / high-volume
+//! communication strategy ScaDLES contrasts with (paper §III-C).
+//!
+//! Instead of synchronizing gradients every iteration, each device keeps a
+//! **local model replica**, takes `local_steps` SGD steps on its own
+//! stream, and only then the coordinator averages *parameters* weighted by
+//! samples processed (McMahan et al.'s `n_k / n` weighting — the same
+//! weighting idea ScaDLES applies per-round to gradients). Communication
+//! per sync is one model per device instead of one gradient per iteration.
+//!
+//! This is an **extension** (DESIGN.md §5b): the paper argues for the
+//! high-frequency/low-volume side; having FedAvg over the same backend,
+//! devices and virtual clock lets the ablation bench put numbers on that
+//! trade-off.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::aggregate::weights_from_batches;
+use crate::coordinator::backend::Backend;
+use crate::coordinator::clock::VirtualClock;
+use crate::coordinator::device::Device;
+use crate::data::{materialize, EvalSet, Synthetic};
+use crate::metrics::{RoundLog, RunLogger, RunReport};
+use crate::rng::Pcg64;
+use crate::stream::Broker;
+use crate::Result;
+
+/// FedAvg coordinator over the same substrate as [`super::Trainer`].
+pub struct FedAvgTrainer {
+    cfg: ExperimentConfig,
+    /// Local SGD steps between parameter syncs.
+    local_steps: usize,
+    backend: Box<dyn Backend>,
+    devices: Vec<Device>,
+    data: Synthetic,
+    eval: EvalSet,
+    /// Global parameters; device replicas fork from here each sync round.
+    params: Vec<f32>,
+    clock: VirtualClock,
+    logs: RunLogger,
+    round: usize,
+}
+
+impl FedAvgTrainer {
+    pub fn new(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn Backend>,
+        local_steps: usize,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(local_steps >= 1, "need at least one local step");
+        let mut rng = Pcg64::new(cfg.seed, 0xFEDA);
+        let rates = cfg.preset.distribution().sample_n(&mut rng, cfg.devices);
+        let data = Synthetic::standard(backend.num_classes(), cfg.seed);
+        let eval = EvalSet::new(&data, cfg.eval_per_class);
+        let broker = Broker::new();
+        let devices: Vec<Device> = rates
+            .iter()
+            .enumerate()
+            .map(|(i, &rate)| {
+                let labels = cfg.label_map.device_labels(i, backend.num_classes());
+                Device::new(&broker, i, rate, labels, cfg.buffer_policy, cfg.seed ^ 0xFE + i as u64)
+            })
+            .collect();
+        let params = backend.init_params()?;
+        let logs = RunLogger::new(format!("fedavg{}-{}", local_steps, cfg.preset.name()))
+            .with_echo(cfg.echo_every);
+        Ok(Self {
+            cfg: cfg.clone(),
+            local_steps,
+            backend,
+            devices,
+            data,
+            eval,
+            params,
+            clock: VirtualClock::new(),
+            logs,
+            round: 0,
+        })
+    }
+
+    /// One communication round: every device runs `local_steps` of local
+    /// momentum SGD on its stream, then parameters are sample-weighted
+    /// averaged.
+    pub fn round(&mut self) -> Result<RoundLog> {
+        let d = self.backend.param_count();
+        let n = self.devices.len();
+        let cluster = self.cfg.cluster();
+        if self.round == 0 {
+            for dev in &mut self.devices {
+                dev.advance_stream(1.0);
+            }
+        }
+
+        let lr = self.cfg.base_lr * self.cfg.lr_factor_at(self.round);
+        let mut replicas: Vec<f32> = Vec::with_capacity(n * d);
+        let mut samples = vec![0usize; n];
+        let mut loss_acc = 0f64;
+        let mut loss_w = 0f64;
+        let mut max_compute = 0f64;
+
+        for (i, dev) in self.devices.iter_mut().enumerate() {
+            let mut local = self.params.clone();
+            let mut mom = vec![0f32; d];
+            let mut compute = 0f64;
+            for _ in 0..self.local_steps {
+                let want = (dev.rate.round() as usize).clamp(self.cfg.b_min, self.cfg.b_max);
+                // local steps roll the stream forward by the step's compute
+                let recs = dev.poll(want.min(self.backend.ladder().max()));
+                if recs.is_empty() {
+                    // wait one second of stream
+                    dev.advance_stream(1.0);
+                    compute += 1.0;
+                    continue;
+                }
+                let (x, y) = materialize(&self.data, &recs);
+                let bucket = self.backend.ladder().fit_clamped(y.len());
+                let out = self.backend.train_step(&local, &x, &y, bucket)?;
+                let mut m = std::mem::take(&mut mom);
+                self.backend.update(&mut local, &mut m, &out.grads, lr as f32)?;
+                mom = m;
+                samples[i] += recs.len();
+                loss_acc += out.loss as f64 * recs.len() as f64;
+                loss_w += recs.len() as f64;
+                let step_t = cluster.cost.compute_time(recs.len());
+                compute += step_t;
+                dev.advance_stream(step_t);
+            }
+            max_compute = max_compute.max(compute);
+            replicas.extend_from_slice(&local);
+        }
+
+        // sample-weighted parameter average (FedAvg's n_k/n weighting)
+        let weights = weights_from_batches(&samples);
+        if samples.iter().any(|&s| s > 0) {
+            self.params = self.backend.weighted_aggregate(&replicas, &weights)
+                .unwrap_or_else(|_| {
+                    crate::coordinator::aggregate::aggregate_native(&replicas, &weights, d)
+                });
+        }
+
+        // time: slowest device's local phase + one model allreduce
+        let sync = cluster.dense_sync_time();
+        self.clock.advance(max_compute + sync);
+        for dev in &mut self.devices {
+            dev.advance_stream(sync);
+        }
+
+        let (mut t1, mut t5) = (f64::NAN, f64::NAN);
+        if self.round % self.cfg.eval_every == 0 || self.round + 1 == self.cfg.rounds {
+            let (a, b) = self.evaluate()?;
+            t1 = a;
+            t5 = b;
+        }
+        let global_batch: usize = samples.iter().sum();
+        let log = RoundLog {
+            round: self.round,
+            wall_clock_s: self.clock.now(),
+            global_batch,
+            train_loss: if loss_w > 0.0 { loss_acc / loss_w } else { f64::NAN },
+            test_top1: t1,
+            test_top5: t5,
+            lr,
+            buffered_samples: self.devices.iter().map(|d| d.backlog() as u64).sum(),
+            // one model per device per sync
+            floats_sent: (n * d) as u64,
+            ..Default::default()
+        };
+        self.logs.push(log);
+        self.round += 1;
+        Ok(log)
+    }
+
+    fn evaluate(&self) -> Result<(f64, f64)> {
+        let mut t1 = 0f64;
+        let mut t5 = 0f64;
+        let mut total = 0f64;
+        for (x, y) in self.eval.chunks(self.backend.eval_bucket()) {
+            let out = self.backend.eval_step(&self.params, x, y)?;
+            t1 += out.top1_correct as f64;
+            t5 += out.top5_correct as f64;
+            total += y.len() as f64;
+        }
+        Ok((t1 / total.max(1.0), t5 / total.max(1.0)))
+    }
+
+    pub fn run(&mut self) -> Result<RunReport> {
+        while self.round < self.cfg.rounds {
+            self.round()?;
+        }
+        Ok(RunReport::from_logs(
+            self.logs.label().to_string(),
+            &self.logs,
+            crate::buffer::BufferReport::default(),
+            self.cfg.target_top5,
+        ))
+    }
+
+    pub fn logs(&self) -> &RunLogger {
+        &self.logs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{StreamPreset, TrainMode};
+    use crate::coordinator::backend::MockBackend;
+
+    fn cfg(rounds: usize) -> ExperimentConfig {
+        ExperimentConfig::builder("mlp_c10")
+            .devices(4)
+            .rounds(rounds)
+            .preset(StreamPreset::S1Prime)
+            .mode(TrainMode::Scadles) // mode is unused by FedAvg
+            .eval_every(2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn fedavg_converges_on_mock() {
+        let mut t = FedAvgTrainer::new(&cfg(10), Box::new(MockBackend::new(64, 10)), 4).unwrap();
+        let report = t.run().unwrap();
+        assert!(report.final_train_loss < 0.05, "loss {}", report.final_train_loss);
+        assert_eq!(report.rounds, 10);
+    }
+
+    #[test]
+    fn fewer_syncs_than_sgd_for_same_samples() {
+        // 10 rounds × 4 local steps processes ~40 steps of data but
+        // communicates only 10 model exchanges
+        let mut t = FedAvgTrainer::new(&cfg(10), Box::new(MockBackend::new(64, 10)), 4).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.total_floats_sent, 10 * 4 * 64);
+    }
+
+    #[test]
+    fn rejects_zero_local_steps() {
+        assert!(FedAvgTrainer::new(&cfg(5), Box::new(MockBackend::new(16, 10)), 0).is_err());
+    }
+
+    #[test]
+    fn clock_advances_and_loss_logged() {
+        let mut t = FedAvgTrainer::new(&cfg(3), Box::new(MockBackend::new(32, 10)), 2).unwrap();
+        let mut last = 0.0;
+        for _ in 0..3 {
+            let log = t.round().unwrap();
+            assert!(log.wall_clock_s > last);
+            last = log.wall_clock_s;
+            assert!(log.train_loss.is_finite());
+            assert!(log.global_batch > 0);
+        }
+    }
+}

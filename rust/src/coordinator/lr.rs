@@ -1,0 +1,61 @@
+//! Linear learning-rate scaling (paper §IV, after Goyal et al.).
+//!
+//! ScaDLES's global batch is `ΣS_j` — it floats with the streams — so the
+//! base rate η (tuned for a base global batch B) is scaled by
+//! `γ = ΣS_j / B` every round, then multiplied by the schedule decay.
+
+use crate::config::ExperimentConfig;
+
+/// η_scaled = η · (global_batch / B) · schedule(round), clamped to a
+/// sane ceiling (γ explodes if a stream spikes; the clamp mirrors the
+/// paper's observation that linear scaling stops helping at extreme
+/// batches).
+pub fn scaled_lr(cfg: &ExperimentConfig, global_batch: usize, round: usize) -> f64 {
+    let gamma = global_batch as f64 / cfg.base_global_batch;
+    let gamma = gamma.clamp(0.05, 32.0);
+    cfg.base_lr * gamma * cfg.lr_factor_at(round)
+}
+
+/// The DDL baseline keeps the configured batch, so γ = 1: η · schedule.
+pub fn baseline_lr(cfg: &ExperimentConfig, round: usize) -> f64 {
+    cfg.base_lr * cfg.lr_factor_at(round)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig::builder("mlp_c10")
+            .devices(16)
+            .ddl_batch(64)
+            .rounds(100)
+            .base_lr(0.1)
+            .lr_decay(vec![(50, 0.2)])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn gamma_scales_with_global_batch() {
+        let c = cfg(); // B = 1024
+        assert!((scaled_lr(&c, 1024, 0) - 0.1).abs() < 1e-12);
+        assert!((scaled_lr(&c, 2048, 0) - 0.2).abs() < 1e-12);
+        assert!((scaled_lr(&c, 512, 0) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_decays() {
+        let c = cfg();
+        assert!((scaled_lr(&c, 1024, 60) - 0.02).abs() < 1e-12);
+        assert!((baseline_lr(&c, 60) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_clamped_at_extremes() {
+        let c = cfg();
+        assert!(scaled_lr(&c, 1_000_000, 0) <= 0.1 * 32.0 + 1e-12);
+        assert!(scaled_lr(&c, 1, 0) >= 0.1 * 0.05 - 1e-12);
+    }
+}

@@ -1,0 +1,46 @@
+//! L3 coordinator: the ScaDLES training system (paper §IV).
+//!
+//! One synchronous round, as run by [`trainer::Trainer`]:
+//!
+//! ```text
+//!   producers advance (virtual time)          stream substrate
+//!        │ poll b_i records per device        plan.rs decides b_i + waits
+//!        ▼
+//!   [data injection (α, β)]                   injection (non-IID runs)
+//!        ▼
+//!   train_step per device  ──► loss, g_i      PJRT artifact (L2+L1)
+//!        ▼
+//!   [adaptive Top-k per device]               compress + L1 topk kernel
+//!        ▼
+//!   weighted aggregation  Σ r_i·g_i           L1 wagg kernel (Eqn. 4b)
+//!        ▼
+//!   momentum-SGD update (η linearly scaled)   update artifact + lr.rs
+//!        ▼
+//!   clock += wait + compute + sync            clock.rs + network model
+//! ```
+//!
+//! The DDL baseline (Eqn. 1) runs through the same engine with fixed
+//! batches, uniform weights, no scaling, no compression, no injection —
+//! so every comparison in the harness is like-for-like.
+//!
+//! [`backend::Backend`] abstracts the execution substrate: the real PJRT
+//! [`crate::runtime::ModelRuntime`] or a deterministic quadratic
+//! [`backend::MockBackend`] used by unit/property tests.
+
+pub mod aggregate;
+pub mod backend;
+pub mod clock;
+pub mod device;
+pub mod fedavg;
+pub mod lr;
+pub mod plan;
+pub mod trainer;
+
+pub use aggregate::{aggregate_native, weights_from_batches};
+pub use backend::{Backend, MockBackend};
+pub use clock::VirtualClock;
+pub use device::Device;
+pub use fedavg::FedAvgTrainer;
+pub use lr::scaled_lr;
+pub use plan::{DevicePlan, RoundPlan};
+pub use trainer::{Trainer, TrainerOutput};

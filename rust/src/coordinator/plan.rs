@@ -1,0 +1,163 @@
+//! Round planning: per-device batch sizes + streaming wait times.
+//!
+//! This file is where ScaDLES's batching rule and the DDL baseline's
+//! straggler behaviour live (paper §II-A, §IV "Heterogeneous streams"):
+//!
+//! * **ScaDLES** — `b_i = clamp(S_i, b_min, b_max)`: the device trains on
+//!   ~one second of its own stream, so no device ever waits on another's
+//!   inflow (wait only if its *own* backlog hasn't reached `b_i` yet).
+//! * **DDL** — every device must gather the same fixed `b` (64); with
+//!   heterogeneous streams the slowest device's gather latency `b/S_min`
+//!   stalls the whole synchronous round.
+
+use crate::config::{ExperimentConfig, TrainMode};
+use crate::runtime::BucketLadder;
+
+/// One device's plan for the upcoming round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DevicePlan {
+    pub device: usize,
+    /// Samples the device will train on (0 = sits out this round).
+    pub batch: usize,
+    /// Compiled bucket the batch is padded to.
+    pub bucket: usize,
+    /// Seconds this device must wait for its own stream to fill `batch`,
+    /// given its current backlog.
+    pub wait_s: f64,
+}
+
+/// The synchronized plan for a round.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    pub devices: Vec<DevicePlan>,
+    /// Synchronous-barrier wait: every device waits for the slowest
+    /// (the straggler effect).
+    pub wait_s: f64,
+}
+
+impl RoundPlan {
+    /// Build the plan from current device rates and backlogs.
+    pub fn plan(
+        cfg: &ExperimentConfig,
+        ladder: &BucketLadder,
+        rates: &[f64],
+        backlogs: &[usize],
+    ) -> RoundPlan {
+        assert_eq!(rates.len(), backlogs.len());
+        let b_max = cfg.b_max.min(ladder.max());
+        let b_min = cfg.b_min.max(ladder.min().min(cfg.b_min)); // honor config floor
+        let mut devices = Vec::with_capacity(rates.len());
+        let mut wait = 0.0f64;
+        for (i, (&rate, &backlog)) in rates.iter().zip(backlogs).enumerate() {
+            let batch = match cfg.mode {
+                // ScaDLES: one second of this device's stream, clamped.
+                TrainMode::Scadles => (rate.round() as usize).clamp(b_min, b_max),
+                // DDL: fixed mini-batch regardless of the stream.
+                TrainMode::Ddl => cfg.ddl_batch.min(b_max),
+            };
+            let deficit = batch.saturating_sub(backlog);
+            let wait_s = if deficit > 0 {
+                deficit as f64 / rate.max(f64::MIN_POSITIVE)
+            } else {
+                0.0
+            };
+            wait = wait.max(wait_s);
+            devices.push(DevicePlan {
+                device: i,
+                batch,
+                bucket: ladder.fit_clamped(batch),
+                wait_s,
+            });
+        }
+        RoundPlan { devices, wait_s: wait }
+    }
+
+    /// Global batch = Σ b_i (drives the linear LR-scaling rule).
+    pub fn global_batch(&self) -> usize {
+        self.devices.iter().map(|d| d.batch).sum()
+    }
+
+    /// Batch sizes in device order (aggregation weights come from these).
+    pub fn batches(&self) -> Vec<usize> {
+        self.devices.iter().map(|d| d.batch).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, TrainMode};
+
+    fn ladder() -> BucketLadder {
+        BucketLadder::new(vec![8, 16, 32, 64, 128, 256]).unwrap()
+    }
+
+    fn cfg(mode: TrainMode) -> ExperimentConfig {
+        ExperimentConfig::builder("mlp_c10")
+            .devices(3)
+            .mode(mode)
+            .batch_bounds(8, 256)
+            .ddl_batch(64)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn scadles_batch_tracks_rate() {
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Scadles),
+            &ladder(),
+            &[38.0, 300.0, 5.0],
+            &[1000, 1000, 1000],
+        );
+        assert_eq!(p.batches(), vec![38, 256, 8]); // 300 clamped to 256, 5 to b_min 8
+        assert_eq!(p.devices[0].bucket, 64);
+        assert_eq!(p.wait_s, 0.0); // backlog ample
+        assert_eq!(p.global_batch(), 38 + 256 + 8);
+    }
+
+    #[test]
+    fn scadles_waits_only_on_own_stream() {
+        // empty backlogs: each waits b_i/S_i ≈ 1 s (it consumes what it streams)
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Scadles),
+            &ladder(),
+            &[38.0, 300.0],
+            &[0, 0],
+        );
+        for d in &p.devices {
+            assert!((d.wait_s - 1.0).abs() < 0.2, "{d:?}");
+        }
+        assert!(p.wait_s < 1.3);
+    }
+
+    #[test]
+    fn ddl_straggler_dominates_wait() {
+        // fixed b=64: a 5/s device needs 12.8 s; everyone stalls
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Ddl),
+            &ladder(),
+            &[300.0, 5.0],
+            &[0, 0],
+        );
+        assert_eq!(p.batches(), vec![64, 64]);
+        assert!((p.wait_s - 12.8).abs() < 0.1, "wait {}", p.wait_s);
+    }
+
+    #[test]
+    fn ddl_with_full_backlog_never_waits() {
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Ddl),
+            &ladder(),
+            &[5.0, 5.0],
+            &[64, 64],
+        );
+        assert_eq!(p.wait_s, 0.0);
+    }
+
+    #[test]
+    fn partial_backlog_waits_for_deficit_only() {
+        let p = RoundPlan::plan(&cfg(TrainMode::Ddl), &ladder(), &[10.0], &[54]);
+        assert!((p.devices[0].wait_s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,100 @@
+//! Earth mover's distance over label distributions.
+//!
+//! Zhao et al. (cited in paper §III-A) quantify non-IID-ness as the EMD
+//! between each device's label distribution and the population
+//! distribution; weight divergence — and hence accuracy loss — grows with
+//! it. For categorical distributions over the same support with unit
+//! ground distance, EMD reduces to total variation:
+//! `EMD(p, q) = ½ Σ|p_c − q_c|`.
+//!
+//! The harness uses this to report how skewed each configuration is
+//! (IID ⇒ 0; the paper's 1-label-per-device CIFAR10 split ⇒ 0.9).
+
+use crate::data::partitioner::LabelMap;
+
+/// ½ Σ|p − q| over aligned categorical distributions.
+pub fn emd(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len(), "distributions must share support");
+    0.5 * p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+/// Normalize a histogram into a distribution (empty → uniform-free zero).
+pub fn normalize(hist: &[f64]) -> Vec<f64> {
+    let total: f64 = hist.iter().sum();
+    if total <= 0.0 {
+        return vec![0.0; hist.len()];
+    }
+    hist.iter().map(|h| h / total).collect()
+}
+
+/// Label distribution of one device under a [`LabelMap`] (uniform over its
+/// assigned labels — the stream producer samples uniformly).
+pub fn device_distribution(map: &LabelMap, device: usize, num_classes: usize) -> Vec<f64> {
+    let labels = map.device_labels(device, num_classes);
+    let mut p = vec![0.0; num_classes];
+    for l in &labels {
+        p[*l as usize] += 1.0 / labels.len() as f64;
+    }
+    p
+}
+
+/// Mean device-to-population EMD for a cluster — the skew number Zhao et
+/// al. correlate with accuracy loss. Population = uniform over classes
+/// (our synthetic streams are class-balanced in aggregate).
+pub fn mean_skew(map: &LabelMap, devices: usize, num_classes: usize) -> f64 {
+    let pop = vec![1.0 / num_classes as f64; num_classes];
+    (0..devices)
+        .map(|i| emd(&device_distribution(map, i, num_classes), &pop))
+        .sum::<f64>()
+        / devices.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_distributions_are_zero() {
+        let p = vec![0.25; 4];
+        assert_eq!(emd(&p, &p), 0.0);
+    }
+
+    #[test]
+    fn disjoint_distributions_are_one() {
+        assert_eq!(emd(&[1.0, 0.0], &[0.0, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn iid_cluster_has_zero_skew() {
+        assert_eq!(mean_skew(&LabelMap::Iid, 16, 10), 0.0);
+    }
+
+    #[test]
+    fn paper_cifar10_split_has_skew_point_nine() {
+        // 1 label/device over 10 classes: EMD = ½(|1−.1| + 9·|0−.1|) = 0.9
+        let (map, devs) = LabelMap::paper_cifar10();
+        let s = mean_skew(&map, devs, 10);
+        assert!((s - 0.9).abs() < 1e-12, "skew {s}");
+    }
+
+    #[test]
+    fn paper_cifar100_split_has_skew_point_ninety_six() {
+        // 4 labels/device over 100 classes: ½(4·|.25−.01| + 96·.01) = 0.96
+        let (map, devs) = LabelMap::paper_cifar100();
+        let s = mean_skew(&map, devs, 100);
+        assert!((s - 0.96).abs() < 1e-12, "skew {s}");
+    }
+
+    #[test]
+    fn skew_decreases_with_labels_per_device() {
+        let s1 = mean_skew(&LabelMap::NonIid { labels_per_device: 1 }, 10, 10);
+        let s5 = mean_skew(&LabelMap::NonIid { labels_per_device: 5 }, 10, 10);
+        assert!(s5 < s1);
+    }
+
+    #[test]
+    fn normalize_handles_empty() {
+        assert_eq!(normalize(&[0.0, 0.0]), vec![0.0, 0.0]);
+        assert_eq!(normalize(&[2.0, 2.0]), vec![0.5, 0.5]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Streaming dataset substrate: synthetic CIFAR-like data + label skew.
+//!
+//! The sandbox has no CIFAR10/100 download, so the paper's datasets are
+//! substituted with a deterministic synthetic family (DESIGN.md §5): each
+//! class has a smooth random "pattern" image and samples are
+//! `pattern[label] + noise`. This preserves exactly what the paper's
+//! experiments exercise — class structure that a small CNN can learn, and
+//! label-skew (non-IID) partitioning across devices — while every sample
+//! is regenerable from a `u64` seed, which is what lets the stream broker
+//! buffer millions of records without storing pixels.
+
+pub mod dataset;
+pub mod emd;
+pub mod partitioner;
+pub mod synthetic;
+
+pub use dataset::{materialize, EvalSet};
+pub use emd::mean_skew;
+pub use partitioner::LabelMap;
+pub use synthetic::Synthetic;

@@ -1,0 +1,109 @@
+//! Label partitioning: IID vs non-IID (label-skew) device data.
+//!
+//! The paper induces non-IID distributions "by mapping a subset of labels
+//! to a unique device": CIFAR10 on 10 devices with 1 label each, CIFAR100
+//! on 25 devices with 4 labels each (Table III). [`LabelMap`] reproduces
+//! exactly that mapping and generalizes it to any (devices, classes,
+//! labels-per-device) combination.
+
+
+/// How training labels are distributed across devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LabelMap {
+    /// Every device streams every class (conventional DDL assumption).
+    Iid,
+    /// Label skew: each device streams only `labels_per_device` classes,
+    /// assigned contiguously round-robin (device i gets labels
+    /// `[i·k mod C, ..., (i·k + k − 1) mod C]`).
+    NonIid { labels_per_device: usize },
+}
+
+impl LabelMap {
+    /// Paper Table III presets.
+    pub fn paper_cifar10() -> (Self, usize) {
+        (LabelMap::NonIid { labels_per_device: 1 }, 10)
+    }
+    pub fn paper_cifar100() -> (Self, usize) {
+        (LabelMap::NonIid { labels_per_device: 4 }, 25)
+    }
+
+    /// The class labels device `device` streams, out of `num_classes`.
+    pub fn device_labels(&self, device: usize, num_classes: usize) -> Vec<u32> {
+        match *self {
+            LabelMap::Iid => (0..num_classes as u32).collect(),
+            LabelMap::NonIid { labels_per_device } => {
+                let k = labels_per_device.clamp(1, num_classes);
+                (0..k)
+                    .map(|j| ((device * k + j) % num_classes) as u32)
+                    .collect()
+            }
+        }
+    }
+
+    /// True when every class is covered by at least one of `devices`.
+    pub fn covers_all_classes(&self, devices: usize, num_classes: usize) -> bool {
+        let mut seen = vec![false; num_classes];
+        for d in 0..devices {
+            for l in self.device_labels(d, num_classes) {
+                seen[l as usize] = true;
+            }
+        }
+        seen.into_iter().all(|b| b)
+    }
+
+    pub fn is_iid(&self) -> bool {
+        matches!(self, LabelMap::Iid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_gives_all_labels() {
+        assert_eq!(LabelMap::Iid.device_labels(3, 10).len(), 10);
+    }
+
+    #[test]
+    fn paper_cifar10_mapping() {
+        let (m, devs) = LabelMap::paper_cifar10();
+        // 10 devices, single distinct label each
+        let mut seen = vec![];
+        for d in 0..devs {
+            let ls = m.device_labels(d, 10);
+            assert_eq!(ls.len(), 1);
+            seen.push(ls[0]);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn paper_cifar100_mapping() {
+        let (m, devs) = LabelMap::paper_cifar100();
+        // 25 devices × 4 labels cover all 100 classes exactly once
+        let mut seen = vec![];
+        for d in 0..devs {
+            let ls = m.device_labels(d, 100);
+            assert_eq!(ls.len(), 4);
+            seen.extend(ls);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<u32>>());
+        assert!(m.covers_all_classes(devs, 100));
+    }
+
+    #[test]
+    fn wraps_when_devices_exceed_classes() {
+        let m = LabelMap::NonIid { labels_per_device: 1 };
+        assert_eq!(m.device_labels(12, 10), vec![2]);
+    }
+
+    #[test]
+    fn coverage_detects_gaps() {
+        let m = LabelMap::NonIid { labels_per_device: 1 };
+        assert!(!m.covers_all_classes(5, 10));
+        assert!(m.covers_all_classes(10, 10));
+    }
+}

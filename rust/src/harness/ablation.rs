@@ -1,0 +1,165 @@
+//! Extension ablations (DESIGN.md §5b) — not in the paper, but the design
+//! choices its sections argue for:
+//!
+//! * `ablation`: compression scheme shoot-out — dense vs static Top-k vs
+//!   adaptive Top-k (± error feedback) vs QSGD/TernGrad/fp16 on the same
+//!   gradient stream: accuracy, floats sent, CNC.
+//! * `emd`: the Zhao-et-al. label-skew (EMD) number for every label map
+//!   the experiments use, connecting Fig. 2a/9 setups to a scalar skew.
+//! * `fedavg`: high-frequency/low-volume (ScaDLES) vs low-frequency/
+//!   high-volume (FedAvg local steps) on identical streams.
+
+use super::training::{devices_or, model_or, rounds_or};
+use super::HarnessOpts;
+use crate::compress::{fp16_roundtrip, qsgd, terngrad};
+use crate::config::{CompressionConfig, ExperimentConfig, StreamPreset, TrainMode};
+use crate::coordinator::{FedAvgTrainer, Trainer};
+use crate::data::{mean_skew, LabelMap};
+use crate::rng::Pcg64;
+use crate::Result;
+
+/// Compression-scheme shoot-out over one real training job.
+pub fn ablation(opts: &HarnessOpts) -> Result<()> {
+    let model = model_or(opts, "mlp_c10");
+    let rounds = rounds_or(opts, 20);
+    let devices = devices_or(opts, 4);
+    println!("Ablation — compression schemes on {model} ({devices} devices, {rounds} rounds)");
+    println!("{:<28} {:>6} {:>14} {:>10}", "scheme", "CNC", "floats sent", "top5");
+
+    let mk = |comp: Option<CompressionConfig>| -> Result<_> {
+        let mut b = ExperimentConfig::builder(&model)
+            .artifacts_dir(opts.artifacts_dir.clone())
+            .seed(opts.seed)
+            .devices(devices)
+            .rounds(rounds)
+            .preset(StreamPreset::S1Prime)
+            .mode(TrainMode::Scadles)
+            .eval_every(5)
+            .echo_every(opts.echo_every);
+        if let Some(c) = comp {
+            b = b.compression(c);
+        }
+        Trainer::from_config(&b.build()?)?.run()
+    };
+
+    let cases: Vec<(&str, Option<CompressionConfig>)> = vec![
+        ("dense", None),
+        ("adaptive cr=.01 δ=.3", Some(CompressionConfig::new(0.01, 0.3))),
+        ("adaptive+EF cr=.01 δ=.3",
+         Some(CompressionConfig::new(0.01, 0.3).with_error_feedback())),
+        ("adaptive cr=.1 δ=.3", Some(CompressionConfig::new(0.1, 0.3))),
+    ];
+    let mut w = super::csv(opts, "ablation.csv", &["scheme", "cnc", "floats", "top5"])?;
+    for (name, comp) in cases {
+        let out = mk(comp)?;
+        println!(
+            "{:<28} {:>6.2} {:>14.3e} {:>9.1}%",
+            name,
+            out.report.cnc_ratio,
+            out.report.total_floats_sent as f64,
+            100.0 * out.report.best_test_top5
+        );
+        if let Some(w) = w.as_mut() {
+            w.row(&[name.into(), format!("{:.3}", out.report.cnc_ratio),
+                    out.report.total_floats_sent.to_string(),
+                    format!("{:.4}", out.report.best_test_top5)])?;
+        }
+    }
+
+    // quantizer quality on a real gradient (one train-step's gradient)
+    println!("\nQuantizer reconstruction error on one real {model} gradient:");
+    println!("{:<12} {:>14} {:>12}", "scheme", "float-equiv", "rel-L2-err");
+    let rt = std::sync::Arc::new(crate::runtime::Runtime::load(&opts.artifacts_dir)?);
+    let m = rt.model(&model)?;
+    let p = m.init_params()?;
+    let data = crate::data::Synthetic::standard(m.meta().num_classes, opts.seed);
+    let recs: Vec<crate::stream::Record> = (0..32)
+        .map(|s| crate::stream::Record {
+            offset: s, timestamp_us: 0,
+            label: (s % m.meta().num_classes as u64) as u32, seed: s,
+        })
+        .collect();
+    let (x, y) = crate::data::materialize(&data, &recs);
+    let g = m.train_step(&p, &x, &y, 32)?.grads;
+    let norm = |v: &[f32]| v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let gn = norm(&g);
+    let mut rng = Pcg64::new(opts.seed, 77);
+    for (name, enc) in [
+        ("qsgd-4bit", qsgd(&g, 15, &mut rng)),
+        ("terngrad", terngrad(&g, &mut rng)),
+        ("fp16", fp16_roundtrip(&g)),
+    ] {
+        let err: f64 = g
+            .iter()
+            .zip(&enc.decoded)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+            / gn.max(1e-12);
+        println!("{:<12} {:>14.0} {:>12.4}", name, enc.float_equiv, err);
+    }
+    Ok(())
+}
+
+/// Label-skew (EMD) table for the experiment label maps.
+pub fn emd_table(_opts: &HarnessOpts) -> Result<()> {
+    println!("Label-skew quantification (EMD to the uniform distribution)");
+    println!("{:<34} {:>8} {:>8} {:>8}", "label map", "devices", "classes", "EMD");
+    let rows: Vec<(&str, LabelMap, usize, usize)> = vec![
+        ("IID", LabelMap::Iid, 16, 10),
+        ("paper CIFAR10 (1 label/dev)", LabelMap::NonIid { labels_per_device: 1 }, 10, 10),
+        ("paper CIFAR100 (4 labels/dev)", LabelMap::NonIid { labels_per_device: 4 }, 25, 100),
+        ("2 labels/dev over 10", LabelMap::NonIid { labels_per_device: 2 }, 10, 10),
+        ("5 labels/dev over 10", LabelMap::NonIid { labels_per_device: 5 }, 10, 10),
+    ];
+    for (name, map, devices, classes) in rows {
+        println!(
+            "{:<34} {:>8} {:>8} {:>8.3}",
+            name,
+            devices,
+            classes,
+            mean_skew(&map, devices, classes)
+        );
+    }
+    println!("\n(Zhao et al.: accuracy loss grows with EMD; Fig. 2a/9 setups sit at 0.9/0.96)");
+    Ok(())
+}
+
+/// ScaDLES (sync every round) vs FedAvg (local steps, periodic sync).
+pub fn fedavg(opts: &HarnessOpts) -> Result<()> {
+    let model = model_or(opts, "mlp_c10");
+    let rounds = rounds_or(opts, 12);
+    let devices = devices_or(opts, 4);
+    println!("ScaDLES vs FedAvg-style local steps ({model}, {devices} devices)");
+    println!("{:<22} {:>10} {:>14} {:>10} {:>12}",
+             "system", "top5", "floats sent", "rounds", "wall_clock");
+    let base = || {
+        ExperimentConfig::builder(&model)
+            .artifacts_dir(opts.artifacts_dir.clone())
+            .seed(opts.seed)
+            .devices(devices)
+            .rounds(rounds)
+            .preset(StreamPreset::S1Prime)
+            .mode(TrainMode::Scadles)
+            .eval_every(3)
+            .echo_every(opts.echo_every)
+    };
+    let scadles = Trainer::from_config(&base().build()?)?.run()?;
+    println!("{:<22} {:>9.1}% {:>14.3e} {:>10} {:>11.0}s",
+             "scadles", 100.0 * scadles.report.best_test_top5,
+             scadles.report.total_floats_sent as f64, rounds,
+             scadles.report.wall_clock_s);
+    for local_steps in [2usize, 4] {
+        let cfg = base().build()?;
+        let rt = std::sync::Arc::new(crate::runtime::Runtime::load(&cfg.artifacts_dir)?);
+        let backend = Box::new(rt.model(&cfg.model)?);
+        let mut t = FedAvgTrainer::new(&cfg, backend, local_steps)?;
+        let report = t.run()?;
+        println!("{:<22} {:>9.1}% {:>14.3e} {:>10} {:>11.0}s",
+                 format!("fedavg k={local_steps}"),
+                 100.0 * report.best_test_top5,
+                 report.total_floats_sent as f64, rounds, report.wall_clock_s);
+    }
+    println!("\n(the paper's §III-C trade-off: fewer syncs, more local drift)");
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! Analytic experiment runners (paper §II motivation studies).
+
+use super::HarnessOpts;
+use crate::config::StreamPreset;
+use crate::rng::Pcg64;
+use crate::simulate::memory::{MemoryModel, Optimizer};
+use crate::simulate::network::NetworkModel;
+use crate::simulate::queue;
+use crate::simulate::scaling::{relative_throughput, ThroughputModel};
+use crate::Result;
+
+/// Table I: the four streaming-rate distributions with measured moments.
+pub fn table1(opts: &HarnessOpts) -> Result<()> {
+    println!("Table I — devices sampled with varying streaming rates");
+    println!("{:<14} {:<8} {:>10} {:>10} {:>12} {:>12}",
+             "Distribution", "Set", "Mean", "Std.Dev.", "meas.mean", "meas.std");
+    let mut w = super::csv(opts, "table1.csv",
+        &["set", "distribution", "mean", "std", "measured_mean", "measured_std"])?;
+    for p in StreamPreset::all() {
+        let d = p.distribution();
+        let mut rng = Pcg64::new(opts.seed, 0);
+        let xs = d.sample_n(&mut rng, 100_000);
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        let v = (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt();
+        let kind = match d {
+            crate::rng::RateDistribution::Uniform { .. } => "Uniform",
+            crate::rng::RateDistribution::Normal { .. } => "Normal",
+        };
+        println!("{:<14} {:<8} {:>10.0} {:>10.0} {:>12.1} {:>12.1}",
+                 kind, p.name(), d.mean(), d.std(), m, v);
+        if let Some(w) = w.as_mut() {
+            w.row(&[p.name().into(), kind.into(), d.mean().to_string(),
+                    d.std().to_string(), format!("{m:.2}"), format!("{v:.2}")])?;
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 1: streaming latency (s) to gather a mini-batch, by batch size and
+/// preset. Reports mean / min / max across the sampled devices.
+pub fn fig1(opts: &HarnessOpts) -> Result<()> {
+    let devices = if opts.devices > 0 { opts.devices } else { 16 };
+    let batches = [16usize, 32, 64, 128, 256, 512, 1024];
+    println!("Fig. 1 — streaming latency across batches ({} devices/preset)", devices);
+    println!("{:<6} {:>6} {:>12} {:>12} {:>12}", "set", "batch", "mean_s", "min_s", "max_s");
+    let mut w = super::csv(opts, "fig1.csv", &["set", "batch", "mean_s", "min_s", "max_s"])?;
+    for p in StreamPreset::all() {
+        let mut rng = Pcg64::new(opts.seed, 1);
+        let rates = p.distribution().sample_n(&mut rng, devices);
+        for &b in &batches {
+            let lats = queue::streaming_latency(&rates, b);
+            let mean = lats.iter().sum::<f64>() / lats.len() as f64;
+            let min = lats.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = lats.iter().cloned().fold(0.0, f64::max);
+            println!("{:<6} {:>6} {:>12.2} {:>12.2} {:>12.2}", p.name(), b, mean, min, max);
+            if let Some(w) = w.as_mut() {
+                w.row(&[p.name().into(), b.to_string(), format!("{mean:.3}"),
+                        format!("{min:.3}"), format!("{max:.3}")])?;
+            }
+        }
+    }
+    println!("\n(straggler effect: max_s is what a synchronous round pays)");
+    Ok(())
+}
+
+/// Fig. 2b: GPU memory vs batch size (momentum SGD, both paper models).
+pub fn fig2b(opts: &HarnessOpts) -> Result<()> {
+    println!("Fig. 2b — memory utilization vs batch size (GiB, momentum SGD)");
+    println!("{:>6} {:>14} {:>14}", "batch", "ResNet152", "VGG19");
+    let mut w = super::csv(opts, "fig2b.csv", &["batch", "resnet152_gib", "vgg19_gib"])?;
+    let (r, v) = (MemoryModel::paper_resnet152(), MemoryModel::paper_vgg19());
+    for b in [16usize, 32, 64, 128, 256, 512, 1024] {
+        let (rg, vg) = (r.gib(b, Optimizer::Momentum), v.gib(b, Optimizer::Momentum));
+        println!("{b:>6} {rg:>14.2} {vg:>14.2}");
+        if let Some(w) = w.as_mut() {
+            w.row_f64(&[b as f64, rg, vg])?;
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 3a: memory by SGD variant at b=64.
+pub fn fig3a(opts: &HarnessOpts) -> Result<()> {
+    println!("Fig. 3a — memory by optimizer (GiB, b=64)");
+    println!("{:<20} {:>14} {:>14}", "optimizer", "ResNet152", "VGG19");
+    let mut w = super::csv(opts, "fig3a.csv", &["optimizer", "resnet152_gib", "vgg19_gib"])?;
+    let (r, v) = (MemoryModel::paper_resnet152(), MemoryModel::paper_vgg19());
+    for opt in [Optimizer::Sgd, Optimizer::Momentum, Optimizer::Adam] {
+        let (rg, vg) = (r.gib(64, opt), v.gib(64, opt));
+        println!("{:<20} {rg:>14.2} {vg:>14.2}", opt.name());
+        if let Some(w) = w.as_mut() {
+            w.row(&[opt.name().into(), format!("{rg:.3}"), format!("{vg:.3}")])?;
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 3b: queue growth over timesteps for different tS products
+/// (log10 of accumulated samples, Eqn. 3).
+pub fn fig3b(opts: &HarnessOpts) -> Result<()> {
+    println!("Fig. 3b — queue size growth, log10(samples) vs T (Eqn. 3)");
+    let ts_values = [0.0f64, 1.0, 10.0, 100.0, 600.0];
+    print!("{:>8}", "T");
+    for ts in ts_values {
+        print!(" {:>10}", format!("tS={ts}"));
+    }
+    println!();
+    let mut w = super::csv(opts, "fig3b.csv",
+        &["t_steps", "ts0", "ts1", "ts10", "ts100", "ts600"])?;
+    for t in [1u64, 10, 100, 1_000, 10_000, 100_000] {
+        print!("{t:>8}");
+        let mut row = vec![t as f64];
+        for ts in ts_values {
+            // Q = T·(t·S) + S with t·S = ts; S chosen 1 so Q = ts·T + 1
+            let q = if ts == 0.0 { 1.0 } else { queue::queue_growth_high_rate(1.0, ts, t) };
+            let lg = q.max(1.0).log10();
+            print!(" {lg:>10.2}");
+            row.push(lg);
+        }
+        println!();
+        if let Some(w) = w.as_mut() {
+            w.row_f64(&row)?;
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 4a: gradient synchronization time vs model and device count.
+pub fn fig4a(opts: &HarnessOpts) -> Result<()> {
+    println!("Fig. 4a — gradient synchronization time (s), 5 Gbps ring allreduce");
+    let models: [(&str, u64); 3] = [
+        ("Transformer(65M)", 65_000_000),
+        ("ResNet152(60.2M)", 60_200_000),
+        ("VGG19(143.7M)", 143_700_000),
+    ];
+    println!("{:<20} {:>8} {:>8} {:>8} {:>8}", "model", "n=4", "n=8", "n=16", "n=32");
+    let mut w = super::csv(opts, "fig4a.csv", &["model", "n4", "n8", "n16", "n32"])?;
+    let net = NetworkModel::paper_5gbps();
+    for (name, params) in models {
+        let ts: Vec<f64> = [4usize, 8, 16, 32]
+            .iter()
+            .map(|&n| net.gradient_sync_time(params, n))
+            .collect();
+        println!("{:<20} {:>8.2} {:>8.2} {:>8.2} {:>8.2}", name, ts[0], ts[1], ts[2], ts[3]);
+        if let Some(w) = w.as_mut() {
+            w.row(&[name.into(), format!("{:.3}", ts[0]), format!("{:.3}", ts[1]),
+                    format!("{:.3}", ts[2]), format!("{:.3}", ts[3])])?;
+        }
+    }
+    println!("\n(paper: sync is 80–90% of a 1.2–1.6 s iteration on 8 K80s)");
+    Ok(())
+}
+
+/// Fig. 4b: relative throughput vs ideal linear scaling.
+pub fn fig4b(opts: &HarnessOpts) -> Result<()> {
+    println!("Fig. 4b — relative throughput increase (vs 1 device)");
+    println!("{:>4} {:>8} {:>12} {:>12}", "n", "ideal", "ResNet152", "VGG19");
+    let mut w = super::csv(opts, "fig4b.csv", &["n", "ideal", "resnet152", "vgg19"])?;
+    let (r, v) = (ThroughputModel::paper_resnet152(), ThroughputModel::paper_vgg19());
+    for n in [1usize, 2, 4, 8, 16] {
+        let (rr, vv) = (relative_throughput(&r, n), relative_throughput(&v, n));
+        println!("{n:>4} {:>8} {rr:>12.2} {vv:>12.2}", n);
+        if let Some(w) = w.as_mut() {
+            w.row_f64(&[n as f64, n as f64, rr, vv])?;
+        }
+    }
+    Ok(())
+}
+
+/// Table II: data accumulated (GB) over streaming at T steps.
+pub fn table2(opts: &HarnessOpts) -> Result<()> {
+    println!("Table II — data accumulated over streaming in DDL (GB, Eqn. 3)");
+    println!("{:<10} {:>5} {:>8} {:>10} {:>10} {:>10}",
+             "model", "t(s)", "S(img/s)", "T=1e3", "T=1e4", "T=1e5");
+    let mut w = super::csv(opts, "table2.csv",
+        &["model", "t_s", "s_rate", "gb_1e3", "gb_1e4", "gb_1e5"])?;
+    for (model, t) in [("ResNet152", 1.2f64), ("VGG19", 1.6)] {
+        for s in [100.0f64, 600.0] {
+            let gbs: Vec<f64> = [1_000u64, 10_000, 100_000]
+                .iter()
+                .map(|&steps| {
+                    queue::queue_growth_high_rate(t, s, steps) * 3072.0 / (1u64 << 30) as f64
+                })
+                .collect();
+            println!("{model:<10} {t:>5.1} {s:>8.0} {:>10.2} {:>10.2} {:>10.2}",
+                     gbs[0], gbs[1], gbs[2]);
+            if let Some(w) = w.as_mut() {
+                w.row_f64(&[t, s, gbs[0], gbs[1], gbs[2]])?;
+            }
+        }
+    }
+    println!("\n(paper values: 0.35/3.5/34.33 … 2.75/27.5/274.83 — same formula)");
+    Ok(())
+}

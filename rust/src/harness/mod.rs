@@ -1,0 +1,112 @@
+//! Experiment harness: regenerate every table and figure of the paper.
+//!
+//! `repro exp <id>` dispatches here (ids in DESIGN.md §4). Analytic
+//! experiments ([`analytic`]) print instantly; training experiments
+//! ([`training`]) run the full three-layer stack and accept `--scale` /
+//! `--rounds` / `--devices` knobs to fit CPU budgets; [`fig6`] measures
+//! the real stream broker under concurrent producers.
+//!
+//! Output convention: every runner prints the paper's rows/series to
+//! stdout and, when `--out-dir` is set, writes the same data as CSV for
+//! plotting.
+
+pub mod ablation;
+pub mod analytic;
+pub mod fig6;
+pub mod training;
+
+use std::path::PathBuf;
+
+use crate::Result;
+
+/// Common harness options (CLI flags of `repro exp`).
+#[derive(Debug, Clone)]
+pub struct HarnessOpts {
+    pub artifacts_dir: PathBuf,
+    /// Devices override (0 = experiment default).
+    pub devices: usize,
+    /// Rounds override (0 = experiment default).
+    pub rounds: usize,
+    /// Model override (empty = experiment default).
+    pub model: String,
+    /// CSV output directory (None = stdout only).
+    pub out_dir: Option<PathBuf>,
+    /// Progress echo period for training runs.
+    pub echo_every: usize,
+    pub seed: u64,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            devices: 0,
+            rounds: 0,
+            model: String::new(),
+            out_dir: None,
+            echo_every: 0,
+            seed: 42,
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "fig1", "fig2a", "fig2b", "fig3a", "fig3b", "fig4a", "fig4b",
+    "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "table4", "table5",
+    "table6",
+];
+
+/// Extension studies beyond the paper (DESIGN.md §5b).
+pub const EXTENSIONS: &[&str] = &["ablation", "emd", "fedavg"];
+
+/// Dispatch one experiment by id.
+pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
+    match id {
+        "table1" => analytic::table1(opts),
+        "fig1" => analytic::fig1(opts),
+        "fig2a" => training::fig2a(opts),
+        "fig2b" => analytic::fig2b(opts),
+        "fig3a" => analytic::fig3a(opts),
+        "fig3b" => analytic::fig3b(opts),
+        "fig4a" => analytic::fig4a(opts),
+        "fig4b" => analytic::fig4b(opts),
+        "table2" => analytic::table2(opts),
+        "fig6" => fig6::run(opts),
+        "fig7" => training::fig7(opts),
+        "fig8" => training::fig8(opts),
+        "fig9" => training::fig9(opts),
+        "fig10" => training::fig10(opts),
+        "table4" => training::table4(opts),
+        "table5" => training::table5(opts),
+        "table6" => training::table6(opts),
+        "ablation" => ablation::ablation(opts),
+        "emd" => ablation::emd_table(opts),
+        "fedavg" => ablation::fedavg(opts),
+        "all" => {
+            for e in EXPERIMENTS {
+                eprintln!("\n================ {e} ================");
+                run(e, opts)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown experiment {other:?}; choices: {EXPERIMENTS:?}, {EXTENSIONS:?} or 'all'"
+        )),
+    }
+}
+
+/// Open a CSV writer under `opts.out_dir` if configured.
+pub(crate) fn csv(
+    opts: &HarnessOpts,
+    name: &str,
+    header: &[&str],
+) -> Result<Option<crate::metrics::CsvWriter>> {
+    match &opts.out_dir {
+        None => Ok(None),
+        Some(dir) => Ok(Some(crate::metrics::CsvWriter::create(
+            dir.join(name),
+            header,
+        )?)),
+    }
+}

@@ -1,0 +1,50 @@
+//! # ScaDLES — Scalable Deep Learning over Streaming data at the Edge
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *ScaDLES* (Tyagi &
+//! Swany, IEEE BigData 2022): a distributed-training coordinator for
+//! online learning over heterogeneous data streams at the edge.
+//!
+//! The crate is **Layer 3**: the coordination contribution of the paper —
+//! stream-rate-proportional batching, weighted gradient aggregation
+//! (Eqn. 4), stream buffer policies (persistence/truncation), adaptive
+//! Top-k gradient compression, and randomized data injection for non-IID
+//! data — plus every substrate the paper depends on (a Kafka-like stream
+//! broker, a streaming dataset, analytic cluster/network simulators, a
+//! conventional-DDL baseline).
+//!
+//! Layers 1–2 (Pallas kernels + JAX models) are AOT-lowered to HLO text at
+//! build time (`make artifacts`) and executed through the PJRT CPU client
+//! by [`runtime`]. Python never runs on the training path.
+//!
+//! Quick tour (see `examples/quickstart.rs` for the runnable version):
+//!
+//! ```no_run
+//! use scadles::config::ExperimentConfig;
+//! use scadles::coordinator::Trainer;
+//!
+//! let cfg = ExperimentConfig::builder("mlp_c10")
+//!     .devices(4)
+//!     .rounds(20)
+//!     .build()
+//!     .unwrap();
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let out = trainer.run().unwrap();
+//! println!("final loss {:.3}", out.report.final_train_loss);
+//! ```
+
+pub mod buffer;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod injection;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod simulate;
+pub mod stream;
+pub mod util;
+
+/// Crate-wide result type (anyhow for ergonomic error context).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,244 @@
+//! `repro` — ScaDLES leader entrypoint.
+//!
+//! Subcommands:
+//! * `train` — run one configurable training job (ScaDLES or DDL).
+//! * `exp <id>` — regenerate a paper table/figure (DESIGN.md §4).
+//! * `info` — inspect the compiled artifact manifest.
+//! * `list` — list experiment ids.
+//!
+//! The CLI parser is hand-rolled (the sandbox builds fully offline, so no
+//! clap); flags are `--name value` or `--flag`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context};
+use scadles::buffer::BufferPolicy;
+use scadles::config::{
+    CompressionConfig, ExperimentConfig, InjectionConfig, StreamPreset, TrainMode,
+};
+use scadles::coordinator::Trainer;
+use scadles::data::LabelMap;
+use scadles::harness::{self, HarnessOpts};
+use scadles::runtime::Runtime;
+
+const USAGE: &str = "\
+repro — ScaDLES: scalable DL over streaming data at the edge (Rust+JAX+Pallas)
+
+USAGE:
+  repro train [--model M] [--artifacts DIR] [--devices N] [--rounds R]
+              [--preset S1|S2|S1p|S2p] [--mode scadles|ddl] [--truncate]
+              [--noniid K] [--cr CR --delta D] [--alpha A --beta B]
+              [--jitter J] [--seed S] [--echo N] [--csv FILE]
+  repro exp <id|all> [--artifacts DIR] [--devices N] [--rounds R]
+              [--model M] [--out-dir DIR] [--echo N] [--seed S]
+  repro info  [--artifacts DIR]
+  repro list
+";
+
+/// Minimal flag parser: `--key value` pairs plus boolean `--key` switches.
+struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], switches: &[&str]) -> anyhow::Result<Self> {
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if switches.contains(&name) {
+                    flags.push(name.to_string());
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                    values.insert(name.to_string(), val.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Self {
+            values,
+            flags,
+            positional,
+        })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("invalid value for --{key}: {e}")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.values
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+fn parse_preset(s: &str) -> anyhow::Result<StreamPreset> {
+    Ok(match s.to_lowercase().as_str() {
+        "s1" => StreamPreset::S1,
+        "s2" => StreamPreset::S2,
+        "s1p" | "s1'" | "s1prime" => StreamPreset::S1Prime,
+        "s2p" | "s2'" | "s2prime" => StreamPreset::S2Prime,
+        other => bail!("unknown preset {other:?} (S1|S2|S1p|S2p)"),
+    })
+}
+
+fn parse_mode(s: &str) -> anyhow::Result<TrainMode> {
+    Ok(match s.to_lowercase().as_str() {
+        "scadles" => TrainMode::Scadles,
+        "ddl" => TrainMode::Ddl,
+        other => bail!("unknown mode {other:?} (scadles|ddl)"),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    // silence xla_extension's TfrtCpuClient chatter unless asked for
+    if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    }
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "list" => {
+            for e in harness::EXPERIMENTS {
+                println!("{e}");
+            }
+            for e in harness::EXTENSIONS {
+                println!("{e}  (extension)");
+            }
+            Ok(())
+        }
+        "info" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            let rt = Runtime::load(args.get_str("artifacts", "artifacts"))?;
+            let m = rt.manifest();
+            println!("platform:   {}", rt.platform());
+            println!("artifacts:  {}", m.dir().display());
+            println!("jax:        {}", m.jax_version);
+            println!("buckets:    {:?}", m.buckets);
+            println!("wagg sizes: {:?}", m.device_counts);
+            for (name, meta) in &m.models {
+                println!(
+                    "model {name}: d={} classes={} momentum={} wd={}",
+                    meta.param_count, meta.num_classes, meta.momentum, meta.weight_decay
+                );
+            }
+            println!("files:      {}", m.files.len());
+            Ok(())
+        }
+        "exp" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            let id = args
+                .positional
+                .first()
+                .context("usage: repro exp <id> (see `repro list`)")?
+                .clone();
+            let opts = HarnessOpts {
+                artifacts_dir: PathBuf::from(args.get_str("artifacts", "artifacts")),
+                devices: args.get("devices", 0usize)?,
+                rounds: args.get("rounds", 0usize)?,
+                model: args.get_str("model", ""),
+                out_dir: args.values.get("out-dir").map(PathBuf::from),
+                echo_every: args.get("echo", 0usize)?,
+                seed: args.get("seed", 42u64)?,
+            };
+            harness::run(&id, &opts)
+        }
+        "train" => {
+            let args = Args::parse(&argv[1..], &["truncate"])?;
+            let model = args.get_str("model", "resnet_tiny_c10");
+            let mut b = ExperimentConfig::builder(&model)
+                .artifacts_dir(args.get_str("artifacts", "artifacts"))
+                .devices(args.get("devices", 8usize)?)
+                .rounds(args.get("rounds", 50usize)?)
+                .preset(parse_preset(&args.get_str("preset", "S1"))?)
+                .mode(parse_mode(&args.get_str("mode", "scadles"))?)
+                .rate_jitter(args.get("jitter", 0.0f64)?)
+                .seed(args.get("seed", 42u64)?)
+                .echo_every(args.get("echo", 10usize)?);
+            if args.has("truncate") {
+                b = b.buffer_policy(BufferPolicy::Truncation);
+            }
+            let noniid = args.get("noniid", 0usize)?;
+            if noniid > 0 {
+                b = b.label_map(LabelMap::NonIid { labels_per_device: noniid });
+            }
+            let cr = args.get("cr", 0.0f64)?;
+            if cr > 0.0 {
+                b = b.compression(CompressionConfig::new(cr, args.get("delta", 0.3f64)?));
+            }
+            let alpha = args.get("alpha", 0.0f64)?;
+            let beta = args.get("beta", 0.0f64)?;
+            if alpha > 0.0 && beta > 0.0 {
+                b = b.injection(InjectionConfig::new(alpha, beta));
+            }
+            let cfg = b.build()?;
+            let mut t = Trainer::from_config(&cfg)?;
+            let out = t.run()?;
+            println!("{}", out.report.to_json().to_string_pretty());
+            if let Some(path) = args.values.get("csv") {
+                let mut w = scadles::metrics::CsvWriter::create(
+                    path,
+                    &[
+                        "round", "wall_clock_s", "global_batch", "train_loss",
+                        "test_top1", "test_top5", "lr", "buffered_samples",
+                        "floats_sent", "compressed", "injection_bytes",
+                    ],
+                )?;
+                for r in out.logs.rounds() {
+                    w.row(&[
+                        r.round.to_string(),
+                        format!("{:.3}", r.wall_clock_s),
+                        r.global_batch.to_string(),
+                        format!("{:.5}", r.train_loss),
+                        format!("{:.4}", r.test_top1),
+                        format!("{:.4}", r.test_top5),
+                        format!("{:.5}", r.lr),
+                        r.buffered_samples.to_string(),
+                        r.floats_sent.to_string(),
+                        r.compressed.to_string(),
+                        r.injection_bytes.to_string(),
+                    ])?;
+                }
+                w.flush()?;
+                eprintln!("wrote per-round csv to {path}");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command {other:?}")
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal CSV writer for experiment outputs (no external dependency).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::Result;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: Box<dyn Write + Send>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create a file-backed writer and emit the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating csv {path:?}"))?;
+        Self::from_writer(Box::new(std::io::BufWriter::new(file)), header)
+    }
+
+    /// Writer over any sink (used by tests and stdout dumps).
+    pub fn from_writer(mut out: Box<dyn Write + Send>, header: &[&str]) -> Result<Self> {
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self {
+            out,
+            columns: header.len(),
+        })
+    }
+
+    /// Write one row; field count must match the header.
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.columns,
+            "row has {} fields, header has {}",
+            fields.len(),
+            self.columns
+        );
+        let escaped: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.out, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    /// Numeric convenience row.
+    pub fn row_f64(&mut self, fields: &[f64]) -> Result<()> {
+        self.row(&fields.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+fn escape(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[derive(Clone, Default)]
+    struct Sink(Arc<Mutex<Vec<u8>>>);
+    impl Write for Sink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn writes_header_and_rows() {
+        let sink = Sink::default();
+        let mut w = CsvWriter::from_writer(Box::new(sink.clone()), &["a", "b"]).unwrap();
+        w.row(&["1".into(), "x,y".into()]).unwrap();
+        w.row_f64(&[2.5, 3.0]).unwrap();
+        w.flush().unwrap();
+        let text = String::from_utf8(sink.0.lock().unwrap().clone()).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2.5,3\n");
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let sink = Sink::default();
+        let mut w = CsvWriter::from_writer(Box::new(sink), &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+    }
+}

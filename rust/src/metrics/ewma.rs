@@ -1,0 +1,91 @@
+//! Exponentially weighted moving average.
+//!
+//! The paper's adaptive-compression rule keeps an EWMA of the relative
+//! compression error to detect critical training regions (§IV); this is
+//! that tracker, also reused for loss smoothing in reports.
+
+/// EWMA with bias-corrected warm-up (like Adam's moment correction, so the
+/// first few updates aren't dragged toward zero).
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    weight: f64,
+    updates: u64,
+}
+
+impl Ewma {
+    /// `alpha` is the smoothing factor in (0, 1]: weight of the newest
+    /// observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0,1]");
+        Self {
+            alpha,
+            value: 0.0,
+            weight: 0.0,
+            updates: 0,
+        }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        self.value = (1.0 - self.alpha) * self.value + self.alpha * x;
+        self.weight = (1.0 - self.alpha) * self.weight + self.alpha;
+        self.updates += 1;
+        self.get()
+    }
+
+    /// Bias-corrected current value (0 before any update).
+    pub fn get(&self) -> f64 {
+        if self.weight == 0.0 {
+            0.0
+        } else {
+            self.value / self.weight
+        }
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    pub fn is_warm(&self) -> bool {
+        self.updates > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_update_is_exact() {
+        let mut e = Ewma::new(0.1);
+        assert_eq!(e.update(5.0), 5.0);
+    }
+
+    #[test]
+    fn converges_to_constant() {
+        let mut e = Ewma::new(0.2);
+        for _ in 0..200 {
+            e.update(3.0);
+        }
+        assert!((e.get() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracks_level_shift() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..10 {
+            e.update(0.0);
+        }
+        for _ in 0..10 {
+            e.update(1.0);
+        }
+        assert!(e.get() > 0.9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_alpha() {
+        Ewma::new(0.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Per-round structured logging for training runs.
+
+
+/// Everything a training round reports (one CSV row / one log line).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundLog {
+    pub round: usize,
+    /// Virtual wall-clock at the end of the round (seconds).
+    pub wall_clock_s: f64,
+    /// Global batch (sum of device batches this round).
+    pub global_batch: usize,
+    /// Weighted train loss across devices.
+    pub train_loss: f64,
+    /// Training top-1 / top-5 accuracy within the round's batches.
+    pub train_top1: f64,
+    pub train_top5: f64,
+    /// Held-out accuracies (NaN when not evaluated this round).
+    pub test_top1: f64,
+    pub test_top5: f64,
+    /// Scaled learning rate used this round.
+    pub lr: f64,
+    /// Total samples buffered across device queues after the round.
+    pub buffered_samples: u64,
+    /// f32 values exchanged this round (dense or sparse-equivalent).
+    pub floats_sent: u64,
+    /// Whether gradient compression was used this round.
+    pub compressed: bool,
+    /// Bytes moved by data injection this round.
+    pub injection_bytes: u64,
+}
+
+/// Accumulates [`RoundLog`]s for one run; the harness renders them into
+/// figures/tables and `RunReport`s.
+#[derive(Debug, Clone, Default)]
+pub struct RunLogger {
+    rounds: Vec<RoundLog>,
+    /// Print a progress line every `echo_every` rounds (0 = silent).
+    echo_every: usize,
+    label: String,
+}
+
+impl RunLogger {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self {
+            rounds: Vec::new(),
+            echo_every: 0,
+            label: label.into(),
+        }
+    }
+
+    pub fn with_echo(mut self, every: usize) -> Self {
+        self.echo_every = every;
+        self
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn push(&mut self, log: RoundLog) {
+        if self.echo_every > 0 && log.round % self.echo_every == 0 {
+            let test = if log.test_top5.is_nan() {
+                String::from("-")
+            } else {
+                format!("{:.1}%", 100.0 * log.test_top5)
+            };
+            eprintln!(
+                "[{}] round {:>5}  t={:>8.1}s  B={:>5}  loss={:.4}  top5(test)={}  buf={}  lr={:.4}",
+                self.label,
+                log.round,
+                log.wall_clock_s,
+                log.global_batch,
+                log.train_loss,
+                test,
+                log.buffered_samples,
+                log.lr,
+            );
+        }
+        self.rounds.push(log);
+    }
+
+    pub fn rounds(&self) -> &[RoundLog] {
+        &self.rounds
+    }
+
+    pub fn last(&self) -> Option<&RoundLog> {
+        self.rounds.last()
+    }
+
+    /// First round (and its virtual time) at which the smoothed test top-5
+    /// accuracy reached `target` — the paper's time-to-accuracy metric.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<(usize, f64)> {
+        self.rounds
+            .iter()
+            .find(|r| !r.test_top5.is_nan() && r.test_top5 >= target)
+            .map(|r| (r.round, r.wall_clock_s))
+    }
+
+    /// Best held-out top-5 accuracy seen.
+    pub fn best_test_top5(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.test_top5)
+            .filter(|v| !v.is_nan())
+            .fold(0.0, f64::max)
+    }
+
+    /// Cumulative floats exchanged (Table V's "Floats sent").
+    pub fn total_floats_sent(&self) -> u64 {
+        self.rounds.iter().map(|r| r.floats_sent).sum()
+    }
+
+    /// Fraction of rounds that used compression (CNC ratio, Table V).
+    pub fn cnc_ratio(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().filter(|r| r.compressed).count() as f64 / self.rounds.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log(round: usize, t: f64, acc: f64, compressed: bool) -> RoundLog {
+        RoundLog {
+            round,
+            wall_clock_s: t,
+            test_top5: acc,
+            floats_sent: 100,
+            compressed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let mut l = RunLogger::new("test");
+        l.push(log(0, 1.0, 0.2, false));
+        l.push(log(1, 2.0, 0.55, true));
+        l.push(log(2, 3.0, 0.53, true));
+        assert_eq!(l.time_to_accuracy(0.5), Some((1, 2.0)));
+        assert_eq!(l.time_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn cnc_and_floats_accumulate() {
+        let mut l = RunLogger::new("test");
+        l.push(log(0, 1.0, f64::NAN, true));
+        l.push(log(1, 2.0, f64::NAN, false));
+        assert_eq!(l.cnc_ratio(), 0.5);
+        assert_eq!(l.total_floats_sent(), 200);
+    }
+
+    #[test]
+    fn nan_test_rounds_skipped_in_best() {
+        let mut l = RunLogger::new("test");
+        l.push(log(0, 1.0, f64::NAN, false));
+        l.push(log(1, 2.0, 0.7, false));
+        assert_eq!(l.best_test_top5(), 0.7);
+    }
+}

@@ -1,0 +1,11 @@
+//! Metrics: EWMA trackers, per-round logs, CSV export, run summaries.
+
+pub mod csv;
+pub mod ewma;
+pub mod logger;
+pub mod summary;
+
+pub use csv::CsvWriter;
+pub use ewma::Ewma;
+pub use logger::{RoundLog, RunLogger};
+pub use summary::RunReport;

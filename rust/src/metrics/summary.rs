@@ -1,0 +1,151 @@
+//! End-of-run reports: the quantities the paper's tables compare.
+
+
+use crate::buffer::BufferReport;
+use crate::metrics::logger::RunLogger;
+
+/// Summary of one training run (ScaDLES or DDL baseline).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub label: String,
+    pub rounds: usize,
+    /// Virtual wall-clock of the whole run.
+    pub wall_clock_s: f64,
+    pub final_train_loss: f64,
+    /// Best held-out top-5 accuracy (the paper's model-quality metric).
+    pub best_test_top5: f64,
+    pub final_test_top5: f64,
+    pub final_test_top1: f64,
+    /// Round + virtual time at which `target_top5` was first reached.
+    pub target_top5: f64,
+    pub time_to_target_s: Option<f64>,
+    pub rounds_to_target: Option<usize>,
+    /// Communication accounting (Table V).
+    pub total_floats_sent: u64,
+    pub cnc_ratio: f64,
+    /// Buffer accounting (Fig. 8 / Tables IV, VI).
+    pub buffer: BufferReport,
+    /// Total bytes moved by data injection (Fig. 10).
+    pub injection_bytes: u64,
+}
+
+impl RunReport {
+    /// JSON rendering (for CLI output and experiment records).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let opt = |v: Option<f64>| v.map_or(Json::Null, Json::Num);
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("wall_clock_s", Json::num(self.wall_clock_s)),
+            ("final_train_loss", Json::num(self.final_train_loss)),
+            ("best_test_top5", Json::num(self.best_test_top5)),
+            ("final_test_top5", Json::num(self.final_test_top5)),
+            ("final_test_top1", Json::num(self.final_test_top1)),
+            ("target_top5", Json::num(self.target_top5)),
+            ("time_to_target_s", opt(self.time_to_target_s)),
+            ("rounds_to_target", opt(self.rounds_to_target.map(|r| r as f64))),
+            ("total_floats_sent", Json::num(self.total_floats_sent as f64)),
+            ("cnc_ratio", Json::num(self.cnc_ratio)),
+            ("buffer_final_samples", Json::num(self.buffer.final_samples as f64)),
+            ("buffer_peak_samples", Json::num(self.buffer.peak_samples as f64)),
+            ("buffer_final_gb", Json::num(self.buffer.final_gb)),
+            ("injection_bytes", Json::num(self.injection_bytes as f64)),
+        ])
+    }
+
+    /// Build from a run's logger + buffer tracker.
+    pub fn from_logs(
+        label: impl Into<String>,
+        logs: &RunLogger,
+        buffer: BufferReport,
+        target_top5: f64,
+    ) -> Self {
+        let last = logs.last();
+        let tta = logs.time_to_accuracy(target_top5);
+        Self {
+            label: label.into(),
+            rounds: logs.rounds().len(),
+            wall_clock_s: last.map_or(0.0, |r| r.wall_clock_s),
+            final_train_loss: last.map_or(f64::NAN, |r| r.train_loss),
+            best_test_top5: logs.best_test_top5(),
+            final_test_top5: logs
+                .rounds()
+                .iter()
+                .rev()
+                .find(|r| !r.test_top5.is_nan())
+                .map_or(f64::NAN, |r| r.test_top5),
+            final_test_top1: logs
+                .rounds()
+                .iter()
+                .rev()
+                .find(|r| !r.test_top1.is_nan())
+                .map_or(f64::NAN, |r| r.test_top1),
+            target_top5,
+            time_to_target_s: tta.map(|(_, t)| t),
+            rounds_to_target: tta.map(|(r, _)| r),
+            total_floats_sent: logs.total_floats_sent(),
+            cnc_ratio: logs.cnc_ratio(),
+            buffer,
+            injection_bytes: logs.rounds().iter().map(|r| r.injection_bytes).sum(),
+        }
+    }
+
+    /// Wall-clock speedup of `self` over `baseline` to the shared accuracy
+    /// target (falls back to total-run time when a run missed the target —
+    /// reported pessimistically for `self`).
+    pub fn speedup_over(&self, baseline: &RunReport) -> f64 {
+        let mine = self.time_to_target_s.unwrap_or(self.wall_clock_s);
+        let theirs = baseline
+            .time_to_target_s
+            .unwrap_or(baseline.wall_clock_s);
+        theirs / mine.max(f64::MIN_POSITIVE)
+    }
+
+    /// Accuracy drop vs a baseline in percentage points (negative = we are
+    /// worse; the sign convention of Table VI).
+    pub fn accuracy_drop_pp(&self, baseline: &RunReport) -> f64 {
+        100.0 * (self.best_test_top5 - baseline.best_test_top5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::logger::RoundLog;
+
+    fn mk(label: &str, times: &[(f64, f64)]) -> RunReport {
+        let mut logs = RunLogger::new(label);
+        for (i, &(t, acc)) in times.iter().enumerate() {
+            logs.push(RoundLog {
+                round: i,
+                wall_clock_s: t,
+                test_top5: acc,
+                ..Default::default()
+            });
+        }
+        RunReport::from_logs(label, &logs, BufferReport::default(), 0.9)
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let fast = mk("scadles", &[(1.0, 0.5), (2.0, 0.95)]);
+        let slow = mk("ddl", &[(2.0, 0.5), (6.0, 0.95)]);
+        assert!((fast.speedup_over(&slow) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_drop_sign() {
+        let a = mk("a", &[(1.0, 0.93)]);
+        let b = mk("b", &[(1.0, 0.95)]);
+        assert!((a.accuracy_drop_pp(&b) + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missed_target_uses_total_time() {
+        let missed = mk("m", &[(5.0, 0.5)]);
+        assert_eq!(missed.time_to_target_s, None);
+        let base = mk("b", &[(10.0, 0.95)]);
+        assert!((missed.speedup_over(&base) - 2.0).abs() < 1e-9);
+    }
+}

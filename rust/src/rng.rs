@@ -1,0 +1,232 @@
+//! Deterministic RNG + the sampling distributions of Table I.
+//!
+//! The paper samples device streaming rates from uniform and normal
+//! distributions (Table I: U(38, 24), U(300, 112), N(64, 24), N(256, 28),
+//! given as mean/std-dev). Everything in this crate that needs randomness
+//! (stream rates, synthetic data, injection choices, shuffles) goes through
+//! [`Pcg64`] so every experiment is reproducible from a single seed — a
+//! requirement for like-for-like ScaDLES-vs-DDL comparisons.
+
+/// PCG-XSH-RR 64/32 with 64-bit output (two draws), split-mix seeded.
+///
+/// Small, fast, and statistically solid for simulation workloads; avoids
+/// pulling the `rand` crate into the runtime dependency set.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Seed deterministically; `stream` decorrelates sub-generators derived
+    /// from the same seed (device id, producer id, ...).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(splitmix64(seed));
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child generator (e.g. per device).
+    pub fn fork(&mut self, stream: u64) -> Self {
+        Self::new(self.next_u64(), stream)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's method, unbiased enough for
+    /// simulation; exact rejection for small `n`).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal with given mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        let k = k.min(n);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// A streaming-rate distribution from Table I (mean/std parameterization).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateDistribution {
+    /// Uniform with given mean and std-dev: samples from
+    /// `[mean - √3·std, mean + √3·std]` (matching the moments).
+    Uniform { mean: f64, std: f64 },
+    /// Normal with given mean and std-dev, truncated at 1 sample/s.
+    Normal { mean: f64, std: f64 },
+}
+
+impl RateDistribution {
+    /// Draw one streaming rate (samples/second), clamped to >= 1.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let v = match *self {
+            RateDistribution::Uniform { mean, std } => {
+                let half = 3f64.sqrt() * std;
+                rng.uniform(mean - half, mean + half)
+            }
+            RateDistribution::Normal { mean, std } => rng.normal_ms(mean, std),
+        };
+        v.max(1.0)
+    }
+
+    /// Draw `n` device rates.
+    pub fn sample_n(&self, rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            RateDistribution::Uniform { mean, .. } | RateDistribution::Normal { mean, .. } => mean,
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        match *self {
+            RateDistribution::Uniform { std, .. } | RateDistribution::Normal { std, .. } => std,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(7, 1);
+        let mut b = Pcg64::new(7, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_decorrelate() {
+        let mut a = Pcg64::new(7, 1);
+        let mut b = Pcg64::new(7, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_moments_match_table1() {
+        // S1: uniform mean 38, std 24
+        let d = RateDistribution::Uniform { mean: 38.0, std: 24.0 };
+        let mut rng = Pcg64::new(1, 0);
+        let xs = d.sample_n(&mut rng, 20_000);
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+        assert!((m - 38.0).abs() < 1.5, "mean {m}");
+        assert!((v.sqrt() - 24.0).abs() < 1.5, "std {}", v.sqrt());
+    }
+
+    #[test]
+    fn normal_moments_match_table1() {
+        // S2': normal mean 256, std 28
+        let d = RateDistribution::Normal { mean: 256.0, std: 28.0 };
+        let mut rng = Pcg64::new(2, 0);
+        let xs = d.sample_n(&mut rng, 20_000);
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((m - 256.0).abs() < 1.5, "mean {m}");
+    }
+
+    #[test]
+    fn rates_clamped_positive() {
+        let d = RateDistribution::Normal { mean: 2.0, std: 50.0 };
+        let mut rng = Pcg64::new(3, 0);
+        assert!(d.sample_n(&mut rng, 1000).iter().all(|&r| r >= 1.0));
+    }
+
+    #[test]
+    fn choose_is_distinct_subset() {
+        let mut rng = Pcg64::new(4, 0);
+        let mut picked = rng.choose(10, 4);
+        picked.sort_unstable();
+        picked.dedup();
+        assert_eq!(picked.len(), 4);
+        assert!(picked.iter().all(|&i| i < 10));
+    }
+
+    #[test]
+    fn choose_clamps_k() {
+        let mut rng = Pcg64::new(5, 0);
+        assert_eq!(rng.choose(3, 10).len(), 3);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = Pcg64::new(6, 0);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,262 @@
+//! Typed view of `artifacts/manifest.json` written by `python/compile/aot.py`.
+//!
+//! Parsed with the crate's own JSON module ([`crate::util::json`]) — the
+//! offline sandbox has no serde.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::Json;
+use crate::Result;
+
+/// Kinds of HLO artifacts the AOT pipeline emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Per-bucket fwd+bwd: `(params, x, y, mask) -> (loss, grads, top1, top5)`.
+    TrainStep,
+    /// `(params, x, y, mask) -> (sum_loss, top1, top5)`.
+    EvalStep,
+    /// Fused momentum-SGD: `(params, mom, grad, lr) -> (params', mom')`.
+    Update,
+    /// Pallas weighted aggregation: `(G[n,d], r[n]) -> g_tilde[d]`.
+    Wagg,
+    /// Pallas top-k mask + stats: `(g[d], thresh[1]) -> (masked, n2, k2, nnz)`.
+    Topk,
+    /// Raw little-endian f32 initial parameters.
+    Init,
+}
+
+impl ArtifactKind {
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "train_step" => ArtifactKind::TrainStep,
+            "eval_step" => ArtifactKind::EvalStep,
+            "update" => ArtifactKind::Update,
+            "wagg" => ArtifactKind::Wagg,
+            "topk" => ArtifactKind::Topk,
+            "init" => ArtifactKind::Init,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One artifact file entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct FileMeta {
+    pub kind: ArtifactKind,
+    pub model: Option<String>,
+    pub bucket: Option<usize>,
+    pub devices: Option<usize>,
+    pub seed: Option<u64>,
+}
+
+/// Per-model metadata (shapes, optimizer constants, bucket ladder).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub param_count: usize,
+    /// Gradient length the wagg/topk kernels were compiled for (param
+    /// count rounded up to the Pallas tile multiple; executor pads).
+    pub padded_dim: usize,
+    pub num_classes: usize,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub buckets: Vec<usize>,
+    pub eval_bucket: usize,
+    /// Image shape (H, W, C).
+    pub image: [usize; 3],
+    /// Ordered flat-parameter layout: `(name, shape)`.
+    pub spec: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelMeta {
+    /// Number of f32 elements in one input image.
+    pub fn image_elems(&self) -> usize {
+        self.image.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let buckets = j
+            .get("buckets")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let image_v = j
+            .get("image")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let image: [usize; 3] = image_v
+            .try_into()
+            .map_err(|v: Vec<_>| anyhow!("image shape has {} dims, want 3", v.len()))?;
+        let spec = j
+            .get("spec")?
+            .as_arr()?
+            .iter()
+            .map(|entry| -> Result<(String, Vec<usize>)> {
+                let pair = entry.as_arr()?;
+                if pair.len() != 2 {
+                    bail!("spec entry must be [name, shape]");
+                }
+                let name = pair[0].as_str()?.to_string();
+                let shape = pair[1]
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((name, shape))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let param_count = j.get("param_count")?.as_usize()?;
+        Ok(ModelMeta {
+            param_count,
+            padded_dim: j
+                .opt("padded_dim")
+                .and_then(|v| v.as_usize().ok())
+                .unwrap_or(param_count),
+            num_classes: j.get("num_classes")?.as_usize()?,
+            momentum: j.get("momentum")?.as_f64()? as f32,
+            weight_decay: j.get("weight_decay")?.as_f64()? as f32,
+            eval_bucket: j.get("eval_bucket")?.as_usize()?,
+            buckets,
+            image,
+            spec,
+        })
+    }
+}
+
+/// The whole manifest: models + artifact files.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub seed: u64,
+    pub jax_version: String,
+    pub buckets: Vec<usize>,
+    pub device_counts: Vec<usize>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub files: BTreeMap<String, FileMeta>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let models = j
+            .get("models")?
+            .as_obj()?
+            .iter()
+            .map(|(name, v)| {
+                Ok((
+                    name.clone(),
+                    ModelMeta::from_json(v).with_context(|| format!("model {name}"))?,
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let files = j
+            .get("files")?
+            .as_obj()?
+            .iter()
+            .map(|(name, v)| {
+                let meta = FileMeta {
+                    kind: ArtifactKind::from_str(v.get("kind")?.as_str()?)?,
+                    model: v.opt("model").and_then(|m| m.as_str().ok().map(String::from)),
+                    bucket: v.opt("bucket").and_then(|b| b.as_usize().ok()),
+                    devices: v.opt("devices").and_then(|b| b.as_usize().ok()),
+                    seed: v.opt("seed").and_then(|b| b.as_u64().ok()),
+                };
+                Ok((name.clone(), meta))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+
+        Ok(Manifest {
+            version: j.get("version")?.as_usize()? as u32,
+            seed: j.get("seed")?.as_u64()?,
+            jax_version: j.get("jax_version")?.as_str()?.to_string(),
+            buckets: j
+                .get("buckets")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            device_counts: j
+                .get("device_counts")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            models,
+            files,
+            dir,
+        })
+    }
+
+    /// Artifacts directory this manifest was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Resolve the path of a named artifact file, checking it exists.
+    pub fn file_path(&self, name: &str) -> Result<PathBuf> {
+        if !self.files.contains_key(name) {
+            bail!("artifact {name:?} not in manifest");
+        }
+        let p = self.dir.join(name);
+        if !p.exists() {
+            bail!("artifact file missing on disk: {p:?}");
+        }
+        Ok(p)
+    }
+
+    pub fn train_step_file(&self, model: &str, bucket: usize) -> String {
+        format!("train_step_{model}_b{bucket}.hlo.txt")
+    }
+    pub fn eval_step_file(&self, model: &str, bucket: usize) -> String {
+        format!("eval_step_{model}_b{bucket}.hlo.txt")
+    }
+    pub fn update_file(&self, model: &str) -> String {
+        format!("update_{model}.hlo.txt")
+    }
+    pub fn wagg_file(&self, model: &str, n: usize) -> String {
+        format!("wagg_{model}_n{n}.hlo.txt")
+    }
+    pub fn topk_file(&self, model: &str) -> String {
+        format!("topk_{model}.hlo.txt")
+    }
+
+    /// Load the initial flat parameter vector for `model`.
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let meta = self.model(model)?;
+        let path = self.dir.join(format!("{model}.init.bin"));
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading init params {path:?}"))?;
+        if bytes.len() != meta.param_count * 4 {
+            bail!(
+                "init params size mismatch for {model}: {} bytes != {} params * 4",
+                bytes.len(),
+                meta.param_count
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}

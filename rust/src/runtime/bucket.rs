@@ -1,0 +1,102 @@
+//! Batch-bucket ladder: fixed-shape executables for variable batches.
+//!
+//! PJRT executables are compiled for fixed shapes, but ScaDLES trains each
+//! device with `b_i = clamp(S_i, b_min, b_max)` — a batch that varies per
+//! device *and* per round. The ladder maps any requested batch onto the
+//! smallest compiled bucket that fits; the remainder is padding, neutral-
+//! ized by the `mask` input of the train/eval artifacts.
+
+use anyhow::anyhow;
+
+use crate::Result;
+
+/// Sorted list of compiled batch sizes for one model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketLadder {
+    buckets: Vec<usize>,
+}
+
+impl BucketLadder {
+    /// Build from the manifest's bucket list. Buckets are deduplicated and
+    /// sorted; the ladder must be non-empty.
+    pub fn new(mut buckets: Vec<usize>) -> Result<Self> {
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() || buckets[0] == 0 {
+            return Err(anyhow!("bucket ladder must be non-empty with positive sizes"));
+        }
+        Ok(Self { buckets })
+    }
+
+    /// All buckets, ascending.
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Smallest compiled batch size.
+    pub fn min(&self) -> usize {
+        self.buckets[0]
+    }
+
+    /// Largest compiled batch size (the ladder's capacity).
+    pub fn max(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket that fits `batch` samples, or `None` if the batch
+    /// exceeds the ladder (caller must split or clamp).
+    pub fn fit(&self, batch: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= batch)
+    }
+
+    /// Bucket for `batch`, padding up; batches above the top bucket are
+    /// clamped to it (ScaDLES clamps `b_i` to `b_max` anyway).
+    pub fn fit_clamped(&self, batch: usize) -> usize {
+        self.fit(batch).unwrap_or_else(|| self.max())
+    }
+
+    /// Fraction of wasted (padded) samples for a given batch.
+    pub fn padding_waste(&self, batch: usize) -> f64 {
+        let b = self.fit_clamped(batch);
+        let used = batch.min(b);
+        (b - used) as f64 / b as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> BucketLadder {
+        BucketLadder::new(vec![64, 8, 16, 32, 128, 256, 64]).unwrap()
+    }
+
+    #[test]
+    fn sorts_and_dedups() {
+        assert_eq!(ladder().buckets(), &[8, 16, 32, 64, 128, 256]);
+    }
+
+    #[test]
+    fn fits_exact_and_padded() {
+        let l = ladder();
+        assert_eq!(l.fit(8), Some(8));
+        assert_eq!(l.fit(9), Some(16));
+        assert_eq!(l.fit(250), Some(256));
+        assert_eq!(l.fit(257), None);
+        assert_eq!(l.fit_clamped(10_000), 256);
+    }
+
+    #[test]
+    fn rejects_empty_and_zero() {
+        assert!(BucketLadder::new(vec![]).is_err());
+        assert!(BucketLadder::new(vec![0, 8]).is_err());
+    }
+
+    #[test]
+    fn padding_waste_bounds() {
+        let l = ladder();
+        assert_eq!(l.padding_waste(8), 0.0);
+        assert!(l.padding_waste(9) > 0.0 && l.padding_waste(9) < 0.5);
+        assert_eq!(l.padding_waste(256), 0.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! PJRT client wrapper with a compiled-executable cache.
+//!
+//! Compilation (`HloModuleProto::from_text_file` → `client.compile`) is
+//! expensive — hundreds of milliseconds per artifact — so executables are
+//! compiled once and shared via `Arc`. The cache is keyed by artifact file
+//! name; every model/bucket combination the coordinator touches is
+//! compiled exactly once per process.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Context;
+
+use super::artifact::Manifest;
+use super::executor::ModelRuntime;
+use crate::Result;
+
+/// Process-wide runtime: one PJRT CPU client + executable cache + manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// PJRT platform name (`"cpu"` / `"Host"` depending on plugin).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the artifact file `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.file_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path is valid UTF-8"),
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Build the typed runtime for one model, compiling its train-step
+    /// ladder lazily (buckets compile on first use).
+    pub fn model(self: &Arc<Self>, model: &str) -> Result<ModelRuntime> {
+        ModelRuntime::new(self.clone(), model)
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform())
+            .field("artifacts", &self.manifest.dir())
+            .field("cached", &self.cached_executables())
+            .finish()
+    }
+}

@@ -1,0 +1,300 @@
+//! Typed entry points over the compiled artifacts.
+//!
+//! Marshals flat `f32`/`i32` slices into [`xla::Literal`]s, executes the
+//! cached PJRT executables, and unpacks the result tuples. All artifact
+//! signatures are documented in `python/compile/aot.py`; this file is the
+//! Rust mirror of those contracts.
+
+use std::sync::Arc;
+
+use anyhow::anyhow;
+
+use super::artifact::ModelMeta;
+use super::bucket::BucketLadder;
+use super::client::Runtime;
+use crate::Result;
+
+/// Output of one device-local training step (masked means over the valid
+/// samples of the padded bucket).
+#[derive(Debug, Clone)]
+pub struct TrainOut {
+    /// Masked mean cross-entropy over valid samples.
+    pub loss: f32,
+    /// Flat gradient `g_i` (d elements) — ScaDLES Eqn. 4b input.
+    pub grads: Vec<f32>,
+    /// Masked count of top-1-correct samples.
+    pub top1_correct: f32,
+    /// Masked count of top-5-correct samples.
+    pub top5_correct: f32,
+}
+
+/// Output of one evaluation step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalOut {
+    pub sum_loss: f32,
+    pub top1_correct: f32,
+    pub top5_correct: f32,
+}
+
+/// Statistics from the Pallas top-k mask kernel.
+#[derive(Debug, Clone)]
+pub struct TopkOut {
+    /// `g` with sub-threshold entries zeroed — the `Topk(g)` tensor.
+    pub masked: Vec<f32>,
+    /// `|g|^2`.
+    pub norm2: f32,
+    /// `|Topk(g)|^2`.
+    pub knorm2: f32,
+    /// Surviving element count.
+    pub nnz: f32,
+}
+
+/// Compiled executables + metadata for one model.
+pub struct ModelRuntime {
+    rt: Arc<Runtime>,
+    model: String,
+    meta: ModelMeta,
+    ladder: BucketLadder,
+}
+
+impl ModelRuntime {
+    pub(super) fn new(rt: Arc<Runtime>, model: &str) -> Result<Self> {
+        let meta = rt.manifest().model(model)?.clone();
+        let ladder = BucketLadder::new(meta.buckets.clone())?;
+        Ok(Self {
+            rt,
+            model: model.to_string(),
+            meta,
+            ladder,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.model
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn ladder(&self) -> &BucketLadder {
+        &self.ladder
+    }
+
+    /// Flat parameter count `d`.
+    pub fn param_count(&self) -> usize {
+        self.meta.param_count
+    }
+
+    /// Load the deterministic He-init parameters emitted at AOT time.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        self.rt.manifest().init_params(&self.model)
+    }
+
+    /// Warm the executable cache for every bucket (otherwise compilation
+    /// happens lazily on first use of each bucket).
+    pub fn warmup(&self) -> Result<()> {
+        for &b in self.ladder.buckets() {
+            self.rt
+                .executable(&self.rt.manifest().train_step_file(&self.model, b))?;
+        }
+        self.rt
+            .executable(&self.rt.manifest().eval_step_file(&self.model, self.meta.eval_bucket))?;
+        self.rt
+            .executable(&self.rt.manifest().update_file(&self.model))?;
+        self.rt
+            .executable(&self.rt.manifest().topk_file(&self.model))?;
+        Ok(())
+    }
+
+    fn check_params(&self, params: &[f32]) -> Result<()> {
+        if params.len() != self.meta.param_count {
+            return Err(anyhow!(
+                "param vector len {} != model {} param_count {}",
+                params.len(),
+                self.model,
+                self.meta.param_count
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build padded `(x, y, mask)` literals for a bucket from `valid`
+    /// samples. `x` must hold exactly `valid * image_elems` floats and `y`
+    /// `valid` labels; padding rows are zero and masked out.
+    fn batch_literals(
+        &self,
+        bucket: usize,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        let ie = self.meta.image_elems();
+        let valid = y.len();
+        if x.len() != valid * ie {
+            return Err(anyhow!("x len {} != {} samples * {} elems", x.len(), valid, ie));
+        }
+        if valid > bucket {
+            return Err(anyhow!("batch {valid} exceeds bucket {bucket}"));
+        }
+        let [h, w, c] = self.meta.image;
+        let mut xp = vec![0f32; bucket * ie];
+        xp[..x.len()].copy_from_slice(x);
+        let mut yp = vec![0i32; bucket];
+        yp[..valid].copy_from_slice(y);
+        let mut mask = vec![0f32; bucket];
+        mask[..valid].fill(1.0);
+        let xl = xla::Literal::vec1(&xp).reshape(&[bucket as i64, h as i64, w as i64, c as i64])?;
+        let yl = xla::Literal::vec1(&yp);
+        let ml = xla::Literal::vec1(&mask);
+        Ok((xl, yl, ml))
+    }
+
+    /// Run one device-local training step on `valid = y.len()` samples,
+    /// padded up to `bucket`. Returns masked-mean loss/gradients.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        bucket: usize,
+    ) -> Result<TrainOut> {
+        self.check_params(params)?;
+        if !self.ladder.buckets().contains(&bucket) {
+            return Err(anyhow!("bucket {bucket} not compiled; ladder {:?}", self.ladder.buckets()));
+        }
+        let exe = self
+            .rt
+            .executable(&self.rt.manifest().train_step_file(&self.model, bucket))?;
+        let pl = xla::Literal::vec1(params);
+        let (xl, yl, ml) = self.batch_literals(bucket, x, y)?;
+        let result = exe.execute::<xla::Literal>(&[pl, xl, yl, ml])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let [loss, grads, top1, top5]: [xla::Literal; 4] = parts
+            .try_into()
+            .map_err(|v: Vec<_>| anyhow!("train_step returned {} outputs, want 4", v.len()))?;
+        Ok(TrainOut {
+            loss: loss.get_first_element::<f32>()?,
+            grads: grads.to_vec::<f32>()?,
+            top1_correct: top1.get_first_element::<f32>()?,
+            top5_correct: top5.get_first_element::<f32>()?,
+        })
+    }
+
+    /// Evaluate up to `eval_bucket` samples (padded). Accumulate [`EvalOut`]
+    /// across chunks for larger sets.
+    pub fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        self.check_params(params)?;
+        let bucket = self.meta.eval_bucket;
+        let exe = self
+            .rt
+            .executable(&self.rt.manifest().eval_step_file(&self.model, bucket))?;
+        let pl = xla::Literal::vec1(params);
+        let (xl, yl, ml) = self.batch_literals(bucket, x, y)?;
+        let result = exe.execute::<xla::Literal>(&[pl, xl, yl, ml])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let [l, t1, t5]: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|v: Vec<_>| anyhow!("eval_step returned {} outputs, want 3", v.len()))?;
+        Ok(EvalOut {
+            sum_loss: l.get_first_element::<f32>()?,
+            top1_correct: t1.get_first_element::<f32>()?,
+            top5_correct: t5.get_first_element::<f32>()?,
+        })
+    }
+
+    /// Fused momentum-SGD update: overwrites `params` and `mom` in place.
+    pub fn update(&self, params: &mut [f32], mom: &mut [f32], grad: &[f32], lr: f32) -> Result<()> {
+        self.check_params(params)?;
+        self.check_params(grad)?;
+        let exe = self.rt.executable(&self.rt.manifest().update_file(&self.model))?;
+        let pl = xla::Literal::vec1(params);
+        let ml = xla::Literal::vec1(mom);
+        let gl = xla::Literal::vec1(grad);
+        let lrl = xla::Literal::scalar(lr);
+        let result = exe.execute::<xla::Literal>(&[pl, ml, gl, lrl])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let [p2, m2]: [xla::Literal; 2] = parts
+            .try_into()
+            .map_err(|v: Vec<_>| anyhow!("update returned {} outputs, want 2", v.len()))?;
+        p2.copy_raw_to(params)?;
+        m2.copy_raw_to(mom)?;
+        Ok(())
+    }
+
+    /// Pallas weighted aggregation (Eqn. 4b): `grads` is row-major `[n, d]`,
+    /// `weights` the `r_i` (zero for padded device slots).
+    ///
+    /// The kernel is compiled for `padded_dim` (a Pallas tile multiple);
+    /// rows are zero-padded on the way in and the output truncated back.
+    pub fn weighted_aggregate(&self, grads: &[f32], weights: &[f32]) -> Result<Vec<f32>> {
+        let n = weights.len();
+        let d = self.meta.param_count;
+        let dp = self.meta.padded_dim;
+        if grads.len() != n * d {
+            return Err(anyhow!("grads len {} != n {} * d {}", grads.len(), n, d));
+        }
+        let exe = self.rt.executable(&self.rt.manifest().wagg_file(&self.model, n))?;
+        let gl = if dp == d {
+            xla::Literal::vec1(grads).reshape(&[n as i64, d as i64])?
+        } else {
+            let mut padded = vec![0f32; n * dp];
+            for i in 0..n {
+                padded[i * dp..i * dp + d].copy_from_slice(&grads[i * d..(i + 1) * d]);
+            }
+            xla::Literal::vec1(&padded).reshape(&[n as i64, dp as i64])?
+        };
+        let wl = xla::Literal::vec1(weights);
+        let result = exe.execute::<xla::Literal>(&[gl, wl])?[0][0].to_literal_sync()?;
+        let mut out = result.to_tuple1()?.to_vec::<f32>()?;
+        out.truncate(d);
+        Ok(out)
+    }
+
+    /// Pallas top-k mask + compression statistics at a given magnitude
+    /// threshold (computed by the coordinator's select-nth).
+    ///
+    /// Compiled for `padded_dim`: the gradient is zero-padded in, the
+    /// masked output truncated back, and (when `thresh <= 0`, where the
+    /// zero padding would pass the mask) `nnz` corrected.
+    pub fn topk_mask_stats(&self, g: &[f32], thresh: f32) -> Result<TopkOut> {
+        self.check_params(g)?;
+        let d = self.meta.param_count;
+        let dp = self.meta.padded_dim;
+        let exe = self.rt.executable(&self.rt.manifest().topk_file(&self.model))?;
+        let gl = if dp == g.len() {
+            xla::Literal::vec1(g)
+        } else {
+            let mut padded = vec![0f32; dp];
+            padded[..d].copy_from_slice(g);
+            xla::Literal::vec1(&padded)
+        };
+        let tl = xla::Literal::vec1(&[thresh]);
+        let result = exe.execute::<xla::Literal>(&[gl, tl])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let [m, n2, k2, nnz]: [xla::Literal; 4] = parts
+            .try_into()
+            .map_err(|v: Vec<_>| anyhow!("topk returned {} outputs, want 4", v.len()))?;
+        let mut masked = m.to_vec::<f32>()?;
+        masked.truncate(d);
+        let mut nnz = nnz.get_first_element::<f32>()?;
+        if thresh <= 0.0 {
+            nnz -= (dp - d) as f32; // padding zeros pass a non-positive threshold
+        }
+        Ok(TopkOut {
+            masked,
+            norm2: n2.get_first_element::<f32>()?,
+            knorm2: k2.get_first_element::<f32>()?,
+            nnz,
+        })
+    }
+}
+
+impl std::fmt::Debug for ModelRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRuntime")
+            .field("model", &self.model)
+            .field("params", &self.meta.param_count)
+            .field("buckets", &self.ladder.buckets())
+            .finish()
+    }
+}

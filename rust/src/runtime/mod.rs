@@ -1,0 +1,27 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the L2 JAX graphs —
+//! with the L1 Pallas kernels already inlined — to HLO **text** under
+//! `artifacts/`, described by `manifest.json`. This module is the only
+//! place the crate touches XLA:
+//!
+//! * [`artifact`] — typed view of `manifest.json`.
+//! * [`client`]   — thin wrapper over [`xla::PjRtClient`] (CPU plugin) with
+//!   an executable cache keyed by artifact file name.
+//! * [`executor`] — typed entry points (`TrainStep`, `EvalStep`, `Update`,
+//!   `Wagg`, `TopkMask`) that marshal flat `f32` slices in and out.
+//! * [`bucket`]   — the batch-bucket ladder that maps ScaDLES's variable
+//!   per-device batch `b_i` onto fixed-shape executables.
+//!
+//! Everything is synchronous: PJRT-CPU computations are CPU-bound, so the
+//! tokio event loop in the coordinator dispatches them on blocking tasks.
+
+pub mod artifact;
+pub mod bucket;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactKind, Manifest, ModelMeta};
+pub use bucket::BucketLadder;
+pub use client::Runtime;
+pub use executor::{EvalOut, ModelRuntime, TrainOut};

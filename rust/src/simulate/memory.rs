@@ -1,0 +1,128 @@
+//! Analytic GPU-memory model (paper Figs. 2b and 3a).
+//!
+//! Training memory =
+//!   weights + gradients + optimizer state        (scales with params)
+//! + activation maps + input batch                (scales with batch size)
+//! + framework/cuDNN workspace                    (fixed)
+//!
+//! The paper measures this on V100s for ResNet152/VGG19 at 32×32 inputs;
+//! [`MemoryModel::paper_resnet152`] / [`paper_vgg19`] carry those models'
+//! real parameter counts and activation footprints so the regenerated
+//! curves live on the paper's scale.
+
+
+/// SGD variant (paper Fig. 3a): optimizer state multiplies parameter
+/// memory — none for vanilla SGD, +1 buffer for momentum, +2 for Adam.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimizer {
+    Sgd,
+    Momentum,
+    Adam,
+}
+
+impl Optimizer {
+    /// Number of param-sized f32 state buffers the optimizer keeps.
+    pub fn state_buffers(&self) -> usize {
+        match self {
+            Optimizer::Sgd => 0,
+            Optimizer::Momentum => 1,
+            Optimizer::Adam => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Optimizer::Sgd => "minibatch-sgd",
+            Optimizer::Momentum => "nesterov-momentum",
+            Optimizer::Adam => "adam",
+        }
+    }
+}
+
+/// Memory model for one network architecture.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    /// Trainable parameters.
+    pub params: u64,
+    /// Stored activation floats per input sample (backward-pass graph).
+    pub activation_floats_per_sample: u64,
+    /// Input floats per sample.
+    pub input_floats_per_sample: u64,
+    /// Fixed framework + workspace bytes (CUDA context, cuDNN workspace).
+    pub fixed_bytes: u64,
+}
+
+impl MemoryModel {
+    /// ResNet152 on 32×32×3 inputs (60.2M params; deep but thin — large
+    /// activation count per sample relative to VGG at this resolution).
+    pub fn paper_resnet152() -> Self {
+        Self {
+            params: 60_200_000,
+            activation_floats_per_sample: 5_500_000,
+            input_floats_per_sample: 3072,
+            fixed_bytes: 1_200_000_000,
+        }
+    }
+
+    /// VGG19 on 32×32×3 inputs (143.7M params; most memory in weights +
+    /// the huge classifier, fewer conv activations at 32×32).
+    pub fn paper_vgg19() -> Self {
+        Self {
+            params: 143_700_000,
+            activation_floats_per_sample: 3_000_000,
+            input_floats_per_sample: 3072,
+            fixed_bytes: 1_200_000_000,
+        }
+    }
+
+    /// Total training-resident bytes for a mini-batch of `batch` under
+    /// `opt` (f32 everywhere, as the paper's fp32 runs).
+    pub fn bytes(&self, batch: usize, opt: Optimizer) -> u64 {
+        let param_state = self.params * 4 * (2 + opt.state_buffers() as u64); // w + g + state
+        let per_sample =
+            (self.activation_floats_per_sample + self.input_floats_per_sample) * 4;
+        self.fixed_bytes + param_state + per_sample * batch as u64
+    }
+
+    /// Convenience: GiB.
+    pub fn gib(&self, batch: usize, opt: Optimizer) -> f64 {
+        self.bytes(batch, opt) as f64 / (1u64 << 30) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_with_batch() {
+        let m = MemoryModel::paper_resnet152();
+        let seq: Vec<f64> = [16, 32, 64, 128, 256]
+            .iter()
+            .map(|&b| m.gib(b, Optimizer::Momentum))
+            .collect();
+        assert!(seq.windows(2).all(|w| w[1] > w[0]));
+        // growth is superlinear-looking on a log-x plot ("near-exponential")
+        assert!(seq[4] / seq[0] > 3.0, "{seq:?}");
+    }
+
+    #[test]
+    fn optimizer_ordering_matches_fig3a() {
+        let m = MemoryModel::paper_vgg19();
+        let sgd = m.bytes(64, Optimizer::Sgd);
+        let mom = m.bytes(64, Optimizer::Momentum);
+        let adam = m.bytes(64, Optimizer::Adam);
+        assert!(sgd < mom && mom < adam);
+        // state deltas are exactly one/two param buffers
+        assert_eq!(mom - sgd, m.params * 4);
+        assert_eq!(adam - sgd, m.params * 8);
+    }
+
+    #[test]
+    fn v100_scale_is_plausible() {
+        // fits in a 16–32 GB V100 at the paper's batch sizes
+        let m = MemoryModel::paper_resnet152();
+        assert!(m.gib(64, Optimizer::Momentum) < 16.0);
+        assert!(m.gib(256, Optimizer::Adam) > 5.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Analytic simulators for the paper's §II motivation studies.
+//!
+//! These model the phenomena the paper *measures* on its K80 testbed, so
+//! the corresponding figures can be regenerated without that hardware
+//! (DESIGN.md §2):
+//!
+//! * [`queue`]   — streaming latency (Fig. 1) and buffer growth Eqns. 2–3
+//!   (Fig. 3b, Table II).
+//! * [`memory`]  — GPU memory vs batch size and optimizer (Figs. 2b, 3a).
+//! * [`network`] — ring-allreduce gradient synchronization cost on a
+//!   bandwidth-limited edge network (Fig. 4a); also used by the virtual
+//!   clock to price communication in training runs.
+//! * [`scaling`] — throughput scaling vs device count (Fig. 4b).
+
+pub mod memory;
+pub mod network;
+pub mod queue;
+pub mod scaling;
+
+pub use memory::{MemoryModel, Optimizer};
+pub use network::NetworkModel;
+pub use queue::{queue_growth, queue_growth_high_rate, streaming_latency};
+pub use scaling::{relative_throughput, ThroughputModel};

@@ -1,0 +1,84 @@
+//! Streaming latency + queue-growth models (paper §II-A and §II-C).
+
+/// Latency for a device with streaming rate `rate` (samples/s) to gather a
+/// mini-batch of `batch` samples: `b / p` seconds (paper §II-A).
+pub fn gather_latency(rate: f64, batch: usize) -> f64 {
+    batch as f64 / rate.max(f64::MIN_POSITIVE)
+}
+
+/// Per-device latencies to gather `batch`, for a set of streaming rates
+/// (Fig. 1 plots mean ± spread of these across sampled devices).
+pub fn streaming_latency(rates: &[f64], batch: usize) -> Vec<f64> {
+    rates.iter().map(|&r| gather_latency(r, batch)).collect()
+}
+
+/// The synchronous-training straggler latency: slowest device dominates.
+pub fn straggler_latency(rates: &[f64], batch: usize) -> f64 {
+    streaming_latency(rates, batch)
+        .into_iter()
+        .fold(0.0, f64::max)
+}
+
+/// Samples buffered after `t_steps` iterations — paper Eqn. 2:
+/// `Q_i = (t_i · S_i − b_i) · T + S_i`, valid while `t_i · S_i ≥ b_i`
+/// (otherwise the device consumes the stream at line rate and the buffer
+/// stays at ≈ S_i).
+pub fn queue_growth(iter_time: f64, rate: f64, batch: usize, t_steps: u64) -> f64 {
+    let inflow_per_iter = iter_time * rate;
+    if inflow_per_iter >= batch as f64 {
+        (inflow_per_iter - batch as f64) * t_steps as f64 + rate
+    } else {
+        rate
+    }
+}
+
+/// High-rate limit — paper Eqn. 3: `Q_i = T · t_i · S_i + S_i` when
+/// `t_i · S_i ≫ b_i`.
+pub fn queue_growth_high_rate(iter_time: f64, rate: f64, t_steps: u64) -> f64 {
+    t_steps as f64 * iter_time * rate + rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_is_b_over_p() {
+        assert_eq!(gather_latency(100.0, 200), 2.0);
+        let l = streaming_latency(&[50.0, 100.0, 200.0], 100);
+        assert_eq!(l, vec![2.0, 1.0, 0.5]);
+        assert_eq!(straggler_latency(&[50.0, 100.0, 200.0], 100), 2.0);
+    }
+
+    #[test]
+    fn queue_growth_matches_eqn2() {
+        // t=1.2s, S=100/s, b=64: inflow/iter = 120 ≥ 64
+        // Q(T) = (120-64)·T + 100
+        assert_eq!(queue_growth(1.2, 100.0, 64, 1000), 56.0 * 1000.0 + 100.0);
+    }
+
+    #[test]
+    fn low_rate_buffer_stays_at_s() {
+        // inflow/iter = 12 < 64: device trains at line rate
+        assert_eq!(queue_growth(1.2, 10.0, 64, 100_000), 10.0);
+    }
+
+    #[test]
+    fn high_rate_limit_matches_eqn3_and_table2() {
+        // Table II row: ResNet152 t=1.2, S=100, T=1e5 → 34.33 GB at 3KB
+        let q = queue_growth_high_rate(1.2, 100.0, 100_000);
+        let gb = q * 3072.0 / (1u64 << 30) as f64;
+        assert!((gb - 34.33).abs() < 0.05, "gb={gb}");
+        // Table II row: VGG19 t=1.6, S=600, T=1e5 → 274.83 GB
+        let q = queue_growth_high_rate(1.6, 600.0, 100_000);
+        let gb = q * 3072.0 / (1u64 << 30) as f64;
+        assert!((gb - 274.66).abs() < 0.5, "gb={gb}");
+    }
+
+    #[test]
+    fn eqn2_approaches_eqn3_when_batch_negligible() {
+        let full = queue_growth(1.5, 600.0, 8, 10_000);
+        let high = queue_growth_high_rate(1.5, 600.0, 10_000);
+        assert!((full - high).abs() / high < 0.01);
+    }
+}

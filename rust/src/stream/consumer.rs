@@ -1,0 +1,149 @@
+//! Consumers: offset-tracked readers feeding device training loops.
+
+use super::record::Record;
+use super::topic::Topic;
+
+/// An offset-tracked consumer over one topic.
+///
+/// Mirrors the paper's per-device Kafka consumer + custom PyTorch
+/// dataloader: `poll(max)` drains up to `max` records in order and
+/// advances the committed offset; `backlog()` is the device's current
+/// queue size Q_i (Fig. 3b / Fig. 8). When the partition truncated past
+/// our offset, the skipped records are counted in `missed`.
+#[derive(Debug)]
+pub struct Consumer {
+    topic: Topic,
+    offset: u64,
+    consumed: u64,
+    /// Records truncated away before we could read them.
+    missed: u64,
+    /// Purge consumed records from the partition (Kafka's
+    /// delete-after-consume retention; keeps persistence-policy
+    /// accounting honest: buffered = produced − consumed − dropped).
+    purge_on_poll: bool,
+}
+
+impl Consumer {
+    pub fn new(topic: Topic) -> Self {
+        Self {
+            topic,
+            offset: 0,
+            consumed: 0,
+            missed: 0,
+            purge_on_poll: true,
+        }
+    }
+
+    /// Disable delete-after-consume (records stay until retention drops them).
+    pub fn without_purge(mut self) -> Self {
+        self.purge_on_poll = false;
+        self
+    }
+
+    pub fn topic(&self) -> &Topic {
+        &self.topic
+    }
+
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    pub fn missed(&self) -> u64 {
+        self.missed
+    }
+
+    /// Unread records currently buffered (queue size Q_i).
+    pub fn backlog(&self) -> usize {
+        self.topic.backlog(self.offset)
+    }
+
+    /// Read and commit up to `max` records.
+    pub fn poll(&mut self, max: usize) -> Vec<Record> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let recs = self.topic.fetch(self.offset, max);
+        if let Some(first) = recs.first() {
+            // Offset gap ⇒ truncation happened under us.
+            self.missed += first.offset.saturating_sub(self.offset);
+            self.offset = recs.last().unwrap().offset + 1;
+            self.consumed += recs.len() as u64;
+            if self.purge_on_poll {
+                self.topic.purge_below(self.offset);
+            }
+        } else {
+            // Nothing at/after offset; if the log truncated wholly past us,
+            // fast-forward so the next poll sees new data.
+            let latest = self.topic.latest_offset();
+            if self.offset < latest && self.topic.backlog(self.offset) == 0 {
+                self.missed += latest - self.offset;
+                self.offset = latest;
+            }
+        }
+        recs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::retention::Retention;
+
+    fn rec(seed: u64) -> Record {
+        Record { offset: 0, timestamp_us: 0, label: 0, seed }
+    }
+
+    #[test]
+    fn poll_in_order_and_commits() {
+        let t = Topic::new("d0", Retention::Persist);
+        t.produce((0..10).map(rec));
+        let mut c = Consumer::new(t);
+        let a = c.poll(4);
+        let b = c.poll(4);
+        assert_eq!(a.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(b.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        assert_eq!(c.backlog(), 2);
+        assert_eq!(c.consumed(), 8);
+    }
+
+    #[test]
+    fn purge_on_poll_bounds_partition() {
+        let t = Topic::new("d0", Retention::Persist);
+        t.produce((0..100).map(rec));
+        let mut c = Consumer::new(t.clone());
+        c.poll(60);
+        assert_eq!(t.len(), 40);
+    }
+
+    #[test]
+    fn without_purge_keeps_log() {
+        let t = Topic::new("d0", Retention::Persist);
+        t.produce((0..100).map(rec));
+        let mut c = Consumer::new(t.clone()).without_purge();
+        c.poll(60);
+        assert_eq!(t.len(), 100);
+    }
+
+    #[test]
+    fn truncation_counts_missed() {
+        let t = Topic::new("d0", Retention::Truncate { keep: 10 });
+        t.produce((0..100).map(rec));
+        let mut c = Consumer::new(t);
+        let got = c.poll(50);
+        assert_eq!(got.len(), 10);
+        assert_eq!(c.missed(), 90);
+        assert_eq!(c.backlog(), 0);
+    }
+
+    #[test]
+    fn empty_poll_is_empty() {
+        let t = Topic::new("d0", Retention::Persist);
+        let mut c = Consumer::new(t);
+        assert!(c.poll(16).is_empty());
+        assert_eq!(c.consumed(), 0);
+    }
+}

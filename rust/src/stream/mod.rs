@@ -1,0 +1,38 @@
+//! Kafka-like stream substrate (the paper's §V-C infrastructure).
+//!
+//! ScaDLES simulates edge data streams with Apache Kafka: one topic per
+//! training device, a single partition per topic, rate-controlled
+//! producers, and a consumer on each device feeding the training loop.
+//! This module is that substrate rebuilt in-process:
+//!
+//! * [`record::Record`] — one streamed training sample (label + generator
+//!   seed + accounted payload size; pixels are generated lazily by
+//!   [`crate::data::synthetic`] so a million-sample buffer costs MBs, not GBs).
+//! * [`partition::Partition`] — an ordered log with a retention policy
+//!   ([`retention::Retention`]): `Persist` (paper's *Stream Persistence*)
+//!   or `Truncate` (paper's *Stream Truncation*, keeps the newest ~S⁽ⁱ⁾).
+//! * [`topic::Topic`] / [`broker::Broker`] — named log management, thread
+//!   safe, with produce/consume/drop counters.
+//! * [`producer::Producer`] — publishes label-distributed samples; either
+//!   **virtual-time** (deterministic `advance(dt)` used by training runs)
+//!   or **real-time** via [`rate::RateLimiter`] (used by the Fig. 6
+//!   effective-throughput measurement).
+//! * [`consumer::Consumer`] — offset-tracked reader with batch polling.
+
+pub mod broker;
+pub mod consumer;
+pub mod partition;
+pub mod producer;
+pub mod rate;
+pub mod record;
+pub mod retention;
+pub mod topic;
+
+pub use broker::{Broker, BrokerStats};
+pub use consumer::Consumer;
+pub use partition::Partition;
+pub use producer::{Producer, ProducerConfig};
+pub use rate::RateLimiter;
+pub use record::Record;
+pub use retention::Retention;
+pub use topic::Topic;

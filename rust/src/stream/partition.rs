@@ -1,0 +1,230 @@
+//! A partition: the ordered record log behind one topic.
+
+use std::collections::VecDeque;
+
+use super::record::Record;
+use super::retention::Retention;
+
+/// Ordered log of records with offset bookkeeping and a retention policy.
+///
+/// Offsets are monotone and survive truncation: `next_offset` keeps
+/// counting, and `dropped` records how many unconsumed records retention
+/// discarded (the quantity behind Table IV's buffer-reduction factors).
+#[derive(Debug, Clone)]
+pub struct Partition {
+    log: VecDeque<Record>,
+    retention: Retention,
+    next_offset: u64,
+    /// Unconsumed records discarded by retention.
+    dropped: u64,
+    /// All-time high-water mark of buffered records (persistence growth).
+    peak_len: usize,
+    /// Total records ever appended.
+    produced: u64,
+}
+
+impl Partition {
+    pub fn new(retention: Retention) -> Self {
+        Self {
+            log: VecDeque::new(),
+            retention,
+            next_offset: 0,
+            dropped: 0,
+            peak_len: 0,
+            produced: 0,
+        }
+    }
+
+    pub fn retention(&self) -> Retention {
+        self.retention
+    }
+
+    /// Replace the retention policy (takes effect on the next append/enforce).
+    pub fn set_retention(&mut self, retention: Retention) {
+        self.retention = retention;
+    }
+
+    /// Append one record; the broker assigns its offset here.
+    pub fn append(&mut self, mut rec: Record) -> u64 {
+        rec.offset = self.next_offset;
+        self.next_offset += 1;
+        self.produced += 1;
+        self.log.push_back(rec);
+        self.peak_len = self.peak_len.max(self.log.len());
+        self.enforce_retention();
+        rec.offset
+    }
+
+    /// Append a batch, returning the offset of the first record.
+    pub fn append_batch(&mut self, recs: impl IntoIterator<Item = Record>) -> u64 {
+        let first = self.next_offset;
+        for r in recs {
+            self.append(r);
+        }
+        first
+    }
+
+    fn enforce_retention(&mut self) {
+        if let Some(cap) = self.retention.record_cap(super::record::SAMPLE_PAYLOAD_BYTES) {
+            while self.log.len() > cap {
+                self.log.pop_front();
+                self.dropped += 1;
+            }
+        }
+    }
+
+    /// Read up to `max` records at or after `offset`, in order.
+    ///
+    /// If retention already discarded `offset`, reading resumes at the
+    /// oldest retained record (Kafka's `auto.offset.reset = earliest`).
+    pub fn read(&self, offset: u64, max: usize) -> Vec<Record> {
+        let start = self.position_of(offset);
+        self.log.iter().skip(start).take(max).copied().collect()
+    }
+
+    /// Index into the live log for a requested offset.
+    fn position_of(&self, offset: u64) -> usize {
+        match self.log.front() {
+            None => 0,
+            Some(front) => offset.saturating_sub(front.offset) as usize,
+        }
+    }
+
+    /// Records currently buffered (the paper's queue size Q_i).
+    pub fn len(&self) -> usize {
+        self.log.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log.is_empty()
+    }
+
+    /// Buffered records not yet visible to a consumer at `offset`.
+    pub fn backlog(&self, offset: u64) -> usize {
+        self.log.len().saturating_sub(self.position_of(offset))
+    }
+
+    /// Accounted payload bytes currently buffered.
+    pub fn buffered_bytes(&self) -> usize {
+        self.log.len() * super::record::SAMPLE_PAYLOAD_BYTES
+    }
+
+    /// Oldest retained offset, if any.
+    pub fn earliest_offset(&self) -> Option<u64> {
+        self.log.front().map(|r| r.offset)
+    }
+
+    /// Offset the next append will get (== log end offset).
+    pub fn latest_offset(&self) -> u64 {
+        self.next_offset
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn produced(&self) -> u64 {
+        self.produced
+    }
+
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
+    /// Explicitly discard consumed records below `offset` (commit + purge —
+    /// Kafka's retention-after-consume).
+    pub fn purge_below(&mut self, offset: u64) {
+        while self.log.front().is_some_and(|r| r.offset < offset) {
+            self.log.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seed: u64) -> Record {
+        Record { offset: 0, timestamp_us: seed, label: 0, seed }
+    }
+
+    #[test]
+    fn offsets_monotone() {
+        let mut p = Partition::new(Retention::Persist);
+        assert_eq!(p.append(rec(0)), 0);
+        assert_eq!(p.append(rec(1)), 1);
+        assert_eq!(p.latest_offset(), 2);
+    }
+
+    #[test]
+    fn persistence_keeps_everything() {
+        let mut p = Partition::new(Retention::Persist);
+        p.append_batch((0..1000).map(rec));
+        assert_eq!(p.len(), 1000);
+        assert_eq!(p.dropped(), 0);
+    }
+
+    #[test]
+    fn truncation_bounds_buffer_and_counts_drops() {
+        let mut p = Partition::new(Retention::Truncate { keep: 64 });
+        p.append_batch((0..1000).map(rec));
+        assert_eq!(p.len(), 64);
+        assert_eq!(p.dropped(), 1000 - 64);
+        // newest survive
+        assert_eq!(p.earliest_offset(), Some(1000 - 64));
+    }
+
+    #[test]
+    fn read_resumes_at_earliest_after_truncation() {
+        let mut p = Partition::new(Retention::Truncate { keep: 10 });
+        p.append_batch((0..100).map(rec));
+        let got = p.read(0, 5);
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0].offset, 90);
+    }
+
+    #[test]
+    fn read_in_order_with_max() {
+        let mut p = Partition::new(Retention::Persist);
+        p.append_batch((0..20).map(rec));
+        let got = p.read(5, 4);
+        assert_eq!(got.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn backlog_tracks_consumer_position() {
+        let mut p = Partition::new(Retention::Persist);
+        p.append_batch((0..30).map(rec));
+        assert_eq!(p.backlog(0), 30);
+        assert_eq!(p.backlog(10), 20);
+        assert_eq!(p.backlog(30), 0);
+        assert_eq!(p.backlog(99), 0);
+    }
+
+    #[test]
+    fn purge_below_drops_consumed() {
+        let mut p = Partition::new(Retention::Persist);
+        p.append_batch((0..30).map(rec));
+        p.purge_below(12);
+        assert_eq!(p.len(), 18);
+        assert_eq!(p.earliest_offset(), Some(12));
+    }
+
+    #[test]
+    fn size_bytes_retention() {
+        let mut p = Partition::new(Retention::SizeBytes {
+            bytes: 5 * super::super::record::SAMPLE_PAYLOAD_BYTES,
+        });
+        p.append_batch((0..50).map(rec));
+        assert_eq!(p.len(), 5);
+    }
+
+    #[test]
+    fn peak_len_is_high_water_mark() {
+        let mut p = Partition::new(Retention::Persist);
+        p.append_batch((0..40).map(rec));
+        p.purge_below(40);
+        assert_eq!(p.len(), 0);
+        assert_eq!(p.peak_len(), 40);
+    }
+}

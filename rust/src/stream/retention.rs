@@ -1,0 +1,56 @@
+//! Retention policies: the paper's *Stream Persistence* vs *Truncation*.
+//!
+//! §IV "Limited memory and storage": with Persistence the buffer grows
+//! O(S⁽ⁱ⁾·T) (Eqn. 2); with Truncation the device keeps only the newest
+//! samples (≈ one second of stream, i.e. S⁽ⁱ⁾ records) giving O(S⁽ⁱ⁾)
+//! storage at any time. `SizeBytes` additionally models a hard device
+//! storage cap (fog devices with fixed flash budgets).
+
+
+/// What a partition does with records beyond the consumer's need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Retention {
+    /// Keep everything until consumed (paper: Stream Persistence).
+    Persist,
+    /// Keep only the newest `keep` unconsumed records, dropping the oldest
+    /// (paper: Stream Truncation with `keep ≈ S⁽ⁱ⁾`).
+    Truncate { keep: usize },
+    /// Keep at most `bytes` of payload (oldest evicted first).
+    SizeBytes { bytes: usize },
+}
+
+impl Retention {
+    /// Max records retained given a per-record payload size, or `None` if
+    /// unbounded.
+    pub fn record_cap(&self, payload_bytes: usize) -> Option<usize> {
+        match *self {
+            Retention::Persist => None,
+            Retention::Truncate { keep } => Some(keep),
+            Retention::SizeBytes { bytes } => Some(bytes / payload_bytes.max(1)),
+        }
+    }
+
+    pub fn is_truncating(&self) -> bool {
+        !matches!(self, Retention::Persist)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::record::SAMPLE_PAYLOAD_BYTES;
+
+    #[test]
+    fn caps() {
+        assert_eq!(Retention::Persist.record_cap(SAMPLE_PAYLOAD_BYTES), None);
+        assert_eq!(
+            Retention::Truncate { keep: 100 }.record_cap(SAMPLE_PAYLOAD_BYTES),
+            Some(100)
+        );
+        assert_eq!(
+            Retention::SizeBytes { bytes: 10 * SAMPLE_PAYLOAD_BYTES }
+                .record_cap(SAMPLE_PAYLOAD_BYTES),
+            Some(10)
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! Topics: named record logs (one per training device, as in the paper).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::partition::Partition;
+use super::record::Record;
+use super::retention::Retention;
+
+/// A named topic backed by one partition (the paper configures one
+/// partition per topic; the type still isolates partition state so a
+/// multi-partition extension only touches this file).
+#[derive(Debug, Clone)]
+pub struct Topic {
+    name: Arc<str>,
+    partition: Arc<Mutex<Partition>>,
+}
+
+impl Topic {
+    pub fn new(name: &str, retention: Retention) -> Self {
+        Self {
+            name: name.into(),
+            partition: Arc::new(Mutex::new(Partition::new(retention))),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Lock the backing partition. Private to the stream module — external
+    /// code goes through produce/consume APIs.
+    pub(super) fn lock(&self) -> MutexGuard<'_, Partition> {
+        self.partition.lock().unwrap()
+    }
+
+    /// Append records; returns the first assigned offset.
+    pub fn produce(&self, recs: impl IntoIterator<Item = Record>) -> u64 {
+        self.lock().append_batch(recs)
+    }
+
+    /// Read up to `max` records from `offset` (non-destructive).
+    pub fn fetch(&self, offset: u64, max: usize) -> Vec<Record> {
+        self.lock().read(offset, max)
+    }
+
+    /// Records currently buffered.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Unconsumed backlog relative to a consumer offset.
+    pub fn backlog(&self, offset: u64) -> usize {
+        self.lock().backlog(offset)
+    }
+
+    pub fn buffered_bytes(&self) -> usize {
+        self.lock().buffered_bytes()
+    }
+
+    pub fn latest_offset(&self) -> u64 {
+        self.lock().latest_offset()
+    }
+
+    pub fn earliest_offset(&self) -> Option<u64> {
+        self.lock().earliest_offset()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped()
+    }
+
+    pub fn produced(&self) -> u64 {
+        self.lock().produced()
+    }
+
+    pub fn peak_len(&self) -> usize {
+        self.lock().peak_len()
+    }
+
+    pub fn set_retention(&self, retention: Retention) {
+        self.lock().set_retention(retention)
+    }
+
+    pub fn retention(&self) -> Retention {
+        self.lock().retention()
+    }
+
+    /// Commit + purge records below `offset`.
+    pub fn purge_below(&self, offset: u64) {
+        self.lock().purge_below(offset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seed: u64) -> Record {
+        Record { offset: 0, timestamp_us: 0, label: (seed % 10) as u32, seed }
+    }
+
+    #[test]
+    fn produce_fetch_roundtrip() {
+        let t = Topic::new("device-0", Retention::Persist);
+        t.produce((0..10).map(rec));
+        let got = t.fetch(0, 100);
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[9].offset, 9);
+    }
+
+    #[test]
+    fn clone_shares_partition() {
+        let t = Topic::new("device-0", Retention::Persist);
+        let t2 = t.clone();
+        t.produce((0..5).map(rec));
+        assert_eq!(t2.len(), 5);
+    }
+
+    #[test]
+    fn concurrent_producers_preserve_count() {
+        let t = Topic::new("device-0", Retention::Persist);
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for s in 0..250 {
+                        t.produce([rec(i * 1000 + s)]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 1000);
+        assert_eq!(t.latest_offset(), 1000);
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use [`Bench`] to time closures with warm-up,
+//! multiple samples, and mean/std/min reporting — enough to drive the
+//! §Perf iteration loop and the paper-table regeneration benches.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl Sample {
+    /// Nanoseconds per iteration (mean).
+    pub fn ns_per_iter(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.std),
+            fmt_dur(self.min),
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per case.
+pub struct Bench {
+    /// Target measuring time per case.
+    pub budget: Duration,
+    /// Measurement batches (samples for the std estimate).
+    pub samples: usize,
+    results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            budget: Duration::from_millis(800),
+            samples: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f`, preventing the result from being optimized away.
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Sample {
+        // warm-up + calibration: find iters/sample that fits the budget
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let one = t0.elapsed().max(Duration::from_nanos(50));
+        let per_sample = (self.budget.as_secs_f64() / self.samples as f64
+            / one.as_secs_f64())
+        .clamp(1.0, 1e7) as u64;
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                std::hint::black_box(f());
+            }
+            times.push(t.elapsed().as_secs_f64() / per_sample as f64);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+            / times.len() as f64;
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let sample = Sample {
+            name: name.to_string(),
+            iters: per_sample * self.samples as u64,
+            mean: Duration::from_secs_f64(mean),
+            std: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(min),
+        };
+        println!("{}", sample.report());
+        self.results.push(sample);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            "case", "mean", "std", "min"
+        );
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::new().with_budget(Duration::from_millis(50));
+        let s = b.case("noop-ish", || std::hint::black_box(42u64).wrapping_mul(3));
+        assert!(s.mean < Duration::from_micros(50));
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn scales_with_work() {
+        let mut b = Bench::new().with_budget(Duration::from_millis(60));
+        let small = b
+            .case("sum-1k", || (0..1_000u64).sum::<u64>())
+            .ns_per_iter();
+        let large = b
+            .case("sum-100k", || (0..100_000u64).sum::<u64>())
+            .ns_per_iter();
+        assert!(large > small * 10.0, "{large} vs {small}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-contained utilities (the sandbox builds fully offline, so
+//! substrates that would normally be crates are implemented here).
+
+pub mod bench;
+pub mod json;
+
+pub use json::Json;

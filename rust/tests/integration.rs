@@ -1,0 +1,248 @@
+//! Cross-module integration tests over the mock backend.
+//!
+//! These validate the *system* behaviours the paper claims, end-to-end
+//! through the coordinator, stream substrate, buffer policies, compression
+//! and injection — without needing compiled artifacts (see runtime_e2e.rs
+//! for the PJRT-backed equivalents).
+
+use scadles::buffer::BufferPolicy;
+use scadles::config::{
+    CompressionConfig, ExperimentConfig, InjectionConfig, StreamPreset, TrainMode,
+};
+use scadles::coordinator::{MockBackend, Trainer, TrainerOutput};
+use scadles::data::LabelMap;
+use scadles::harness::{HarnessOpts, EXPERIMENTS};
+
+fn run(cfg: &ExperimentConfig) -> TrainerOutput {
+    Trainer::with_backend(cfg, Box::new(MockBackend::new(64, 10)))
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+fn base(mode: TrainMode, preset: StreamPreset) -> ExperimentConfig {
+    ExperimentConfig::builder("mlp_c10")
+        .devices(8)
+        .rounds(25)
+        .preset(preset)
+        .mode(mode)
+        .eval_every(5)
+        .build()
+        .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// paper claim: ScaDLES avoids straggler waits → faster wall-clock (Fig. 7)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scadles_beats_ddl_training_throughput_on_every_preset() {
+    // the paper's speedup is time-to-accuracy; its mechanical driver is
+    // samples trained per virtual second (no straggler waits + stream-sized
+    // batches), which is robust to the mock's convergence model.
+    for preset in StreamPreset::all() {
+        let s = run(&base(TrainMode::Scadles, preset));
+        let d = run(&base(TrainMode::Ddl, preset));
+        let tput = |o: &TrainerOutput| {
+            let samples: usize = o.logs.rounds().iter().map(|r| r.global_batch).sum();
+            samples as f64 / o.report.wall_clock_s
+        };
+        let (st, dt) = (tput(&s), tput(&d));
+        assert!(
+            st > dt * 1.1,
+            "{}: scadles {st:.0} ≤ ddl {dt:.0} samples/s",
+            preset.name()
+        );
+        // S1 (heterogeneous, low volume): stragglers also hurt DDL's raw
+        // wall clock for the same round count.
+        if preset == StreamPreset::S1 {
+            assert!(
+                d.report.wall_clock_s > s.report.wall_clock_s,
+                "S1: ddl {:.0}s vs scadles {:.0}s",
+                d.report.wall_clock_s,
+                s.report.wall_clock_s
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// paper claim: ScaDLES buffers less than DDL under persistence (Fig. 8)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scadles_buffers_grow_slower_than_ddl_on_high_volume_streams() {
+    // equal round counts run for different virtual horizons, so compare the
+    // steady-state buffer growth RATE (samples queued per virtual second):
+    // ScaDLES consumes ~ΣS per round vs DDL's fixed 64·n.
+    let growth_rate = |o: &TrainerOutput| {
+        let logs = o.logs.rounds();
+        let (a, b) = (&logs[4], logs.last().unwrap());
+        (b.buffered_samples as f64 - a.buffered_samples as f64)
+            / (b.wall_clock_s - a.wall_clock_s)
+    };
+    for preset in [StreamPreset::S2, StreamPreset::S2Prime] {
+        let s = run(&base(TrainMode::Scadles, preset));
+        let d = run(&base(TrainMode::Ddl, preset));
+        let (sr, dr) = (growth_rate(&s), growth_rate(&d));
+        assert!(
+            sr < dr * 0.8,
+            "{}: scadles grows {sr:.0}/s vs ddl {dr:.0}/s",
+            preset.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// paper claim: truncation gives orders-of-magnitude buffer cuts (Table IV)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncation_reduction_grows_with_rounds() {
+    let mut cfg = base(TrainMode::Scadles, StreamPreset::S2);
+    cfg.rounds = 40;
+    let pers = run(&cfg);
+    cfg.buffer_policy = BufferPolicy::Truncation;
+    let trunc = run(&cfg);
+    let reduction =
+        pers.report.buffer.final_samples as f64 / trunc.report.buffer.final_samples.max(1) as f64;
+    assert!(reduction > 5.0, "reduction only {reduction:.1}x");
+    // truncation's buffer is O(ΣS): bounded by ~one second of cluster stream
+    let sum_rates: f64 = trunc.rates.iter().sum();
+    assert!(
+        (trunc.report.buffer.final_samples as f64) < sum_rates * 3.0,
+        "truncation buffer {} vs ΣS {}",
+        trunc.report.buffer.final_samples,
+        sum_rates
+    );
+}
+
+// ---------------------------------------------------------------------------
+// paper claim: adaptive compression cuts volume, δ controls CNC (Table V)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cnc_monotone_in_delta() {
+    let mut cncs = Vec::new();
+    for delta in [0.05, 0.3, 0.9] {
+        let mut cfg = base(TrainMode::Scadles, StreamPreset::S1Prime);
+        cfg.compression = Some(CompressionConfig::new(0.1, delta));
+        let out = run(&cfg);
+        cncs.push(out.report.cnc_ratio);
+    }
+    assert!(
+        cncs[0] <= cncs[1] + 1e-9 && cncs[1] <= cncs[2] + 1e-9,
+        "CNC not monotone in delta: {cncs:?}"
+    );
+    assert!(cncs[2] > 0.5, "permissive delta should mostly compress: {cncs:?}");
+}
+
+#[test]
+fn compression_cuts_floats_proportionally_to_cr() {
+    let dense = run(&base(TrainMode::Scadles, StreamPreset::S1Prime))
+        .report
+        .total_floats_sent;
+    let mut cfg = base(TrainMode::Scadles, StreamPreset::S1Prime);
+    cfg.compression = Some(CompressionConfig::new(0.1, 10.0)); // always compress
+    let sparse = run(&cfg).report.total_floats_sent;
+    let ratio = sparse as f64 / dense as f64;
+    assert!(ratio < 0.15, "floats ratio {ratio} (CR=0.1)");
+}
+
+// ---------------------------------------------------------------------------
+// paper claim: injection fixes non-IID convergence (Fig. 9) & costs KB (Fig. 10)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injection_improves_noniid_convergence_on_mock() {
+    let mk = |inj: Option<InjectionConfig>| {
+        let mut cfg = base(TrainMode::Scadles, StreamPreset::S1);
+        cfg.label_map = LabelMap::NonIid { labels_per_device: 1 };
+        cfg.rounds = 30;
+        cfg.injection = inj;
+        run(&cfg)
+    };
+    let without = mk(None);
+    let with = mk(Some(InjectionConfig::new(0.5, 0.5)));
+    // mock backend can't model label skew directly, but injection must not
+    // hurt and must move bytes; real-model validation lives in the harness.
+    assert!(with.report.injection_bytes > 0);
+    assert_eq!(without.report.injection_bytes, 0);
+    assert!(with.report.final_train_loss.is_finite());
+}
+
+#[test]
+fn injection_overhead_scales_with_alpha_beta() {
+    let mk = |a: f64, b: f64| {
+        let mut cfg = base(TrainMode::Scadles, StreamPreset::S1);
+        cfg.label_map = LabelMap::NonIid { labels_per_device: 1 };
+        cfg.injection = Some(InjectionConfig::new(a, b));
+        run(&cfg).report.injection_bytes
+    };
+    let small = mk(0.05, 0.05);
+    let large = mk(0.5, 0.5);
+    assert!(large > small * 4, "large {large} vs small {small}");
+}
+
+// ---------------------------------------------------------------------------
+// failure injection / resilience
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_artifacts_surface_clean_error() {
+    let cfg = ExperimentConfig::builder("mlp_c10")
+        .artifacts_dir("/nonexistent/path")
+        .build()
+        .unwrap();
+    let err = match Trainer::from_config(&cfg) {
+        Ok(_) => panic!("expected missing-artifacts error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("manifest.json") || err.contains("artifacts"), "{err}");
+}
+
+#[test]
+fn unknown_experiment_id_rejected() {
+    let err = scadles::harness::run("fig99", &HarnessOpts::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown experiment"));
+    assert!(EXPERIMENTS.len() >= 17);
+}
+
+#[test]
+fn rate_jitter_keeps_training_stable() {
+    let mut cfg = base(TrainMode::Scadles, StreamPreset::S1);
+    cfg.rate_jitter = 0.5; // violent intra-device heterogeneity
+    let out = run(&cfg);
+    assert!(out.report.final_train_loss.is_finite());
+    assert_eq!(out.logs.rounds().len(), 25);
+    // batches still respect bounds every round
+    for log in out.logs.rounds() {
+        assert!(log.global_batch >= 8 * 1);
+        assert!(log.global_batch <= 256 * 8);
+    }
+}
+
+#[test]
+fn single_device_cluster_trains() {
+    let mut cfg = base(TrainMode::Scadles, StreamPreset::S1Prime);
+    cfg.devices = 1;
+    let out = run(&cfg);
+    assert!(out.report.final_train_loss < 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// determinism across the whole stack
+// ---------------------------------------------------------------------------
+
+#[test]
+fn identical_configs_reproduce_bitwise_reports() {
+    let cfg = base(TrainMode::Scadles, StreamPreset::S2Prime);
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a.report.wall_clock_s, b.report.wall_clock_s);
+    assert_eq!(a.report.total_floats_sent, b.report.total_floats_sent);
+    assert_eq!(a.report.buffer.final_samples, b.report.buffer.final_samples);
+    assert_eq!(a.rates, b.rates);
+}

@@ -1,0 +1,343 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The sandbox builds offline, so instead of the `proptest` crate this file
+//! uses a small self-contained harness: each property runs against many
+//! randomized cases drawn from the crate's deterministic [`Pcg64`]; on
+//! failure the case seed is printed so the exact input can be replayed.
+
+use scadles::buffer::BufferPolicy;
+use scadles::compress::{mask_stats_native, threshold_for_ratio, topk_threshold};
+use scadles::config::{ExperimentConfig, StreamPreset, TrainMode};
+use scadles::coordinator::plan::RoundPlan;
+use scadles::coordinator::{aggregate_native, weights_from_batches, MockBackend, Trainer};
+use scadles::coordinator::backend::Backend;
+use scadles::data::LabelMap;
+use scadles::rng::{Pcg64, RateDistribution};
+use scadles::runtime::BucketLadder;
+use scadles::stream::{Partition, Record, Retention};
+
+/// Run `cases` randomized checks; panics with the failing seed.
+fn property(name: &str, cases: u64, mut check: impl FnMut(&mut Pcg64)) {
+    for case in 0..cases {
+        let seed = 0xF00D ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg64::new(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property {name:?} FAILED at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn rec(seed: u64) -> Record {
+    Record { offset: 0, timestamp_us: 0, label: (seed % 10) as u32, seed }
+}
+
+// ---------------------------------------------------------------------------
+// aggregation invariants (Eqn. 4a/4b)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_weights_are_a_partition_of_unity() {
+    property("weights sum to 1 over active devices", 200, |rng| {
+        let n = 1 + rng.below(30);
+        let batches: Vec<usize> = (0..n).map(|_| rng.below(300)).collect();
+        let w = weights_from_batches(&batches);
+        let total: f32 = w.iter().sum();
+        let active: usize = batches.iter().filter(|&&b| b > 0).count();
+        if active == 0 {
+            assert_eq!(total, 0.0);
+        } else {
+            assert!((total - 1.0).abs() < 1e-4, "sum {total}");
+        }
+        // weights proportional to batches
+        for (i, &b) in batches.iter().enumerate() {
+            if b == 0 {
+                assert_eq!(w[i], 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_aggregation_bounded_by_hull() {
+    property("weighted aggregate stays in the convex hull", 100, |rng| {
+        let n = 1 + rng.below(8);
+        let d = 1 + rng.below(64);
+        let grads: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let batches: Vec<usize> = (0..n).map(|_| 1 + rng.below(100)).collect();
+        let w = weights_from_batches(&batches);
+        let agg = aggregate_native(&grads, &w, d);
+        for j in 0..d {
+            let col: Vec<f32> = (0..n).map(|i| grads[i * d + j]).collect();
+            let lo = col.iter().cloned().fold(f32::INFINITY, f32::min) - 1e-4;
+            let hi = col.iter().cloned().fold(f32::NEG_INFINITY, f32::max) + 1e-4;
+            assert!(agg[j] >= lo && agg[j] <= hi, "coord {j}: {} ∉ [{lo},{hi}]", agg[j]);
+        }
+    });
+}
+
+#[test]
+fn prop_aggregation_linear_in_weights() {
+    property("aggregate(αw) == α·aggregate(w)", 100, |rng| {
+        let n = 1 + rng.below(6);
+        let d = 1 + rng.below(32);
+        let grads: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+        let a = aggregate_native(&grads, &w, d);
+        let w2: Vec<f32> = w.iter().map(|x| 2.0 * x).collect();
+        let b = aggregate_native(&grads, &w2, d);
+        for j in 0..d {
+            assert!((b[j] - 2.0 * a[j]).abs() < 1e-3, "coord {j}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// batching / planning invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_plan_respects_bounds_and_buckets() {
+    let ladder = BucketLadder::new(vec![8, 16, 32, 64, 128, 256]).unwrap();
+    property("plans stay within [b_min, b_max] and fit buckets", 200, |rng| {
+        let n = 1 + rng.below(20);
+        let mode = if rng.below(2) == 0 { TrainMode::Scadles } else { TrainMode::Ddl };
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(n)
+            .mode(mode)
+            .batch_bounds(8, 256)
+            .build()
+            .unwrap();
+        let rates: Vec<f64> = (0..n).map(|_| 1.0 + rng.f64() * 500.0).collect();
+        let backlogs: Vec<usize> = (0..n).map(|_| rng.below(2000)).collect();
+        let plan = RoundPlan::plan(&cfg, &ladder, &rates, &backlogs);
+        assert_eq!(plan.devices.len(), n);
+        for p in &plan.devices {
+            assert!(p.batch >= 8 && p.batch <= 256, "batch {}", p.batch);
+            assert!(p.bucket >= p.batch, "bucket {} < batch {}", p.bucket, p.batch);
+            assert!(ladder.buckets().contains(&p.bucket));
+            assert!(p.wait_s >= 0.0 && p.wait_s.is_finite());
+            assert!(plan.wait_s >= p.wait_s);
+        }
+        assert_eq!(plan.global_batch(), plan.batches().iter().sum::<usize>());
+    });
+}
+
+#[test]
+fn prop_scadles_wait_bounded_by_one_second_of_stream() {
+    // with b_i = clamp(S_i) and empty backlog, wait ≈ b_i/S_i ≤ ~1 s except
+    // when the b_min floor binds on very slow streams
+    let ladder = BucketLadder::new(vec![8, 16, 32, 64, 128, 256]).unwrap();
+    property("scadles wait bounded", 200, |rng| {
+        let n = 1 + rng.below(16);
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(n)
+            .mode(TrainMode::Scadles)
+            .build()
+            .unwrap();
+        let rates: Vec<f64> = (0..n).map(|_| 8.0 + rng.f64() * 500.0).collect();
+        let backlogs = vec![0usize; n];
+        let plan = RoundPlan::plan(&cfg, &ladder, &rates, &backlogs);
+        assert!(plan.wait_s <= 1.13, "wait {}", plan.wait_s); // b_i = round(S_i) can exceed S_i by <1
+    });
+}
+
+// ---------------------------------------------------------------------------
+// top-k invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_topk_threshold_keeps_k_modulo_ties() {
+    property("top-k keeps ≥k and ≤k+ties elements", 200, |rng| {
+        let d = 1 + rng.below(5000);
+        let g: Vec<f32> = (0..d)
+            .map(|_| (rng.normal() * 3.0) as f32)
+            .collect();
+        let k = 1 + rng.below(d);
+        let t = topk_threshold(&g, k);
+        let kept = g.iter().filter(|v| v.abs() >= t).count();
+        let ties = g.iter().filter(|v| v.abs() == t).count();
+        assert!(kept >= k, "kept {kept} < k {k}");
+        assert!(kept <= k + ties, "kept {kept} > k {k} + ties {ties}");
+    });
+}
+
+#[test]
+fn prop_mask_preserves_energy_split() {
+    property("norm² = kept² + dropped²", 100, |rng| {
+        let d = 1 + rng.below(3000);
+        let mut g: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let orig = g.clone();
+        let (_k, t) = threshold_for_ratio(&g, 0.1 + rng.f64() * 0.8);
+        let (n2, k2, nnz) = mask_stats_native(&mut g, t);
+        let dropped2: f64 = orig
+            .iter()
+            .filter(|v| v.abs() < t)
+            .map(|v| (*v as f64) * (*v as f64))
+            .sum();
+        assert!((n2 - (k2 + dropped2)).abs() / n2.max(1e-9) < 1e-6);
+        assert_eq!(nnz, g.iter().filter(|v| **v != 0.0).count());
+        // masked vector only zeroed, never altered
+        for (a, b) in g.iter().zip(&orig) {
+            assert!(*a == 0.0 || a == b);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// stream substrate invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_partition_conservation() {
+    property("produced = buffered + consumed-purged + dropped", 150, |rng| {
+        let cap = 1 + rng.below(200);
+        let trunc = rng.below(2) == 0;
+        let retention = if trunc {
+            Retention::Truncate { keep: cap }
+        } else {
+            Retention::Persist
+        };
+        let mut part = Partition::new(retention);
+        let total = rng.below(1000);
+        for s in 0..total {
+            part.append(rec(s as u64));
+        }
+        assert_eq!(part.produced() as usize, total);
+        assert_eq!(part.len() + part.dropped() as usize, total);
+        if trunc {
+            assert!(part.len() <= cap);
+        } else {
+            assert_eq!(part.dropped(), 0);
+        }
+        // offsets remain monotone and dense over the retained window
+        let recs = part.read(0, total);
+        for w in recs.windows(2) {
+            assert_eq!(w[1].offset, w[0].offset + 1);
+        }
+    });
+}
+
+#[test]
+fn prop_consumer_never_sees_duplicate_offsets() {
+    property("poll yields strictly increasing offsets", 100, |rng| {
+        use scadles::stream::{Consumer, Topic};
+        let t = Topic::new("d", Retention::Truncate { keep: 64 });
+        let mut c = Consumer::new(t.clone());
+        let mut last: Option<u64> = None;
+        for _ in 0..20 {
+            t.produce((0..rng.below(100)).map(|s| rec(s as u64)));
+            for r in c.poll(rng.below(50)) {
+                if let Some(prev) = last {
+                    assert!(r.offset > prev, "offset {} after {prev}", r.offset);
+                }
+                last = Some(r.offset);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// rate distributions (Table I)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rates_positive_for_all_presets() {
+    property("sampled rates ≥ 1", 50, |rng| {
+        for p in StreamPreset::all() {
+            let rates = p.distribution().sample_n(rng, 64);
+            assert!(rates.iter().all(|&r| r >= 1.0));
+        }
+        // custom distributions too
+        let d = RateDistribution::Normal { mean: 1.0, std: 100.0 };
+        assert!(d.sample_n(rng, 64).iter().all(|&r| r >= 1.0));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end trainer invariants (mock backend)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_trainer_accounting_consistent() {
+    property("round logs internally consistent", 12, |rng| {
+        let preset = StreamPreset::all()[rng.below(4)];
+        let mode = if rng.below(2) == 0 { TrainMode::Scadles } else { TrainMode::Ddl };
+        let policy = if rng.below(2) == 0 {
+            BufferPolicy::Persistence
+        } else {
+            BufferPolicy::Truncation
+        };
+        let noniid = rng.below(2) == 0;
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(2 + rng.below(6))
+            .rounds(8)
+            .seed(rng.next_u64())
+            .preset(preset)
+            .mode(mode)
+            .buffer_policy(policy)
+            .label_map(if noniid {
+                LabelMap::NonIid { labels_per_device: 1 }
+            } else {
+                LabelMap::Iid
+            })
+            .build()
+            .unwrap();
+        let backend = MockBackend::new(32, 10);
+        let d = backend.param_count() as u64;
+        let mut t = Trainer::with_backend(&cfg, Box::new(backend)).unwrap();
+        let out = t.run().unwrap();
+        let logs = out.logs.rounds();
+        assert_eq!(logs.len(), 8);
+        let mut prev_t = 0.0;
+        for log in logs {
+            assert!(log.wall_clock_s > prev_t, "clock must advance");
+            prev_t = log.wall_clock_s;
+            assert!(log.train_loss.is_finite());
+            assert!(log.lr > 0.0);
+            assert!(log.global_batch > 0);
+            // dense rounds move exactly active_devices * d floats
+            if !log.compressed {
+                assert_eq!(log.floats_sent % d, 0);
+            }
+            assert!(log.train_top1 <= log.train_top5 + 1e-9);
+            assert!(log.train_top5 <= 1.0 + 1e-9);
+        }
+        // report aggregates match logs
+        assert_eq!(
+            out.report.total_floats_sent,
+            logs.iter().map(|l| l.floats_sent).sum::<u64>()
+        );
+    });
+}
+
+#[test]
+fn prop_truncation_never_beats_persistence_on_buffer() {
+    property("truncation buffer ≤ persistence buffer", 8, |rng| {
+        let seed = rng.next_u64();
+        let preset = StreamPreset::all()[rng.below(4)];
+        let run = |policy| {
+            let cfg = ExperimentConfig::builder("mlp_c10")
+                .devices(4)
+                .rounds(10)
+                .seed(seed)
+                .preset(preset)
+                .buffer_policy(policy)
+                .build()
+                .unwrap();
+            Trainer::with_backend(&cfg, Box::new(MockBackend::new(32, 10)))
+                .unwrap()
+                .run()
+                .unwrap()
+                .report
+                .buffer
+                .final_samples
+        };
+        let p = run(BufferPolicy::Persistence);
+        let t = run(BufferPolicy::Truncation);
+        assert!(t <= p, "truncation {t} > persistence {p}");
+    });
+}
