@@ -6,6 +6,7 @@
 //!   * weighted aggregation        (L1 wagg kernel vs native Rust loop)
 //!   * top-k threshold + mask      (select-nth + L1 topk kernel vs native)
 //!   * momentum update             (update artifact vs native loop)
+//!   * round engine                (parallel worker pool vs sequential)
 //!   * train-step dispatch         (PJRT end-to-end per bucket)
 //!   * stream substrate            (produce/poll throughput)
 //!   * synthetic batch generation
@@ -15,8 +16,10 @@
 
 use std::sync::Arc;
 
+use scadles::buffer::BufferPolicy;
 use scadles::compress::{mask_stats_native, threshold_for_ratio};
-use scadles::coordinator::aggregate_native;
+use scadles::config::{CompressionConfig, ExperimentConfig, StreamPreset, TrainMode};
+use scadles::coordinator::{aggregate_native, MockBackend, Trainer};
 use scadles::data::{materialize, Synthetic};
 use scadles::rng::Pcg64;
 use scadles::runtime::Runtime;
@@ -59,6 +62,46 @@ fn main() {
             *p -= 0.05 * *m;
         }
     });
+
+    // --- round engine: parallel vs sequential -------------------------------
+    // Full ScaDLES rounds (drain + poll + local step + Top-k/EF compression)
+    // at the real mlp_c10 gradient size, 8 devices. The per-device work is
+    // identical; only the worker-pool width differs, so the ratio is the
+    // round-throughput speedup of the parallel engine. Truncation retention
+    // keeps backlogs (and memory) bounded across bench iterations.
+    b.header("round engine (8 devices, d=820874, CR=0.1 + EF)");
+    let mk_trainer = |threads: usize| {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(1_000_000) // round() is driven manually by the bench
+            .preset(StreamPreset::S1)
+            .mode(TrainMode::Scadles)
+            .buffer_policy(BufferPolicy::Truncation)
+            .compression(CompressionConfig::new(0.1, 10.0).with_error_feedback())
+            .eval_every(usize::MAX / 2)
+            .worker_threads(threads)
+            .build()
+            .unwrap();
+        Trainer::with_backend(&cfg, Box::new(MockBackend::new(d, 10))).unwrap()
+    };
+    let mut seq_trainer = mk_trainer(1);
+    let seq_ns = b
+        .case("round_parallel_vs_sequential/sequential", || {
+            seq_trainer.round().unwrap()
+        })
+        .ns_per_iter();
+    let mut par_trainer = mk_trainer(0);
+    let pool = par_trainer.worker_pool_width();
+    let par_ns = b
+        .case("round_parallel_vs_sequential/parallel", || {
+            par_trainer.round().unwrap()
+        })
+        .ns_per_iter();
+    println!(
+        "round_parallel_vs_sequential: {:.2}x round throughput at 8 devices \
+         ({pool}-thread pool; target >= 2x on multi-core hosts)",
+        seq_ns / par_ns
+    );
 
     // --- stream substrate --------------------------------------------------
     b.header("stream substrate");

@@ -148,6 +148,11 @@ pub struct ExperimentConfig {
     pub target_top5: f64,
     /// Progress echo period (0 = silent).
     pub echo_every: usize,
+    /// Worker-pool width for the per-device round engine: 0 = one thread
+    /// per available core, 1 = sequential, n = at most n threads (always
+    /// capped at the device count). Any value produces bitwise-identical
+    /// runs — parallelism changes scheduling, never reduction order.
+    pub worker_threads: usize,
 }
 
 impl ExperimentConfig {
@@ -229,6 +234,7 @@ impl ExperimentBuilder {
                 eval_per_class: 16,
                 target_top5: 0.9,
                 echo_every: 0,
+                worker_threads: 0,
             },
         }
     }
@@ -312,6 +318,11 @@ impl ExperimentBuilder {
     }
     pub fn echo_every(mut self, e: usize) -> Self {
         self.cfg.echo_every = e;
+        self
+    }
+    /// Worker-pool width (0 = auto, 1 = sequential engine).
+    pub fn worker_threads(mut self, t: usize) -> Self {
+        self.cfg.worker_threads = t;
         self
     }
 

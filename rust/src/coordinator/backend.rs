@@ -11,7 +11,12 @@ use crate::runtime::{BucketLadder, EvalOut, ModelRuntime, TrainOut};
 use crate::Result;
 
 /// What the trainer requires of an execution substrate.
-pub trait Backend {
+///
+/// `Send + Sync` because the parallel round engine shares one backend
+/// reference across every [`crate::coordinator::worker::DeviceWorker`]
+/// thread: all methods take `&self`, and implementations synchronize any
+/// interior caches (the PJRT executable cache is mutex-guarded).
+pub trait Backend: Send + Sync {
     fn param_count(&self) -> usize;
     fn num_classes(&self) -> usize;
     fn init_params(&self) -> Result<Vec<f32>>;

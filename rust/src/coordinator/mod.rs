@@ -23,6 +23,12 @@
 //! batches, uniform weights, no scaling, no compression, no injection —
 //! so every comparison in the harness is like-for-like.
 //!
+//! Per-device phases (stream drain, polling, train_step, Top-k masking)
+//! run concurrently on [`worker::DeviceWorker`] shards over a scoped
+//! thread pool; cross-device reductions stay in fixed device order, so
+//! every pool width produces bitwise-identical runs
+//! (`ExperimentConfig::worker_threads`).
+//!
 //! [`backend::Backend`] abstracts the execution substrate: the real PJRT
 //! [`crate::runtime::ModelRuntime`] or a deterministic quadratic
 //! [`backend::MockBackend`] used by unit/property tests.
@@ -35,6 +41,7 @@ pub mod fedavg;
 pub mod lr;
 pub mod plan;
 pub mod trainer;
+pub mod worker;
 
 pub use aggregate::{aggregate_native, weights_from_batches};
 pub use backend::{Backend, MockBackend};
@@ -44,3 +51,4 @@ pub use fedavg::FedAvgTrainer;
 pub use lr::scaled_lr;
 pub use plan::{DevicePlan, RoundPlan};
 pub use trainer::{Trainer, TrainerOutput};
+pub use worker::{DeviceWorker, WorkerRound};

@@ -5,6 +5,16 @@
 //! waits), [`super::aggregate`] (weights), [`super::lr`] (scaling) and the
 //! compression/injection policy objects, so the engine itself is shared —
 //! which is what makes ScaDLES-vs-DDL comparisons like-for-like.
+//!
+//! All per-device work — stream drain, polling, the local
+//! forward/backward, error-feedback Top-k masking — lives in
+//! [`super::worker::DeviceWorker`] shards and fans out over a scoped
+//! worker pool ([`super::worker::for_each_worker`]); the coordinator
+//! thread keeps the cross-device reductions (planning, the global
+//! compression gate, weighted aggregation, the optimizer update) in
+//! fixed device order, so any thread count produces bitwise-identical
+//! runs (`ExperimentConfig::worker_threads`, enforced by
+//! `tests/parallel_determinism.rs`).
 
 use crate::buffer::BufferTracker;
 use crate::compress::{CncCounter, CompressionScheme};
@@ -15,12 +25,13 @@ use crate::coordinator::clock::{RoundTiming, VirtualClock};
 use crate::coordinator::device::Device;
 use crate::coordinator::lr::{baseline_lr, scaled_lr};
 use crate::coordinator::plan::RoundPlan;
-use crate::data::{materialize, EvalSet, Synthetic};
+use crate::coordinator::worker::{for_each_worker, DeviceWorker};
+use crate::data::{EvalSet, Synthetic};
 use crate::injection::DataInjector;
 use crate::metrics::{RoundLog, RunLogger, RunReport};
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
-use crate::stream::Broker;
+use crate::stream::{Broker, Record};
 use crate::Result;
 
 /// Full output of a run: the report plus raw logs for figure rendering.
@@ -32,29 +43,32 @@ pub struct TrainerOutput {
     pub rates: Vec<f64>,
 }
 
-/// The L3 coordinator: owns devices, model state, policies and the clock.
+/// The L3 coordinator: owns the device shards, model state, policies and
+/// the clock.
 pub struct Trainer {
     cfg: ExperimentConfig,
     backend: Box<dyn Backend>,
-    devices: Vec<Device>,
+    /// One shard per device: stream ends, residual, gradient row.
+    workers: Vec<DeviceWorker>,
     broker: Broker,
     data: Synthetic,
     eval: EvalSet,
     params: Vec<f32>,
     momentum: Vec<f32>,
     scheme: CompressionScheme,
-    /// Per-device error-feedback residuals (None when disabled).
-    feedback: Vec<Option<crate::compress::ErrorFeedback>>,
     injector: Option<DataInjector>,
     clock: VirtualClock,
     tracker: BufferTracker,
     logs: RunLogger,
     cnc: CncCounter,
     round: usize,
-    /// Row-major [n, d] staging buffer for per-device gradients.
+    /// Row-major [n, d] staging buffer gathering worker gradient rows
+    /// for the aggregation kernel.
     grad_matrix: Vec<f32>,
     /// Whether the backend's wagg path is usable for this device count.
     wagg_artifact_ok: bool,
+    /// Resolved worker-pool width (1 = sequential engine).
+    threads: usize,
 }
 
 impl Trainer {
@@ -73,38 +87,43 @@ impl Trainer {
         let data = Synthetic::standard(backend.num_classes(), cfg.seed);
         let eval = EvalSet::new(&data, cfg.eval_per_class);
         let broker = Broker::new();
-        let devices: Vec<Device> = rates
+        let params = backend.init_params()?;
+        let d = backend.param_count();
+        let use_ef = cfg.compression.is_some_and(|c| c.error_feedback);
+        let workers: Vec<DeviceWorker> = rates
             .iter()
             .enumerate()
             .map(|(i, &rate)| {
                 let labels = cfg.label_map.device_labels(i, backend.num_classes());
-                Device::new(&broker, i, rate, labels, cfg.buffer_policy, cfg.seed ^ 0xD0 + i as u64)
+                let dev = Device::new(
+                    &broker,
+                    i,
+                    rate,
+                    labels,
+                    cfg.buffer_policy,
+                    cfg.seed ^ 0xD0 + i as u64,
+                );
+                DeviceWorker::new(dev, use_ef, d)
             })
             .collect();
-        let params = backend.init_params()?;
-        let d = backend.param_count();
         let scheme = CompressionScheme::from_config(cfg.compression);
-        let use_ef = cfg.compression.is_some_and(|c| c.error_feedback);
-        let feedback: Vec<Option<crate::compress::ErrorFeedback>> = (0..cfg.devices)
-            .map(|_| use_ef.then(|| crate::compress::ErrorFeedback::new(d)))
-            .collect();
         let injector = cfg
             .injection
             .map(|ic| DataInjector::new(ic, cfg.seed ^ 0xBEEF));
         let n = cfg.devices;
         let logs = RunLogger::new(format!("{}-{}", cfg.mode.name(), cfg.preset.name()))
             .with_echo(cfg.echo_every);
+        let threads = resolve_threads(cfg.worker_threads, n);
         Ok(Self {
             cfg: cfg.clone(),
             backend,
-            devices,
+            workers,
             broker,
             data,
             eval,
             momentum: vec![0.0; d],
             params,
             scheme,
-            feedback,
             injector,
             clock: VirtualClock::new(),
             tracker: BufferTracker::new(),
@@ -113,6 +132,7 @@ impl Trainer {
             round: 0,
             grad_matrix: vec![0.0; n * d],
             wagg_artifact_ok: true,
+            threads,
         })
     }
 
@@ -128,18 +148,39 @@ impl Trainer {
         self.clock.now()
     }
 
+    /// Worker-pool width the engine resolved (1 = sequential).
+    pub fn worker_pool_width(&self) -> usize {
+        self.threads
+    }
+
     pub fn rates(&self) -> Vec<f64> {
-        self.devices.iter().map(|d| d.base_rate).collect()
+        self.workers.iter().map(|w| w.device.base_rate).collect()
     }
 
     /// Total unread samples across device queues.
     pub fn total_backlog(&self) -> u64 {
-        self.devices.iter().map(|d| d.backlog() as u64).sum()
+        self.workers.iter().map(|w| w.device.backlog() as u64).sum()
     }
 
     fn advance_streams(&mut self, dt: f64) {
-        for dev in &mut self.devices {
-            dev.advance_stream(dt);
+        for_each_worker(&mut self.workers, self.threads, |_, w| {
+            w.device.advance_stream(dt);
+        });
+    }
+
+    /// Drain every worker's error, propagating the first in device order
+    /// (keeps error reporting deterministic across thread schedules and
+    /// leaves no stale error behind to fail a later, healthy round).
+    fn take_worker_error(&mut self) -> Result<()> {
+        let mut first = None;
+        for w in &mut self.workers {
+            if let Some(e) = w.error.take() {
+                first.get_or_insert(e);
+            }
+        }
+        match first {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
     }
 
@@ -147,7 +188,7 @@ impl Trainer {
     pub fn round(&mut self) -> Result<RoundLog> {
         let r = self.round;
         let d = self.backend.param_count();
-        let n = self.devices.len();
+        let threads = self.threads;
 
         // -- 0. prime the very first round with one second of stream ------
         if r == 0 {
@@ -155,95 +196,83 @@ impl Trainer {
         }
 
         // -- 1. intra-device rate jitter ----------------------------------
-        for dev in &mut self.devices {
-            dev.jitter_rate(self.cfg.rate_jitter);
+        for w in &mut self.workers {
+            w.device.jitter_rate(self.cfg.rate_jitter);
         }
 
         // -- 2. plan batches + waits --------------------------------------
-        let rates: Vec<f64> = self.devices.iter().map(|d| d.rate).collect();
-        let backlogs: Vec<usize> = self.devices.iter().map(|d| d.backlog()).collect();
+        let rates: Vec<f64> = self.workers.iter().map(|w| w.device.rate).collect();
+        let backlogs: Vec<usize> = self.workers.iter().map(|w| w.device.backlog()).collect();
         let plan = RoundPlan::plan(&self.cfg, self.backend.ladder(), &rates, &backlogs);
 
-        // -- 3. wait: streams keep flowing while devices gather -----------
-        if plan.wait_s > 0.0 {
-            self.advance_streams(plan.wait_s);
+        // -- 3+4. wait + poll: streams keep flowing while each device ----
+        //         gathers its own batch (parallel per shard)
+        {
+            let plan_devices = &plan.devices;
+            let wait_s = plan.wait_s;
+            for_each_worker(&mut self.workers, threads, |i, w| {
+                w.drain(wait_s, plan_devices[i].batch);
+            });
         }
 
-        // -- 4. poll fresh records ----------------------------------------
-        let mut fresh: Vec<Vec<crate::stream::Record>> = self
-            .devices
-            .iter_mut()
-            .zip(&plan.devices)
-            .map(|(dev, p)| dev.poll(p.batch))
-            .collect();
-
-        // -- 5. data injection (non-IID mitigation) -----------------------
+        // -- 5. data injection (non-IID mitigation; cross-device, serial) -
         let inj_stats = match &mut self.injector {
-            Some(inj) => inj.inject(&mut fresh),
+            Some(inj) => {
+                let mut fresh: Vec<Vec<Record>> =
+                    self.workers.iter_mut().map(|w| w.take_fresh()).collect();
+                let stats = inj.inject(&mut fresh);
+                for (w, f) in self.workers.iter_mut().zip(fresh) {
+                    w.put_fresh(f);
+                }
+                stats
+            }
             None => Default::default(),
         };
         let cap = self.backend.ladder().max();
-        for f in &mut fresh {
-            if f.len() > cap {
-                f.truncate(cap);
-            }
+        for w in &mut self.workers {
+            w.truncate_fresh(cap);
         }
 
-        // -- 6. device-local training steps -------------------------------
-        let batches: Vec<usize> = fresh.iter().map(|f| f.len()).collect();
-        let global_batch: usize = batches.iter().sum();
-        let mut losses = vec![0f32; n];
-        let mut top1 = 0f64;
-        let mut top5 = 0f64;
-        self.grad_matrix[..n * d].iter_mut().for_each(|v| *v = 0.0);
-        let mut max_compute = 0f64;
+        // -- 6. device-local training steps (parallel per shard) ----------
         let cluster = self.cfg.cluster();
-        for (i, recs) in fresh.iter().enumerate() {
-            if recs.is_empty() {
-                continue;
-            }
-            let (x, y) = materialize(&self.data, recs);
-            let bucket = self.backend.ladder().fit_clamped(y.len());
-            let out = self.backend.train_step(&self.params, &x, &y, bucket)?;
-            losses[i] = out.loss;
-            top1 += out.top1_correct as f64;
-            top5 += out.top5_correct as f64;
-            self.grad_matrix[i * d..(i + 1) * d].copy_from_slice(&out.grads);
-            max_compute = max_compute.max(cluster.cost.compute_time(recs.len()));
+        {
+            let backend = self.backend.as_ref();
+            let params = &self.params;
+            let data = &self.data;
+            let cost = &cluster.cost;
+            for_each_worker(&mut self.workers, threads, |_, w| {
+                w.train(backend, params, data, cost);
+            });
         }
+        self.take_worker_error()?;
 
-        // -- 7. compression: one global gate per round (Table V's CNC) ----
+        let batches: Vec<usize> = self.workers.iter().map(|w| w.out.batch).collect();
+        let global_batch: usize = batches.iter().sum();
+        let active = batches.iter().filter(|&&b| b > 0).count() as u64;
+
+        // -- 7. compression: per-shard stats, one global gate per round ---
+        //       (Table V's CNC), decision applied back to every shard
         let floats_sent;
         let mut compressed_round = false;
         let mut kept_fraction = 1.0f64;
         if let Some(ratio) = self.scheme.ratio() {
+            {
+                let backend = self.backend.as_ref();
+                for_each_worker(&mut self.workers, threads, |_, w| {
+                    w.compress_stats(backend, ratio);
+                });
+            }
+            self.take_worker_error()?;
             let mut tot_n2 = 0f64;
             let mut tot_k2 = 0f64;
             let mut kept_total = 0u64;
-            let mut masked_rows: Vec<Option<Vec<f32>>> = vec![None; n];
-            let mut corrected_rows: Vec<Option<Vec<f32>>> = vec![None; n];
-            for i in 0..n {
-                if batches[i] == 0 {
-                    continue;
+            for w in &self.workers {
+                if w.out.has_stats {
+                    tot_n2 += w.out.norm2;
+                    tot_k2 += w.out.knorm2;
+                    kept_total += w.out.nnz;
                 }
-                // DGC-style error feedback: re-add the residual dropped in
-                // earlier compressed rounds before thresholding.
-                let row: Vec<f32> = {
-                    let mut row = self.grad_matrix[i * d..(i + 1) * d].to_vec();
-                    if let Some(ef) = self.feedback.get(i).and_then(|f| f.as_ref()) {
-                        ef.correct(&mut row);
-                    }
-                    row
-                };
-                let (_k, thresh) = crate::compress::threshold_for_ratio(&row, ratio);
-                let (masked, n2, k2, nnz) = self.backend.topk_mask_stats(&row, thresh)?;
-                tot_n2 += n2;
-                tot_k2 += k2;
-                kept_total += nnz;
-                masked_rows[i] = Some(masked);
-                corrected_rows[i] = Some(row);
             }
-            let active = batches.iter().filter(|&&b| b > 0).count() as u64;
             let dense_total = active * d as u64;
             let dec = self.scheme.decide(tot_n2, tot_k2, kept_total, dense_total);
             compressed_round = dec.compress;
@@ -251,32 +280,20 @@ impl Trainer {
             self.cnc.record(dec.compress, dense_total, kept_total);
             if dec.compress {
                 kept_fraction = kept_total as f64 / dense_total.max(1) as f64;
-                for i in 0..n {
-                    let (Some(m), Some(c)) = (&masked_rows[i], &corrected_rows[i]) else {
-                        continue;
-                    };
-                    if let Some(Some(ef)) = self.feedback.get_mut(i) {
-                        ef.absorb(c, m);
-                    }
-                    self.grad_matrix[i * d..(i + 1) * d].copy_from_slice(m);
-                }
-            } else {
-                // dense round: the corrected gradient goes out whole
-                for i in 0..n {
-                    let Some(c) = &corrected_rows[i] else { continue };
-                    self.grad_matrix[i * d..(i + 1) * d].copy_from_slice(c);
-                    if let Some(Some(ef)) = self.feedback.get_mut(i) {
-                        ef.clear();
-                    }
-                }
             }
+            let compress = dec.compress;
+            for_each_worker(&mut self.workers, threads, |_, w| {
+                w.apply_decision(compress);
+            });
         } else {
-            let active = batches.iter().filter(|&&b| b > 0).count() as u64;
             floats_sent = active * d as u64;
             self.cnc.record(false, floats_sent, 0);
         }
 
-        // -- 8. weighted aggregation (Eqn. 4b) ----------------------------
+        // -- 8. weighted aggregation (Eqn. 4b), fixed device order --------
+        for (i, w) in self.workers.iter().enumerate() {
+            self.grad_matrix[i * d..(i + 1) * d].copy_from_slice(w.grad());
+        }
         let weights = match self.cfg.mode {
             TrainMode::Scadles => weights_from_batches(&batches),
             TrainMode::Ddl => uniform_weights(&batches),
@@ -287,8 +304,8 @@ impl Trainer {
         // loop (EXPERIMENTS.md §Perf L3 iter. 4), so the CPU substrate
         // defaults to native; SCADLES_KERNEL_AGG=1 re-enables the kernel
         // (the right default on a real accelerator).
-        let use_kernel = self.wagg_artifact_ok
-            && std::env::var_os("SCADLES_KERNEL_AGG").is_some();
+        let use_kernel =
+            self.wagg_artifact_ok && std::env::var_os("SCADLES_KERNEL_AGG").is_some();
         let agg = if global_batch == 0 {
             vec![0.0; d]
         } else if use_kernel {
@@ -316,6 +333,10 @@ impl Trainer {
         }
 
         // -- 10. price the round on the virtual clock ---------------------
+        let max_compute = self
+            .workers
+            .iter()
+            .fold(0f64, |m, w| m.max(w.out.compute_s));
         let sync_s = if global_batch == 0 {
             0.0
         } else if compressed_round {
@@ -346,11 +367,18 @@ impl Trainer {
         }
 
         // -- 13. log --------------------------------------------------------
-        let train_loss = losses
+        let train_loss = self
+            .workers
             .iter()
             .zip(&weights)
-            .map(|(&l, &w)| l as f64 * w as f64)
+            .map(|(w, &wt)| w.out.loss as f64 * wt as f64)
             .sum::<f64>();
+        let (top1, top5) = self
+            .workers
+            .iter()
+            .fold((0f64, 0f64), |(t1, t5), w| {
+                (t1 + w.out.top1 as f64, t5 + w.out.top5 as f64)
+            });
         let log = RoundLog {
             round: r,
             wall_clock_s: self.clock.now(),
@@ -413,6 +441,19 @@ impl Trainer {
     pub fn broker(&self) -> &Broker {
         &self.broker
     }
+}
+
+/// Resolve the configured pool width: 0 = one thread per available core,
+/// capped at the device count (extra threads would only idle).
+fn resolve_threads(requested: usize, devices: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    };
+    t.clamp(1, devices.max(1))
 }
 
 #[cfg(test)]
@@ -568,5 +609,34 @@ mod tests {
             .run()
             .unwrap();
         assert_ne!(a.report.wall_clock_s, b.report.wall_clock_s);
+    }
+
+    #[test]
+    fn pool_width_resolves_and_caps_at_device_count() {
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.worker_threads = 1;
+        assert_eq!(trainer(&cfg).worker_pool_width(), 1);
+        cfg.worker_threads = 64;
+        assert_eq!(trainer(&cfg).worker_pool_width(), 4); // 4 devices
+        cfg.worker_threads = 0;
+        let auto = trainer(&cfg).worker_pool_width();
+        assert!((1..=4).contains(&auto), "auto width {auto}");
+    }
+
+    #[test]
+    fn explicit_pool_widths_agree_on_a_full_run() {
+        // the cheap inline cousin of tests/parallel_determinism.rs
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.compression = Some(CompressionConfig::new(0.1, 0.5).with_error_feedback());
+        cfg.worker_threads = 1;
+        let seq = trainer(&cfg).run().unwrap();
+        cfg.worker_threads = 4;
+        let par = trainer(&cfg).run().unwrap();
+        assert_eq!(seq.report.wall_clock_s, par.report.wall_clock_s);
+        assert_eq!(seq.report.total_floats_sent, par.report.total_floats_sent);
+        assert_eq!(
+            seq.logs.rounds().last().unwrap().train_loss,
+            par.logs.rounds().last().unwrap().train_loss
+        );
     }
 }

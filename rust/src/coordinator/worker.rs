@@ -1,0 +1,364 @@
+//! Per-device round shards + the scoped-thread fan-out that runs them.
+//!
+//! ScaDLES's premise is many edge devices streaming and training
+//! *concurrently*; a round's per-device work — stream drain, record
+//! polling, local forward/backward, error-feedback correction and Top-k
+//! masking — is embarrassingly parallel, and only the small cross-device
+//! steps (planning, the global compression gate, weighted aggregation,
+//! the optimizer update) are inherently serial. [`DeviceWorker`] owns
+//! everything device-local so [`super::Trainer`] can fan each phase out
+//! over [`for_each_worker`] and keep the serial reductions in fixed
+//! device order.
+//!
+//! **Determinism contract:** parallelism changes *scheduling only*.
+//! Every float that crosses devices is reduced sequentially in device
+//! order by the coordinator, and all per-device state (stream RNG,
+//! residuals, gradients) is owned by exactly one worker. A run with
+//! `worker_threads = 1` is therefore bitwise identical to the same run
+//! at any thread count — enforced by `tests/parallel_determinism.rs`.
+
+use crate::compress::ErrorFeedback;
+use crate::config::cluster::VirtualCost;
+use crate::coordinator::backend::Backend;
+use crate::coordinator::device::Device;
+use crate::data::{materialize, Synthetic};
+use crate::stream::Record;
+
+/// Scalar outputs of one worker's round (gathered by the coordinator in
+/// device order).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerRound {
+    /// Samples actually trained on this round (0 = sat out).
+    pub batch: usize,
+    /// Device-local masked-mean loss.
+    pub loss: f32,
+    /// Top-1 / top-5 correct counts within the local batch.
+    pub top1: f32,
+    pub top5: f32,
+    /// Virtual compute seconds for the local step.
+    pub compute_s: f64,
+    /// Top-k statistics (`|g|²`, `|Topk(g)|²`, nnz); valid iff `has_stats`.
+    pub norm2: f64,
+    pub knorm2: f64,
+    pub nnz: u64,
+    pub has_stats: bool,
+}
+
+/// One device's shard of the round engine.
+///
+/// Owns the [`Device`] (topic + producer + its broker consumer handle),
+/// the DGC error-feedback residual, and the gradient row it contributes
+/// to aggregation. All methods take `&mut self` and touch no shared
+/// mutable state, so any subset of workers may run on any thread.
+#[derive(Debug)]
+pub struct DeviceWorker {
+    pub device: Device,
+    /// Shard-local DGC residual (None when error feedback is disabled).
+    pub feedback: Option<ErrorFeedback>,
+    /// This round's gradient row (length `d`; zeroed when the device
+    /// sits out).
+    grad: Vec<f32>,
+    /// Records polled this round (consumed by [`Self::train`]).
+    fresh: Vec<Record>,
+    /// Residual-corrected gradient, held between the stats and apply
+    /// phases of a compressed round.
+    corrected: Vec<f32>,
+    /// Top-k-masked gradient, held between the stats and apply phases.
+    masked: Vec<f32>,
+    /// Scalar round outputs.
+    pub out: WorkerRound,
+    /// First error hit by a parallel phase (drained by the coordinator
+    /// in device order, so error reporting is deterministic too).
+    pub error: Option<anyhow::Error>,
+}
+
+impl DeviceWorker {
+    pub fn new(device: Device, use_error_feedback: bool, d: usize) -> Self {
+        Self {
+            device,
+            feedback: use_error_feedback.then(|| ErrorFeedback::new(d)),
+            grad: vec![0.0; d],
+            fresh: Vec::new(),
+            corrected: Vec::new(),
+            masked: Vec::new(),
+            out: WorkerRound::default(),
+            error: None,
+        }
+    }
+
+    /// The gradient row this worker contributes to aggregation.
+    pub fn grad(&self) -> &[f32] {
+        &self.grad
+    }
+
+    /// Records staged for the injection step (drained and restored by
+    /// the coordinator between the poll and train phases).
+    pub fn take_fresh(&mut self) -> Vec<Record> {
+        std::mem::take(&mut self.fresh)
+    }
+
+    pub fn put_fresh(&mut self, fresh: Vec<Record>) {
+        self.fresh = fresh;
+    }
+
+    /// Cap the polled batch at the compiled bucket ladder's top (records
+    /// gained through injection can exceed the planned batch).
+    pub fn truncate_fresh(&mut self, cap: usize) {
+        if self.fresh.len() > cap {
+            self.fresh.truncate(cap);
+        }
+    }
+
+    /// Phase: advance this device's stream through the barrier wait and
+    /// poll the planned batch off its consumer.
+    pub fn drain(&mut self, wait_s: f64, batch: usize) {
+        if wait_s > 0.0 {
+            self.device.advance_stream(wait_s);
+        }
+        self.fresh = self.device.poll(batch);
+    }
+
+    /// Phase: device-local forward/backward on the fresh records.
+    ///
+    /// Resets the round outputs; an empty batch zeroes the gradient row
+    /// so aggregation sees exactly what the sequential engine produced.
+    pub fn train(
+        &mut self,
+        backend: &dyn Backend,
+        params: &[f32],
+        data: &Synthetic,
+        cost: &VirtualCost,
+    ) {
+        self.out = WorkerRound {
+            batch: self.fresh.len(),
+            ..WorkerRound::default()
+        };
+        // a stale error from an aborted round must not fail this one
+        self.error = None;
+        if self.fresh.is_empty() {
+            self.grad.iter_mut().for_each(|v| *v = 0.0);
+            return;
+        }
+        let (x, y) = materialize(data, &self.fresh);
+        self.fresh.clear();
+        let bucket = backend.ladder().fit_clamped(y.len());
+        match backend.train_step(params, &x, &y, bucket) {
+            Ok(step) => {
+                self.out.loss = step.loss;
+                self.out.top1 = step.top1_correct;
+                self.out.top5 = step.top5_correct;
+                self.out.compute_s = cost.compute_time(self.out.batch);
+                self.grad.copy_from_slice(&step.grads);
+            }
+            Err(e) => self.error = Some(e),
+        }
+    }
+
+    /// Phase: residual correction + Top-k mask statistics.
+    ///
+    /// Holds the corrected and masked rows until the coordinator's global
+    /// gate decides whether this round compresses.
+    pub fn compress_stats(&mut self, backend: &dyn Backend, ratio: f64) {
+        self.out.has_stats = false;
+        if self.out.batch == 0 {
+            return;
+        }
+        // DGC-style error feedback: re-add the residual dropped in
+        // earlier compressed rounds before thresholding.
+        let mut row = self.grad.clone();
+        if let Some(ef) = &self.feedback {
+            ef.correct(&mut row);
+        }
+        let (_k, thresh) = crate::compress::threshold_for_ratio(&row, ratio);
+        match backend.topk_mask_stats(&row, thresh) {
+            Ok((masked, n2, k2, nnz)) => {
+                self.out.norm2 = n2;
+                self.out.knorm2 = k2;
+                self.out.nnz = nnz;
+                self.out.has_stats = true;
+                self.masked = masked;
+                self.corrected = row;
+            }
+            Err(e) => self.error = Some(e),
+        }
+    }
+
+    /// Phase: commit the global gate's decision to this shard.
+    ///
+    /// Compressed round: the masked row goes out, the residual absorbs
+    /// the dropped mass. Dense round: the corrected row goes out whole
+    /// and the residual clears.
+    pub fn apply_decision(&mut self, compress: bool) {
+        if !self.out.has_stats {
+            return;
+        }
+        if compress {
+            if let Some(ef) = &mut self.feedback {
+                ef.absorb(&self.corrected, &self.masked);
+            }
+            std::mem::swap(&mut self.grad, &mut self.masked);
+        } else {
+            std::mem::swap(&mut self.grad, &mut self.corrected);
+            if let Some(ef) = &mut self.feedback {
+                ef.clear();
+            }
+        }
+        self.masked = Vec::new();
+        self.corrected = Vec::new();
+    }
+}
+
+/// Run `f(index, worker)` once per worker, fanned out over at most
+/// `threads` scoped OS threads (contiguous chunks, so cache locality and
+/// chunk assignment are stable). `threads <= 1` runs inline — the
+/// sequential engine is literally the same code on one thread.
+pub fn for_each_worker<F>(workers: &mut [DeviceWorker], threads: usize, f: F)
+where
+    F: Fn(usize, &mut DeviceWorker) + Sync,
+{
+    let n = workers.len();
+    let t = threads.clamp(1, n.max(1));
+    if t <= 1 {
+        for (i, w) in workers.iter_mut().enumerate() {
+            f(i, w);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(t);
+    std::thread::scope(|scope| {
+        for (ci, ws) in workers.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, w) in ws.iter_mut().enumerate() {
+                    f(ci * chunk + j, w);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::BufferPolicy;
+    use crate::coordinator::backend::MockBackend;
+    use crate::stream::Broker;
+
+    fn worker(rate: f64, use_ef: bool, d: usize) -> DeviceWorker {
+        let broker = Broker::new();
+        let dev = Device::new(&broker, 0, rate, vec![0, 1], BufferPolicy::Persistence, 7);
+        DeviceWorker::new(dev, use_ef, d)
+    }
+
+    fn assert_send<T: Send>() {}
+
+    #[test]
+    fn worker_is_send() {
+        // the whole point: shards move onto scoped threads
+        assert_send::<DeviceWorker>();
+        assert_send::<Vec<DeviceWorker>>();
+    }
+
+    #[test]
+    fn drain_then_train_produces_grad_and_stats() {
+        let be = MockBackend::new(32, 10);
+        let cost = VirtualCost::for_model("mlp_c10");
+        let mut w = worker(100.0, false, 32);
+        w.device.advance_stream(1.0);
+        w.drain(0.0, 64);
+        assert_eq!(w.out.batch, 0); // set by train, not drain
+        let params = vec![0.5f32; 32];
+        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        assert_eq!(w.out.batch, 64);
+        assert!(w.out.loss > 0.0);
+        assert!(w.out.compute_s > 0.0);
+        assert!(w.grad().iter().any(|&g| g != 0.0));
+        assert!(w.error.is_none());
+    }
+
+    #[test]
+    fn empty_batch_zeroes_grad() {
+        let be = MockBackend::new(16, 10);
+        let cost = VirtualCost::for_model("mlp_c10");
+        let mut w = worker(5.0, false, 16);
+        // dirty the row, then train on nothing
+        w.device.advance_stream(1.0);
+        w.drain(0.0, 8);
+        let params = vec![0.1f32; 16];
+        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        assert!(w.grad().iter().any(|&g| g != 0.0));
+        w.drain(0.0, 0);
+        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        assert_eq!(w.out.batch, 0);
+        assert!(w.grad().iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn compress_apply_roundtrip_preserves_signal_with_ef() {
+        let be = MockBackend::new(64, 10);
+        let cost = VirtualCost::for_model("mlp_c10");
+        let mut w = worker(100.0, true, 64);
+        w.device.advance_stream(1.0);
+        w.drain(0.0, 64);
+        let params = vec![0.3f32; 64];
+        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        let raw = w.grad().to_vec();
+        w.compress_stats(&be, 0.25);
+        assert!(w.out.has_stats);
+        assert!(w.out.nnz >= 16);
+        w.apply_decision(true);
+        let sent = w.grad().to_vec();
+        // residual + sent == raw (residual was zero before this round)
+        let ef = w.feedback.as_ref().unwrap();
+        assert!(ef.residual_norm2 > 0.0);
+        let kept = sent.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(kept as u64, w.out.nnz);
+        assert!(sent.len() == raw.len());
+    }
+
+    #[test]
+    fn dense_decision_sends_corrected_row_and_clears_residual() {
+        let be = MockBackend::new(32, 10);
+        let cost = VirtualCost::for_model("mlp_c10");
+        let mut w = worker(100.0, true, 32);
+        w.device.advance_stream(1.0);
+        w.drain(0.0, 32);
+        let params = vec![0.2f32; 32];
+        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        w.compress_stats(&be, 0.1);
+        w.apply_decision(false);
+        assert_eq!(w.feedback.as_ref().unwrap().residual_norm2, 0.0);
+        assert!(w.grad().iter().filter(|&&v| v != 0.0).count() > w.out.nnz as usize);
+    }
+
+    #[test]
+    fn for_each_worker_visits_every_index_once_at_any_width() {
+        for threads in [1, 2, 3, 8, 64] {
+            let broker = Broker::new();
+            let mut ws: Vec<DeviceWorker> = (0..7)
+                .map(|i| {
+                    let dev = Device::new(
+                        &broker,
+                        i,
+                        50.0,
+                        vec![0],
+                        BufferPolicy::Persistence,
+                        i as u64,
+                    );
+                    DeviceWorker::new(dev, false, 4)
+                })
+                .collect();
+            for_each_worker(&mut ws, threads, |i, w| {
+                w.out.batch = i + 1;
+            });
+            let got: Vec<usize> = ws.iter().map(|w| w.out.batch).collect();
+            assert_eq!(got, vec![1, 2, 3, 4, 5, 6, 7], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_worker_handles_empty_slice() {
+        let mut ws: Vec<DeviceWorker> = Vec::new();
+        for_each_worker(&mut ws, 4, |_, _| panic!("no workers to visit"));
+    }
+}

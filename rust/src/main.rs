@@ -30,6 +30,7 @@ USAGE:
               [--preset S1|S2|S1p|S2p] [--mode scadles|ddl] [--truncate]
               [--noniid K] [--cr CR --delta D] [--alpha A --beta B]
               [--jitter J] [--seed S] [--echo N] [--csv FILE]
+              [--workers T]   (round-engine pool width; 0=auto, 1=sequential)
   repro exp <id|all> [--artifacts DIR] [--devices N] [--rounds R]
               [--model M] [--out-dir DIR] [--echo N] [--seed S]
   repro info  [--artifacts DIR]
@@ -182,7 +183,8 @@ fn main() -> anyhow::Result<()> {
                 .mode(parse_mode(&args.get_str("mode", "scadles"))?)
                 .rate_jitter(args.get("jitter", 0.0f64)?)
                 .seed(args.get("seed", 42u64)?)
-                .echo_every(args.get("echo", 10usize)?);
+                .echo_every(args.get("echo", 10usize)?)
+                .worker_threads(args.get("workers", 0usize)?);
             if args.has("truncate") {
                 b = b.buffer_policy(BufferPolicy::Truncation);
             }

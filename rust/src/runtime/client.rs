@@ -5,6 +5,13 @@
 //! compiled once and shared via `Arc`. The cache is keyed by artifact file
 //! name; every model/bucket combination the coordinator touches is
 //! compiled exactly once per process.
+//!
+//! The cache is mutex-guarded so one `Runtime` (behind `Arc`) can serve
+//! every `DeviceWorker` thread of the parallel round engine: workers
+//! race to compile an artifact at most once, then share the `Arc`'d
+//! executable. Lock hold time is a map lookup/insert — compilation
+//! itself happens outside any reasonable contention window because each
+//! model/bucket is touched once per process.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};

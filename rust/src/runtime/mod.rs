@@ -13,8 +13,15 @@
 //! * [`bucket`]   — the batch-bucket ladder that maps ScaDLES's variable
 //!   per-device batch `b_i` onto fixed-shape executables.
 //!
-//! Everything is synchronous: PJRT-CPU computations are CPU-bound, so the
-//! tokio event loop in the coordinator dispatches them on blocking tasks.
+//! Everything is synchronous: PJRT-CPU computations are CPU-bound. The
+//! parallel round engine shares one [`client::Runtime`] across its
+//! device-worker threads (the executable cache is mutex-guarded), so
+//! worker pools need no per-thread artifact state.
+//!
+//! Offline builds link the in-repo `xla-stub` crate instead of the real
+//! bindings: everything here type-checks and loads manifests, but
+//! executing artifacts errors at `PjRtClient::cpu()` with instructions
+//! (see `rust/xla-stub/src/lib.rs`).
 
 pub mod artifact;
 pub mod bucket;

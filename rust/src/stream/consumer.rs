@@ -10,6 +10,11 @@ use super::topic::Topic;
 /// advances the committed offset; `backlog()` is the device's current
 /// queue size Q_i (Fig. 3b / Fig. 8). When the partition truncated past
 /// our offset, the skipped records are counted in `missed`.
+///
+/// Consumers are single-owner handles: offsets are plain fields, so one
+/// consumer must live on one worker at a time. They are `Send` (the
+/// backing [`Topic`] is mutex-guarded), which is what lets the parallel
+/// round engine move each device's consumer onto its worker thread.
 #[derive(Debug)]
 pub struct Consumer {
     topic: Topic,
@@ -137,6 +142,48 @@ mod tests {
         assert_eq!(got.len(), 10);
         assert_eq!(c.missed(), 90);
         assert_eq!(c.backlog(), 0);
+    }
+
+    #[test]
+    fn consumer_handles_are_send() {
+        // compile-time guard: the round engine ships one consumer per
+        // DeviceWorker across scoped threads.
+        fn assert_send<T: Send>() {}
+        assert_send::<Consumer>();
+    }
+
+    #[test]
+    fn concurrent_consumers_on_distinct_topics_poll_independently() {
+        let topics: Vec<Topic> = (0..4)
+            .map(|i| {
+                let t = Topic::new(&format!("d{i}"), Retention::Persist);
+                t.produce((0..100).map(rec));
+                t
+            })
+            .collect();
+        let counts = std::thread::scope(|s| {
+            let handles: Vec<_> = topics
+                .iter()
+                .map(|t| {
+                    let mut c = Consumer::new(t.clone());
+                    s.spawn(move || {
+                        let mut n = 0;
+                        while !c.poll(16).is_empty() {
+                            n += 16;
+                        }
+                        (n, c.consumed())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect::<Vec<_>>()
+        });
+        for (n, consumed) in counts {
+            assert_eq!(n, 112); // 7 polls of 16; the 7th returns the last 4
+            assert_eq!(consumed, 100);
+        }
     }
 
     #[test]

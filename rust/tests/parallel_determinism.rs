@@ -1,0 +1,195 @@
+//! The parallel round engine's determinism contract: for a fixed seed,
+//! a run is bitwise identical at every worker-pool width. Parallelism is
+//! allowed to change *scheduling only* — all cross-device reductions
+//! happen in fixed device order on the coordinator thread.
+//!
+//! Matrix: seeds {1,2,3} x devices {1,4,8} x engine paths {plain,
+//! truncation, Top-k compression, Top-k + error feedback, DDL baseline}
+//! x pool widths {1 (sequential), 4, 8}.
+
+use scadles::buffer::BufferPolicy;
+use scadles::config::{CompressionConfig, ExperimentConfig, StreamPreset, TrainMode};
+use scadles::coordinator::{MockBackend, Trainer, TrainerOutput};
+use scadles::metrics::RoundLog;
+
+#[derive(Clone, Copy)]
+struct Case {
+    name: &'static str,
+    mode: TrainMode,
+    policy: BufferPolicy,
+    compression: Option<CompressionConfig>,
+}
+
+const CASES: [Case; 5] = [
+    Case {
+        name: "plain",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Persistence,
+        compression: None,
+    },
+    Case {
+        name: "truncation",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Truncation,
+        compression: None,
+    },
+    Case {
+        name: "topk",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Persistence,
+        compression: Some(CompressionConfig {
+            ratio: 0.1,
+            delta: 0.5,
+            ewma_alpha: 0.3,
+            error_feedback: false,
+        }),
+    },
+    Case {
+        name: "topk+ef",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Truncation,
+        compression: Some(CompressionConfig {
+            ratio: 0.05,
+            delta: 0.5,
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        }),
+    },
+    Case {
+        name: "ddl",
+        mode: TrainMode::Ddl,
+        policy: BufferPolicy::Persistence,
+        compression: None,
+    },
+];
+
+fn run(case: Case, seed: u64, devices: usize, threads: usize) -> TrainerOutput {
+    let mut b = ExperimentConfig::builder("mlp_c10")
+        .devices(devices)
+        .rounds(12)
+        .seed(seed)
+        .preset(StreamPreset::S1)
+        .mode(case.mode)
+        .buffer_policy(case.policy)
+        .rate_jitter(0.2)
+        .eval_every(4)
+        .worker_threads(threads);
+    if let Some(c) = case.compression {
+        b = b.compression(c);
+    }
+    let cfg = b.build().unwrap();
+    Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10)))
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// Bitwise f64 equality that treats NaN == NaN (unevaluated rounds log
+/// NaN test accuracy).
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+fn assert_logs_identical(a: &RoundLog, b: &RoundLog, ctx: &str) {
+    assert_eq!(a.round, b.round, "{ctx}: round index");
+    assert!(feq(a.wall_clock_s, b.wall_clock_s), "{ctx}: wall clock");
+    assert_eq!(a.global_batch, b.global_batch, "{ctx}: global batch");
+    assert!(feq(a.train_loss, b.train_loss), "{ctx}: train loss");
+    assert!(feq(a.train_top1, b.train_top1), "{ctx}: train top1");
+    assert!(feq(a.train_top5, b.train_top5), "{ctx}: train top5");
+    assert!(feq(a.test_top1, b.test_top1), "{ctx}: test top1");
+    assert!(feq(a.test_top5, b.test_top5), "{ctx}: test top5");
+    assert!(feq(a.lr, b.lr), "{ctx}: lr");
+    assert_eq!(a.buffered_samples, b.buffered_samples, "{ctx}: buffered");
+    assert_eq!(a.floats_sent, b.floats_sent, "{ctx}: floats sent");
+    assert_eq!(a.compressed, b.compressed, "{ctx}: compressed flag");
+    assert_eq!(a.injection_bytes, b.injection_bytes, "{ctx}: injection");
+}
+
+fn assert_outputs_identical(a: &TrainerOutput, b: &TrainerOutput, ctx: &str) {
+    assert_eq!(a.rates, b.rates, "{ctx}: sampled rates");
+    let (ra, rb) = (&a.report, &b.report);
+    assert!(feq(ra.wall_clock_s, rb.wall_clock_s), "{ctx}: report wall clock");
+    assert!(
+        feq(ra.final_train_loss, rb.final_train_loss),
+        "{ctx}: report final loss"
+    );
+    assert!(feq(ra.best_test_top5, rb.best_test_top5), "{ctx}: best top5");
+    assert!(feq(ra.cnc_ratio, rb.cnc_ratio), "{ctx}: cnc ratio");
+    assert_eq!(
+        ra.total_floats_sent, rb.total_floats_sent,
+        "{ctx}: total floats"
+    );
+    assert_eq!(
+        ra.buffer.final_samples, rb.buffer.final_samples,
+        "{ctx}: buffer final"
+    );
+    assert_eq!(
+        ra.buffer.peak_samples, rb.buffer.peak_samples,
+        "{ctx}: buffer peak"
+    );
+    assert_eq!(ra.injection_bytes, rb.injection_bytes, "{ctx}: injection");
+    let (la, lb) = (a.logs.rounds(), b.logs.rounds());
+    assert_eq!(la.len(), lb.len(), "{ctx}: round count");
+    for (x, y) in la.iter().zip(lb) {
+        assert_logs_identical(x, y, ctx);
+    }
+}
+
+#[test]
+fn sequential_and_parallel_reports_are_bitwise_identical() {
+    for case in CASES {
+        for seed in [1u64, 2, 3] {
+            for devices in [1usize, 4, 8] {
+                let sequential = run(case, seed, devices, 1);
+                for threads in [4usize, 8] {
+                    let parallel = run(case, seed, devices, threads);
+                    let ctx = format!(
+                        "{} seed={seed} devices={devices} threads={threads}",
+                        case.name
+                    );
+                    assert_outputs_identical(&sequential, &parallel, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_width_matches_sequential() {
+    // worker_threads = 0 resolves to the host's core count — whatever it
+    // is, the run must still be bitwise identical to the 1-thread engine.
+    let case = CASES[3]; // topk+ef exercises the most per-device state
+    let sequential = run(case, 42, 8, 1);
+    let auto = run(case, 42, 8, 0);
+    assert_outputs_identical(&sequential, &auto, "auto-width seed=42 devices=8");
+}
+
+#[test]
+fn injection_path_is_deterministic_across_widths() {
+    // injection is a serial cross-device step between the poll and train
+    // phases; the donated-record routing must not depend on pool width.
+    use scadles::config::InjectionConfig;
+    use scadles::data::LabelMap;
+    let mk = |threads: usize| {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(6)
+            .rounds(10)
+            .seed(5)
+            .preset(StreamPreset::S1)
+            .label_map(LabelMap::NonIid { labels_per_device: 1 })
+            .injection(InjectionConfig::new(0.5, 0.5))
+            .eval_every(5)
+            .worker_threads(threads)
+            .build()
+            .unwrap();
+        Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10)))
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let sequential = mk(1);
+    let parallel = mk(6);
+    assert!(sequential.report.injection_bytes > 0);
+    assert_outputs_identical(&sequential, &parallel, "injection devices=6");
+}

@@ -1,8 +1,11 @@
 //! End-to-end tests over the real PJRT runtime + compiled artifacts.
 //!
-//! These exercise the actual L1/L2 HLO artifacts (`make artifacts` first);
-//! if the artifacts directory is missing the tests skip with a notice so
-//! `cargo test` stays usable before the Python step.
+//! These exercise the actual L1/L2 HLO artifacts (`make artifacts` first)
+//! and therefore need the *real* xla bindings — the offline `xla-stub`
+//! build cannot execute them, so every test is `#[ignore]`d with a reason
+//! (run with `cargo test -- --ignored` on a machine with the toolchain).
+//! The `req!` guard additionally skips with a notice when the artifacts
+//! directory is missing, so the suite stays usable mid-setup.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -54,6 +57,7 @@ fn sample_batch(n: usize, ncls: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn manifest_and_init_params_load() {
     let rt = req!(runtime());
     let model = rt.model("mlp_c10").unwrap();
@@ -64,6 +68,7 @@ fn manifest_and_init_params_load() {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn train_step_loss_starts_near_uniform() {
     let rt = req!(runtime());
     let model = rt.model("mlp_c10").unwrap();
@@ -84,6 +89,7 @@ fn train_step_loss_starts_near_uniform() {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn bucket_padding_is_neutral() {
     // the batch-bucket contract: same valid samples, different padding
     // bucket ⇒ identical loss/gradients (up to fp reduction order).
@@ -105,6 +111,7 @@ fn bucket_padding_is_neutral() {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn train_step_is_deterministic() {
     let rt = req!(runtime());
     let model = rt.model("mlp_c10").unwrap();
@@ -117,6 +124,7 @@ fn train_step_is_deterministic() {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn update_artifact_matches_native_momentum() {
     let rt = req!(runtime());
     let model = rt.model("mlp_c10").unwrap();
@@ -138,6 +146,7 @@ fn update_artifact_matches_native_momentum() {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn wagg_artifact_matches_native() {
     let rt = req!(runtime());
     let model = rt.model("mlp_c10").unwrap();
@@ -157,6 +166,7 @@ fn wagg_artifact_matches_native() {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn topk_artifact_matches_native() {
     let rt = req!(runtime());
     let model = rt.model("mlp_c10").unwrap();
@@ -177,6 +187,7 @@ fn topk_artifact_matches_native() {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn eval_step_counts_bounded() {
     let rt = req!(runtime());
     let model = rt.model("mlp_c10").unwrap();
@@ -195,6 +206,7 @@ fn eval_step_counts_bounded() {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn sgd_on_artifacts_reduces_loss() {
     // ten full train+update cycles through PJRT must overfit one batch
     let rt = req!(runtime());
@@ -212,6 +224,7 @@ fn sgd_on_artifacts_reduces_loss() {
 }
 
 #[test]
+#[ignore = "requires compiled PJRT artifacts and the real xla bindings (run `make artifacts`, swap xla-stub), absent in CI"]
 fn full_trainer_short_run_all_models() {
     let dir = req!(artifacts_dir());
     for model in ["mlp_c10", "resnet_tiny_c10"] {
