@@ -18,7 +18,9 @@ use std::sync::Arc;
 
 use scadles::buffer::BufferPolicy;
 use scadles::compress::{mask_stats_native, threshold_for_ratio};
-use scadles::config::{CompressionConfig, ExperimentConfig, StreamPreset, TrainMode};
+use scadles::config::{
+    CompressionConfig, ExperimentConfig, HeteroPreset, StreamPreset, TrainMode,
+};
 use scadles::coordinator::{aggregate_native, MockBackend, Trainer};
 use scadles::data::{materialize, Synthetic};
 use scadles::rng::Pcg64;
@@ -101,6 +103,43 @@ fn main() {
         "round_parallel_vs_sequential: {:.2}x round throughput at 8 devices \
          ({pool}-thread pool; target >= 2x on multi-core hosts)",
         seq_ns / par_ns
+    );
+
+    // --- heterogeneous-cluster rounds ---------------------------------------
+    // Same engine under a two-tier profile split (half the devices 4x
+    // slower on half-rate links): measures the scenario layer's overhead
+    // on the round hot path — profile-priced compute, slowest-link sync,
+    // per-device timeline rows.
+    b.header("heterogeneous round engine (two-tier:0.5, 8 devices, d=820874)");
+    let mk_hetero = |threads: usize| {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(1_000_000) // round() is driven manually by the bench
+            .preset(StreamPreset::S1)
+            .mode(TrainMode::Scadles)
+            .buffer_policy(BufferPolicy::Truncation)
+            .compression(CompressionConfig::new(0.1, 10.0).with_error_feedback())
+            .hetero(HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 })
+            .eval_every(usize::MAX / 2)
+            .worker_threads(threads)
+            .build()
+            .unwrap();
+        Trainer::with_backend(&cfg, Box::new(MockBackend::new(d, 10))).unwrap()
+    };
+    let mut het_seq = mk_hetero(1);
+    let het_seq_ns = b
+        .case("hetero_round/sequential", || het_seq.round().unwrap())
+        .ns_per_iter();
+    let mut het_par = mk_hetero(0);
+    let het_par_ns = b
+        .case("hetero_round/parallel", || het_par.round().unwrap())
+        .ns_per_iter();
+    println!(
+        "hetero_round: {:.2}x parallel speedup under two-tier profiles; \
+         homogeneous sequential round costs {:.2}x a two-tier one \
+         (scenario-layer overhead should be noise)",
+        het_seq_ns / het_par_ns,
+        seq_ns / het_seq_ns
     );
 
     // --- stream substrate --------------------------------------------------

@@ -1,4 +1,4 @@
-//! Virtual cluster: per-device compute + network cost model.
+//! Virtual cluster: per-device compute + network + memory cost model.
 //!
 //! Numerics (losses, gradients, accuracies) come from the *real* tiny
 //! models executing through PJRT; **time** comes from this model, priced
@@ -6,12 +6,22 @@
 //! gradients) so wall-clock comparisons land where the paper's do. Both
 //! ScaDLES and the DDL baseline are priced by the same model, so speedup
 //! *ratios* are like-for-like (DESIGN.md §5.3).
+//!
+//! The paper's testbed is homogeneous (8 identical K80 containers), but
+//! its premise is that real edge clusters are not (§I, §II): devices
+//! differ in compute, link bandwidth and memory on top of streaming
+//! rate. Each device therefore owns a [`DeviceProfile`] — its own
+//! [`VirtualCost`], uplink/downlink bandwidth and memory budget — and a
+//! [`ClusterProfile`] collects them. Profiles are sampled from the named
+//! scenario presets in [`crate::config::hetero`]; the default
+//! `k80-homogeneous` scenario gives every device the paper's K80 profile
+//! and reproduces the flat cost model's timings exactly.
 
-
+use crate::simulate::memory::{MemoryModel, Optimizer};
 use crate::simulate::network::NetworkModel;
 
 /// Virtual cost model for one device class (paper's K80 edge container).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct VirtualCost {
     /// Fixed per-iteration overhead (kernel launches, dataloader), seconds.
     pub iter_overhead_s: f64,
@@ -62,6 +72,14 @@ impl VirtualCost {
         }
     }
 
+    /// Scale this device's speed: `factor` > 1 is a slower device (both
+    /// the fixed overhead and the per-sample rate stretch).
+    pub fn scaled(mut self, factor: f64) -> Self {
+        self.iter_overhead_s *= factor;
+        self.per_sample_s *= factor;
+        self
+    }
+
     /// Compute time for a batch of `b` samples (sublinear above the
     /// saturation batch — GPUs process bigger batches at higher
     /// throughput until memory-bound).
@@ -76,33 +94,135 @@ impl VirtualCost {
     }
 }
 
-/// The virtual cluster an experiment runs on.
-#[derive(Debug, Clone, Copy)]
-pub struct ClusterConfig {
-    pub devices: usize,
-    pub cost: VirtualCost,
-    pub network: NetworkModel,
+/// One device's systems profile: compute class, link bandwidths, memory.
+///
+/// Owned by each `DeviceWorker`; sampled per device by the scenario layer
+/// ([`crate::config::hetero::HeteroPreset`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    /// This device's compute cost class.
+    pub compute: VirtualCost,
+    /// Uplink bandwidth in bits/second (gradients out).
+    pub uplink_bps: f64,
+    /// Downlink bandwidth in bits/second (aggregated gradients in).
+    pub downlink_bps: f64,
+    /// Memory budget in bytes; `u64::MAX` = unconstrained (the flat
+    /// model's semantics — time-only pricing, no batch ceiling).
+    pub memory_bytes: u64,
 }
 
-impl ClusterConfig {
-    pub fn paper_for_model(model: &str, devices: usize) -> Self {
+impl DeviceProfile {
+    /// The paper's testbed device: K80-class compute for `model` on a
+    /// symmetric 5 Gbps link, memory unconstrained at paper batch sizes.
+    pub fn k80(model: &str) -> Self {
         Self {
-            devices,
-            cost: VirtualCost::for_model(model),
-            network: NetworkModel::paper_5gbps(),
+            compute: VirtualCost::for_model(model),
+            uplink_bps: 5e9,
+            downlink_bps: 5e9,
+            memory_bytes: u64::MAX,
         }
     }
 
-    /// Dense gradient synchronization time on this cluster.
+    /// The bandwidth this device can sustain in a ring (its narrower
+    /// direction — every ring step both sends and receives).
+    pub fn link_bps(&self) -> f64 {
+        self.uplink_bps.min(self.downlink_bps)
+    }
+
+    /// Largest batch this device's memory budget admits under `mem`
+    /// (usize::MAX when unconstrained).
+    pub fn batch_cap(&self, mem: &MemoryModel, opt: Optimizer) -> usize {
+        if self.memory_bytes == u64::MAX {
+            usize::MAX
+        } else {
+            mem.max_batch(self.memory_bytes, opt)
+        }
+    }
+}
+
+/// The virtual cluster an experiment runs on: one profile per device plus
+/// the shared network substrate (α latency, protocol efficiency) and the
+/// paper-scale memory model backing per-device budget checks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterProfile {
+    /// Scenario these profiles were sampled from (labels/logs).
+    pub scenario: String,
+    pub devices: Vec<DeviceProfile>,
+    /// Shared network substrate; `bandwidth_bps` is the backbone rate used
+    /// for point-to-point transfers (data injection).
+    pub network: NetworkModel,
+    /// Memory model for the experiment's model class (budget checks).
+    pub memory: MemoryModel,
+}
+
+impl ClusterProfile {
+    /// The paper's homogeneous testbed: every device a K80 on 5 Gbps.
+    pub fn homogeneous(model: &str, devices: usize) -> Self {
+        Self {
+            scenario: "k80-homogeneous".into(),
+            devices: vec![DeviceProfile::k80(model); devices],
+            network: NetworkModel::paper_5gbps(),
+            memory: MemoryModel::for_model(model),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device(&self, i: usize) -> DeviceProfile {
+        self.devices[i]
+    }
+
+    /// Paper-scale gradient size (a property of the model, shared by all
+    /// profiles).
+    pub fn paper_params(&self) -> u64 {
+        self.devices.first().map_or(0, |d| d.compute.paper_params)
+    }
+
+    /// The ring's bottleneck: (device index, bits/second) of the slowest
+    /// link in the cluster.
+    pub fn slowest_link(&self) -> (usize, f64) {
+        let mut dev = 0;
+        let mut bps = f64::INFINITY;
+        for (i, d) in self.devices.iter().enumerate() {
+            let l = d.link_bps();
+            if l < bps {
+                bps = l;
+                dev = i;
+            }
+        }
+        if bps.is_finite() {
+            (dev, bps)
+        } else {
+            (0, self.network.bandwidth_bps)
+        }
+    }
+
+    /// Compute time of device `i` for a batch of `b` samples.
+    pub fn compute_time(&self, i: usize, b: usize) -> f64 {
+        self.devices[i].compute.compute_time(b)
+    }
+
+    /// Memory ceiling on device `i`'s batch (momentum SGD, the paper's
+    /// optimizer; usize::MAX when the device is unconstrained).
+    pub fn batch_cap(&self, i: usize) -> usize {
+        self.devices[i].batch_cap(&self.memory, Optimizer::Momentum)
+    }
+
+    /// Dense gradient synchronization: a ring-allreduce is throttled by
+    /// its slowest link, not a global bandwidth.
     pub fn dense_sync_time(&self) -> f64 {
+        let (_, bps) = self.slowest_link();
         self.network
-            .gradient_sync_time(self.cost.paper_params, self.devices)
+            .allreduce_time_slowest(self.paper_params() * 4, self.n(), bps)
     }
 
     /// Sparse (Top-k) synchronization time given the surviving fraction.
     pub fn sparse_sync_time(&self, keep_fraction: f64) -> f64 {
-        let nnz = (self.cost.paper_params as f64 * keep_fraction) as u64;
-        self.network.sparse_sync_time(nnz, self.devices)
+        let nnz = (self.paper_params() as f64 * keep_fraction) as u64;
+        let (_, bps) = self.slowest_link();
+        self.network.allreduce_time_slowest(nnz * 8, self.n(), bps)
     }
 }
 
@@ -114,25 +234,94 @@ mod tests {
     fn paper_iteration_time_reconstructs() {
         // compute(b=64) + sync(8 devices) ≈ the paper's 1.2 s ResNet152
         // iteration, with sync the dominant share (§II-D: 80–90%).
-        let c = ClusterConfig::paper_for_model("resnet_tiny_c10", 8);
-        let iter = c.cost.compute_time(64) + c.dense_sync_time();
+        let c = ClusterProfile::homogeneous("resnet_tiny_c10", 8);
+        let iter = c.compute_time(0, 64) + c.dense_sync_time();
         assert!(iter > 0.8 && iter < 1.6, "iter {iter}");
         assert!(c.dense_sync_time() / iter > 0.6, "sync share too small");
     }
 
     #[test]
     fn vgg_costs_more_than_resnet() {
-        let r = ClusterConfig::paper_for_model("resnet_tiny_c10", 8);
-        let v = ClusterConfig::paper_for_model("vgg_tiny_c100", 8);
+        let r = ClusterProfile::homogeneous("resnet_tiny_c10", 8);
+        let v = ClusterProfile::homogeneous("vgg_tiny_c100", 8);
         assert!(v.dense_sync_time() > r.dense_sync_time());
-        assert!(v.cost.compute_time(64) > r.cost.compute_time(64));
+        assert!(v.compute_time(0, 64) > r.compute_time(0, 64));
     }
 
     #[test]
     fn sparse_sync_cheaper_when_keep_small() {
-        let c = ClusterConfig::paper_for_model("resnet_tiny_c10", 16);
+        let c = ClusterProfile::homogeneous("resnet_tiny_c10", 16);
         assert!(c.sparse_sync_time(0.1) < c.dense_sync_time());
         // 8-byte sparse elements: breakeven at keep = 0.5
         assert!(c.sparse_sync_time(0.9) > c.dense_sync_time());
+    }
+
+    #[test]
+    fn homogeneous_reproduces_flat_model_bitwise() {
+        // The k80-homogeneous cluster must price exactly what the old
+        // single-VirtualCost + scalar-bandwidth model priced: slowest
+        // link == the global 5 Gbps, same α-β formula, same compute.
+        for (model, params) in [("resnet_tiny_c10", 60_200_000u64), ("vgg_tiny_c100", 143_700_000)] {
+            for n in [1usize, 2, 8, 16] {
+                let c = ClusterProfile::homogeneous(model, n);
+                let net = NetworkModel::paper_5gbps();
+                assert_eq!(
+                    c.dense_sync_time().to_bits(),
+                    net.gradient_sync_time(params, n).to_bits(),
+                    "{model} n={n} dense"
+                );
+                for keep in [0.01f64, 0.1, 0.5, 1.0] {
+                    let nnz = (params as f64 * keep) as u64;
+                    assert_eq!(
+                        c.sparse_sync_time(keep).to_bits(),
+                        net.sparse_sync_time(nnz, n).to_bits(),
+                        "{model} n={n} keep={keep}"
+                    );
+                }
+                let cost = VirtualCost::for_model(model);
+                for b in [0usize, 1, 8, 64, 256, 1024] {
+                    for i in 0..n {
+                        assert_eq!(
+                            c.compute_time(i, b).to_bits(),
+                            cost.compute_time(b).to_bits(),
+                            "{model} n={n} b={b} dev={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slowest_link_throttles_the_ring() {
+        let mut c = ClusterProfile::homogeneous("resnet_tiny_c10", 8);
+        let base = c.dense_sync_time();
+        c.devices[3].uplink_bps = 1e9; // one constrained device
+        let (dev, bps) = c.slowest_link();
+        assert_eq!(dev, 3);
+        assert_eq!(bps, 1e9);
+        assert!(c.dense_sync_time() > base * 2.0, "ring not throttled");
+    }
+
+    #[test]
+    fn scaled_cost_stretches_compute() {
+        let base = VirtualCost::paper_resnet152();
+        let slow = base.scaled(4.0);
+        for b in [1usize, 64, 256] {
+            let (f, s) = (base.compute_time(b), slow.compute_time(b));
+            assert!((s - 4.0 * f).abs() < 1e-12, "b={b}: {s} vs 4x{f}");
+        }
+    }
+
+    #[test]
+    fn memory_budget_caps_batches() {
+        let mut c = ClusterProfile::homogeneous("resnet_tiny_c10", 2);
+        assert_eq!(c.batch_cap(0), usize::MAX); // unconstrained default
+        c.devices[0].memory_bytes = 4 << 30; // 4 GiB: tight for ResNet152
+        let cap = c.batch_cap(0);
+        assert!(cap > 0 && cap < 256, "cap {cap}");
+        // the cap is consistent with the memory model
+        assert!(c.memory.bytes(cap, Optimizer::Momentum) <= 4 << 30);
+        assert!(c.memory.bytes(cap + 1, Optimizer::Momentum) > 4 << 30);
     }
 }

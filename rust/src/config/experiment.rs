@@ -4,7 +4,8 @@ use std::path::PathBuf;
 
 use anyhow::ensure;
 
-use super::cluster::ClusterConfig;
+use super::cluster::ClusterProfile;
+use super::hetero::HeteroPreset;
 use super::presets::StreamPreset;
 use crate::buffer::BufferPolicy;
 use crate::data::LabelMap;
@@ -120,6 +121,10 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// Streaming-rate preset (Table I).
     pub preset: StreamPreset,
+    /// Systems-heterogeneity scenario: per-device compute/bandwidth/memory
+    /// profiles are sampled from this preset (`k80-homogeneous` default
+    /// reproduces the paper's flat testbed exactly).
+    pub hetero: HeteroPreset,
     /// Per-round multiplicative jitter std on device rates (intra-device
     /// heterogeneity, §II-A; 0 = constant rates).
     pub rate_jitter: f64,
@@ -161,9 +166,11 @@ impl ExperimentConfig {
         ExperimentBuilder::new(model)
     }
 
-    /// The virtual cluster this config runs on (paper-scale costs).
-    pub fn cluster(&self) -> ClusterConfig {
-        ClusterConfig::paper_for_model(&self.model, self.devices)
+    /// The virtual cluster this config runs on: per-device profiles
+    /// sampled from the heterogeneity scenario (paper-scale costs).
+    /// Sampling is a pure function of `(hetero, model, devices, seed)`.
+    pub fn cluster_profile(&self) -> ClusterProfile {
+        self.hetero.sample_cluster(&self.model, self.devices, self.seed)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -174,6 +181,7 @@ impl ExperimentConfig {
         ensure!(self.base_lr > 0.0, "base_lr > 0");
         ensure!(self.base_global_batch > 0.0, "base_global_batch > 0");
         ensure!(self.rate_jitter >= 0.0, "rate_jitter ≥ 0");
+        self.hetero.validate()?;
         if let Some(c) = &self.compression {
             c.validate()?;
         }
@@ -210,6 +218,7 @@ impl ExperimentBuilder {
                 rounds: 200,
                 seed: 42,
                 preset: StreamPreset::S1,
+                hetero: HeteroPreset::K80Homogeneous,
                 rate_jitter: 0.0,
                 label_map: LabelMap::Iid,
                 mode: TrainMode::Scadles,
@@ -257,6 +266,11 @@ impl ExperimentBuilder {
     }
     pub fn preset(mut self, p: StreamPreset) -> Self {
         self.cfg.preset = p;
+        self
+    }
+    /// Systems-heterogeneity scenario (see [`HeteroPreset`]).
+    pub fn hetero(mut self, h: HeteroPreset) -> Self {
+        self.cfg.hetero = h;
         self
     }
     pub fn rate_jitter(mut self, j: f64) -> Self {
@@ -387,6 +401,22 @@ mod tests {
             .injection(InjectionConfig::new(2.0, 0.5))
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn hetero_preset_flows_into_cluster_profile() {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .hetero("two-tier:0.5".parse().unwrap())
+            .build()
+            .unwrap();
+        let p = cfg.cluster_profile();
+        assert_eq!(p.n(), 8);
+        assert_eq!(p.scenario, "two-tier:0.5");
+        // default stays the flat paper testbed
+        let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
+        assert_eq!(d.hetero, HeteroPreset::K80Homogeneous);
+        assert_eq!(d.cluster_profile().scenario, "k80-homogeneous");
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! Systems-heterogeneity scenario layer: named presets that sample
+//! per-device [`DeviceProfile`]s.
+//!
+//! ScaDLES's premise is that edge clusters exhibit *systems*
+//! heterogeneity (per-device compute and bandwidth, §I–II) on top of
+//! streaming-rate heterogeneity; related work makes it the central
+//! variable (DISTREAL varies per-device compute dynamically, Deep-Edge
+//! profiles heterogeneous nodes for placement). A [`HeteroPreset`] names
+//! one such scenario; [`HeteroPreset::sample_cluster`] turns it into a
+//! concrete [`ClusterProfile`].
+//!
+//! **Determinism guarantee:** device `i` draws its profile from its own
+//! fixed [`Pcg64`] substream (`HETERO_STREAM + i`), so sampled profiles
+//! depend only on `(preset, model, seed, i)` — never on device count,
+//! worker-pool width, or sampling order. The parallel-determinism matrix
+//! therefore stays bitwise-identical at every pool width.
+//!
+//! CLI syntax (`repro train --hetero ...`): `name[:param]`, e.g.
+//! `two-tier:0.25` (25 % of devices in the slow tier) or
+//! `lognormal-compute:0.8`.
+
+use anyhow::{bail, ensure};
+
+use super::cluster::{ClusterProfile, DeviceProfile};
+use crate::rng::Pcg64;
+use crate::Result;
+
+/// Pcg64 stream base for profile sampling; device `i` uses stream
+/// `HETERO_STREAM + i` (disjoint from the rate stream `0x5CAD` and the
+/// per-device stream/jitter streams).
+const HETERO_STREAM: u64 = 0x4E7E_0000;
+
+/// Memory budget of a slow-tier edge device (12 GiB, K80-board class).
+const SLOW_TIER_MEMORY: u64 = 12 << 30;
+
+/// A named systems-heterogeneity scenario (per-device compute/bandwidth/
+/// memory skew). `k80-homogeneous` is the backwards-compatible default:
+/// it reproduces the flat homogeneous cost model exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HeteroPreset {
+    /// Paper-faithful homogeneous testbed: every device an identical K80
+    /// on a symmetric 5 Gbps link.
+    K80Homogeneous,
+    /// Compute slowdowns drawn uniformly from `[1, 1 + spread)` — mild,
+    /// continuous compute skew.
+    Uniform { spread: f64 },
+    /// A fast/slow split: each device lands in the slow tier with
+    /// probability `slow_fraction`; slow devices compute `slowdown`×
+    /// slower on half-rate links with a 12 GiB memory budget.
+    TwoTier { slow_fraction: f64, slowdown: f64 },
+    /// Per-device multiplicative compute slowdown `exp(sigma·N(0,1))` —
+    /// heavy-tailed skew (a few devices much slower, some faster).
+    LognormalCompute { sigma: f64 },
+    /// Each device's uplink is capped at `uplink_bps` with probability
+    /// `fraction` (compute untouched): sync-bound heterogeneity.
+    ConstrainedUplink { fraction: f64, uplink_bps: f64 },
+}
+
+impl Default for HeteroPreset {
+    fn default() -> Self {
+        HeteroPreset::K80Homogeneous
+    }
+}
+
+impl HeteroPreset {
+    /// Scenario family name (the CLI spelling, without parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            HeteroPreset::K80Homogeneous => "k80-homogeneous",
+            HeteroPreset::Uniform { .. } => "uniform",
+            HeteroPreset::TwoTier { .. } => "two-tier",
+            HeteroPreset::LognormalCompute { .. } => "lognormal-compute",
+            HeteroPreset::ConstrainedUplink { .. } => "constrained-uplink",
+        }
+    }
+
+    /// The scenarios the heterogeneity harness sweeps (`repro exp hetero`).
+    pub fn sweep() -> [HeteroPreset; 5] {
+        [
+            HeteroPreset::K80Homogeneous,
+            HeteroPreset::Uniform { spread: 2.0 },
+            HeteroPreset::TwoTier { slow_fraction: 0.25, slowdown: 4.0 },
+            HeteroPreset::LognormalCompute { sigma: 0.5 },
+            HeteroPreset::ConstrainedUplink { fraction: 0.25, uplink_bps: 1e9 },
+        ]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            HeteroPreset::K80Homogeneous => {}
+            HeteroPreset::Uniform { spread } => {
+                ensure!(spread >= 0.0 && spread.is_finite(), "uniform spread ≥ 0");
+            }
+            HeteroPreset::TwoTier { slow_fraction, slowdown } => {
+                ensure!((0.0..=1.0).contains(&slow_fraction), "two-tier fraction in [0,1]");
+                ensure!(slowdown >= 1.0 && slowdown.is_finite(), "two-tier slowdown ≥ 1");
+            }
+            HeteroPreset::LognormalCompute { sigma } => {
+                ensure!(sigma >= 0.0 && sigma.is_finite(), "lognormal sigma ≥ 0");
+            }
+            HeteroPreset::ConstrainedUplink { fraction, uplink_bps } => {
+                ensure!((0.0..=1.0).contains(&fraction), "uplink fraction in [0,1]");
+                ensure!(uplink_bps > 0.0 && uplink_bps.is_finite(), "uplink bps > 0");
+            }
+        }
+        Ok(())
+    }
+
+    /// Sample the whole cluster for `model` × `devices` under `seed`.
+    pub fn sample_cluster(&self, model: &str, devices: usize, seed: u64) -> ClusterProfile {
+        let mut cluster = ClusterProfile::homogeneous(model, devices);
+        cluster.scenario = self.to_string();
+        for (i, dev) in cluster.devices.iter_mut().enumerate() {
+            let mut rng = Pcg64::new(seed, HETERO_STREAM + i as u64);
+            *dev = self.sample_device(*dev, &mut rng);
+        }
+        cluster
+    }
+
+    /// Draw one device's profile from `base` (the model's K80 profile).
+    fn sample_device(&self, base: DeviceProfile, rng: &mut Pcg64) -> DeviceProfile {
+        let mut d = base;
+        match *self {
+            HeteroPreset::K80Homogeneous => {}
+            HeteroPreset::Uniform { spread } => {
+                d.compute = d.compute.scaled(1.0 + spread * rng.f64());
+            }
+            HeteroPreset::TwoTier { slow_fraction, slowdown } => {
+                if rng.f64() < slow_fraction {
+                    d.compute = d.compute.scaled(slowdown);
+                    d.uplink_bps *= 0.5;
+                    d.downlink_bps *= 0.5;
+                    d.memory_bytes = SLOW_TIER_MEMORY;
+                }
+            }
+            HeteroPreset::LognormalCompute { sigma } => {
+                d.compute = d.compute.scaled((sigma * rng.normal()).exp());
+            }
+            HeteroPreset::ConstrainedUplink { fraction, uplink_bps } => {
+                if rng.f64() < fraction {
+                    d.uplink_bps = uplink_bps;
+                }
+            }
+        }
+        d
+    }
+}
+
+/// Default secondary knobs (shared by `Display` and `FromStr` so the two
+/// round-trip exactly).
+const DEFAULT_SLOWDOWN: f64 = 4.0;
+const DEFAULT_UPLINK_BPS: f64 = 1e9;
+
+impl std::fmt::Display for HeteroPreset {
+    /// The parseable spelling: `name[:param[:param2]]`, the secondary
+    /// knob printed only when it differs from the parse default — so
+    /// labels distinguish every configuration and `to_string().parse()`
+    /// always restores the exact preset.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            HeteroPreset::K80Homogeneous => f.write_str(self.name()),
+            HeteroPreset::Uniform { spread } => write!(f, "{}:{spread}", self.name()),
+            HeteroPreset::TwoTier { slow_fraction, slowdown } => {
+                write!(f, "{}:{slow_fraction}", self.name())?;
+                if slowdown != DEFAULT_SLOWDOWN {
+                    write!(f, ":{slowdown}")?;
+                }
+                Ok(())
+            }
+            HeteroPreset::LognormalCompute { sigma } => write!(f, "{}:{sigma}", self.name()),
+            HeteroPreset::ConstrainedUplink { fraction, uplink_bps } => {
+                write!(f, "{}:{fraction}", self.name())?;
+                if uplink_bps != DEFAULT_UPLINK_BPS {
+                    write!(f, ":{uplink_bps}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for HeteroPreset {
+    type Err = anyhow::Error;
+
+    /// Parse `name[:param[:param2]]` — e.g. `two-tier:0.25`,
+    /// `two-tier:0.25:8` (8x slow tier), `constrained-uplink:0.5:5e8`,
+    /// `lognormal-compute`, `k80-homogeneous`. The first parameter is
+    /// each family's main knob (fraction, spread, or sigma); the optional
+    /// second one is the secondary knob (tier slowdown / uplink bps).
+    fn from_str(s: &str) -> Result<Self> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or_default();
+        let args: Vec<&str> = parts.collect();
+        ensure!(args.len() <= 2, "too many ':' parameters in hetero preset {s:?}");
+        let param = |idx: usize, default: f64| -> Result<f64> {
+            match args.get(idx) {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --hetero parameter {a:?}: {e}")),
+            }
+        };
+        let preset = match name.to_lowercase().as_str() {
+            "k80" | "k80-homogeneous" | "homogeneous" => HeteroPreset::K80Homogeneous,
+            "uniform" => HeteroPreset::Uniform { spread: param(0, 2.0)? },
+            "two-tier" | "twotier" => HeteroPreset::TwoTier {
+                slow_fraction: param(0, 0.25)?,
+                slowdown: param(1, DEFAULT_SLOWDOWN)?,
+            },
+            "lognormal" | "lognormal-compute" => {
+                HeteroPreset::LognormalCompute { sigma: param(0, 0.5)? }
+            }
+            "constrained-uplink" | "uplink" => HeteroPreset::ConstrainedUplink {
+                fraction: param(0, 0.25)?,
+                uplink_bps: param(1, DEFAULT_UPLINK_BPS)?,
+            },
+            other => bail!(
+                "unknown heterogeneity preset {other:?} \
+                 (k80-homogeneous|uniform[:spread]|two-tier[:frac[:slowdown]]|\
+                 lognormal-compute[:sigma]|constrained-uplink[:frac[:bps]])"
+            ),
+        };
+        preset.validate()?;
+        Ok(preset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_cli_spellings() {
+        let p: HeteroPreset = "two-tier:0.25".parse().unwrap();
+        assert_eq!(p, HeteroPreset::TwoTier { slow_fraction: 0.25, slowdown: 4.0 });
+        assert_eq!(
+            "k80-homogeneous".parse::<HeteroPreset>().unwrap(),
+            HeteroPreset::K80Homogeneous
+        );
+        assert_eq!(
+            "lognormal-compute:0.8".parse::<HeteroPreset>().unwrap(),
+            HeteroPreset::LognormalCompute { sigma: 0.8 }
+        );
+        assert_eq!(
+            "uniform".parse::<HeteroPreset>().unwrap(),
+            HeteroPreset::Uniform { spread: 2.0 }
+        );
+        assert!("two-tier:1.5".parse::<HeteroPreset>().is_err()); // fraction > 1
+        assert!("warp-drive".parse::<HeteroPreset>().is_err());
+        assert!("uniform:abc".parse::<HeteroPreset>().is_err());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let non_defaults = [
+            HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 8.0 },
+            HeteroPreset::ConstrainedUplink { fraction: 1.0, uplink_bps: 5e8 },
+        ];
+        for p in HeteroPreset::sweep().into_iter().chain(non_defaults) {
+            let back: HeteroPreset = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{p}");
+        }
+        // non-default secondary knobs show up in the label...
+        assert_eq!(
+            HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 8.0 }.to_string(),
+            "two-tier:0.5:8"
+        );
+        // ...default ones stay off it (CLI spelling == label)
+        assert_eq!(
+            HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 }.to_string(),
+            "two-tier:0.5"
+        );
+        assert!("two-tier:0.5:8:9".parse::<HeteroPreset>().is_err());
+    }
+
+    #[test]
+    fn k80_sampling_is_the_homogeneous_cluster() {
+        let sampled = HeteroPreset::K80Homogeneous.sample_cluster("resnet_tiny_c10", 8, 42);
+        let mut flat = ClusterProfile::homogeneous("resnet_tiny_c10", 8);
+        flat.scenario = "k80-homogeneous".into();
+        assert_eq!(sampled, flat);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_seed_sensitive() {
+        let p = HeteroPreset::LognormalCompute { sigma: 0.5 };
+        let a = p.sample_cluster("mlp_c10", 8, 7);
+        let b = p.sample_cluster("mlp_c10", 8, 7);
+        assert_eq!(a, b);
+        let c = p.sample_cluster("mlp_c10", 8, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn device_substreams_are_prefix_stable() {
+        // Device i's profile must not depend on the cluster size: growing
+        // the cluster only appends profiles (the per-device substream
+        // guarantee behind the determinism matrix).
+        let p = HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 };
+        let small = p.sample_cluster("mlp_c10", 4, 11);
+        let large = p.sample_cluster("mlp_c10", 16, 11);
+        assert_eq!(&large.devices[..4], &small.devices[..]);
+    }
+
+    #[test]
+    fn two_tier_produces_both_tiers() {
+        // 64 devices at fraction 0.5: both tiers present with certainty
+        // ~1 − 2^-63 for any seed.
+        let p = HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 };
+        let c = p.sample_cluster("mlp_c10", 64, 3);
+        let base = DeviceProfile::k80("mlp_c10");
+        let slow = c.devices.iter().filter(|d| d.compute != base.compute).count();
+        assert!(slow > 0 && slow < 64, "slow tier size {slow}");
+        for d in &c.devices {
+            if d.compute != base.compute {
+                assert_eq!(d.uplink_bps, 2.5e9);
+                assert_eq!(d.memory_bytes, SLOW_TIER_MEMORY);
+                assert!(d.compute.per_sample_s > base.compute.per_sample_s * 3.9);
+            } else {
+                assert_eq!(*d, base);
+            }
+        }
+    }
+
+    #[test]
+    fn constrained_uplink_throttles_sync() {
+        let p = HeteroPreset::ConstrainedUplink { fraction: 0.5, uplink_bps: 1e9 };
+        let c = p.sample_cluster("resnet_tiny_c10", 64, 5);
+        let flat = ClusterProfile::homogeneous("resnet_tiny_c10", 64);
+        let (_, bps) = c.slowest_link();
+        assert_eq!(bps, 1e9);
+        assert!(c.dense_sync_time() > flat.dense_sync_time() * 2.0);
+        // downlinks untouched: only the uplink is constrained
+        assert!(c.devices.iter().all(|d| d.downlink_bps == 5e9));
+    }
+
+    #[test]
+    fn lognormal_spreads_compute() {
+        let p = HeteroPreset::LognormalCompute { sigma: 0.5 };
+        let c = p.sample_cluster("mlp_c10", 32, 9);
+        let per: Vec<f64> = c.devices.iter().map(|d| d.compute.per_sample_s).collect();
+        let min = per.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = per.iter().cloned().fold(0.0, f64::max);
+        assert!(min > 0.0);
+        assert!(max > min, "no spread: {min}..{max}");
+    }
+}

@@ -1,9 +1,12 @@
-//! Configuration: Table I stream presets, virtual cluster, experiments.
+//! Configuration: Table I stream presets, virtual cluster + heterogeneity
+//! scenarios, experiments.
 
 pub mod cluster;
 pub mod experiment;
+pub mod hetero;
 pub mod presets;
 
-pub use cluster::{ClusterConfig, VirtualCost};
+pub use cluster::{ClusterProfile, DeviceProfile, VirtualCost};
 pub use experiment::{CompressionConfig, ExperimentConfig, InjectionConfig, TrainMode};
+pub use hetero::HeteroPreset;
 pub use presets::StreamPreset;

@@ -4,6 +4,13 @@
 //! model (DESIGN.md §5.3). The clock advances by the same formula for
 //! ScaDLES and the DDL baseline, so speedups (Table VI) compare the two
 //! systems exactly the way the paper's wall-clock measurements do.
+//!
+//! [`RoundTiming`] carries both the phase totals the clock advances by
+//! and the per-device breakdown behind them ([`DevicePhase`]), so each
+//! round can name its straggler and the phase that made it one
+//! (stream-wait vs compute vs sync).
+
+use crate::metrics::StragglerCause;
 
 /// Monotone virtual clock (seconds).
 #[derive(Debug, Clone, Copy, Default)]
@@ -28,8 +35,22 @@ impl VirtualClock {
     }
 }
 
-/// Breakdown of one round's virtual duration.
+/// One device's contribution to a round's critical path.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DevicePhase {
+    pub device: usize,
+    /// Seconds waiting on this device's own stream.
+    pub wait_s: f64,
+    /// This device's local forward/backward seconds.
+    pub compute_s: f64,
+}
+
+/// Breakdown of one round's virtual duration.
+///
+/// The scalar fields are the barrier totals the clock advances by
+/// (`wait_s = max_i wait_i`, `compute_s = max_i compute_i`); `per_device`
+/// holds the per-device values behind those maxima.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RoundTiming {
     /// Streaming latency: longest wait for a device to fill its batch.
     pub wait_s: f64,
@@ -39,11 +60,41 @@ pub struct RoundTiming {
     pub sync_s: f64,
     /// Data-injection transfers.
     pub injection_s: f64,
+    /// Per-device wait/compute behind the barrier maxima.
+    pub per_device: Vec<DevicePhase>,
+    /// Device holding the ring's slowest link (sync attribution).
+    pub sync_bottleneck: Option<usize>,
 }
 
 impl RoundTiming {
     pub fn total(&self) -> f64 {
         self.wait_s + self.compute_s + self.sync_s + self.injection_s
+    }
+
+    /// Attribute the round to its straggler: the dominant phase among
+    /// stream-wait / compute / sync, and the device that bounded it.
+    pub fn straggler(&self) -> (StragglerCause, usize) {
+        let argmax = |pick: fn(&DevicePhase) -> f64| {
+            self.per_device
+                .iter()
+                .fold((0usize, f64::NEG_INFINITY), |(bi, bv), p| {
+                    if pick(p) > bv {
+                        (p.device, pick(p))
+                    } else {
+                        (bi, bv)
+                    }
+                })
+                .0
+        };
+        if self.wait_s.max(self.compute_s).max(self.sync_s) <= 0.0 {
+            (StragglerCause::None, 0)
+        } else if self.wait_s >= self.compute_s && self.wait_s >= self.sync_s {
+            (StragglerCause::StreamWait, argmax(|p| p.wait_s))
+        } else if self.compute_s >= self.sync_s {
+            (StragglerCause::Compute, argmax(|p| p.compute_s))
+        } else {
+            (StragglerCause::Sync, self.sync_bottleneck.unwrap_or(0))
+        }
     }
 }
 
@@ -67,7 +118,56 @@ mod tests {
             compute_s: 0.5,
             sync_s: 0.8,
             injection_s: 0.2,
+            ..Default::default()
         };
         assert!((t.total() - 2.5).abs() < 1e-12);
+    }
+
+    fn phases(ws: &[f64], cs: &[f64]) -> Vec<DevicePhase> {
+        ws.iter()
+            .zip(cs)
+            .enumerate()
+            .map(|(device, (&wait_s, &compute_s))| DevicePhase { device, wait_s, compute_s })
+            .collect()
+    }
+
+    #[test]
+    fn straggler_names_the_dominant_phase_and_device() {
+        // stream-wait dominates: device 2 has the longest wait
+        let t = RoundTiming {
+            wait_s: 3.0,
+            compute_s: 0.5,
+            sync_s: 1.0,
+            per_device: phases(&[0.1, 0.0, 3.0], &[0.5, 0.2, 0.1]),
+            ..Default::default()
+        };
+        assert_eq!(t.straggler(), (StragglerCause::StreamWait, 2));
+
+        // compute dominates: device 0 is the slow one
+        let t = RoundTiming {
+            wait_s: 0.2,
+            compute_s: 2.0,
+            sync_s: 1.0,
+            per_device: phases(&[0.2, 0.1, 0.0], &[2.0, 0.2, 0.1]),
+            ..Default::default()
+        };
+        assert_eq!(t.straggler(), (StragglerCause::Compute, 0));
+
+        // sync dominates: attributed to the slowest link's holder
+        let t = RoundTiming {
+            wait_s: 0.1,
+            compute_s: 0.2,
+            sync_s: 4.0,
+            per_device: phases(&[0.1, 0.0], &[0.2, 0.1]),
+            sync_bottleneck: Some(1),
+            ..Default::default()
+        };
+        assert_eq!(t.straggler(), (StragglerCause::Sync, 1));
+    }
+
+    #[test]
+    fn idle_round_has_no_straggler() {
+        let t = RoundTiming::default();
+        assert_eq!(t.straggler(), (StragglerCause::None, 0));
     }
 }

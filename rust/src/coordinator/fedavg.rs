@@ -13,7 +13,7 @@
 //! devices and virtual clock lets the ablation bench put numbers on that
 //! trade-off.
 
-use crate::config::ExperimentConfig;
+use crate::config::{ClusterProfile, ExperimentConfig};
 use crate::coordinator::aggregate::weights_from_batches;
 use crate::coordinator::backend::Backend;
 use crate::coordinator::clock::VirtualClock;
@@ -35,6 +35,8 @@ pub struct FedAvgTrainer {
     eval: EvalSet,
     /// Global parameters; device replicas fork from here each sync round.
     params: Vec<f32>,
+    /// Sampled per-device profiles (pricing), fixed at construction.
+    cluster: ClusterProfile,
     clock: VirtualClock,
     logs: RunLogger,
     round: usize,
@@ -58,7 +60,8 @@ impl FedAvgTrainer {
             .enumerate()
             .map(|(i, &rate)| {
                 let labels = cfg.label_map.device_labels(i, backend.num_classes());
-                Device::new(&broker, i, rate, labels, cfg.buffer_policy, cfg.seed ^ 0xFE + i as u64)
+                // explicit grouping: `^` binds looser than `+`
+                Device::new(&broker, i, rate, labels, cfg.buffer_policy, cfg.seed ^ (0xFE + i as u64))
             })
             .collect();
         let params = backend.init_params()?;
@@ -72,6 +75,7 @@ impl FedAvgTrainer {
             data,
             eval,
             params,
+            cluster: cfg.cluster_profile(),
             clock: VirtualClock::new(),
             logs,
             round: 0,
@@ -84,7 +88,6 @@ impl FedAvgTrainer {
     pub fn round(&mut self) -> Result<RoundLog> {
         let d = self.backend.param_count();
         let n = self.devices.len();
-        let cluster = self.cfg.cluster();
         if self.round == 0 {
             for dev in &mut self.devices {
                 dev.advance_stream(1.0);
@@ -121,7 +124,7 @@ impl FedAvgTrainer {
                 samples[i] += recs.len();
                 loss_acc += out.loss as f64 * recs.len() as f64;
                 loss_w += recs.len() as f64;
-                let step_t = cluster.cost.compute_time(recs.len());
+                let step_t = self.cluster.compute_time(i, recs.len());
                 compute += step_t;
                 dev.advance_stream(step_t);
             }
@@ -139,7 +142,7 @@ impl FedAvgTrainer {
         }
 
         // time: slowest device's local phase + one model allreduce
-        let sync = cluster.dense_sync_time();
+        let sync = self.cluster.dense_sync_time();
         self.clock.advance(max_compute + sync);
         for dev in &mut self.devices {
             dev.advance_stream(sync);

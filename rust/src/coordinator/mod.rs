@@ -29,6 +29,19 @@
 //! every pool width produces bitwise-identical runs
 //! (`ExperimentConfig::worker_threads`).
 //!
+//! **Heterogeneity:** each worker owns a sampled
+//! [`crate::config::DeviceProfile`] (compute class, uplink/downlink,
+//! memory budget) from the scenario layer
+//! ([`crate::config::HeteroPreset`]; presets `k80-homogeneous`,
+//! `uniform`, `two-tier`, `lognormal-compute`, `constrained-uplink`).
+//! Local steps are priced on the device's own cost curve, gradient sync
+//! on the ring's slowest link, and batches are capped by each device's
+//! memory budget. [`clock::RoundTiming`] carries the per-device
+//! breakdown, so every round names its straggler and the phase that made
+//! it one (stream-wait vs compute vs sync) in the metrics timeline.
+//! Profile sampling uses fixed per-device `Pcg64` substreams, so the
+//! bitwise-determinism contract holds for every scenario.
+//!
 //! [`backend::Backend`] abstracts the execution substrate: the real PJRT
 //! [`crate::runtime::ModelRuntime`] or a deterministic quadratic
 //! [`backend::MockBackend`] used by unit/property tests.
@@ -45,7 +58,7 @@ pub mod worker;
 
 pub use aggregate::{aggregate_native, weights_from_batches};
 pub use backend::{Backend, MockBackend};
-pub use clock::VirtualClock;
+pub use clock::{DevicePhase, RoundTiming, VirtualClock};
 pub use device::Device;
 pub use fedavg::FedAvgTrainer;
 pub use lr::scaled_lr;

@@ -9,8 +9,19 @@
 //! * **DDL** — every device must gather the same fixed `b` (64); with
 //!   heterogeneous streams the slowest device's gather latency `b/S_min`
 //!   stalls the whole synchronous round.
+//!
+//! Two per-device profile effects layer on top:
+//!
+//! * **Memory ceiling** — a device's batch is capped at what its
+//!   [`DeviceProfile`](crate::config::DeviceProfile) memory budget
+//!   admits (the cap wins even over `b_min`: a batch that doesn't fit
+//!   can't be trained). Unconstrained devices are unaffected.
+//! * **Zero-rate semantics** — a device whose effective rate is zero and
+//!   whose backlog can't cover its batch **sits the round out**
+//!   (`batch = 0`, `wait_s = 0`) instead of stalling the barrier with an
+//!   effectively-infinite wait.
 
-use crate::config::{ExperimentConfig, TrainMode};
+use crate::config::{ClusterProfile, ExperimentConfig, TrainMode};
 use crate::runtime::BucketLadder;
 
 /// One device's plan for the upcoming round.
@@ -24,6 +35,9 @@ pub struct DevicePlan {
     /// Seconds this device must wait for its own stream to fill `batch`,
     /// given its current backlog.
     pub wait_s: f64,
+    /// Estimated local compute seconds for `batch` on this device's
+    /// profile (the worker reports the actual figure after training).
+    pub est_compute_s: f64,
 }
 
 /// The synchronized plan for a round.
@@ -36,30 +50,39 @@ pub struct RoundPlan {
 }
 
 impl RoundPlan {
-    /// Build the plan from current device rates and backlogs.
+    /// Build the plan from current device rates and backlogs; `cluster`
+    /// supplies each device's memory ceiling and compute estimate.
     pub fn plan(
         cfg: &ExperimentConfig,
         ladder: &BucketLadder,
+        cluster: &ClusterProfile,
         rates: &[f64],
         backlogs: &[usize],
     ) -> RoundPlan {
         assert_eq!(rates.len(), backlogs.len());
+        assert_eq!(rates.len(), cluster.n(), "one profile per device");
         let b_max = cfg.b_max.min(ladder.max());
         let b_min = cfg.b_min.max(ladder.min().min(cfg.b_min)); // honor config floor
         let mut devices = Vec::with_capacity(rates.len());
         let mut wait = 0.0f64;
         for (i, (&rate, &backlog)) in rates.iter().zip(backlogs).enumerate() {
-            let batch = match cfg.mode {
+            let want = match cfg.mode {
                 // ScaDLES: one second of this device's stream, clamped.
                 TrainMode::Scadles => (rate.round() as usize).clamp(b_min, b_max),
                 // DDL: fixed mini-batch regardless of the stream.
                 TrainMode::Ddl => cfg.ddl_batch.min(b_max),
             };
-            let deficit = batch.saturating_sub(backlog);
-            let wait_s = if deficit > 0 {
-                deficit as f64 / rate.max(f64::MIN_POSITIVE)
+            // the device's memory budget is a hard ceiling
+            let want = want.min(cluster.batch_cap(i));
+            let deficit = want.saturating_sub(backlog);
+            let (batch, wait_s) = if deficit == 0 {
+                (want, 0.0)
+            } else if rate > 0.0 {
+                (want, deficit as f64 / rate)
             } else {
-                0.0
+                // stalled stream, nothing buffered: sit out rather than
+                // wait forever on a barrier no data will release
+                (0, 0.0)
             };
             wait = wait.max(wait_s);
             devices.push(DevicePlan {
@@ -67,6 +90,7 @@ impl RoundPlan {
                 batch,
                 bucket: ladder.fit_clamped(batch),
                 wait_s,
+                est_compute_s: if batch > 0 { cluster.compute_time(i, batch) } else { 0.0 },
             });
         }
         RoundPlan { devices, wait_s: wait }
@@ -86,10 +110,14 @@ impl RoundPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ExperimentConfig, TrainMode};
+    use crate::config::{ExperimentConfig, HeteroPreset, TrainMode};
 
     fn ladder() -> BucketLadder {
         BucketLadder::new(vec![8, 16, 32, 64, 128, 256]).unwrap()
+    }
+
+    fn cluster(n: usize) -> ClusterProfile {
+        HeteroPreset::K80Homogeneous.sample_cluster("mlp_c10", n, 0)
     }
 
     fn cfg(mode: TrainMode) -> ExperimentConfig {
@@ -107,6 +135,7 @@ mod tests {
         let p = RoundPlan::plan(
             &cfg(TrainMode::Scadles),
             &ladder(),
+            &cluster(3),
             &[38.0, 300.0, 5.0],
             &[1000, 1000, 1000],
         );
@@ -122,6 +151,7 @@ mod tests {
         let p = RoundPlan::plan(
             &cfg(TrainMode::Scadles),
             &ladder(),
+            &cluster(2),
             &[38.0, 300.0],
             &[0, 0],
         );
@@ -137,6 +167,7 @@ mod tests {
         let p = RoundPlan::plan(
             &cfg(TrainMode::Ddl),
             &ladder(),
+            &cluster(2),
             &[300.0, 5.0],
             &[0, 0],
         );
@@ -149,6 +180,7 @@ mod tests {
         let p = RoundPlan::plan(
             &cfg(TrainMode::Ddl),
             &ladder(),
+            &cluster(2),
             &[5.0, 5.0],
             &[64, 64],
         );
@@ -157,7 +189,76 @@ mod tests {
 
     #[test]
     fn partial_backlog_waits_for_deficit_only() {
-        let p = RoundPlan::plan(&cfg(TrainMode::Ddl), &ladder(), &[10.0], &[54]);
+        let p =
+            RoundPlan::plan(&cfg(TrainMode::Ddl), &ladder(), &cluster(1), &[10.0], &[54]);
         assert!((p.devices[0].wait_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_rate_device_sits_out_instead_of_stalling() {
+        for mode in [TrainMode::Scadles, TrainMode::Ddl] {
+            let p = RoundPlan::plan(
+                &cfg(mode),
+                &ladder(),
+                &cluster(2),
+                &[0.0, 100.0],
+                &[0, 1000],
+            );
+            let dead = p.devices[0];
+            assert_eq!(dead.batch, 0, "{mode:?}");
+            assert_eq!(dead.wait_s, 0.0, "{mode:?}");
+            assert_eq!(dead.est_compute_s, 0.0, "{mode:?}");
+            // the healthy device is unaffected and the barrier is free
+            assert!(p.devices[1].batch > 0);
+            assert_eq!(p.wait_s, 0.0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn zero_rate_device_still_trains_from_backlog() {
+        // rate 0 but a full buffer: the batch is served from the backlog
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Ddl),
+            &ladder(),
+            &cluster(1),
+            &[0.0],
+            &[64],
+        );
+        assert_eq!(p.devices[0].batch, 64);
+        assert_eq!(p.wait_s, 0.0);
+    }
+
+    #[test]
+    fn memory_budget_caps_the_batch() {
+        let mut c = cluster(2);
+        // tight budget: ResNet152-scale model in 4 GiB caps near b≈107
+        c.devices[0].memory_bytes = 4 << 30;
+        let cap = c.batch_cap(0);
+        assert!(cap > 0 && cap < 256);
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Scadles),
+            &ladder(),
+            &c,
+            &[300.0, 300.0],
+            &[1000, 1000],
+        );
+        assert_eq!(p.devices[0].batch, cap.min(256));
+        assert_eq!(p.devices[1].batch, 256, "unconstrained device unaffected");
+    }
+
+    #[test]
+    fn estimates_come_from_each_devices_profile() {
+        let mut c = cluster(2);
+        c.devices[1].compute = c.devices[1].compute.scaled(4.0);
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Ddl),
+            &ladder(),
+            &c,
+            &[100.0, 100.0],
+            &[64, 64],
+        );
+        assert_eq!(p.devices[0].est_compute_s, c.compute_time(0, 64));
+        assert_eq!(p.devices[1].est_compute_s, c.compute_time(1, 64));
+        assert!(p.devices[1].est_compute_s > p.devices[0].est_compute_s * 3.9);
     }
 }

@@ -18,17 +18,17 @@
 
 use crate::buffer::BufferTracker;
 use crate::compress::{CncCounter, CompressionScheme};
-use crate::config::{ExperimentConfig, TrainMode};
+use crate::config::{ClusterProfile, ExperimentConfig, HeteroPreset, TrainMode};
 use crate::coordinator::aggregate::{aggregate_native, uniform_weights, weights_from_batches};
 use crate::coordinator::backend::Backend;
-use crate::coordinator::clock::{RoundTiming, VirtualClock};
+use crate::coordinator::clock::{DevicePhase, RoundTiming, VirtualClock};
 use crate::coordinator::device::Device;
 use crate::coordinator::lr::{baseline_lr, scaled_lr};
 use crate::coordinator::plan::RoundPlan;
 use crate::coordinator::worker::{for_each_worker, DeviceWorker};
 use crate::data::{EvalSet, Synthetic};
 use crate::injection::DataInjector;
-use crate::metrics::{RoundLog, RunLogger, RunReport};
+use crate::metrics::{DeviceRoundRow, RoundLog, RunLogger, RunReport, StragglerCause, Timeline};
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
 use crate::stream::{Broker, Record};
@@ -41,6 +41,8 @@ pub struct TrainerOutput {
     pub cnc: CncCounter,
     /// Streaming rates the devices were sampled with.
     pub rates: Vec<f64>,
+    /// Per-device per-round rows with straggler attribution.
+    pub timeline: Timeline,
 }
 
 /// The L3 coordinator: owns the device shards, model state, policies and
@@ -61,6 +63,13 @@ pub struct Trainer {
     tracker: BufferTracker,
     logs: RunLogger,
     cnc: CncCounter,
+    /// Sampled per-device profiles (scenario layer); device `i`'s copy
+    /// also lives on its worker.
+    cluster: ClusterProfile,
+    /// Per-device timeline rows (straggler attribution).
+    timeline: Timeline,
+    /// The most recent round's timing breakdown.
+    last_timing: Option<RoundTiming>,
     round: usize,
     /// Row-major [n, d] staging buffer gathering worker gradient rows
     /// for the aggregation kernel.
@@ -84,6 +93,7 @@ impl Trainer {
         cfg.validate()?;
         let mut rng = Pcg64::new(cfg.seed, 0x5CAD);
         let rates = cfg.preset.distribution().sample_n(&mut rng, cfg.devices);
+        let cluster = cfg.cluster_profile();
         let data = Synthetic::standard(backend.num_classes(), cfg.seed);
         let eval = EvalSet::new(&data, cfg.eval_per_class);
         let broker = Broker::new();
@@ -101,9 +111,9 @@ impl Trainer {
                     rate,
                     labels,
                     cfg.buffer_policy,
-                    cfg.seed ^ 0xD0 + i as u64,
+                    device_seed(cfg.seed, i),
                 );
-                DeviceWorker::new(dev, use_ef, d)
+                DeviceWorker::new(dev, cluster.device(i), use_ef, d)
             })
             .collect();
         let scheme = CompressionScheme::from_config(cfg.compression);
@@ -111,8 +121,12 @@ impl Trainer {
             .injection
             .map(|ic| DataInjector::new(ic, cfg.seed ^ 0xBEEF));
         let n = cfg.devices;
-        let logs = RunLogger::new(format!("{}-{}", cfg.mode.name(), cfg.preset.name()))
-            .with_echo(cfg.echo_every);
+        let mut label = format!("{}-{}", cfg.mode.name(), cfg.preset.name());
+        if cfg.hetero != HeteroPreset::K80Homogeneous {
+            label.push('-');
+            label.push_str(&cluster.scenario);
+        }
+        let logs = RunLogger::new(label).with_echo(cfg.echo_every);
         let threads = resolve_threads(cfg.worker_threads, n);
         Ok(Self {
             cfg: cfg.clone(),
@@ -129,6 +143,9 @@ impl Trainer {
             tracker: BufferTracker::new(),
             logs,
             cnc: CncCounter::new(),
+            cluster,
+            timeline: Timeline::new(),
+            last_timing: None,
             round: 0,
             grad_matrix: vec![0.0; n * d],
             wagg_artifact_ok: true,
@@ -151,6 +168,22 @@ impl Trainer {
     /// Worker-pool width the engine resolved (1 = sequential).
     pub fn worker_pool_width(&self) -> usize {
         self.threads
+    }
+
+    /// The sampled per-device cluster profiles this run is priced on.
+    pub fn cluster(&self) -> &ClusterProfile {
+        &self.cluster
+    }
+
+    /// Timing breakdown of the most recent round (per-device phases +
+    /// straggler attribution).
+    pub fn last_timing(&self) -> Option<&RoundTiming> {
+        self.last_timing.as_ref()
+    }
+
+    /// Per-device timeline rows accumulated so far.
+    pub fn timeline(&self) -> &Timeline {
+        &self.timeline
     }
 
     pub fn rates(&self) -> Vec<f64> {
@@ -200,10 +233,16 @@ impl Trainer {
             w.device.jitter_rate(self.cfg.rate_jitter);
         }
 
-        // -- 2. plan batches + waits --------------------------------------
+        // -- 2. plan batches + waits (per-device profiles cap batches) ----
         let rates: Vec<f64> = self.workers.iter().map(|w| w.device.rate).collect();
         let backlogs: Vec<usize> = self.workers.iter().map(|w| w.device.backlog()).collect();
-        let plan = RoundPlan::plan(&self.cfg, self.backend.ladder(), &rates, &backlogs);
+        let plan = RoundPlan::plan(
+            &self.cfg,
+            self.backend.ladder(),
+            &self.cluster,
+            &rates,
+            &backlogs,
+        );
 
         // -- 3+4. wait + poll: streams keep flowing while each device ----
         //         gathers its own batch (parallel per shard)
@@ -233,15 +272,14 @@ impl Trainer {
             w.truncate_fresh(cap);
         }
 
-        // -- 6. device-local training steps (parallel per shard) ----------
-        let cluster = self.cfg.cluster();
+        // -- 6. device-local training steps (parallel per shard; each
+        //       shard prices compute on its own profile) ------------------
         {
             let backend = self.backend.as_ref();
             let params = &self.params;
             let data = &self.data;
-            let cost = &cluster.cost;
             for_each_worker(&mut self.workers, threads, |_, w| {
-                w.train(backend, params, data, cost);
+                w.train(backend, params, data);
             });
         }
         self.take_worker_error()?;
@@ -333,26 +371,57 @@ impl Trainer {
         }
 
         // -- 10. price the round on the virtual clock ---------------------
-        let max_compute = self
+        //        barrier totals are maxima over the per-device phases;
+        //        sync is throttled by the cluster's slowest link
+        let per_device: Vec<DevicePhase> = self
             .workers
             .iter()
-            .fold(0f64, |m, w| m.max(w.out.compute_s));
+            .enumerate()
+            .map(|(i, w)| DevicePhase {
+                device: i,
+                wait_s: plan.devices[i].wait_s,
+                compute_s: w.out.compute_s,
+            })
+            .collect();
+        let max_compute = per_device.iter().fold(0f64, |m, p| m.max(p.compute_s));
         let sync_s = if global_batch == 0 {
             0.0
         } else if compressed_round {
-            cluster.sparse_sync_time(kept_fraction)
+            self.cluster.sparse_sync_time(kept_fraction)
         } else {
-            cluster.dense_sync_time()
+            self.cluster.dense_sync_time()
         };
         let timing = RoundTiming {
             wait_s: plan.wait_s,
             compute_s: max_compute,
             sync_s,
-            injection_s: cluster.network.transfer_time(inj_stats.bytes_moved),
+            injection_s: self.cluster.network.transfer_time(inj_stats.bytes_moved),
+            per_device,
+            sync_bottleneck: Some(self.cluster.slowest_link().0),
         };
         self.clock.advance(timing.total());
         // streams keep flowing during compute + sync + injection
         self.advance_streams(timing.compute_s + timing.sync_s + timing.injection_s);
+        let (straggler_cause, straggler_device) = timing.straggler();
+        for p in &timing.per_device {
+            self.timeline.push(DeviceRoundRow {
+                round: r,
+                device: p.device,
+                batch: batches[p.device],
+                wait_s: p.wait_s,
+                compute_s: p.compute_s,
+                straggler: straggler_cause != StragglerCause::None
+                    && p.device == straggler_device,
+                cause: if straggler_cause != StragglerCause::None
+                    && p.device == straggler_device
+                {
+                    straggler_cause
+                } else {
+                    StragglerCause::None
+                },
+            });
+        }
+        self.last_timing = Some(timing);
 
         // -- 11. buffer accounting -----------------------------------------
         let buffered = self.total_backlog();
@@ -393,6 +462,8 @@ impl Trainer {
             floats_sent,
             compressed: compressed_round,
             injection_bytes: inj_stats.bytes_moved,
+            straggler_device,
+            straggler_cause,
         };
         self.logs.push(log);
         self.round += 1;
@@ -434,6 +505,7 @@ impl Trainer {
             logs: self.logs.clone(),
             cnc: self.cnc,
             rates: self.rates(),
+            timeline: self.timeline.clone(),
         }
     }
 
@@ -441,6 +513,14 @@ impl Trainer {
     pub fn broker(&self) -> &Broker {
         &self.broker
     }
+}
+
+/// Per-device RNG seed for stream/jitter state. XOR with a fixed offset
+/// of `i` keeps seeds pairwise distinct per device (XOR with a constant
+/// is injective in `0xD0 + i`); the grouping is explicit because `^`
+/// binds looser than `+`.
+fn device_seed(seed: u64, i: usize) -> u64 {
+    seed ^ (0xD0 + i as u64)
 }
 
 /// Resolve the configured pool width: 0 = one thread per available core,
@@ -609,6 +689,80 @@ mod tests {
             .run()
             .unwrap();
         assert_ne!(a.report.wall_clock_s, b.report.wall_clock_s);
+    }
+
+    #[test]
+    fn device_seeds_pairwise_distinct_up_to_64_devices() {
+        for seed in [0u64, 42, 0xD0, u64::MAX] {
+            let seeds: std::collections::HashSet<u64> =
+                (0..64).map(|i| device_seed(seed, i)).collect();
+            assert_eq!(seeds.len(), 64, "collision under experiment seed {seed}");
+        }
+    }
+
+    #[test]
+    fn k80_round_timing_matches_homogeneous_formula() {
+        // The default k80-homogeneous scenario must price rounds exactly
+        // like the flat pre-profile cost model: dense sync at the global
+        // 5 Gbps, compute as the max over identical cost curves, and the
+        // clock advancing by their sum.
+        use crate::config::VirtualCost;
+        use crate::simulate::network::NetworkModel;
+        let cfg = base(TrainMode::Scadles);
+        let mut t = trainer(&cfg);
+        let log = t.round().unwrap();
+        let timing = t.last_timing().unwrap();
+        let expect_sync = NetworkModel::paper_5gbps()
+            .gradient_sync_time(VirtualCost::for_model("mlp_c10").paper_params, cfg.devices);
+        assert_eq!(timing.sync_s.to_bits(), expect_sync.to_bits());
+        let max_compute = timing
+            .per_device
+            .iter()
+            .fold(0f64, |m, p| m.max(p.compute_s));
+        assert_eq!(timing.compute_s.to_bits(), max_compute.to_bits());
+        assert_eq!(log.wall_clock_s.to_bits(), timing.total().to_bits());
+        assert_eq!(timing.per_device.len(), cfg.devices);
+    }
+
+    #[test]
+    fn two_tier_cluster_slows_the_clock_and_attributes_stragglers() {
+        use crate::config::HeteroPreset;
+        let flat = trainer(&base(TrainMode::Scadles)).run().unwrap();
+        let mut cfg = base(TrainMode::Scadles);
+        // slow_fraction 1.0: every device 4x slower on half-rate links
+        cfg.hetero = HeteroPreset::TwoTier { slow_fraction: 1.0, slowdown: 4.0 };
+        let slow = Trainer::with_backend(&cfg, Box::new(MockBackend::new(64, 10)))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(
+            slow.report.wall_clock_s > flat.report.wall_clock_s,
+            "two-tier {} vs flat {}",
+            slow.report.wall_clock_s,
+            flat.report.wall_clock_s
+        );
+        // every round attributes a straggler; rows cover all devices
+        assert_eq!(
+            slow.timeline.rows().len(),
+            cfg.rounds * cfg.devices,
+            "timeline rows"
+        );
+        let (w, c, s) = slow.timeline.cause_counts();
+        assert_eq!((w + c + s) as usize, cfg.rounds, "one straggler per round");
+    }
+
+    #[test]
+    fn constrained_uplink_inflates_sync_share() {
+        use crate::config::HeteroPreset;
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.hetero = HeteroPreset::ConstrainedUplink { fraction: 1.0, uplink_bps: 5e8 };
+        let mut t = trainer(&cfg);
+        t.round().unwrap();
+        let throttled = t.last_timing().unwrap().sync_s;
+        let mut flat = trainer(&base(TrainMode::Scadles));
+        flat.round().unwrap();
+        let base_sync = flat.last_timing().unwrap().sync_s;
+        assert!(throttled > base_sync * 5.0, "{throttled} vs {base_sync}");
     }
 
     #[test]

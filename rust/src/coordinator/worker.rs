@@ -18,7 +18,7 @@
 //! at any thread count — enforced by `tests/parallel_determinism.rs`.
 
 use crate::compress::ErrorFeedback;
-use crate::config::cluster::VirtualCost;
+use crate::config::cluster::DeviceProfile;
 use crate::coordinator::backend::Backend;
 use crate::coordinator::device::Device;
 use crate::data::{materialize, Synthetic};
@@ -53,6 +53,10 @@ pub struct WorkerRound {
 #[derive(Debug)]
 pub struct DeviceWorker {
     pub device: Device,
+    /// This device's systems profile (compute class, links, memory) —
+    /// sampled by the scenario layer, owned by the shard so the local
+    /// step prices compute on the device's *own* cost curve.
+    pub profile: DeviceProfile,
     /// Shard-local DGC residual (None when error feedback is disabled).
     pub feedback: Option<ErrorFeedback>,
     /// This round's gradient row (length `d`; zeroed when the device
@@ -73,9 +77,10 @@ pub struct DeviceWorker {
 }
 
 impl DeviceWorker {
-    pub fn new(device: Device, use_error_feedback: bool, d: usize) -> Self {
+    pub fn new(device: Device, profile: DeviceProfile, use_error_feedback: bool, d: usize) -> Self {
         Self {
             device,
+            profile,
             feedback: use_error_feedback.then(|| ErrorFeedback::new(d)),
             grad: vec![0.0; d],
             fresh: Vec::new(),
@@ -118,17 +123,12 @@ impl DeviceWorker {
         self.fresh = self.device.poll(batch);
     }
 
-    /// Phase: device-local forward/backward on the fresh records.
+    /// Phase: device-local forward/backward on the fresh records, priced
+    /// on this device's own compute profile.
     ///
     /// Resets the round outputs; an empty batch zeroes the gradient row
     /// so aggregation sees exactly what the sequential engine produced.
-    pub fn train(
-        &mut self,
-        backend: &dyn Backend,
-        params: &[f32],
-        data: &Synthetic,
-        cost: &VirtualCost,
-    ) {
+    pub fn train(&mut self, backend: &dyn Backend, params: &[f32], data: &Synthetic) {
         self.out = WorkerRound {
             batch: self.fresh.len(),
             ..WorkerRound::default()
@@ -147,7 +147,7 @@ impl DeviceWorker {
                 self.out.loss = step.loss;
                 self.out.top1 = step.top1_correct;
                 self.out.top5 = step.top5_correct;
-                self.out.compute_s = cost.compute_time(self.out.batch);
+                self.out.compute_s = self.profile.compute.compute_time(self.out.batch);
                 self.grad.copy_from_slice(&step.grads);
             }
             Err(e) => self.error = Some(e),
@@ -247,7 +247,7 @@ mod tests {
     fn worker(rate: f64, use_ef: bool, d: usize) -> DeviceWorker {
         let broker = Broker::new();
         let dev = Device::new(&broker, 0, rate, vec![0, 1], BufferPolicy::Persistence, 7);
-        DeviceWorker::new(dev, use_ef, d)
+        DeviceWorker::new(dev, DeviceProfile::k80("mlp_c10"), use_ef, d)
     }
 
     fn assert_send<T: Send>() {}
@@ -262,13 +262,12 @@ mod tests {
     #[test]
     fn drain_then_train_produces_grad_and_stats() {
         let be = MockBackend::new(32, 10);
-        let cost = VirtualCost::for_model("mlp_c10");
         let mut w = worker(100.0, false, 32);
         w.device.advance_stream(1.0);
         w.drain(0.0, 64);
         assert_eq!(w.out.batch, 0); // set by train, not drain
         let params = vec![0.5f32; 32];
-        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        w.train(&be, &params, &Synthetic::standard(10, 42));
         assert_eq!(w.out.batch, 64);
         assert!(w.out.loss > 0.0);
         assert!(w.out.compute_s > 0.0);
@@ -279,16 +278,15 @@ mod tests {
     #[test]
     fn empty_batch_zeroes_grad() {
         let be = MockBackend::new(16, 10);
-        let cost = VirtualCost::for_model("mlp_c10");
         let mut w = worker(5.0, false, 16);
         // dirty the row, then train on nothing
         w.device.advance_stream(1.0);
         w.drain(0.0, 8);
         let params = vec![0.1f32; 16];
-        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        w.train(&be, &params, &Synthetic::standard(10, 42));
         assert!(w.grad().iter().any(|&g| g != 0.0));
         w.drain(0.0, 0);
-        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        w.train(&be, &params, &Synthetic::standard(10, 42));
         assert_eq!(w.out.batch, 0);
         assert!(w.grad().iter().all(|&g| g == 0.0));
     }
@@ -296,12 +294,11 @@ mod tests {
     #[test]
     fn compress_apply_roundtrip_preserves_signal_with_ef() {
         let be = MockBackend::new(64, 10);
-        let cost = VirtualCost::for_model("mlp_c10");
         let mut w = worker(100.0, true, 64);
         w.device.advance_stream(1.0);
         w.drain(0.0, 64);
         let params = vec![0.3f32; 64];
-        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        w.train(&be, &params, &Synthetic::standard(10, 42));
         let raw = w.grad().to_vec();
         w.compress_stats(&be, 0.25);
         assert!(w.out.has_stats);
@@ -319,16 +316,34 @@ mod tests {
     #[test]
     fn dense_decision_sends_corrected_row_and_clears_residual() {
         let be = MockBackend::new(32, 10);
-        let cost = VirtualCost::for_model("mlp_c10");
         let mut w = worker(100.0, true, 32);
         w.device.advance_stream(1.0);
         w.drain(0.0, 32);
         let params = vec![0.2f32; 32];
-        w.train(&be, &params, &Synthetic::standard(10, 42), &cost);
+        w.train(&be, &params, &Synthetic::standard(10, 42));
         w.compress_stats(&be, 0.1);
         w.apply_decision(false);
         assert_eq!(w.feedback.as_ref().unwrap().residual_norm2, 0.0);
         assert!(w.grad().iter().filter(|&&v| v != 0.0).count() > w.out.nnz as usize);
+    }
+
+    #[test]
+    fn slow_profile_prices_its_own_compute() {
+        let be = MockBackend::new(16, 10);
+        let data = Synthetic::standard(10, 42);
+        let params = vec![0.1f32; 16];
+        let run = |slowdown: f64| {
+            let mut w = worker(100.0, false, 16);
+            w.profile.compute = w.profile.compute.scaled(slowdown);
+            w.device.advance_stream(1.0);
+            w.drain(0.0, 64);
+            w.train(&be, &params, &data);
+            w.out.compute_s
+        };
+        let fast = run(1.0);
+        let slow = run(4.0);
+        assert!(fast > 0.0);
+        assert!((slow - 4.0 * fast).abs() < 1e-12, "slow {slow} vs 4x{fast}");
     }
 
     #[test]
@@ -345,7 +360,7 @@ mod tests {
                         BufferPolicy::Persistence,
                         i as u64,
                     );
-                    DeviceWorker::new(dev, false, 4)
+                    DeviceWorker::new(dev, DeviceProfile::k80("mlp_c10"), false, 4)
                 })
                 .collect();
             for_each_worker(&mut ws, threads, |i, w| {

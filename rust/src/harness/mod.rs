@@ -13,6 +13,7 @@
 pub mod ablation;
 pub mod analytic;
 pub mod fig6;
+pub mod hetero;
 pub mod training;
 
 use std::path::PathBuf;
@@ -58,7 +59,7 @@ pub const EXPERIMENTS: &[&str] = &[
 ];
 
 /// Extension studies beyond the paper (DESIGN.md §5b).
-pub const EXTENSIONS: &[&str] = &["ablation", "emd", "fedavg"];
+pub const EXTENSIONS: &[&str] = &["ablation", "emd", "fedavg", "hetero"];
 
 /// Dispatch one experiment by id.
 pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
@@ -83,6 +84,7 @@ pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
         "ablation" => ablation::ablation(opts),
         "emd" => ablation::emd_table(opts),
         "fedavg" => ablation::fedavg(opts),
+        "hetero" => hetero::hetero(opts),
         "all" => {
             for e in EXPERIMENTS {
                 eprintln!("\n================ {e} ================");

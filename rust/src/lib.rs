@@ -12,6 +12,17 @@
 //! broker, a streaming dataset, analytic cluster/network simulators, a
 //! conventional-DDL baseline).
 //!
+//! On top of the paper's streaming-rate heterogeneity the crate models
+//! **systems heterogeneity**: each device owns a
+//! [`config::DeviceProfile`] (compute class, uplink/downlink bandwidth,
+//! memory budget) sampled from a named [`config::HeteroPreset`] scenario
+//! (`k80-homogeneous` default, `uniform`, `two-tier`,
+//! `lognormal-compute`, `constrained-uplink`). Sampling flows through
+//! fixed per-device [`rng::Pcg64`] substreams, so every scenario keeps
+//! the engine's bitwise-determinism guarantee at any worker-pool width;
+//! per-round straggler attribution (stream-wait vs compute vs sync)
+//! lands in [`metrics::Timeline`]. See `examples/two_tier_cluster.rs`.
+//!
 //! Layers 1–2 (Pallas kernels + JAX models) are AOT-lowered to HLO text at
 //! build time (`make artifacts`) and executed through the PJRT CPU client
 //! by [`runtime`]. Python never runs on the training path.

@@ -31,6 +31,10 @@ USAGE:
               [--noniid K] [--cr CR --delta D] [--alpha A --beta B]
               [--jitter J] [--seed S] [--echo N] [--csv FILE]
               [--workers T]   (round-engine pool width; 0=auto, 1=sequential)
+              [--hetero P]    (systems-heterogeneity scenario, name[:param]:
+                               k80-homogeneous | uniform[:spread] |
+                               two-tier[:frac] | lognormal-compute[:sigma] |
+                               constrained-uplink[:frac])
   repro exp <id|all> [--artifacts DIR] [--devices N] [--rounds R]
               [--model M] [--out-dir DIR] [--echo N] [--seed S]
   repro info  [--artifacts DIR]
@@ -182,6 +186,7 @@ fn main() -> anyhow::Result<()> {
                 .preset(parse_preset(&args.get_str("preset", "S1"))?)
                 .mode(parse_mode(&args.get_str("mode", "scadles"))?)
                 .rate_jitter(args.get("jitter", 0.0f64)?)
+                .hetero(args.get_str("hetero", "k80-homogeneous").parse()?)
                 .seed(args.get("seed", 42u64)?)
                 .echo_every(args.get("echo", 10usize)?)
                 .worker_threads(args.get("workers", 0usize)?);
@@ -212,6 +217,7 @@ fn main() -> anyhow::Result<()> {
                         "round", "wall_clock_s", "global_batch", "train_loss",
                         "test_top1", "test_top5", "lr", "buffered_samples",
                         "floats_sent", "compressed", "injection_bytes",
+                        "straggler_device", "straggler_cause",
                     ],
                 )?;
                 for r in out.logs.rounds() {
@@ -227,6 +233,8 @@ fn main() -> anyhow::Result<()> {
                         r.floats_sent.to_string(),
                         r.compressed.to_string(),
                         r.injection_bytes.to_string(),
+                        r.straggler_device.to_string(),
+                        r.straggler_cause.name().into(),
                     ])?;
                 }
                 w.flush()?;

@@ -1,5 +1,6 @@
 //! Per-round structured logging for training runs.
 
+use super::timeline::StragglerCause;
 
 /// Everything a training round reports (one CSV row / one log line).
 #[derive(Debug, Clone, Copy, Default)]
@@ -27,6 +28,10 @@ pub struct RoundLog {
     pub compressed: bool,
     /// Bytes moved by data injection this round.
     pub injection_bytes: u64,
+    /// Device that bounded this round's critical path (straggler).
+    pub straggler_device: usize,
+    /// Which phase made it the straggler (stream-wait/compute/sync).
+    pub straggler_cause: StragglerCause,
 }
 
 /// Accumulates [`RoundLog`]s for one run; the harness renders them into

@@ -4,8 +4,10 @@ pub mod csv;
 pub mod ewma;
 pub mod logger;
 pub mod summary;
+pub mod timeline;
 
 pub use csv::CsvWriter;
 pub use ewma::Ewma;
 pub use logger::{RoundLog, RunLogger};
 pub use summary::RunReport;
+pub use timeline::{DeviceRoundRow, StragglerCause, Timeline};

@@ -1,0 +1,136 @@
+//! Per-device round timeline: who bounded each round and why.
+//!
+//! A synchronous round's critical path is `max_i wait_i` (stream fill) +
+//! `max_i compute_i` (local step) + sync (the ring's slowest link). With
+//! heterogeneous device profiles those maxima move between devices and
+//! phases round to round; the timeline records one row per device per
+//! round so straggler attribution — stream-wait vs compute vs sync — can
+//! be read off the run instead of inferred from totals.
+
+/// Why a round was as long as it was (its dominant phase).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StragglerCause {
+    /// Nothing dominated (e.g. no device trained).
+    #[default]
+    None,
+    /// A device waiting on its own stream to fill its batch.
+    StreamWait,
+    /// The slowest device's forward/backward.
+    Compute,
+    /// Gradient synchronization through the cluster's slowest link.
+    Sync,
+}
+
+impl StragglerCause {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StragglerCause::None => "none",
+            StragglerCause::StreamWait => "stream-wait",
+            StragglerCause::Compute => "compute",
+            StragglerCause::Sync => "sync",
+        }
+    }
+}
+
+impl std::fmt::Display for StragglerCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One device's share of one round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceRoundRow {
+    pub round: usize,
+    pub device: usize,
+    /// Samples the device trained on (0 = sat out).
+    pub batch: usize,
+    /// Seconds the device waited on its own stream.
+    pub wait_s: f64,
+    /// The device's local compute seconds.
+    pub compute_s: f64,
+    /// Whether this device bounded the round's critical path.
+    pub straggler: bool,
+    /// Why (set on the straggler's row; `None` elsewhere).
+    pub cause: StragglerCause,
+}
+
+/// All per-device rows of a run, in (round, device) order.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    rows: Vec<DeviceRoundRow>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, row: DeviceRoundRow) {
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[DeviceRoundRow] {
+        &self.rows
+    }
+
+    /// Straggler rounds by cause: (stream-wait, compute, sync).
+    pub fn cause_counts(&self) -> (u64, u64, u64) {
+        let mut c = (0u64, 0u64, 0u64);
+        for r in self.rows.iter().filter(|r| r.straggler) {
+            match r.cause {
+                StragglerCause::StreamWait => c.0 += 1,
+                StragglerCause::Compute => c.1 += 1,
+                StragglerCause::Sync => c.2 += 1,
+                StragglerCause::None => {}
+            }
+        }
+        c
+    }
+
+    /// Rounds each device stalled, indexed by device id.
+    pub fn device_counts(&self, devices: usize) -> Vec<u64> {
+        let mut counts = vec![0u64; devices];
+        for r in self.rows.iter().filter(|r| r.straggler) {
+            if r.device < devices {
+                counts[r.device] += 1;
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(round: usize, device: usize, straggler: bool, cause: StragglerCause) -> DeviceRoundRow {
+        DeviceRoundRow {
+            round,
+            device,
+            straggler,
+            cause,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn counts_attribute_by_cause_and_device() {
+        let mut t = Timeline::new();
+        t.push(row(0, 0, false, StragglerCause::None));
+        t.push(row(0, 1, true, StragglerCause::Compute));
+        t.push(row(1, 0, false, StragglerCause::None));
+        t.push(row(1, 1, true, StragglerCause::StreamWait));
+        t.push(row(2, 1, true, StragglerCause::Sync));
+        assert_eq!(t.cause_counts(), (1, 1, 1));
+        assert_eq!(t.device_counts(2), vec![0, 3]);
+        assert_eq!(t.rows().len(), 5);
+    }
+
+    #[test]
+    fn cause_names_are_stable() {
+        assert_eq!(StragglerCause::StreamWait.name(), "stream-wait");
+        assert_eq!(StragglerCause::Compute.to_string(), "compute");
+        assert_eq!(StragglerCause::default(), StragglerCause::None);
+    }
+}

@@ -40,7 +40,7 @@ impl Optimizer {
 }
 
 /// Memory model for one network architecture.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MemoryModel {
     /// Trainable parameters.
     pub params: u64,
@@ -75,6 +75,16 @@ impl MemoryModel {
         }
     }
 
+    /// Map a model name to its paper-scale memory class (mirrors
+    /// [`crate::config::VirtualCost::for_model`]).
+    pub fn for_model(model: &str) -> Self {
+        if model.contains("vgg") {
+            Self::paper_vgg19()
+        } else {
+            Self::paper_resnet152()
+        }
+    }
+
     /// Total training-resident bytes for a mini-batch of `batch` under
     /// `opt` (f32 everywhere, as the paper's fp32 runs).
     pub fn bytes(&self, batch: usize, opt: Optimizer) -> u64 {
@@ -87,6 +97,20 @@ impl MemoryModel {
     /// Convenience: GiB.
     pub fn gib(&self, batch: usize, opt: Optimizer) -> f64 {
         self.bytes(batch, opt) as f64 / (1u64 << 30) as f64
+    }
+
+    /// Largest batch that fits in `budget_bytes` (0 when even the
+    /// batch-independent state — weights, gradients, optimizer buffers,
+    /// framework workspace — exceeds the budget). Inverse of
+    /// [`Self::bytes`]: `bytes(b, opt) <= budget` iff `b <= max_batch`.
+    pub fn max_batch(&self, budget_bytes: u64, opt: Optimizer) -> usize {
+        let fixed = self.fixed_bytes + self.params * 4 * (2 + opt.state_buffers() as u64);
+        if budget_bytes < fixed {
+            return 0;
+        }
+        let per_sample =
+            (self.activation_floats_per_sample + self.input_floats_per_sample) * 4;
+        ((budget_bytes - fixed) / per_sample.max(1)) as usize
     }
 }
 
@@ -116,6 +140,29 @@ mod tests {
         // state deltas are exactly one/two param buffers
         assert_eq!(mom - sgd, m.params * 4);
         assert_eq!(adam - sgd, m.params * 8);
+    }
+
+    #[test]
+    fn max_batch_inverts_bytes() {
+        let m = MemoryModel::paper_resnet152();
+        for budget in [4u64 << 30, 12 << 30, 32 << 30] {
+            let cap = m.max_batch(budget, Optimizer::Momentum);
+            assert!(m.bytes(cap, Optimizer::Momentum) <= budget, "budget {budget}");
+            assert!(m.bytes(cap + 1, Optimizer::Momentum) > budget, "budget {budget}");
+        }
+        // below the fixed footprint nothing fits
+        assert_eq!(m.max_batch(1 << 30, Optimizer::Momentum), 0);
+        // bigger budgets, bigger batches
+        assert!(
+            m.max_batch(32 << 30, Optimizer::Sgd) > m.max_batch(12 << 30, Optimizer::Sgd)
+        );
+    }
+
+    #[test]
+    fn for_model_maps_like_virtual_cost() {
+        assert_eq!(MemoryModel::for_model("vgg_tiny_c100").params, 143_700_000);
+        assert_eq!(MemoryModel::for_model("resnet_tiny_c10").params, 60_200_000);
+        assert_eq!(MemoryModel::for_model("mlp_c10").params, 60_200_000);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 
 /// α–β network model for gradient synchronization.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetworkModel {
     /// Link bandwidth in bits/second (paper testbed: 5 Gbps ethernet).
     pub bandwidth_bps: f64,
@@ -29,14 +29,24 @@ impl NetworkModel {
         }
     }
 
-    /// Ring-allreduce time for `bytes` across `n` devices.
+    /// Ring-allreduce time for `bytes` across `n` devices, all links at
+    /// the model's global bandwidth.
     pub fn allreduce_time(&self, bytes: u64, n: usize) -> f64 {
+        self.allreduce_time_slowest(bytes, n, self.bandwidth_bps)
+    }
+
+    /// Ring-allreduce for `bytes` across `n` devices when the slowest
+    /// participating link runs at `slowest_bps`. A bandwidth-optimal ring
+    /// moves every chunk through every link, so heterogeneous clusters
+    /// are throttled by the narrowest one; α latency and protocol
+    /// efficiency stay the model's.
+    pub fn allreduce_time_slowest(&self, bytes: u64, n: usize, slowest_bps: f64) -> f64 {
         if n <= 1 {
             return 0.0;
         }
         let steps = 2 * (n - 1);
         let volume = 2.0 * (n as f64 - 1.0) / n as f64 * bytes as f64;
-        steps as f64 * self.latency_s + volume * 8.0 / (self.bandwidth_bps * self.efficiency)
+        steps as f64 * self.latency_s + volume * 8.0 / (slowest_bps * self.efficiency)
     }
 
     /// Allreduce for a model of `params` f32 gradients.
@@ -86,6 +96,26 @@ mod tests {
         let t8 = m.gradient_sync_time(60_200_000, 8);
         let t16 = m.gradient_sync_time(60_200_000, 16);
         assert!(t16 > t8);
+    }
+
+    #[test]
+    fn slowest_link_pricing_matches_global_when_equal() {
+        let m = NetworkModel::paper_5gbps();
+        for n in [2usize, 8, 32] {
+            let a = m.allreduce_time(60_200_000 * 4, n);
+            let b = m.allreduce_time_slowest(60_200_000 * 4, n, m.bandwidth_bps);
+            assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn narrow_link_throttles_allreduce() {
+        let m = NetworkModel::paper_5gbps();
+        let fast = m.allreduce_time_slowest(60_200_000 * 4, 8, 5e9);
+        let slow = m.allreduce_time_slowest(60_200_000 * 4, 8, 1e9);
+        assert!(slow > fast * 4.0, "slow {slow} vs fast {fast}");
+        // a single device rings with nobody regardless of its link
+        assert_eq!(m.allreduce_time_slowest(1 << 20, 1, 1e3), 0.0);
     }
 
     #[test]

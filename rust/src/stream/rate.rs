@@ -109,4 +109,28 @@ mod tests {
         let d = rl.delay_for(10).as_secs_f64();
         assert!(d > 0.5 && d < 1.5, "delay {d}");
     }
+
+    #[test]
+    fn sub_unit_burst_clamps_to_one_token() {
+        // burst < 1.0 would make even a single-record acquire impossible;
+        // the constructor clamps the bucket to hold at least one token.
+        let mut rl = RateLimiter::with_burst(1.0, 0.2);
+        assert!(rl.try_acquire(1), "the clamped burst must grant one record");
+        // bucket drained: a second immediate acquire needs ~1 s of refill
+        assert!(!rl.try_acquire(1));
+        let d = rl.delay_for(1).as_secs_f64();
+        assert!(d > 0.0 && d < 1.5, "delay {d}");
+    }
+
+    #[test]
+    fn delay_for_right_after_construction() {
+        // the bucket starts full: anything within the burst is free now,
+        // anything beyond it is priced at deficit/rate.
+        let mut rl = RateLimiter::with_burst(100.0, 5.0);
+        assert_eq!(rl.delay_for(5), Duration::ZERO);
+        let d = rl.delay_for(10).as_secs_f64();
+        // deficit 5 at 100/s ≈ 50 ms (loose upper bound for slow CI hosts:
+        // elapsed time only *refills* the bucket, shrinking the delay)
+        assert!(d > 0.0 && d <= 0.05 + 1e-9, "delay {d}");
+    }
 }

@@ -4,11 +4,15 @@
 //! happen in fixed device order on the coordinator thread.
 //!
 //! Matrix: seeds {1,2,3} x devices {1,4,8} x engine paths {plain,
-//! truncation, Top-k compression, Top-k + error feedback, DDL baseline}
-//! x pool widths {1 (sequential), 4, 8}.
+//! truncation, Top-k compression, Top-k + error feedback, DDL baseline,
+//! two heterogeneous cluster profiles} x pool widths {1 (sequential),
+//! 4, 8}. The heterogeneous cases also pin the scenario layer's
+//! per-device-substream sampling: profiles must not depend on pool width.
 
 use scadles::buffer::BufferPolicy;
-use scadles::config::{CompressionConfig, ExperimentConfig, StreamPreset, TrainMode};
+use scadles::config::{
+    CompressionConfig, ExperimentConfig, HeteroPreset, StreamPreset, TrainMode,
+};
 use scadles::coordinator::{MockBackend, Trainer, TrainerOutput};
 use scadles::metrics::RoundLog;
 
@@ -18,20 +22,23 @@ struct Case {
     mode: TrainMode,
     policy: BufferPolicy,
     compression: Option<CompressionConfig>,
+    hetero: HeteroPreset,
 }
 
-const CASES: [Case; 5] = [
+const CASES: [Case; 7] = [
     Case {
         name: "plain",
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: None,
+        hetero: HeteroPreset::K80Homogeneous,
     },
     Case {
         name: "truncation",
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Truncation,
         compression: None,
+        hetero: HeteroPreset::K80Homogeneous,
     },
     Case {
         name: "topk",
@@ -43,6 +50,7 @@ const CASES: [Case; 5] = [
             ewma_alpha: 0.3,
             error_feedback: false,
         }),
+        hetero: HeteroPreset::K80Homogeneous,
     },
     Case {
         name: "topk+ef",
@@ -54,12 +62,33 @@ const CASES: [Case; 5] = [
             ewma_alpha: 0.3,
             error_feedback: true,
         }),
+        hetero: HeteroPreset::K80Homogeneous,
     },
     Case {
         name: "ddl",
         mode: TrainMode::Ddl,
         policy: BufferPolicy::Persistence,
         compression: None,
+        hetero: HeteroPreset::K80Homogeneous,
+    },
+    Case {
+        name: "two-tier",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Persistence,
+        compression: None,
+        hetero: HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
+    },
+    Case {
+        name: "lognormal+topk",
+        mode: TrainMode::Ddl,
+        policy: BufferPolicy::Truncation,
+        compression: Some(CompressionConfig {
+            ratio: 0.1,
+            delta: 0.5,
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        }),
+        hetero: HeteroPreset::LognormalCompute { sigma: 0.6 },
     },
 ];
 
@@ -71,6 +100,7 @@ fn run(case: Case, seed: u64, devices: usize, threads: usize) -> TrainerOutput {
         .preset(StreamPreset::S1)
         .mode(case.mode)
         .buffer_policy(case.policy)
+        .hetero(case.hetero)
         .rate_jitter(0.2)
         .eval_every(4)
         .worker_threads(threads);
@@ -104,6 +134,8 @@ fn assert_logs_identical(a: &RoundLog, b: &RoundLog, ctx: &str) {
     assert_eq!(a.floats_sent, b.floats_sent, "{ctx}: floats sent");
     assert_eq!(a.compressed, b.compressed, "{ctx}: compressed flag");
     assert_eq!(a.injection_bytes, b.injection_bytes, "{ctx}: injection");
+    assert_eq!(a.straggler_device, b.straggler_device, "{ctx}: straggler device");
+    assert_eq!(a.straggler_cause, b.straggler_cause, "{ctx}: straggler cause");
 }
 
 fn assert_outputs_identical(a: &TrainerOutput, b: &TrainerOutput, ctx: &str) {
@@ -133,6 +165,16 @@ fn assert_outputs_identical(a: &TrainerOutput, b: &TrainerOutput, ctx: &str) {
     assert_eq!(la.len(), lb.len(), "{ctx}: round count");
     for (x, y) in la.iter().zip(lb) {
         assert_logs_identical(x, y, ctx);
+    }
+    let (ta, tb) = (a.timeline.rows(), b.timeline.rows());
+    assert_eq!(ta.len(), tb.len(), "{ctx}: timeline rows");
+    for (x, y) in ta.iter().zip(tb) {
+        assert_eq!(x.device, y.device, "{ctx}: timeline device");
+        assert_eq!(x.batch, y.batch, "{ctx}: timeline batch");
+        assert!(feq(x.wait_s, y.wait_s), "{ctx}: timeline wait");
+        assert!(feq(x.compute_s, y.compute_s), "{ctx}: timeline compute");
+        assert_eq!(x.straggler, y.straggler, "{ctx}: timeline straggler");
+        assert_eq!(x.cause, y.cause, "{ctx}: timeline cause");
     }
 }
 

@@ -7,7 +7,7 @@
 
 use scadles::buffer::BufferPolicy;
 use scadles::compress::{mask_stats_native, threshold_for_ratio, topk_threshold};
-use scadles::config::{ExperimentConfig, StreamPreset, TrainMode};
+use scadles::config::{ExperimentConfig, HeteroPreset, StreamPreset, TrainMode};
 use scadles::coordinator::plan::RoundPlan;
 use scadles::coordinator::{aggregate_native, weights_from_batches, MockBackend, Trainer};
 use scadles::coordinator::backend::Backend;
@@ -113,7 +113,8 @@ fn prop_plan_respects_bounds_and_buckets() {
             .unwrap();
         let rates: Vec<f64> = (0..n).map(|_| 1.0 + rng.f64() * 500.0).collect();
         let backlogs: Vec<usize> = (0..n).map(|_| rng.below(2000)).collect();
-        let plan = RoundPlan::plan(&cfg, &ladder, &rates, &backlogs);
+        let cluster = HeteroPreset::K80Homogeneous.sample_cluster("mlp_c10", n, 0);
+        let plan = RoundPlan::plan(&cfg, &ladder, &cluster, &rates, &backlogs);
         assert_eq!(plan.devices.len(), n);
         for p in &plan.devices {
             assert!(p.batch >= 8 && p.batch <= 256, "batch {}", p.batch);
@@ -140,7 +141,8 @@ fn prop_scadles_wait_bounded_by_one_second_of_stream() {
             .unwrap();
         let rates: Vec<f64> = (0..n).map(|_| 8.0 + rng.f64() * 500.0).collect();
         let backlogs = vec![0usize; n];
-        let plan = RoundPlan::plan(&cfg, &ladder, &rates, &backlogs);
+        let cluster = HeteroPreset::K80Homogeneous.sample_cluster("mlp_c10", n, 0);
+        let plan = RoundPlan::plan(&cfg, &ladder, &cluster, &rates, &backlogs);
         assert!(plan.wait_s <= 1.13, "wait {}", plan.wait_s); // b_i = round(S_i) can exceed S_i by <1
     });
 }

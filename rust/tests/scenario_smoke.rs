@@ -1,0 +1,85 @@
+//! Scenario smoke-matrix (CI-gated): the mock-backend trainer must run
+//! panic-free with finite losses across
+//! {k80-homogeneous, two-tier, constrained-uplink} × {scadles, ddl}.
+//!
+//! This is the cheap end-to-end guard on the heterogeneity scenario
+//! layer: every preset must thread through config → plan → workers →
+//! clock → metrics without degenerate numbers, in both training modes.
+
+use scadles::config::{ExperimentConfig, HeteroPreset, StreamPreset, TrainMode};
+use scadles::coordinator::{MockBackend, Trainer, TrainerOutput};
+
+fn run(hetero: HeteroPreset, mode: TrainMode) -> TrainerOutput {
+    let cfg = ExperimentConfig::builder("mlp_c10")
+        .devices(4)
+        .rounds(8)
+        .preset(StreamPreset::S1)
+        .hetero(hetero)
+        .mode(mode)
+        .eval_every(4)
+        .build()
+        .unwrap();
+    Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10)))
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+fn matrix() -> Vec<(HeteroPreset, TrainMode)> {
+    let scenarios = [
+        HeteroPreset::K80Homogeneous,
+        HeteroPreset::TwoTier { slow_fraction: 0.25, slowdown: 4.0 },
+        HeteroPreset::ConstrainedUplink { fraction: 0.25, uplink_bps: 1e9 },
+    ];
+    let modes = [TrainMode::Scadles, TrainMode::Ddl];
+    scenarios
+        .into_iter()
+        .flat_map(|h| modes.into_iter().map(move |m| (h, m)))
+        .collect()
+}
+
+#[test]
+fn scenario_matrix_trains_with_finite_losses() {
+    for (hetero, mode) in matrix() {
+        let out = run(hetero, mode);
+        let ctx = format!("{hetero} × {}", mode.name());
+        assert_eq!(out.logs.rounds().len(), 8, "{ctx}: round count");
+        for r in out.logs.rounds() {
+            assert!(r.train_loss.is_finite(), "{ctx}: loss r{} = {}", r.round, r.train_loss);
+            assert!(
+                r.wall_clock_s.is_finite() && r.wall_clock_s > 0.0,
+                "{ctx}: clock r{} = {}",
+                r.round,
+                r.wall_clock_s
+            );
+        }
+        assert!(
+            out.report.final_train_loss.is_finite(),
+            "{ctx}: final loss {}",
+            out.report.final_train_loss
+        );
+        assert!(out.report.wall_clock_s > 0.0, "{ctx}");
+    }
+}
+
+#[test]
+fn heterogeneous_scenarios_never_beat_the_flat_cluster_clock() {
+    // The scenarios only slow devices down or narrow links, so for a
+    // fixed seed the virtual wall clock is bounded below by the
+    // homogeneous run's (small tolerance: waits adapt to backlogs, so
+    // totals can wobble by fractions of a sample's stream time).
+    for mode in [TrainMode::Scadles, TrainMode::Ddl] {
+        let flat = run(HeteroPreset::K80Homogeneous, mode).report.wall_clock_s;
+        for hetero in [
+            HeteroPreset::TwoTier { slow_fraction: 0.25, slowdown: 4.0 },
+            HeteroPreset::ConstrainedUplink { fraction: 0.25, uplink_bps: 1e9 },
+        ] {
+            let t = run(hetero, mode).report.wall_clock_s;
+            assert!(
+                t >= flat * 0.95,
+                "{hetero} × {}: {t} well below flat {flat}",
+                mode.name()
+            );
+        }
+    }
+}
