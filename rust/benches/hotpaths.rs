@@ -23,6 +23,7 @@ use scadles::config::{
 };
 use scadles::coordinator::{aggregate_native, MockBackend, Trainer};
 use scadles::data::{materialize, Synthetic};
+use scadles::dynamics::StreamDynamics;
 use scadles::rng::Pcg64;
 use scadles::runtime::Runtime;
 use scadles::stream::{Consumer, Record, Retention, Topic};
@@ -140,6 +141,30 @@ fn main() {
          (scenario-layer overhead should be noise)",
         het_seq_ns / het_par_ns,
         seq_ns / het_seq_ns
+    );
+
+    // --- stream-dynamics process sampling ------------------------------------
+    // One frame = every device's effective rate/link/membership for a
+    // round. Process evaluation must stay off the round hot path: O(1)
+    // per device-round, no allocation (the frame is written in place), so
+    // a full 8-device frame should cost well under a microsecond — the
+    // printed per-frame time is the whole per-round overhead of the
+    // dynamics layer.
+    b.header("dynamics process sampling (8 devices/frame)");
+    let bench_engine = |spec: &str| {
+        let mut e = StreamDynamics::from_preset(&spec.parse().unwrap(), 8, 7).unwrap();
+        let mut t = 0.0f64;
+        move || {
+            t += 2.0; // a realistic round duration: cursors advance lazily
+            e.sample(t).len()
+        }
+    };
+    b.case("rate_process_sampling/static", bench_engine("static"));
+    b.case("rate_process_sampling/diurnal", bench_engine("diurnal:0.5:120"));
+    b.case("rate_process_sampling/burst", bench_engine("burst:4:0.25:20:60"));
+    b.case(
+        "rate_process_sampling/diurnal+burst+churn",
+        bench_engine("diurnal:0.5:120+burst:4:0.25:20:60+churn:0.25:120:0.5"),
     );
 
     // --- stream substrate --------------------------------------------------

@@ -12,13 +12,19 @@ pub struct BufferTracker {
     peak: u64,
 }
 
-/// Summary of a tracked run (basis for Fig. 8 / Tables IV & VI).
+/// Summary of a tracked run (basis for Fig. 8 / Tables IV & VI and the
+/// dynamics sweep's occupancy percentiles).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BufferReport {
     /// Buffered samples at the final round.
     pub final_samples: u64,
     /// Peak buffered samples over the run.
     pub peak_samples: u64,
+    /// Median / 90th-percentile buffered samples over the run
+    /// (nearest-rank; time-varying streams make the occupancy
+    /// *distribution* the interesting quantity, not just the endpoints).
+    pub p50_samples: u64,
+    pub p90_samples: u64,
     /// Final buffered payload in gigabytes (3 KB/sample, as the paper).
     pub final_gb: f64,
     pub peak_gb: f64,
@@ -48,10 +54,25 @@ impl BufferTracker {
         self.peak
     }
 
+    /// Nearest-rank percentile of the per-round occupancy history
+    /// (`q` in [0,1]; 0 on an empty history).
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.history.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.history.clone();
+        sorted.sort_unstable();
+        let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize)
+            .clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
     pub fn report(&self) -> BufferReport {
         BufferReport {
             final_samples: self.last(),
             peak_samples: self.peak,
+            p50_samples: self.percentile(0.5),
+            p90_samples: self.percentile(0.9),
             final_gb: samples_to_gb(self.last()),
             peak_gb: samples_to_gb(self.peak),
             rounds: self.history.len(),
@@ -87,6 +108,21 @@ mod tests {
         assert_eq!(r.final_samples, 30);
         assert_eq!(r.peak_samples, 50);
         assert_eq!(r.rounds, 3);
+        assert_eq!(r.p50_samples, 30);
+        assert_eq!(r.p90_samples, 50);
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let mut t = BufferTracker::new();
+        for v in 1..=100u64 {
+            t.record(v);
+        }
+        assert_eq!(t.percentile(0.5), 50);
+        assert_eq!(t.percentile(0.9), 90);
+        assert_eq!(t.percentile(0.0), 1); // floored at the first rank
+        assert_eq!(t.percentile(1.0), 100);
+        assert_eq!(BufferTracker::new().percentile(0.5), 0);
     }
 
     #[test]

@@ -16,10 +16,21 @@ pub enum BufferPolicy {
 }
 
 impl BufferPolicy {
-    /// Retention for a device whose streaming rate is `rate` samples/s.
+    /// Retention for a device whose **effective** streaming rate is
+    /// `rate` samples/s — the rate as currently flowing (nominal ×
+    /// dynamics factor), not the statically configured one, so that
+    /// Truncation keeps ≈ 1 s of the stream as it actually arrives.
+    /// Callers re-derive retention whenever the effective rate moves
+    /// (`Device::apply_dynamics`): a rising rate widens the window, a
+    /// falling one narrows it.
     ///
     /// Truncation keeps `⌈rate⌉` records: "data in buffer exceeding the
-    /// samples that just streamed in is simply discarded".
+    /// samples that just streamed in is simply discarded". The window is
+    /// floored at **one** record even when the effective rate drops to 0
+    /// (a churned-out or stalled stream): `keep` can never underflow to
+    /// 0, the newest record survives, and the backlog simply drains as
+    /// the consumer polls — the device sits rounds out instead of
+    /// panicking on an empty window.
     pub fn retention(&self, rate: f64) -> Retention {
         match self {
             BufferPolicy::Persistence => Retention::Persist,
@@ -56,5 +67,31 @@ mod tests {
             BufferPolicy::Truncation.retention(0.2),
             Retention::Truncate { keep: 1 }
         );
+    }
+
+    #[test]
+    fn truncation_window_follows_a_rising_effective_rate() {
+        // diurnal peak: nominal 100/s boosted 3x — the window must cover
+        // one second of the boosted stream, not the nominal one
+        let nominal = BufferPolicy::Truncation.retention(100.0);
+        let boosted = BufferPolicy::Truncation.retention(100.0 * 3.0);
+        assert_eq!(nominal, Retention::Truncate { keep: 100 });
+        assert_eq!(boosted, Retention::Truncate { keep: 300 });
+    }
+
+    #[test]
+    fn truncation_window_follows_a_falling_effective_rate() {
+        // burst trough: 100/s faded to a quarter — keep shrinks with it
+        assert_eq!(
+            BufferPolicy::Truncation.retention(100.0 * 0.25),
+            Retention::Truncate { keep: 25 }
+        );
+        // effective rate 0 (churned out / stalled): the window floors at
+        // one record — no zero-keep underflow, the buffer just drains
+        assert_eq!(
+            BufferPolicy::Truncation.retention(0.0),
+            Retention::Truncate { keep: 1 }
+        );
+        assert_eq!(BufferPolicy::Persistence.retention(0.0), Retention::Persist);
     }
 }

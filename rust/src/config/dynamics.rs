@@ -1,0 +1,464 @@
+//! Stream-dynamics scenario layer: named time-varying processes that
+//! modulate streaming rates, link bandwidths and device membership as
+//! virtual time advances.
+//!
+//! PR 2's heterogeneity layer froze every device's rate, bandwidth and
+//! membership for the whole run; ScaDLES's core tension — low-volume
+//! streams stalling synchronous SGD while high-volume streams overflow
+//! buffers — only materializes when those quantities *change over time*
+//! (DISTREAL varies per-device resources at runtime; Deep-Edge models
+//! nodes whose availability fluctuates mid-training). A
+//! [`DynamicsPreset`] names one such process family; the engine behind
+//! it lives in [`crate::dynamics`].
+//!
+//! Presets **compose**: `burst:4+churn:0.25` multiplies the burst
+//! process's rate factors with the churn schedule's membership gate, and
+//! everything composes orthogonally with `--hetero` (dynamics are
+//! multiplicative factors on the sampled per-device profiles).
+//!
+//! CLI syntax (`repro train --dynamics ...`): `name[:param...]`, stages
+//! joined with `+`:
+//!
+//! * `static` — the default; reproduces PR 2 timings bitwise.
+//! * `diurnal[:amplitude[:period_s]]` — sinusoidal day/night cycle,
+//!   per-device phase offsets.
+//! * `burst[:boost[:calm[:mean_boost_s[:mean_calm_s]]]]` — two-state
+//!   Markov-modulated rate (exponential sojourns from per-device Pcg64
+//!   substreams).
+//! * `churn[:fraction[:period_s[:down_fraction]]]` — a fraction of
+//!   devices flap on deterministic staggered schedules.
+//! * `linkfade[:floor[:period_s]]` — uplink/downlink fade sinusoidally
+//!   down to `floor`× the profile bandwidth.
+//! * `trace:PATH` — per-device piecewise-constant rate/bandwidth
+//!   factors replayed from a CSV or JSON trace file
+//!   ([`crate::dynamics::TraceData`] documents the format).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, ensure};
+
+use crate::Result;
+
+/// Default secondary knobs (shared by `Display` and `FromStr` so the two
+/// round-trip exactly).
+const DIURNAL_AMPLITUDE: f64 = 0.5;
+const DIURNAL_PERIOD_S: f64 = 240.0;
+const BURST_BOOST: f64 = 4.0;
+const BURST_CALM: f64 = 0.25;
+const BURST_MEAN_BOOST_S: f64 = 20.0;
+const BURST_MEAN_CALM_S: f64 = 60.0;
+const CHURN_FRACTION: f64 = 0.25;
+const CHURN_PERIOD_S: f64 = 120.0;
+const CHURN_DOWN_FRACTION: f64 = 0.5;
+const LINKFADE_FLOOR: f64 = 0.1;
+const LINKFADE_PERIOD_S: f64 = 240.0;
+
+/// Most stages one composition may carry (bounds the per-stage RNG
+/// substream range; see [`crate::dynamics`]).
+pub const MAX_STAGES: usize = 8;
+
+/// A named time-varying stream-dynamics scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DynamicsPreset {
+    /// No modulation: rates, links and membership stay whatever the
+    /// heterogeneity layer sampled. The backwards-compatible default —
+    /// reproduces the pre-dynamics engine's timings bitwise.
+    Static,
+    /// Sinusoidal day/night cycle: the rate factor is
+    /// `1 + amplitude·sin(2π(t/period + φ_i))` with a per-device phase
+    /// `φ_i` drawn from the device's dynamics substream.
+    Diurnal { amplitude: f64, period_s: f64 },
+    /// Two-state Markov-modulated rate: each device alternates between a
+    /// `boost`× and a `calm`× regime with exponential sojourn times
+    /// (means `mean_boost_s` / `mean_calm_s`) drawn from its own Pcg64
+    /// substream.
+    Burst { boost: f64, calm: f64, mean_boost_s: f64, mean_calm_s: f64 },
+    /// Device churn: a `fraction` of devices flap deterministically —
+    /// down for `down_fraction` of each `period_s`, staggered by
+    /// per-device phase. A departed device sits rounds out exactly like
+    /// the zero-rate semantics; on rejoin it picks up the current global
+    /// model (parameters are shared in the synchronous engine).
+    Churn { fraction: f64, period_s: f64, down_fraction: f64 },
+    /// Link fade: every device's uplink/downlink factor breathes
+    /// sinusoidally between 1 and `floor` with per-device phase.
+    LinkFade { floor: f64, period_s: f64 },
+    /// Replay per-device piecewise-constant rate/bandwidth factors from
+    /// a CSV/JSON trace file.
+    Trace { path: PathBuf },
+    /// Product of stages: rate/link factors multiply, membership gates
+    /// AND (`burst:4+churn:0.25`).
+    Compose(Vec<DynamicsPreset>),
+}
+
+impl Default for DynamicsPreset {
+    fn default() -> Self {
+        DynamicsPreset::Static
+    }
+}
+
+impl DynamicsPreset {
+    /// Scenario family name (the CLI spelling, without parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DynamicsPreset::Static => "static",
+            DynamicsPreset::Diurnal { .. } => "diurnal",
+            DynamicsPreset::Burst { .. } => "burst",
+            DynamicsPreset::Churn { .. } => "churn",
+            DynamicsPreset::LinkFade { .. } => "linkfade",
+            DynamicsPreset::Trace { .. } => "trace",
+            DynamicsPreset::Compose(_) => "compose",
+        }
+    }
+
+    /// Whether this preset is the identity modulation (no process ever
+    /// moves a rate, link or membership bit).
+    pub fn is_static(&self) -> bool {
+        match self {
+            DynamicsPreset::Static => true,
+            DynamicsPreset::Compose(stages) => stages.iter().all(|s| s.is_static()),
+            _ => false,
+        }
+    }
+
+    /// The scenarios the dynamics harness sweeps (`repro exp dynamics`).
+    pub fn sweep() -> Vec<DynamicsPreset> {
+        vec![
+            DynamicsPreset::Static,
+            DynamicsPreset::Diurnal { amplitude: 0.5, period_s: 120.0 },
+            DynamicsPreset::Burst {
+                boost: BURST_BOOST,
+                calm: BURST_CALM,
+                mean_boost_s: BURST_MEAN_BOOST_S,
+                mean_calm_s: BURST_MEAN_CALM_S,
+            },
+            DynamicsPreset::Churn {
+                fraction: CHURN_FRACTION,
+                period_s: CHURN_PERIOD_S,
+                down_fraction: CHURN_DOWN_FRACTION,
+            },
+        ]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            DynamicsPreset::Static => {}
+            DynamicsPreset::Diurnal { amplitude, period_s } => {
+                ensure!(
+                    (0.0..=1.0).contains(amplitude),
+                    "diurnal amplitude in [0,1] (factor must stay ≥ 0)"
+                );
+                ensure!(*period_s > 0.0 && period_s.is_finite(), "diurnal period > 0");
+            }
+            DynamicsPreset::Burst { boost, calm, mean_boost_s, mean_calm_s } => {
+                ensure!(*boost > 0.0 && boost.is_finite(), "burst boost > 0");
+                ensure!(*calm >= 0.0 && calm.is_finite(), "burst calm ≥ 0");
+                ensure!(
+                    *mean_boost_s > 0.0 && mean_boost_s.is_finite(),
+                    "burst mean boost sojourn > 0"
+                );
+                ensure!(
+                    *mean_calm_s > 0.0 && mean_calm_s.is_finite(),
+                    "burst mean calm sojourn > 0"
+                );
+            }
+            DynamicsPreset::Churn { fraction, period_s, down_fraction } => {
+                ensure!((0.0..=1.0).contains(fraction), "churn fraction in [0,1]");
+                ensure!(*period_s > 0.0 && period_s.is_finite(), "churn period > 0");
+                ensure!(
+                    (0.0..1.0).contains(down_fraction),
+                    "churn down fraction in [0,1) (a device must come back)"
+                );
+            }
+            DynamicsPreset::LinkFade { floor, period_s } => {
+                ensure!(
+                    *floor > 0.0 && *floor <= 1.0,
+                    "linkfade floor in (0,1] (links never vanish entirely)"
+                );
+                ensure!(*period_s > 0.0 && period_s.is_finite(), "linkfade period > 0");
+            }
+            DynamicsPreset::Trace { path } => {
+                ensure!(!path.as_os_str().is_empty(), "trace path must be non-empty");
+            }
+            DynamicsPreset::Compose(stages) => {
+                ensure!(!stages.is_empty(), "compose needs at least one stage");
+                ensure!(
+                    stages.len() <= MAX_STAGES,
+                    "at most {MAX_STAGES} composed dynamics stages"
+                );
+                for s in stages {
+                    ensure!(
+                        !matches!(s, DynamicsPreset::Compose(_)),
+                        "dynamics compositions do not nest"
+                    );
+                    s.validate()?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Append `:param` spellings up to the last value that differs from its
+/// default (params are positional, so earlier defaults must be printed
+/// once a later knob is non-default).
+fn fmt_params(f: &mut std::fmt::Formatter<'_>, params: &[(f64, f64)]) -> std::fmt::Result {
+    let last = params
+        .iter()
+        .rposition(|(value, default)| value != default)
+        .map_or(0, |i| i + 1);
+    for (value, _) in &params[..last] {
+        write!(f, ":{value}")?;
+    }
+    Ok(())
+}
+
+impl std::fmt::Display for DynamicsPreset {
+    /// The parseable spelling: `name[:param...]` stages joined with `+`;
+    /// trailing default knobs stay off the label so the CLI spelling and
+    /// the label coincide and `to_string().parse()` restores the preset.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DynamicsPreset::Static => f.write_str(self.name()),
+            DynamicsPreset::Diurnal { amplitude, period_s } => {
+                f.write_str(self.name())?;
+                fmt_params(
+                    f,
+                    &[(*amplitude, DIURNAL_AMPLITUDE), (*period_s, DIURNAL_PERIOD_S)],
+                )
+            }
+            DynamicsPreset::Burst { boost, calm, mean_boost_s, mean_calm_s } => {
+                f.write_str(self.name())?;
+                fmt_params(
+                    f,
+                    &[
+                        (*boost, BURST_BOOST),
+                        (*calm, BURST_CALM),
+                        (*mean_boost_s, BURST_MEAN_BOOST_S),
+                        (*mean_calm_s, BURST_MEAN_CALM_S),
+                    ],
+                )
+            }
+            DynamicsPreset::Churn { fraction, period_s, down_fraction } => {
+                f.write_str(self.name())?;
+                fmt_params(
+                    f,
+                    &[
+                        (*fraction, CHURN_FRACTION),
+                        (*period_s, CHURN_PERIOD_S),
+                        (*down_fraction, CHURN_DOWN_FRACTION),
+                    ],
+                )
+            }
+            DynamicsPreset::LinkFade { floor, period_s } => {
+                f.write_str(self.name())?;
+                fmt_params(f, &[(*floor, LINKFADE_FLOOR), (*period_s, LINKFADE_PERIOD_S)])
+            }
+            DynamicsPreset::Trace { path } => write!(f, "trace:{}", path.display()),
+            DynamicsPreset::Compose(stages) => {
+                for (i, s) in stages.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str("+")?;
+                    }
+                    write!(f, "{s}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+fn parse_stage(s: &str) -> Result<DynamicsPreset> {
+    // `trace:` takes the rest verbatim (paths may contain ':').
+    if let Some(path) = s.strip_prefix("trace:") {
+        return Ok(DynamicsPreset::Trace { path: PathBuf::from(path) });
+    }
+    let mut parts = s.split(':');
+    let name = parts.next().unwrap_or_default();
+    let args: Vec<&str> = parts.collect();
+    let param = |idx: usize, default: f64| -> Result<f64> {
+        match args.get(idx) {
+            None => Ok(default),
+            Some(a) => a
+                .parse()
+                .map_err(|e| anyhow::anyhow!("invalid --dynamics parameter {a:?}: {e}")),
+        }
+    };
+    let arity = |max: usize| -> Result<()> {
+        ensure!(
+            args.len() <= max,
+            "too many ':' parameters in dynamics stage {s:?}"
+        );
+        Ok(())
+    };
+    Ok(match name.to_lowercase().as_str() {
+        "static" | "none" => {
+            arity(0)?;
+            DynamicsPreset::Static
+        }
+        "diurnal" => {
+            arity(2)?;
+            DynamicsPreset::Diurnal {
+                amplitude: param(0, DIURNAL_AMPLITUDE)?,
+                period_s: param(1, DIURNAL_PERIOD_S)?,
+            }
+        }
+        "burst" => {
+            arity(4)?;
+            DynamicsPreset::Burst {
+                boost: param(0, BURST_BOOST)?,
+                calm: param(1, BURST_CALM)?,
+                mean_boost_s: param(2, BURST_MEAN_BOOST_S)?,
+                mean_calm_s: param(3, BURST_MEAN_CALM_S)?,
+            }
+        }
+        "churn" => {
+            arity(3)?;
+            DynamicsPreset::Churn {
+                fraction: param(0, CHURN_FRACTION)?,
+                period_s: param(1, CHURN_PERIOD_S)?,
+                down_fraction: param(2, CHURN_DOWN_FRACTION)?,
+            }
+        }
+        "linkfade" | "link-fade" | "fade" => {
+            arity(2)?;
+            DynamicsPreset::LinkFade {
+                floor: param(0, LINKFADE_FLOOR)?,
+                period_s: param(1, LINKFADE_PERIOD_S)?,
+            }
+        }
+        other => bail!(
+            "unknown dynamics preset {other:?} \
+             (static|diurnal[:amp[:period]]|burst[:boost[:calm[:mean_on[:mean_off]]]]|\
+             churn[:frac[:period[:down]]]|linkfade[:floor[:period]]|trace:PATH, \
+             stages joined with '+')"
+        ),
+    })
+}
+
+impl std::str::FromStr for DynamicsPreset {
+    type Err = anyhow::Error;
+
+    /// Parse `stage[+stage...]` — e.g. `diurnal:0.5`, `burst:4+churn:0.25`,
+    /// `trace:traces/campus.csv`. A single stage parses to itself; multiple
+    /// stages to [`DynamicsPreset::Compose`].
+    fn from_str(s: &str) -> Result<Self> {
+        let stages: Vec<DynamicsPreset> = s
+            .split('+')
+            .map(parse_stage)
+            .collect::<Result<_>>()?;
+        let preset = match stages.len() {
+            0 => bail!("empty dynamics preset"),
+            1 => stages.into_iter().next().unwrap(),
+            _ => DynamicsPreset::Compose(stages),
+        };
+        preset.validate()?;
+        Ok(preset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_cli_spellings() {
+        assert_eq!("static".parse::<DynamicsPreset>().unwrap(), DynamicsPreset::Static);
+        assert_eq!(
+            "diurnal:0.5".parse::<DynamicsPreset>().unwrap(),
+            DynamicsPreset::Diurnal { amplitude: 0.5, period_s: DIURNAL_PERIOD_S }
+        );
+        assert_eq!(
+            "burst:4:0.25:20:60".parse::<DynamicsPreset>().unwrap(),
+            DynamicsPreset::Burst { boost: 4.0, calm: 0.25, mean_boost_s: 20.0, mean_calm_s: 60.0 }
+        );
+        assert_eq!(
+            "churn".parse::<DynamicsPreset>().unwrap(),
+            DynamicsPreset::Churn { fraction: 0.25, period_s: 120.0, down_fraction: 0.5 }
+        );
+        assert_eq!(
+            "trace:traces/campus.csv".parse::<DynamicsPreset>().unwrap(),
+            DynamicsPreset::Trace { path: PathBuf::from("traces/campus.csv") }
+        );
+        assert!("diurnal:1.5".parse::<DynamicsPreset>().is_err()); // amplitude > 1
+        assert!("churn:0.5:120:1.0".parse::<DynamicsPreset>().is_err()); // never rejoins
+        assert!("warp-drive".parse::<DynamicsPreset>().is_err());
+        assert!("burst:abc".parse::<DynamicsPreset>().is_err());
+        assert!("static:1".parse::<DynamicsPreset>().is_err());
+    }
+
+    #[test]
+    fn composition_parses_and_validates() {
+        let p: DynamicsPreset = "burst:4+churn:0.25".parse().unwrap();
+        match &p {
+            DynamicsPreset::Compose(stages) => {
+                assert_eq!(stages.len(), 2);
+                assert_eq!(stages[0].name(), "burst");
+                assert_eq!(stages[1].name(), "churn");
+            }
+            other => panic!("expected compose, got {other:?}"),
+        }
+        assert!(!p.is_static());
+        assert!("static+static".parse::<DynamicsPreset>().unwrap().is_static());
+        let too_many = vec!["static"; MAX_STAGES + 1].join("+");
+        assert!(too_many.parse::<DynamicsPreset>().is_err());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let non_defaults = [
+            DynamicsPreset::Diurnal { amplitude: 0.3, period_s: 60.0 },
+            DynamicsPreset::Burst { boost: 8.0, calm: 0.25, mean_boost_s: 20.0, mean_calm_s: 5.0 },
+            DynamicsPreset::Churn { fraction: 0.5, period_s: 120.0, down_fraction: 0.25 },
+            DynamicsPreset::LinkFade { floor: 0.5, period_s: 240.0 },
+            DynamicsPreset::Trace { path: PathBuf::from("t.csv") },
+            DynamicsPreset::Compose(vec![
+                DynamicsPreset::Burst {
+                    boost: 4.0,
+                    calm: 0.25,
+                    mean_boost_s: 20.0,
+                    mean_calm_s: 60.0,
+                },
+                DynamicsPreset::Churn { fraction: 0.25, period_s: 120.0, down_fraction: 0.5 },
+            ]),
+        ];
+        for p in DynamicsPreset::sweep().into_iter().chain(non_defaults) {
+            let back: DynamicsPreset = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{p}");
+        }
+        // trailing default knobs stay off the label...
+        assert_eq!(
+            DynamicsPreset::Burst { boost: 8.0, calm: 0.25, mean_boost_s: 20.0, mean_calm_s: 60.0 }
+                .to_string(),
+            "burst:8"
+        );
+        // ...but earlier defaults print once a later knob is non-default
+        assert_eq!(
+            DynamicsPreset::Churn { fraction: 0.25, period_s: 120.0, down_fraction: 0.25 }
+                .to_string(),
+            "churn:0.25:120:0.25"
+        );
+        assert_eq!(
+            DynamicsPreset::Compose(vec![
+                DynamicsPreset::Burst {
+                    boost: 4.0,
+                    calm: 0.25,
+                    mean_boost_s: 20.0,
+                    mean_calm_s: 60.0,
+                },
+                DynamicsPreset::Churn { fraction: 0.25, period_s: 120.0, down_fraction: 0.5 },
+            ])
+            .to_string(),
+            "burst+churn"
+        );
+    }
+
+    #[test]
+    fn static_identity_detection() {
+        assert!(DynamicsPreset::Static.is_static());
+        assert!(DynamicsPreset::default().is_static());
+        assert!(!DynamicsPreset::Diurnal { amplitude: 0.0, period_s: 240.0 }.is_static());
+        for p in DynamicsPreset::sweep().into_iter().skip(1) {
+            assert!(!p.is_static(), "{p}");
+        }
+    }
+}

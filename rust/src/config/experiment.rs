@@ -5,6 +5,7 @@ use std::path::PathBuf;
 use anyhow::ensure;
 
 use super::cluster::ClusterProfile;
+use super::dynamics::DynamicsPreset;
 use super::hetero::HeteroPreset;
 use super::presets::StreamPreset;
 use crate::buffer::BufferPolicy;
@@ -125,6 +126,10 @@ pub struct ExperimentConfig {
     /// profiles are sampled from this preset (`k80-homogeneous` default
     /// reproduces the paper's flat testbed exactly).
     pub hetero: HeteroPreset,
+    /// Stream-dynamics scenario: time-varying rate/bandwidth/membership
+    /// processes layered multiplicatively on the sampled profiles
+    /// (`static` default reproduces frozen-profile timings bitwise).
+    pub dynamics: DynamicsPreset,
     /// Per-round multiplicative jitter std on device rates (intra-device
     /// heterogeneity, §II-A; 0 = constant rates).
     pub rate_jitter: f64,
@@ -182,6 +187,7 @@ impl ExperimentConfig {
         ensure!(self.base_global_batch > 0.0, "base_global_batch > 0");
         ensure!(self.rate_jitter >= 0.0, "rate_jitter ≥ 0");
         self.hetero.validate()?;
+        self.dynamics.validate()?;
         if let Some(c) = &self.compression {
             c.validate()?;
         }
@@ -219,6 +225,7 @@ impl ExperimentBuilder {
                 seed: 42,
                 preset: StreamPreset::S1,
                 hetero: HeteroPreset::K80Homogeneous,
+                dynamics: DynamicsPreset::Static,
                 rate_jitter: 0.0,
                 label_map: LabelMap::Iid,
                 mode: TrainMode::Scadles,
@@ -271,6 +278,11 @@ impl ExperimentBuilder {
     /// Systems-heterogeneity scenario (see [`HeteroPreset`]).
     pub fn hetero(mut self, h: HeteroPreset) -> Self {
         self.cfg.hetero = h;
+        self
+    }
+    /// Stream-dynamics scenario (see [`DynamicsPreset`]).
+    pub fn dynamics(mut self, d: DynamicsPreset) -> Self {
+        self.cfg.dynamics = d;
         self
     }
     pub fn rate_jitter(mut self, j: f64) -> Self {
@@ -417,6 +429,22 @@ mod tests {
         let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
         assert_eq!(d.hetero, HeteroPreset::K80Homogeneous);
         assert_eq!(d.cluster_profile().scenario, "k80-homogeneous");
+    }
+
+    #[test]
+    fn dynamics_preset_flows_through_builder_and_validates() {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .dynamics("burst:4+churn:0.25".parse().unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(cfg.dynamics.to_string(), "burst+churn");
+        // default stays the bitwise-identical static layer
+        let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
+        assert!(d.dynamics.is_static());
+        // invalid dynamics are rejected at build time
+        let mut bad = d.clone();
+        bad.dynamics = DynamicsPreset::Diurnal { amplitude: 2.0, period_s: 60.0 };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! Configuration: Table I stream presets, virtual cluster + heterogeneity
-//! scenarios, experiments.
+//! scenarios, stream-dynamics presets, experiments.
 
 pub mod cluster;
+pub mod dynamics;
 pub mod experiment;
 pub mod hetero;
 pub mod presets;
 
 pub use cluster::{ClusterProfile, DeviceProfile, VirtualCost};
+pub use dynamics::DynamicsPreset;
 pub use experiment::{CompressionConfig, ExperimentConfig, InjectionConfig, TrainMode};
 pub use hetero::HeteroPreset;
 pub use presets::StreamPreset;

@@ -9,7 +9,8 @@ use crate::stream::{Broker, Consumer, Producer, ProducerConfig, Record};
 /// Owns its stream end-to-end: the topic on the broker, the producer
 /// filling it at S⁽ⁱ⁾ samples/s (virtual time), and the consumer the
 /// training loop polls. `rate` can jitter per round (intra-device
-/// heterogeneity, §II-A).
+/// heterogeneity, §II-A); the stream-dynamics layer then modulates the
+/// round's *effective* rate and membership via [`Device::apply_dynamics`].
 #[derive(Debug)]
 pub struct Device {
     pub id: usize,
@@ -17,8 +18,14 @@ pub struct Device {
     pub base_rate: f64,
     /// Rate in effect this round (= base_rate unless jittered).
     pub rate: f64,
+    /// Planning rate after dynamics: `rate × rate_factor`, gated to 0
+    /// while the device is churned out.
+    pub effective_rate: f64,
+    /// Whether the device is a cluster member this round (churn).
+    pub active: bool,
     /// Labels this device's stream carries (non-IID skew).
     pub labels: Vec<u32>,
+    policy: BufferPolicy,
     producer: Producer,
     consumer: Consumer,
     rng: Pcg64,
@@ -48,7 +55,10 @@ impl Device {
             id,
             base_rate,
             rate: base_rate,
+            effective_rate: base_rate,
+            active: true,
             labels,
+            policy,
             producer,
             consumer,
             rng: Pcg64::new(seed, 0xDE1C_E000 + id as u64),
@@ -63,6 +73,35 @@ impl Device {
         }
         let f = (1.0 + jitter_std * self.rng.normal()).clamp(0.2, 5.0);
         self.rate = (self.base_rate * f).max(1.0);
+    }
+
+    /// Apply this round's stream dynamics, sampled at the round's
+    /// virtual start time:
+    ///
+    /// * the **producer** is retargeted to the effective inflow
+    ///   `base_rate × rate_factor` (zero while churned out) — the stream
+    ///   actually speeds up, slows down, or stops;
+    /// * **Truncation retention** is re-derived from that effective
+    ///   inflow, so the window keeps ≈ 1 s of the stream as it actually
+    ///   flows (floored at one record when the rate hits 0 — the buffer
+    ///   drains, nothing underflows);
+    /// * the **planning rate** [`Self::effective_rate`] becomes the
+    ///   jittered rate × factor (gated to 0 when inactive), which is
+    ///   what `RoundPlan` batches and waits against.
+    ///
+    /// With the identity modulation (`rate_factor = 1`, `active`) every
+    /// value above is bitwise what the pre-dynamics engine used, which
+    /// is how `--dynamics static` stays a bitwise no-op.
+    pub fn apply_dynamics(&mut self, rate_factor: f64, active: bool) {
+        debug_assert!(rate_factor >= 0.0 && rate_factor.is_finite());
+        let gate = if active { 1.0 } else { 0.0 };
+        self.active = active;
+        self.effective_rate = self.rate * rate_factor * gate;
+        let inflow = self.base_rate * rate_factor * gate;
+        self.producer.set_rate(inflow);
+        self.consumer
+            .topic()
+            .set_retention(self.policy.retention(inflow));
     }
 
     /// Advance this device's stream by `dt` virtual seconds.
@@ -136,5 +175,75 @@ mod tests {
         d.jitter_rate(0.5);
         d.jitter_rate(0.0);
         assert_eq!(d.rate, 100.0);
+    }
+
+    #[test]
+    fn dynamics_modulate_inflow_and_planning_rate() {
+        let mut d = device(100.0, BufferPolicy::Persistence);
+        d.apply_dynamics(0.25, true);
+        assert_eq!(d.effective_rate, 25.0);
+        assert!(d.active);
+        d.advance_stream(2.0);
+        assert_eq!(d.backlog(), 50, "producer follows the effective rate");
+        d.apply_dynamics(4.0, true);
+        d.advance_stream(1.0);
+        assert_eq!(d.backlog(), 50 + 400);
+    }
+
+    #[test]
+    fn identity_dynamics_are_a_no_op() {
+        let mut a = device(38.0, BufferPolicy::Truncation);
+        let mut b = device(38.0, BufferPolicy::Truncation);
+        b.apply_dynamics(1.0, true);
+        a.advance_stream(3.0);
+        b.advance_stream(3.0);
+        assert_eq!(a.backlog(), b.backlog());
+        assert_eq!(a.effective_rate.to_bits(), b.effective_rate.to_bits());
+        assert_eq!(
+            a.consumer.topic().retention(),
+            b.consumer.topic().retention()
+        );
+    }
+
+    #[test]
+    fn churned_out_device_stops_streaming_and_drains() {
+        // truncation at nominal 50/s, then the device departs: inflow
+        // stops, retention floors at one record, polls drain the backlog
+        let mut d = device(50.0, BufferPolicy::Truncation);
+        d.advance_stream(1.0);
+        assert_eq!(d.backlog(), 50);
+        d.apply_dynamics(0.0, false);
+        assert_eq!(d.effective_rate, 0.0);
+        assert!(!d.active);
+        // retention narrowed to the 1-record floor: backlog truncates now
+        assert!(d.backlog() <= 1, "backlog {}", d.backlog());
+        d.advance_stream(10.0); // no inflow while departed
+        assert!(d.backlog() <= 1);
+        let _ = d.poll(64);
+        assert_eq!(d.backlog(), 0);
+        // and nothing panics when the stream stays dead
+        d.advance_stream(10.0);
+        assert_eq!(d.poll(64).len(), 0);
+    }
+
+    #[test]
+    fn truncation_window_tracks_effective_rate_across_rounds() {
+        use crate::stream::Retention;
+        let mut d = device(100.0, BufferPolicy::Truncation);
+        d.apply_dynamics(3.0, true); // rising rate → wider window
+        assert_eq!(
+            d.consumer.topic().retention(),
+            Retention::Truncate { keep: 300 }
+        );
+        d.advance_stream(2.0);
+        assert!(d.backlog() <= 300);
+        assert!(d.backlog() > 100, "window must cover the boosted second");
+        d.apply_dynamics(0.1, true); // falling rate → narrow window
+        assert_eq!(
+            d.consumer.topic().retention(),
+            Retention::Truncate { keep: 10 }
+        );
+        d.advance_stream(1.0);
+        assert!(d.backlog() <= 10);
     }
 }

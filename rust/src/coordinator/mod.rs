@@ -42,6 +42,18 @@
 //! Profile sampling uses fixed per-device `Pcg64` substreams, so the
 //! bitwise-determinism contract holds for every scenario.
 //!
+//! **Stream dynamics:** on top of the static profiles, a
+//! [`crate::dynamics::StreamDynamics`] engine (from
+//! [`crate::config::DynamicsPreset`]: `static` default, `diurnal`,
+//! `burst`, `churn`, `linkfade`, `trace:PATH`, composable with `+`) is
+//! sampled once per round at the round's virtual start time. It
+//! retargets each device's producer and Truncation window to the
+//! *effective* rate, gates churned-out devices to a full sit-out, and
+//! prices gradient sync over the participating devices' slowest
+//! *effective* link. All processes are pure in `(seed, device, t)`, so
+//! determinism holds at every pool width, and the `static` preset
+//! reproduces the frozen-profile engine bitwise.
+//!
 //! [`backend::Backend`] abstracts the execution substrate: the real PJRT
 //! [`crate::runtime::ModelRuntime`] or a deterministic quadratic
 //! [`backend::MockBackend`] used by unit/property tests.

@@ -16,13 +16,35 @@
 //!   [`DeviceProfile`](crate::config::DeviceProfile) memory budget
 //!   admits (the cap wins even over `b_min`: a batch that doesn't fit
 //!   can't be trained). Unconstrained devices are unaffected.
-//! * **Zero-rate semantics** — a device whose effective rate is zero and
-//!   whose backlog can't cover its batch **sits the round out**
+//! * **Zero-rate semantics** — a device whose effective rate is zero —
+//!   or so low that filling its batch would exceed [`MAX_FILL_WAIT_S`] —
+//!   and whose backlog can't cover its batch **sits the round out**
 //!   (`batch = 0`, `wait_s = 0`) instead of stalling the barrier with an
-//!   effectively-infinite wait.
+//!   effectively-unbounded wait.
+//! * **Churn semantics** — a device the dynamics layer marks inactive
+//!   has *left the cluster*: it sits the round out unconditionally, even
+//!   if its buffer could cover a batch (nobody is there to train on it).
+//!   On rejoin it plans normally against the current global model — the
+//!   synchronous engine keeps parameters on the coordinator, so no
+//!   catch-up transfer is modelled beyond the missed rounds.
+//!
+//! The `rates` the plan sees are the **effective** per-device rates for
+//! the round — nominal × jitter × dynamics factor, sampled at the
+//! round's virtual start time.
 
 use crate::config::{ClusterProfile, ExperimentConfig, TrainMode};
 use crate::runtime::BucketLadder;
+
+/// Longest a device may hold the synchronous barrier waiting for its own
+/// stream to fill its batch. A device that cannot gather its batch
+/// within this horizon sits the round out exactly like a stalled
+/// stream — stream dynamics can push effective rates arbitrarily close
+/// to (but not exactly) zero, and `deficit / rate` would otherwise stall
+/// every healthy device for unbounded virtual time. The horizon is far
+/// above any wait a static configuration produces (paper-preset rates
+/// are ≥ 1 sample/s, so static waits top out at `ddl_batch`/`b_min`
+/// seconds), so frozen-profile runs are bitwise unaffected.
+pub const MAX_FILL_WAIT_S: f64 = 120.0;
 
 /// One device's plan for the upcoming round.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -50,22 +72,37 @@ pub struct RoundPlan {
 }
 
 impl RoundPlan {
-    /// Build the plan from current device rates and backlogs; `cluster`
-    /// supplies each device's memory ceiling and compute estimate.
+    /// Build the plan from current **effective** device rates, backlogs
+    /// and membership; `cluster` supplies each device's memory ceiling
+    /// and compute estimate, `active` which devices are cluster members
+    /// this round (churn — inactive devices sit out unconditionally).
     pub fn plan(
         cfg: &ExperimentConfig,
         ladder: &BucketLadder,
         cluster: &ClusterProfile,
         rates: &[f64],
         backlogs: &[usize],
+        active: &[bool],
     ) -> RoundPlan {
         assert_eq!(rates.len(), backlogs.len());
+        assert_eq!(rates.len(), active.len());
         assert_eq!(rates.len(), cluster.n(), "one profile per device");
         let b_max = cfg.b_max.min(ladder.max());
         let b_min = cfg.b_min.max(ladder.min().min(cfg.b_min)); // honor config floor
         let mut devices = Vec::with_capacity(rates.len());
         let mut wait = 0.0f64;
         for (i, (&rate, &backlog)) in rates.iter().zip(backlogs).enumerate() {
+            if !active[i] {
+                // departed device: out of the round regardless of backlog
+                devices.push(DevicePlan {
+                    device: i,
+                    batch: 0,
+                    bucket: ladder.fit_clamped(0),
+                    wait_s: 0.0,
+                    est_compute_s: 0.0,
+                });
+                continue;
+            }
             let want = match cfg.mode {
                 // ScaDLES: one second of this device's stream, clamped.
                 TrainMode::Scadles => (rate.round() as usize).clamp(b_min, b_max),
@@ -75,13 +112,16 @@ impl RoundPlan {
             // the device's memory budget is a hard ceiling
             let want = want.min(cluster.batch_cap(i));
             let deficit = want.saturating_sub(backlog);
+            let fill_wait = if rate > 0.0 { deficit as f64 / rate } else { f64::INFINITY };
             let (batch, wait_s) = if deficit == 0 {
                 (want, 0.0)
-            } else if rate > 0.0 {
-                (want, deficit as f64 / rate)
+            } else if fill_wait <= MAX_FILL_WAIT_S {
+                (want, fill_wait)
             } else {
-                // stalled stream, nothing buffered: sit out rather than
-                // wait forever on a barrier no data will release
+                // stalled (or near-stalled: dynamics can leave a trickle
+                // of effective rate) stream that can't fill the batch
+                // within the horizon: sit out rather than hold the
+                // barrier for unbounded virtual time
                 (0, 0.0)
             };
             wait = wait.max(wait_s);
@@ -120,6 +160,11 @@ mod tests {
         HeteroPreset::K80Homogeneous.sample_cluster("mlp_c10", n, 0)
     }
 
+    /// All-devices-present membership slice.
+    fn up(n: usize) -> Vec<bool> {
+        vec![true; n]
+    }
+
     fn cfg(mode: TrainMode) -> ExperimentConfig {
         ExperimentConfig::builder("mlp_c10")
             .devices(3)
@@ -138,6 +183,7 @@ mod tests {
             &cluster(3),
             &[38.0, 300.0, 5.0],
             &[1000, 1000, 1000],
+            &up(3),
         );
         assert_eq!(p.batches(), vec![38, 256, 8]); // 300 clamped to 256, 5 to b_min 8
         assert_eq!(p.devices[0].bucket, 64);
@@ -154,6 +200,7 @@ mod tests {
             &cluster(2),
             &[38.0, 300.0],
             &[0, 0],
+            &up(2),
         );
         for d in &p.devices {
             assert!((d.wait_s - 1.0).abs() < 0.2, "{d:?}");
@@ -170,6 +217,7 @@ mod tests {
             &cluster(2),
             &[300.0, 5.0],
             &[0, 0],
+            &up(2),
         );
         assert_eq!(p.batches(), vec![64, 64]);
         assert!((p.wait_s - 12.8).abs() < 0.1, "wait {}", p.wait_s);
@@ -183,6 +231,7 @@ mod tests {
             &cluster(2),
             &[5.0, 5.0],
             &[64, 64],
+            &up(2),
         );
         assert_eq!(p.wait_s, 0.0);
     }
@@ -190,7 +239,7 @@ mod tests {
     #[test]
     fn partial_backlog_waits_for_deficit_only() {
         let p =
-            RoundPlan::plan(&cfg(TrainMode::Ddl), &ladder(), &cluster(1), &[10.0], &[54]);
+            RoundPlan::plan(&cfg(TrainMode::Ddl), &ladder(), &cluster(1), &[10.0], &[54], &up(1));
         assert!((p.devices[0].wait_s - 1.0).abs() < 1e-9);
     }
 
@@ -203,6 +252,7 @@ mod tests {
                 &cluster(2),
                 &[0.0, 100.0],
                 &[0, 1000],
+                &up(2),
             );
             let dead = p.devices[0];
             assert_eq!(dead.batch, 0, "{mode:?}");
@@ -223,9 +273,64 @@ mod tests {
             &cluster(1),
             &[0.0],
             &[64],
+            &up(1),
         );
         assert_eq!(p.devices[0].batch, 64);
         assert_eq!(p.wait_s, 0.0);
+    }
+
+    #[test]
+    fn near_stalled_stream_sits_out_instead_of_holding_the_barrier() {
+        // dynamics can leave a trickle of effective rate (burst trough,
+        // trace fade-out); filling b=64 at 0.01/s would hold the barrier
+        // 6400 virtual seconds — the device must sit out like a stalled
+        // one instead
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Ddl),
+            &ladder(),
+            &cluster(2),
+            &[0.01, 100.0],
+            &[0, 1000],
+            &up(2),
+        );
+        assert_eq!(p.devices[0].batch, 0);
+        assert_eq!(p.devices[0].wait_s, 0.0);
+        assert_eq!(p.wait_s, 0.0, "barrier must stay free");
+        assert!(p.devices[1].batch > 0);
+        // a slow-but-live stream inside the horizon still waits normally
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Ddl),
+            &ladder(),
+            &cluster(1),
+            &[1.0],
+            &[0],
+            &up(1),
+        );
+        assert_eq!(p.devices[0].batch, 64);
+        assert!((p.devices[0].wait_s - 64.0).abs() < 1e-9);
+        assert!(p.devices[0].wait_s <= MAX_FILL_WAIT_S);
+    }
+
+    #[test]
+    fn churned_out_device_sits_out_even_with_a_full_buffer() {
+        // unlike the zero-rate case, a *departed* device must not train
+        // from its backlog: nobody is there to run the step
+        for mode in [TrainMode::Scadles, TrainMode::Ddl] {
+            let p = RoundPlan::plan(
+                &cfg(mode),
+                &ladder(),
+                &cluster(2),
+                &[100.0, 100.0],
+                &[1000, 1000],
+                &[false, true],
+            );
+            let gone = p.devices[0];
+            assert_eq!(gone.batch, 0, "{mode:?}");
+            assert_eq!(gone.wait_s, 0.0, "{mode:?}");
+            assert_eq!(gone.est_compute_s, 0.0, "{mode:?}");
+            assert!(p.devices[1].batch > 0, "{mode:?}: survivor unaffected");
+            assert_eq!(p.wait_s, 0.0, "{mode:?}: no barrier stall");
+        }
     }
 
     #[test]
@@ -241,6 +346,7 @@ mod tests {
             &c,
             &[300.0, 300.0],
             &[1000, 1000],
+            &up(2),
         );
         assert_eq!(p.devices[0].batch, cap.min(256));
         assert_eq!(p.devices[1].batch, 256, "unconstrained device unaffected");
@@ -256,6 +362,7 @@ mod tests {
             &c,
             &[100.0, 100.0],
             &[64, 64],
+            &up(2),
         );
         assert_eq!(p.devices[0].est_compute_s, c.compute_time(0, 64));
         assert_eq!(p.devices[1].est_compute_s, c.compute_time(1, 64));

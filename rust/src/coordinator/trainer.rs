@@ -27,12 +27,24 @@ use crate::coordinator::lr::{baseline_lr, scaled_lr};
 use crate::coordinator::plan::RoundPlan;
 use crate::coordinator::worker::{for_each_worker, DeviceWorker};
 use crate::data::{EvalSet, Synthetic};
+use crate::dynamics::{effective_ring, DynamicsCounters, StreamDynamics};
 use crate::injection::DataInjector;
-use crate::metrics::{DeviceRoundRow, RoundLog, RunLogger, RunReport, StragglerCause, Timeline};
+use crate::metrics::{
+    DeviceRoundRow, Ewma, RoundLog, RunLogger, RunReport, StragglerCause, Timeline,
+};
 use crate::rng::Pcg64;
 use crate::runtime::Runtime;
 use crate::stream::{Broker, Record};
 use crate::Result;
+
+/// Smoothing for the per-round aggregate effective-rate estimate
+/// (`RoundLog::rate_est`): tracks a step-change in stream rate to within
+/// 10% inside ~10 rounds (metrics::ewma tests).
+const RATE_EST_ALPHA: f64 = 0.3;
+
+/// Virtual seconds a fully idle round costs (all devices churned out):
+/// the coordinator "polls" once a second until somebody rejoins.
+const IDLE_ROUND_S: f64 = 1.0;
 
 /// Full output of a run: the report plus raw logs for figure rendering.
 pub struct TrainerOutput {
@@ -43,6 +55,8 @@ pub struct TrainerOutput {
     pub rates: Vec<f64>,
     /// Per-device per-round rows with straggler attribution.
     pub timeline: Timeline,
+    /// Stream-dynamics counters (churn edges, rate-regime flips).
+    pub dynamics: DynamicsCounters,
 }
 
 /// The L3 coordinator: owns the device shards, model state, policies and
@@ -66,6 +80,11 @@ pub struct Trainer {
     /// Sampled per-device profiles (scenario layer); device `i`'s copy
     /// also lives on its worker.
     cluster: ClusterProfile,
+    /// Time-varying stream dynamics, sampled once per round at the
+    /// round's virtual start time (coordinator thread, device order).
+    dynamics: StreamDynamics,
+    /// EWMA of the cluster's aggregate effective streaming rate.
+    rate_est: Ewma,
     /// Per-device timeline rows (straggler attribution).
     timeline: Timeline,
     /// The most recent round's timing breakdown.
@@ -121,10 +140,15 @@ impl Trainer {
             .injection
             .map(|ic| DataInjector::new(ic, cfg.seed ^ 0xBEEF));
         let n = cfg.devices;
+        let dynamics = StreamDynamics::from_preset(&cfg.dynamics, n, cfg.seed)?;
         let mut label = format!("{}-{}", cfg.mode.name(), cfg.preset.name());
         if cfg.hetero != HeteroPreset::K80Homogeneous {
             label.push('-');
             label.push_str(&cluster.scenario);
+        }
+        if !dynamics.is_static() {
+            label.push('-');
+            label.push_str(dynamics.label());
         }
         let logs = RunLogger::new(label).with_echo(cfg.echo_every);
         let threads = resolve_threads(cfg.worker_threads, n);
@@ -144,6 +168,8 @@ impl Trainer {
             logs,
             cnc: CncCounter::new(),
             cluster,
+            dynamics,
+            rate_est: Ewma::new(RATE_EST_ALPHA),
             timeline: Timeline::new(),
             last_timing: None,
             round: 0,
@@ -173,6 +199,11 @@ impl Trainer {
     /// The sampled per-device cluster profiles this run is priced on.
     pub fn cluster(&self) -> &ClusterProfile {
         &self.cluster
+    }
+
+    /// The stream-dynamics engine (most recent frame + counters).
+    pub fn dynamics(&self) -> &StreamDynamics {
+        &self.dynamics
     }
 
     /// Timing breakdown of the most recent round (per-device phases +
@@ -233,15 +264,31 @@ impl Trainer {
             w.device.jitter_rate(self.cfg.rate_jitter);
         }
 
-        // -- 2. plan batches + waits (per-device profiles cap batches) ----
-        let rates: Vec<f64> = self.workers.iter().map(|w| w.device.rate).collect();
+        // -- 1b. stream dynamics: sample every device's effective rate,
+        //        link factors and membership at the round's virtual start
+        //        time (coordinator thread, device order — pool-width
+        //        independent), then retarget producers and retention
+        self.dynamics.sample(self.clock.now());
+        {
+            let frame = self.dynamics.frame();
+            for (w, f) in self.workers.iter_mut().zip(frame) {
+                w.device.apply_dynamics(f.rate_factor, f.active);
+            }
+        }
+
+        // -- 2. plan batches + waits (per-device profiles cap batches;
+        //       effective rates drive batching, churn forces sit-outs) ----
+        let rates: Vec<f64> = self.workers.iter().map(|w| w.device.effective_rate).collect();
+        let active: Vec<bool> = self.workers.iter().map(|w| w.device.active).collect();
         let backlogs: Vec<usize> = self.workers.iter().map(|w| w.device.backlog()).collect();
+        let rate_est = self.rate_est.update(rates.iter().sum());
         let plan = RoundPlan::plan(
             &self.cfg,
             self.backend.ladder(),
             &self.cluster,
             &rates,
             &backlogs,
+            &active,
         );
 
         // -- 3+4. wait + poll: streams keep flowing while each device ----
@@ -286,7 +333,8 @@ impl Trainer {
 
         let batches: Vec<usize> = self.workers.iter().map(|w| w.out.batch).collect();
         let global_batch: usize = batches.iter().sum();
-        let active = batches.iter().filter(|&&b| b > 0).count() as u64;
+        // devices that actually trained this round (≤ churn-active count)
+        let trained = batches.iter().filter(|&&b| b > 0).count() as u64;
 
         // -- 7. compression: per-shard stats, one global gate per round ---
         //       (Table V's CNC), decision applied back to every shard
@@ -311,7 +359,7 @@ impl Trainer {
                     kept_total += w.out.nnz;
                 }
             }
-            let dense_total = active * d as u64;
+            let dense_total = trained * d as u64;
             let dec = self.scheme.decide(tot_n2, tot_k2, kept_total, dense_total);
             compressed_round = dec.compress;
             floats_sent = dec.floats_sent;
@@ -324,7 +372,7 @@ impl Trainer {
                 w.apply_decision(compress);
             });
         } else {
-            floats_sent = active * d as u64;
+            floats_sent = trained * d as u64;
             self.cnc.record(false, floats_sent, 0);
         }
 
@@ -372,7 +420,10 @@ impl Trainer {
 
         // -- 10. price the round on the virtual clock ---------------------
         //        barrier totals are maxima over the per-device phases;
-        //        sync is throttled by the cluster's slowest link
+        //        sync rings over the *participating* devices through the
+        //        slowest *effective* (dynamics-faded) link — with the
+        //        identity frame this is exactly the cluster's static
+        //        slowest-link pricing, bit for bit
         let per_device: Vec<DevicePhase> = self
             .workers
             .iter()
@@ -384,12 +435,19 @@ impl Trainer {
             })
             .collect();
         let max_compute = per_device.iter().fold(0f64, |m, p| m.max(p.compute_s));
+        let (ring_n, ring_bottleneck, ring_bps) =
+            effective_ring(&self.cluster, self.dynamics.frame());
         let sync_s = if global_batch == 0 {
             0.0
         } else if compressed_round {
-            self.cluster.sparse_sync_time(kept_fraction)
+            let nnz = (self.cluster.paper_params() as f64 * kept_fraction) as u64;
+            self.cluster
+                .network
+                .allreduce_time_slowest(nnz * 8, ring_n, ring_bps)
         } else {
-            self.cluster.dense_sync_time()
+            self.cluster
+                .network
+                .allreduce_time_slowest(self.cluster.paper_params() * 4, ring_n, ring_bps)
         };
         let timing = RoundTiming {
             wait_s: plan.wait_s,
@@ -397,9 +455,15 @@ impl Trainer {
             sync_s,
             injection_s: self.cluster.network.transfer_time(inj_stats.bytes_moved),
             per_device,
-            sync_bottleneck: Some(self.cluster.slowest_link().0),
+            sync_bottleneck: Some(ring_bottleneck),
         };
-        self.clock.advance(timing.total());
+        // A fully idle round (every device churned out or stalled at
+        // zero rate) still costs one virtual second: time must advance
+        // or the membership/rate schedules could never bring a device
+        // back. Unreachable under static dynamics — preset rates are
+        // ≥ 1 sample/s, so some device always waits, trains or syncs.
+        let advance = if timing.total() > 0.0 { timing.total() } else { IDLE_ROUND_S };
+        self.clock.advance(advance);
         // streams keep flowing during compute + sync + injection
         self.advance_streams(timing.compute_s + timing.sync_s + timing.injection_s);
         let (straggler_cause, straggler_device) = timing.straggler();
@@ -410,6 +474,8 @@ impl Trainer {
                 batch: batches[p.device],
                 wait_s: p.wait_s,
                 compute_s: p.compute_s,
+                effective_rate: rates[p.device],
+                active: active[p.device],
                 straggler: straggler_cause != StragglerCause::None
                     && p.device == straggler_device,
                 cause: if straggler_cause != StragglerCause::None
@@ -464,6 +530,8 @@ impl Trainer {
             injection_bytes: inj_stats.bytes_moved,
             straggler_device,
             straggler_cause,
+            active_devices: active.iter().filter(|&&a| a).count(),
+            rate_est,
         };
         self.logs.push(log);
         self.round += 1;
@@ -506,6 +574,7 @@ impl Trainer {
             cnc: self.cnc,
             rates: self.rates(),
             timeline: self.timeline.clone(),
+            dynamics: self.dynamics.counters(),
         }
     }
 
@@ -775,6 +844,213 @@ mod tests {
         cfg.worker_threads = 0;
         let auto = trainer(&cfg).worker_pool_width();
         assert!((1..=4).contains(&auto), "auto width {auto}");
+    }
+
+    #[test]
+    fn static_dynamics_and_identity_modulation_are_bitwise_identical() {
+        // `--dynamics static` (zero stages) must reproduce the
+        // pre-dynamics engine; an *identity* modulation (zero-amplitude
+        // diurnal + zero-fraction churn + floor-1 link fade) runs the
+        // full dynamics path — producer retargeting, retention
+        // re-derivation, effective-ring sync pricing — and must not move
+        // a single bit either. Together these pin the layer as a pure
+        // multiplicative modulation.
+        use crate::config::DynamicsPreset;
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.rate_jitter = 0.2;
+        cfg.buffer_policy = BufferPolicy::Truncation;
+        cfg.compression = Some(CompressionConfig::new(0.1, 0.5).with_error_feedback());
+        let run = |dynamics: DynamicsPreset| {
+            let mut c = cfg.clone();
+            c.dynamics = dynamics;
+            Trainer::with_backend(&c, Box::new(MockBackend::new(64, 10)))
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let fixed = run(DynamicsPreset::Static);
+        let identity = run("diurnal:0+churn:0+linkfade:1".parse().unwrap());
+        assert_eq!(
+            fixed.report.wall_clock_s.to_bits(),
+            identity.report.wall_clock_s.to_bits()
+        );
+        assert_eq!(
+            fixed.report.final_train_loss.to_bits(),
+            identity.report.final_train_loss.to_bits()
+        );
+        assert_eq!(fixed.report.total_floats_sent, identity.report.total_floats_sent);
+        assert_eq!(
+            fixed.report.buffer.peak_samples,
+            identity.report.buffer.peak_samples
+        );
+        for (a, b) in fixed.logs.rounds().iter().zip(identity.logs.rounds()) {
+            assert_eq!(a.wall_clock_s.to_bits(), b.wall_clock_s.to_bits(), "r{}", a.round);
+            assert_eq!(a.global_batch, b.global_batch, "r{}", a.round);
+            assert_eq!(a.rate_est.to_bits(), b.rate_est.to_bits(), "r{}", a.round);
+            assert_eq!(a.active_devices, b.active_devices, "r{}", a.round);
+        }
+        for (a, b) in fixed.timeline.rows().iter().zip(identity.timeline.rows()) {
+            assert_eq!(a.effective_rate.to_bits(), b.effective_rate.to_bits());
+            assert_eq!(a.wait_s.to_bits(), b.wait_s.to_bits());
+            assert_eq!(a.active, b.active);
+        }
+        assert_eq!(identity.dynamics, crate::dynamics::DynamicsCounters::default());
+    }
+
+    #[test]
+    fn static_round_timing_still_matches_the_flat_formula() {
+        // the dynamics-aware sync path must collapse to the PR 2 pricing
+        // under the default static preset (the acceptance regression)
+        use crate::config::VirtualCost;
+        use crate::simulate::network::NetworkModel;
+        let cfg = base(TrainMode::Scadles);
+        let mut t = trainer(&cfg);
+        t.round().unwrap();
+        let timing = t.last_timing().unwrap();
+        let expect = NetworkModel::paper_5gbps()
+            .gradient_sync_time(VirtualCost::for_model("mlp_c10").paper_params, cfg.devices);
+        assert_eq!(timing.sync_s.to_bits(), expect.to_bits());
+        assert_eq!(timing.sync_bottleneck, Some(t.cluster().slowest_link().0));
+    }
+
+    #[test]
+    fn diurnal_dynamics_modulate_batches_and_rates_over_time() {
+        use crate::config::DynamicsPreset;
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.rounds = 40;
+        cfg.b_min = 1;
+        // fast cycle so several periods fit in a short mock run
+        cfg.dynamics = DynamicsPreset::Diurnal { amplitude: 0.9, period_s: 20.0 };
+        let out = Trainer::with_backend(&cfg, Box::new(MockBackend::new(64, 10)))
+            .unwrap()
+            .run()
+            .unwrap();
+        let (lo, hi) = out.timeline.effective_rate_span();
+        assert!(hi > lo * 2.0, "rates never cycled: {lo}..{hi}");
+        let batches: Vec<usize> =
+            out.logs.rounds().iter().map(|r| r.global_batch).collect();
+        let (bmin, bmax) = (
+            *batches.iter().min().unwrap(),
+            *batches.iter().max().unwrap(),
+        );
+        assert!(bmax > bmin, "global batch never moved: {bmin}..{bmax}");
+        assert!(out.report.final_train_loss.is_finite());
+        // the rate estimate follows the modulation instead of pinning to
+        // the nominal sum
+        let ests: Vec<f64> = out.logs.rounds().iter().map(|r| r.rate_est).collect();
+        let est_spread = ests.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - ests.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(est_spread > 0.0, "rate_est flat");
+    }
+
+    #[test]
+    fn churn_devices_sit_out_and_rejoin_on_the_global_model() {
+        use crate::config::DynamicsPreset;
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.rounds = 40;
+        // everyone flaps: down half of each 30 s period, staggered
+        cfg.dynamics =
+            DynamicsPreset::Churn { fraction: 1.0, period_s: 30.0, down_fraction: 0.5 };
+        let out = Trainer::with_backend(&cfg, Box::new(MockBackend::new(64, 10)))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(out.timeline.inactive_rounds() > 0, "nobody ever churned");
+        assert!(out.dynamics.departures > 0, "{:?}", out.dynamics);
+        assert!(out.dynamics.rejoins > 0, "{:?}", out.dynamics);
+        assert_eq!(
+            out.dynamics.inactive_device_rounds,
+            out.timeline.inactive_rounds(),
+            "engine and timeline must agree on churn"
+        );
+        // membership varies round to round, and training still converges
+        let actives: Vec<usize> =
+            out.logs.rounds().iter().map(|r| r.active_devices).collect();
+        assert!(actives.iter().any(|&a| a < cfg.devices), "{actives:?}");
+        assert!(out.report.final_train_loss.is_finite());
+        // inactive rows carry zero effective rate and batch
+        for row in out.timeline.rows().iter().filter(|r| !r.active) {
+            assert_eq!(row.effective_rate, 0.0);
+            assert_eq!(row.batch, 0);
+        }
+    }
+
+    #[test]
+    fn fully_idle_rounds_tick_the_clock_instead_of_freezing_time() {
+        use crate::config::DynamicsPreset;
+        // near-total churn: most rounds find every device departed. The
+        // clock must still advance every round (the idle tick), or the
+        // churn schedule could never bring anyone back.
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.rounds = 40;
+        cfg.dynamics =
+            DynamicsPreset::Churn { fraction: 1.0, period_s: 5.0, down_fraction: 0.99 };
+        let out = Trainer::with_backend(&cfg, Box::new(MockBackend::new(64, 10)))
+            .unwrap()
+            .run()
+            .unwrap();
+        let mut last = 0.0;
+        let mut idle_rounds = 0;
+        for r in out.logs.rounds() {
+            assert!(r.wall_clock_s > last, "clock froze at round {}", r.round);
+            last = r.wall_clock_s;
+            if r.global_batch == 0 {
+                idle_rounds += 1;
+            }
+        }
+        assert!(idle_rounds > 0, "churn never emptied a round");
+    }
+
+    #[test]
+    fn link_fade_inflates_sync_over_the_static_ring() {
+        use crate::config::DynamicsPreset;
+        let flat = trainer(&base(TrainMode::Scadles)).run().unwrap();
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.dynamics = DynamicsPreset::LinkFade { floor: 0.05, period_s: 40.0 };
+        let faded = Trainer::with_backend(&cfg, Box::new(MockBackend::new(64, 10)))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(
+            faded.report.wall_clock_s > flat.report.wall_clock_s,
+            "fade {} vs flat {}",
+            faded.report.wall_clock_s,
+            flat.report.wall_clock_s
+        );
+    }
+
+    #[test]
+    fn trace_replay_drives_the_run_end_to_end() {
+        use crate::config::DynamicsPreset;
+        // device 0 stalls to zero inflow after 5 virtual seconds and
+        // fades its uplink; everyone else keeps streaming
+        let path = std::env::temp_dir().join(format!(
+            "scadles_trainer_trace_{}.csv",
+            std::process::id()
+        ));
+        std::fs::write(
+            &path,
+            "device,t_s,rate_factor,uplink_factor,downlink_factor\n0,5,0,0.5,0.5\n",
+        )
+        .unwrap();
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.rounds = 20;
+        cfg.dynamics = DynamicsPreset::Trace { path: path.clone() };
+        let out = Trainer::with_backend(&cfg, Box::new(MockBackend::new(64, 10)))
+            .unwrap()
+            .run()
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+        // after the stall point device 0's rows pin to zero effective rate
+        let late_dev0: Vec<&crate::metrics::DeviceRoundRow> = out
+            .timeline
+            .rows()
+            .iter()
+            .filter(|r| r.device == 0 && r.round >= 10)
+            .collect();
+        assert!(!late_dev0.is_empty());
+        assert!(late_dev0.iter().all(|r| r.effective_rate == 0.0), "device 0 kept streaming");
+        assert!(out.report.final_train_loss.is_finite());
     }
 
     #[test]

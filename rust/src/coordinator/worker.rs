@@ -16,6 +16,13 @@
 //! residuals, gradients) is owned by exactly one worker. A run with
 //! `worker_threads = 1` is therefore bitwise identical to the same run
 //! at any thread count — enforced by `tests/parallel_determinism.rs`.
+//!
+//! Stream dynamics respect the same split: the coordinator samples the
+//! [`crate::dynamics::StreamDynamics`] frame once per round (device
+//! order, before any fan-out) and stamps each shard's [`Device`] with
+//! its effective rate and membership; workers then drain/poll/train
+//! against that snapshot, so no process evaluation ever happens on a
+//! pool thread.
 
 use crate::compress::ErrorFeedback;
 use crate::config::cluster::DeviceProfile;

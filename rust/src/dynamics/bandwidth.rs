@@ -1,0 +1,110 @@
+//! Bandwidth processes: deterministic time-varying link factors.
+//!
+//! A [`BandwidthProcess`] fades each device's uplink/downlink over time:
+//! it maps `(device, virtual time)` to multiplicative factors on the
+//! device's sampled [`DeviceProfile`](crate::config::DeviceProfile)
+//! bandwidths. The ring is then priced off the *effective* links (the
+//! narrowest `link × factor` among participating devices), so a fading
+//! link drags gradient sync exactly the way a statically-constrained one
+//! does in the heterogeneity layer — but round by round.
+
+use std::sync::Arc;
+
+use crate::rng::Pcg64;
+
+use super::trace::{TraceCursor, TraceData};
+
+/// A deterministic time-varying link modulation. Factors are pure in
+/// `(seed, device, t)` and finite in `[0, 1]`-ish ranges (validated at
+/// the preset layer); queries must be non-decreasing in `t` per device.
+#[derive(Debug)]
+pub enum BandwidthProcess {
+    /// Links stay at the profile's sampled bandwidth (factor 1).
+    Steady,
+    /// Both directions breathe sinusoidally between 1 and `floor`:
+    /// `floor + (1−floor)·(1 + cos(2π(t/period + φ_i)))/2`, per-device
+    /// phase `φ_i` from the dynamics substream. At a device's phase
+    /// origin the link is at full rate; half a period later it bottoms
+    /// out at `floor`.
+    Fade { floor: f64, period_s: f64, phases: Vec<f64> },
+    /// Per-device factors replayed from a trace (shares the
+    /// [`TraceData`] with the rate view, own cursor).
+    Trace(TraceCursor),
+}
+
+impl BandwidthProcess {
+    pub fn fade(floor: f64, period_s: f64, devices: usize, seed: u64, stream_base: u64) -> Self {
+        let phases = (0..devices)
+            .map(|i| Pcg64::new(seed, stream_base + i as u64).f64())
+            .collect();
+        BandwidthProcess::Fade { floor, period_s, phases }
+    }
+
+    pub fn trace(data: Arc<TraceData>, devices: usize) -> Self {
+        BandwidthProcess::Trace(TraceCursor::new(data, devices))
+    }
+
+    /// `(uplink factor, downlink factor)` for `device` at time `t`.
+    pub fn link_factors(&mut self, device: usize, t: f64) -> (f64, f64) {
+        match self {
+            BandwidthProcess::Steady => (1.0, 1.0),
+            BandwidthProcess::Fade { floor, period_s, phases } => {
+                let phase = phases.get(device).copied().unwrap_or(0.0);
+                let cycle = (std::f64::consts::TAU * (t / *period_s + phase)).cos();
+                let f = *floor + (1.0 - *floor) * 0.5 * (1.0 + cycle);
+                (f, f)
+            }
+            BandwidthProcess::Trace(cursor) => {
+                let p = cursor.point(device, t);
+                (p.uplink_factor, p.downlink_factor)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_is_identity() {
+        let mut b = BandwidthProcess::Steady;
+        assert_eq!(b.link_factors(3, 123.0), (1.0, 1.0));
+    }
+
+    #[test]
+    fn fade_spans_floor_to_full() {
+        let mut b = BandwidthProcess::fade(0.1, 100.0, 2, 42, 0x3000);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for k in 0..400 {
+            let (u, d) = b.link_factors(0, k as f64 * 0.5); // 2 periods
+            assert_eq!(u, d, "fade is symmetric");
+            assert!((0.1..=1.0).contains(&u), "factor {u}");
+            lo = lo.min(u);
+            hi = hi.max(u);
+        }
+        assert!(lo < 0.12, "never bottomed out: {lo}");
+        assert!(hi > 0.98, "never recovered: {hi}");
+    }
+
+    #[test]
+    fn fade_is_pure_and_phase_staggered() {
+        let mut a = BandwidthProcess::fade(0.2, 60.0, 8, 7, 0x3000);
+        let mut b = BandwidthProcess::fade(0.2, 60.0, 8, 7, 0x3000);
+        let at: Vec<f64> = (0..8).map(|i| a.link_factors(i, 10.0).0).collect();
+        for (i, &f) in at.iter().enumerate() {
+            assert_eq!(f.to_bits(), b.link_factors(i, 10.0).0.to_bits());
+        }
+        assert!(at.iter().any(|&f| (f - at[0]).abs() > 1e-9), "all in phase: {at:?}");
+    }
+
+    #[test]
+    fn trace_view_reads_link_columns() {
+        let csv = "device,t_s,rate_factor,uplink_factor,downlink_factor\n0,0,1,0.5,0.25\n";
+        let data = Arc::new(TraceData::from_csv(csv).unwrap());
+        let mut b = BandwidthProcess::trace(data, 1);
+        assert_eq!(b.link_factors(0, 1.0), (0.5, 0.25));
+        assert_eq!(b.link_factors(5, 1.0), (1.0, 1.0)); // unlisted device
+    }
+}

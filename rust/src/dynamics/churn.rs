@@ -1,0 +1,110 @@
+//! Churn process: devices leave and rejoin on deterministic schedules.
+//!
+//! A flapping device is **down** for `down_fraction` of each `period_s`,
+//! with a per-device phase offset so the cluster never loses every
+//! flapper at once. Which devices flap, and their phases, are drawn from
+//! fixed per-device substreams — membership at time `t` is a pure
+//! function of `(seed, device, t)`, evaluated in O(1) with no state.
+//!
+//! A departed device sits rounds out exactly like the zero-rate
+//! semantics (`batch = 0`, no barrier stall, producer gated to zero
+//! inflow); on rejoin it trains against the **current** global model —
+//! parameters live on the coordinator in the synchronous engine, so no
+//! state transfer is modelled beyond the round it missed.
+
+use crate::rng::Pcg64;
+
+/// Deterministic leave/rejoin schedules for a device fleet.
+#[derive(Debug, Clone)]
+pub struct ChurnProcess {
+    period_s: f64,
+    down_fraction: f64,
+    /// Per-device flap phase in [0,1); `None` = the device never churns.
+    flap_phase: Vec<Option<f64>>,
+}
+
+impl ChurnProcess {
+    pub fn new(
+        fraction: f64,
+        period_s: f64,
+        down_fraction: f64,
+        devices: usize,
+        seed: u64,
+        stream_base: u64,
+    ) -> Self {
+        let flap_phase = (0..devices)
+            .map(|i| {
+                let mut rng = Pcg64::new(seed, stream_base + i as u64);
+                let flaps = rng.f64() < fraction;
+                flaps.then(|| rng.f64())
+            })
+            .collect();
+        Self { period_s, down_fraction, flap_phase }
+    }
+
+    /// Whether `device` is a cluster member at time `t`. A flapper is
+    /// down during the first `down_fraction` of its phase-shifted period.
+    pub fn active(&self, device: usize, t: f64) -> bool {
+        match self.flap_phase.get(device).copied().flatten() {
+            None => true,
+            Some(phase) => (t / self.period_s + phase).fract() >= self.down_fraction,
+        }
+    }
+
+    /// Devices that ever churn.
+    pub fn flapper_count(&self) -> usize {
+        self.flap_phase.iter().filter(|p| p.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fraction_zero_never_churns() {
+        let c = ChurnProcess::new(0.0, 100.0, 0.5, 16, 42, 0x4000);
+        assert_eq!(c.flapper_count(), 0);
+        assert!((0..16).all(|i| c.active(i, 12345.6)));
+    }
+
+    #[test]
+    fn fraction_one_flaps_everyone_with_the_right_duty_cycle() {
+        let c = ChurnProcess::new(1.0, 100.0, 0.25, 4, 42, 0x4000);
+        assert_eq!(c.flapper_count(), 4);
+        for dev in 0..4 {
+            let down = (0..1000)
+                .filter(|k| !c.active(dev, *k as f64 * 0.4)) // 4 periods
+                .count();
+            let share = down as f64 / 1000.0;
+            assert!((share - 0.25).abs() < 0.05, "device {dev} down share {share}");
+        }
+    }
+
+    #[test]
+    fn schedules_are_periodic_and_pure() {
+        let a = ChurnProcess::new(0.5, 60.0, 0.5, 8, 7, 0x4000);
+        let b = ChurnProcess::new(0.5, 60.0, 0.5, 8, 7, 0x4000);
+        for dev in 0..8 {
+            for t in [0.0, 13.0, 29.5, 59.9] {
+                assert_eq!(a.active(dev, t), b.active(dev, t));
+                assert_eq!(a.active(dev, t), a.active(dev, t + 60.0), "period broken");
+            }
+        }
+    }
+
+    #[test]
+    fn phases_stagger_departures() {
+        // with everyone flapping half the time, some instant should see
+        // both present and absent devices (phases decorrelate)
+        let c = ChurnProcess::new(1.0, 100.0, 0.5, 32, 3, 0x4000);
+        let up = (0..32).filter(|&i| c.active(i, 10.0)).count();
+        assert!(up > 0 && up < 32, "no stagger: {up}/32 up");
+    }
+
+    #[test]
+    fn devices_beyond_fleet_are_always_active() {
+        let c = ChurnProcess::new(1.0, 100.0, 0.9, 2, 42, 0x4000);
+        assert!(c.active(99, 5.0));
+    }
+}

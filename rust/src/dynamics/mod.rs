@@ -1,0 +1,451 @@
+//! Stream dynamics: a deterministic time-varying process layer that
+//! modulates the simulation as virtual time advances.
+//!
+//! PR 2's heterogeneity layer samples a static [`DeviceProfile`] per
+//! device; this layer makes the *time axis* first-class. A
+//! [`StreamDynamics`] engine — built from a
+//! [`DynamicsPreset`](crate::config::DynamicsPreset) — is queried once
+//! per round at the round's virtual start time and yields one
+//! [`DeviceDynamics`] per device:
+//!
+//! * `rate_factor` — multiplies the device's nominal streaming rate
+//!   (the producer's inflow **and** the planner's `S_i`), from a
+//!   [`RateProcess`]: constant, diurnal cycle, Markov-modulated burst,
+//!   or trace replay.
+//! * `uplink_factor`/`downlink_factor` — multiply the sampled profile
+//!   links, from a [`BandwidthProcess`]; the ring is priced off the
+//!   effective (faded) links.
+//! * `active` — membership from a [`ChurnProcess`]; a departed device
+//!   sits rounds out like the zero-rate semantics and rejoins against
+//!   the current global model.
+//!
+//! **Determinism guarantee:** every process draws only from fixed
+//! per-device [`Pcg64`](crate::rng::Pcg64) substreams
+//! (`DYNAMICS_STREAM + stage·STAGE_STRIDE + device`), so the factors a
+//! device sees are a pure function of `(preset, seed, device, t)` —
+//! never of device count, worker-pool width or sampling order. The
+//! engine is sampled on the coordinator thread in device order, and the
+//! per-round evaluation is O(1) per device with no allocation (the
+//! frame is written in place), so the round hot path stays flat.
+//!
+//! `DynamicsPreset::Static` builds an engine with **zero stages**: the
+//! frame is the identity and, because every consumer multiplies by the
+//! identity factors, the run reproduces the pre-dynamics engine's
+//! timings bitwise (pinned by `tests/parallel_determinism.rs`).
+
+pub mod bandwidth;
+pub mod churn;
+pub mod process;
+pub mod trace;
+
+use std::sync::Arc;
+
+use crate::config::{ClusterProfile, DynamicsPreset};
+use crate::Result;
+
+pub use bandwidth::BandwidthProcess;
+pub use churn::ChurnProcess;
+pub use process::{Burst, Constant, Diurnal, RateProcess};
+pub use trace::{TraceData, TracePoint, TraceReplay};
+
+/// Pcg64 stream base for dynamics processes; stage `k`'s process for
+/// device `i` draws from stream `DYNAMICS_STREAM + k·STAGE_STRIDE + i`
+/// (disjoint from the rate stream `0x5CAD`, the hetero streams
+/// `0x4E7E_0000+i` and the device streams `0xDE1C_E000+i`).
+const DYNAMICS_STREAM: u64 = 0xD1AA_0000;
+/// Substream stride between composed stages (one stage addresses up to
+/// 65536 devices; compositions are capped at
+/// [`crate::config::dynamics::MAX_STAGES`] stages).
+const STAGE_STRIDE: u64 = 0x1_0000;
+
+/// One device's effective dynamics for a round, sampled at the round's
+/// virtual start time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceDynamics {
+    /// Multiplicative factor on the device's nominal streaming rate.
+    pub rate_factor: f64,
+    /// Multiplicative factors on the device's profile uplink/downlink.
+    pub uplink_factor: f64,
+    pub downlink_factor: f64,
+    /// Whether the device is a cluster member this round.
+    pub active: bool,
+}
+
+impl Default for DeviceDynamics {
+    /// The identity modulation (what `static` yields every round).
+    fn default() -> Self {
+        Self { rate_factor: 1.0, uplink_factor: 1.0, downlink_factor: 1.0, active: true }
+    }
+}
+
+/// Run-level dynamics counters (reported by the harness and `TrainerOutput`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DynamicsCounters {
+    /// Active→inactive transitions (devices leaving).
+    pub departures: u64,
+    /// Inactive→active transitions (devices rejoining).
+    pub rejoins: u64,
+    /// Rate-regime flips: a device's composed factor moving by ≥ 2×
+    /// (up or down) between consecutive samples — burst switches and
+    /// trace steps, wherever the regimes sit relative to 1.0; smooth
+    /// diurnal drift stays below the threshold at realistic periods.
+    pub regime_flips: u64,
+    /// Device-rounds spent churned out.
+    pub inactive_device_rounds: u64,
+}
+
+/// One multiplicative stage of the composition.
+struct Stage {
+    rate: Box<dyn RateProcess>,
+    bandwidth: BandwidthProcess,
+    churn: Option<ChurnProcess>,
+}
+
+impl std::fmt::Debug for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Stage").field("rate", &self.rate).finish_non_exhaustive()
+    }
+}
+
+/// The per-run dynamics engine: evaluates the preset's processes for
+/// every device at each round's virtual start time.
+#[derive(Debug)]
+pub struct StreamDynamics {
+    label: String,
+    is_static: bool,
+    stages: Vec<Stage>,
+    /// This round's frame, written in place by [`Self::sample`].
+    frame: Vec<DeviceDynamics>,
+    /// Last round's frame (counter edges).
+    prev: Vec<DeviceDynamics>,
+    sampled: bool,
+    counters: DynamicsCounters,
+}
+
+impl StreamDynamics {
+    /// Build the engine for `devices` devices under `seed`. Trace presets
+    /// read their file here (the only fallible path besides validation).
+    pub fn from_preset(preset: &DynamicsPreset, devices: usize, seed: u64) -> Result<Self> {
+        preset.validate()?;
+        let flat: Vec<&DynamicsPreset> = match preset {
+            DynamicsPreset::Compose(stages) => stages.iter().collect(),
+            single => vec![single],
+        };
+        let mut stages = Vec::new();
+        for (k, p) in flat.into_iter().enumerate() {
+            let base = DYNAMICS_STREAM + k as u64 * STAGE_STRIDE;
+            let stage = match p {
+                DynamicsPreset::Static => continue, // identity stage
+                DynamicsPreset::Diurnal { amplitude, period_s } => Stage {
+                    rate: Box::new(Diurnal::new(*amplitude, *period_s, devices, seed, base)),
+                    bandwidth: BandwidthProcess::Steady,
+                    churn: None,
+                },
+                DynamicsPreset::Burst { boost, calm, mean_boost_s, mean_calm_s } => Stage {
+                    rate: Box::new(Burst::new(
+                        *boost,
+                        *calm,
+                        *mean_boost_s,
+                        *mean_calm_s,
+                        devices,
+                        seed,
+                        base,
+                    )),
+                    bandwidth: BandwidthProcess::Steady,
+                    churn: None,
+                },
+                DynamicsPreset::Churn { fraction, period_s, down_fraction } => Stage {
+                    rate: Box::new(Constant),
+                    bandwidth: BandwidthProcess::Steady,
+                    churn: Some(ChurnProcess::new(
+                        *fraction,
+                        *period_s,
+                        *down_fraction,
+                        devices,
+                        seed,
+                        base,
+                    )),
+                },
+                DynamicsPreset::LinkFade { floor, period_s } => Stage {
+                    rate: Box::new(Constant),
+                    bandwidth: BandwidthProcess::fade(*floor, *period_s, devices, seed, base),
+                    churn: None,
+                },
+                DynamicsPreset::Trace { path } => {
+                    let data = Arc::new(TraceData::load(path)?);
+                    Stage {
+                        rate: Box::new(TraceReplay::new(data.clone(), devices)),
+                        bandwidth: BandwidthProcess::trace(data, devices),
+                        churn: None,
+                    }
+                }
+                DynamicsPreset::Compose(_) => unreachable!("compositions do not nest"),
+            };
+            stages.push(stage);
+        }
+        Ok(Self {
+            label: preset.to_string(),
+            is_static: preset.is_static(),
+            stages,
+            frame: vec![DeviceDynamics::default(); devices],
+            prev: vec![DeviceDynamics::default(); devices],
+            sampled: false,
+            counters: DynamicsCounters::default(),
+        })
+    }
+
+    /// The preset's CLI spelling (run labels).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Whether the engine is the identity modulation.
+    pub fn is_static(&self) -> bool {
+        self.is_static
+    }
+
+    /// Evaluate every device's dynamics at virtual time `t`, in device
+    /// order on the calling thread. Query times must be non-decreasing
+    /// (rounds only move forward). O(1) per device, no allocation.
+    pub fn sample(&mut self, t: f64) -> &[DeviceDynamics] {
+        std::mem::swap(&mut self.frame, &mut self.prev);
+        for i in 0..self.frame.len() {
+            let mut f = DeviceDynamics::default();
+            for s in &mut self.stages {
+                f.rate_factor *= s.rate.rate_factor(i, t);
+                let (up, down) = s.bandwidth.link_factors(i, t);
+                f.uplink_factor *= up;
+                f.downlink_factor *= down;
+                if let Some(c) = &s.churn {
+                    f.active &= c.active(i, t);
+                }
+            }
+            if self.sampled {
+                let p = self.prev[i];
+                if p.active && !f.active {
+                    self.counters.departures += 1;
+                }
+                if !p.active && f.active {
+                    self.counters.rejoins += 1;
+                }
+                // an abrupt regime change is a ≥ 2× move of the composed
+                // factor, whichever side of 1.0 both regimes sit on
+                let (hi, lo) = if p.rate_factor >= f.rate_factor {
+                    (p.rate_factor, f.rate_factor)
+                } else {
+                    (f.rate_factor, p.rate_factor)
+                };
+                if hi > lo && hi >= 2.0 * lo {
+                    self.counters.regime_flips += 1;
+                }
+            }
+            if !f.active {
+                self.counters.inactive_device_rounds += 1;
+            }
+            self.frame[i] = f;
+        }
+        self.sampled = true;
+        &self.frame
+    }
+
+    /// The most recent frame (identity until the first [`Self::sample`]).
+    pub fn frame(&self) -> &[DeviceDynamics] {
+        &self.frame
+    }
+
+    /// Run-level counters accumulated so far.
+    pub fn counters(&self) -> DynamicsCounters {
+        self.counters
+    }
+}
+
+/// Effective ring parameters for a round:
+/// `(participating devices, bottleneck device, slowest effective bps)`.
+///
+/// Mirrors [`ClusterProfile::slowest_link`] — same iteration order, same
+/// tie-breaking, same backbone fallback when nothing bounds the ring —
+/// with each link scaled by its device's dynamics factors and departed
+/// devices excluded. With the identity frame this returns exactly
+/// `(n, slowest_link().0, slowest_link().1)` bitwise, which is what
+/// keeps `--dynamics static` pricing identical to the static engine.
+pub fn effective_ring(
+    cluster: &ClusterProfile,
+    frame: &[DeviceDynamics],
+) -> (usize, usize, f64) {
+    debug_assert_eq!(cluster.n(), frame.len());
+    let mut n_active = 0usize;
+    let mut dev = 0usize;
+    let mut bps = f64::INFINITY;
+    for (i, (d, f)) in cluster.devices.iter().zip(frame).enumerate() {
+        if !f.active {
+            continue;
+        }
+        n_active += 1;
+        let l = d.link_bps() * f.uplink_factor.min(f.downlink_factor);
+        if l < bps {
+            bps = l;
+            dev = i;
+        }
+    }
+    if bps.is_finite() {
+        (n_active, dev, bps)
+    } else {
+        (n_active, 0, cluster.network.bandwidth_bps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HeteroPreset;
+
+    fn engine(spec: &str, devices: usize, seed: u64) -> StreamDynamics {
+        StreamDynamics::from_preset(&spec.parse().unwrap(), devices, seed).unwrap()
+    }
+
+    #[test]
+    fn static_engine_yields_the_identity_frame() {
+        let mut e = engine("static", 4, 42);
+        assert!(e.is_static());
+        for t in [0.0, 10.0, 1e6] {
+            for f in e.sample(t) {
+                assert_eq!(*f, DeviceDynamics::default());
+            }
+        }
+        assert_eq!(e.counters(), DynamicsCounters::default());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_seed_sensitive() {
+        let frames = |seed: u64| -> Vec<DeviceDynamics> {
+            let mut e = engine("burst:4:0.25:10:20+churn:0.5:60:0.5", 8, seed);
+            let mut out = Vec::new();
+            for k in 0..40 {
+                out.extend_from_slice(e.sample(k as f64 * 2.0));
+            }
+            out
+        };
+        assert_eq!(frames(7), frames(7));
+        assert_ne!(frames(7), frames(8));
+    }
+
+    #[test]
+    fn composition_multiplies_factors_and_ands_membership() {
+        // identity-composed stages must not move anything...
+        let mut id = engine("diurnal:0+churn:0+linkfade:1", 4, 42);
+        assert!(!id.is_static()); // non-static preset, identity values
+        for f in id.sample(17.0) {
+            assert_eq!(f.rate_factor.to_bits(), 1.0f64.to_bits());
+            assert_eq!(f.uplink_factor.to_bits(), 1.0f64.to_bits());
+            assert_eq!(f.downlink_factor.to_bits(), 1.0f64.to_bits());
+            assert!(f.active);
+        }
+        // ...and a composed burst×diurnal is the product of the parts
+        let t = 33.0;
+        let (mut composed, mut burst) = (
+            engine("burst:4:0.25:10:20+diurnal:0.5:120", 4, 9),
+            engine("burst:4:0.25:10:20", 4, 9),
+        );
+        let c = composed.sample(t).to_vec();
+        let b = burst.sample(t).to_vec();
+        // the composed diurnal sits at stage 1, so its per-device phases
+        // come from stage 1's substream base — rebuild it there
+        let d: Vec<f64> = {
+            let mut p = Diurnal::new(0.5, 120.0, 4, 9, DYNAMICS_STREAM + STAGE_STRIDE);
+            (0..4).map(|i| p.rate_factor(i, t)).collect()
+        };
+        for i in 0..4 {
+            assert_eq!(
+                c[i].rate_factor.to_bits(),
+                (b[i].rate_factor * d[i]).to_bits(),
+                "device {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn counters_track_churn_edges_and_regime_flips() {
+        let mut e = engine("churn:1:40:0.5", 4, 11);
+        for k in 0..80 {
+            e.sample(k as f64); // two full churn periods
+        }
+        let c = e.counters();
+        assert!(c.departures >= 4, "departures {c:?}");
+        assert!(c.rejoins >= 4, "rejoins {c:?}");
+        assert!(c.inactive_device_rounds > 0);
+        // flappers spend ~half their device-rounds down
+        let share = c.inactive_device_rounds as f64 / (80.0 * 4.0);
+        assert!((share - 0.5).abs() < 0.1, "down share {share}");
+
+        let mut b = engine("burst:4:0.25:10:10", 2, 11);
+        for k in 0..100 {
+            b.sample(k as f64 * 2.0);
+        }
+        assert!(b.counters().regime_flips > 0);
+        assert_eq!(b.counters().departures, 0);
+
+        // regimes on the same side of 1.0 still count: 0.9x vs 0.25x is
+        // a 3.6x move even though neither factor ever crosses 1.0
+        let mut sub = engine("burst:0.9:0.25:10:10", 2, 11);
+        for k in 0..100 {
+            sub.sample(k as f64 * 2.0);
+        }
+        assert!(sub.counters().regime_flips > 0, "{:?}", sub.counters());
+
+        // a constant factor never flips regimes
+        let mut id = engine("diurnal:0", 2, 11);
+        for k in 0..100 {
+            id.sample(k as f64 * 2.0);
+        }
+        assert_eq!(id.counters().regime_flips, 0);
+    }
+
+    #[test]
+    fn effective_ring_matches_slowest_link_on_the_identity_frame() {
+        for preset in [
+            HeteroPreset::K80Homogeneous,
+            HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
+            HeteroPreset::ConstrainedUplink { fraction: 0.5, uplink_bps: 1e9 },
+        ] {
+            let cluster = preset.sample_cluster("mlp_c10", 8, 3);
+            let frame = vec![DeviceDynamics::default(); 8];
+            let (n, dev, bps) = effective_ring(&cluster, &frame);
+            let (want_dev, want_bps) = cluster.slowest_link();
+            assert_eq!(n, 8);
+            assert_eq!(dev, want_dev, "{preset}");
+            assert_eq!(bps.to_bits(), want_bps.to_bits(), "{preset}");
+        }
+    }
+
+    #[test]
+    fn effective_ring_excludes_departed_and_scales_links() {
+        let cluster = HeteroPreset::K80Homogeneous.sample_cluster("mlp_c10", 4, 0);
+        let mut frame = vec![DeviceDynamics::default(); 4];
+        // device 1 has a badly faded link, device 2 left entirely
+        frame[1].uplink_factor = 0.1;
+        frame[2].active = false;
+        frame[2].uplink_factor = 0.001; // must be ignored: not in the ring
+        let (n, dev, bps) = effective_ring(&cluster, &frame);
+        assert_eq!(n, 3);
+        assert_eq!(dev, 1);
+        assert_eq!(bps, 5e9 * 0.1);
+        // everyone gone: no links bound the ring, backbone fallback
+        let gone = vec![DeviceDynamics { active: false, ..Default::default() }; 4];
+        let (n, _, bps) = effective_ring(&cluster, &gone);
+        assert_eq!(n, 0);
+        assert_eq!(bps, cluster.network.bandwidth_bps);
+    }
+
+    #[test]
+    fn frame_is_reused_without_allocation() {
+        // sample() writes in place: the frame pointer is stable across
+        // rounds (the no-allocation contract of the round hot path)
+        let mut e = engine("diurnal:0.5:60", 8, 42);
+        let p0 = e.sample(0.0).as_ptr();
+        let p1 = e.sample(1.0).as_ptr();
+        let p2 = e.sample(2.0).as_ptr();
+        // two buffers swap back and forth; no fresh allocations appear
+        assert_eq!(p0, p2);
+        assert_ne!(p0, p1);
+    }
+}

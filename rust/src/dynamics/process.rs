@@ -1,0 +1,233 @@
+//! Rate processes: deterministic time-varying rate factors.
+//!
+//! A [`RateProcess`] maps `(device, virtual time)` to a multiplicative
+//! factor on the device's nominal streaming rate. Every implementation is
+//! a pure function of `(seed, device, t)`: all randomness comes from
+//! fixed per-device [`Pcg64`] substreams drawn at construction, so the
+//! factor a device sees depends only on the preset, the seed and the
+//! query time — never on device count, worker-pool width or sampling
+//! order. Queries must be non-decreasing in `t` per device (rounds only
+//! move forward); the Markov-modulated process advances a per-device
+//! cursor lazily, O(1) amortized per round with no allocation.
+
+use crate::rng::Pcg64;
+
+/// A deterministic time-varying rate modulation.
+///
+/// `rate_factor` must return a finite value ≥ 0; `&mut self` exists only
+/// for lazy per-device cursors (the value itself is pure in
+/// `(seed, device, t)` for non-decreasing `t`).
+pub trait RateProcess: std::fmt::Debug + Send {
+    fn rate_factor(&mut self, device: usize, t: f64) -> f64;
+}
+
+/// The identity process (factor 1, used by stages that only touch links
+/// or membership).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Constant;
+
+impl RateProcess for Constant {
+    fn rate_factor(&mut self, _device: usize, _t: f64) -> f64 {
+        1.0
+    }
+}
+
+/// Sinusoidal day/night cycle: `1 + amplitude·sin(2π(t/period + φ_i))`
+/// with per-device phases `φ_i ∈ [0,1)` drawn from the dynamics
+/// substream (so devices peak at different times of "day").
+#[derive(Debug, Clone)]
+pub struct Diurnal {
+    amplitude: f64,
+    period_s: f64,
+    phases: Vec<f64>,
+}
+
+impl Diurnal {
+    pub fn new(amplitude: f64, period_s: f64, devices: usize, seed: u64, stream_base: u64) -> Self {
+        let phases = (0..devices)
+            .map(|i| Pcg64::new(seed, stream_base + i as u64).f64())
+            .collect();
+        Self { amplitude, period_s, phases }
+    }
+}
+
+impl RateProcess for Diurnal {
+    fn rate_factor(&mut self, device: usize, t: f64) -> f64 {
+        let phase = self.phases.get(device).copied().unwrap_or(0.0);
+        let cycle = (std::f64::consts::TAU * (t / self.period_s + phase)).sin();
+        (1.0 + self.amplitude * cycle).max(0.0)
+    }
+}
+
+/// One device's position in the burst process's switch schedule.
+#[derive(Debug, Clone)]
+struct BurstCursor {
+    rng: Pcg64,
+    boosted: bool,
+    next_switch: f64,
+}
+
+/// Two-state Markov-modulated rate: each device alternates between a
+/// `boost`× and a `calm`× regime; sojourn times are exponential with the
+/// state's mean, drawn from the device's own substream. Every device
+/// starts calm and the whole switch schedule is fixed by the seed.
+#[derive(Debug, Clone)]
+pub struct Burst {
+    boost: f64,
+    calm: f64,
+    mean_boost_s: f64,
+    mean_calm_s: f64,
+    cursors: Vec<BurstCursor>,
+}
+
+impl Burst {
+    pub fn new(
+        boost: f64,
+        calm: f64,
+        mean_boost_s: f64,
+        mean_calm_s: f64,
+        devices: usize,
+        seed: u64,
+        stream_base: u64,
+    ) -> Self {
+        let cursors = (0..devices)
+            .map(|i| {
+                let mut rng = Pcg64::new(seed, stream_base + i as u64);
+                let next_switch = exp_draw(&mut rng, mean_calm_s);
+                BurstCursor { rng, boosted: false, next_switch }
+            })
+            .collect();
+        Self { boost, calm, mean_boost_s, mean_calm_s, cursors }
+    }
+}
+
+impl RateProcess for Burst {
+    fn rate_factor(&mut self, device: usize, t: f64) -> f64 {
+        let Some(c) = self.cursors.get_mut(device) else {
+            return 1.0;
+        };
+        while t >= c.next_switch {
+            c.boosted = !c.boosted;
+            let mean = if c.boosted { self.mean_boost_s } else { self.mean_calm_s };
+            c.next_switch += exp_draw(&mut c.rng, mean);
+        }
+        if c.boosted {
+            self.boost
+        } else {
+            self.calm
+        }
+    }
+}
+
+/// Exponential draw with the given mean via inverse CDF (strictly
+/// positive: `1 − u ∈ (0, 1]` so `ln` is finite and ≤ 0).
+fn exp_draw(rng: &mut Pcg64, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln().min(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_identity() {
+        let mut c = Constant;
+        assert_eq!(c.rate_factor(0, 0.0), 1.0);
+        assert_eq!(c.rate_factor(7, 1e9), 1.0);
+    }
+
+    #[test]
+    fn diurnal_cycles_around_one_and_stays_nonnegative() {
+        let mut d = Diurnal::new(1.0, 100.0, 4, 42, 0x1000);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut sum = 0.0;
+        let n = 400;
+        for k in 0..n {
+            let f = d.rate_factor(1, k as f64); // 4 full periods
+            assert!(f >= 0.0 && f.is_finite());
+            lo = lo.min(f);
+            hi = hi.max(f);
+            sum += f;
+        }
+        assert!(lo < 0.1, "min {lo}");
+        assert!(hi > 1.9, "max {hi}");
+        assert!((sum / n as f64 - 1.0).abs() < 0.05, "mean {}", sum / n as f64);
+    }
+
+    #[test]
+    fn diurnal_phases_decorrelate_devices() {
+        let mut d = Diurnal::new(0.5, 100.0, 8, 7, 0x1000);
+        let at_zero: Vec<f64> = (0..8).map(|i| d.rate_factor(i, 0.0)).collect();
+        let distinct = at_zero
+            .iter()
+            .filter(|&&f| (f - at_zero[0]).abs() > 1e-9)
+            .count();
+        assert!(distinct > 0, "all devices in phase: {at_zero:?}");
+    }
+
+    #[test]
+    fn diurnal_is_pure_in_seed_device_time() {
+        let mut a = Diurnal::new(0.5, 100.0, 4, 42, 0x1000);
+        let mut b = Diurnal::new(0.5, 100.0, 4, 42, 0x1000);
+        for t in [0.0, 3.7, 50.0, 99.9] {
+            assert_eq!(a.rate_factor(2, t).to_bits(), b.rate_factor(2, t).to_bits());
+        }
+    }
+
+    #[test]
+    fn burst_alternates_between_the_two_regimes() {
+        let mut b = Burst::new(4.0, 0.25, 10.0, 10.0, 2, 42, 0x2000);
+        let mut seen_boost = false;
+        let mut seen_calm = false;
+        for k in 0..200 {
+            let f = b.rate_factor(0, k as f64);
+            assert!(f == 4.0 || f == 0.25, "factor {f}");
+            seen_boost |= f == 4.0;
+            seen_calm |= f == 0.25;
+        }
+        assert!(seen_boost && seen_calm);
+    }
+
+    #[test]
+    fn burst_is_deterministic_for_monotone_queries() {
+        let run = |step: f64| -> Vec<u64> {
+            let mut b = Burst::new(4.0, 0.25, 15.0, 30.0, 4, 7, 0x2000);
+            let mut out = Vec::new();
+            let mut t = 0.0;
+            while t < 300.0 {
+                out.push(b.rate_factor(1, t).to_bits());
+                t += step;
+            }
+            out
+        };
+        // same query times → identical factors
+        assert_eq!(run(2.5), run(2.5));
+        // denser queries agree wherever the times coincide (every 2nd)
+        let coarse = run(5.0);
+        let fine = run(2.5);
+        for (i, c) in coarse.iter().enumerate() {
+            assert_eq!(*c, fine[2 * i], "t = {}", 5.0 * i as f64);
+        }
+    }
+
+    #[test]
+    fn burst_devices_switch_independently() {
+        let mut b = Burst::new(4.0, 0.25, 10.0, 10.0, 8, 42, 0x2000);
+        let series: Vec<Vec<f64>> = (0..8)
+            .map(|i| (0..100).map(|k| b.rate_factor(i, k as f64)).collect())
+            .collect();
+        let equal_pairs = (1..8).filter(|&i| series[i] == series[0]).count();
+        assert_eq!(equal_pairs, 0, "device schedules must decorrelate");
+    }
+
+    #[test]
+    fn exp_draw_positive_with_given_mean() {
+        let mut rng = Pcg64::new(1, 0);
+        let n = 20_000;
+        let mean = (0..n).map(|_| exp_draw(&mut rng, 3.0)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.1, "mean {mean}");
+        let mut rng = Pcg64::new(2, 0);
+        assert!((0..1000).all(|_| exp_draw(&mut rng, 1.0) >= 0.0));
+    }
+}

@@ -1,0 +1,354 @@
+//! Trace replay: per-device piecewise-constant rate/bandwidth factors
+//! loaded from CSV or JSON.
+//!
+//! Format (CSV, header required; `uplink_factor`/`downlink_factor`
+//! optional and defaulting to 1):
+//!
+//! ```csv
+//! device,t_s,rate_factor,uplink_factor,downlink_factor
+//! 0,0,1.0,1.0,1.0
+//! 0,30,0.2,0.5,1.0
+//! 1,0,2.0
+//! ```
+//!
+//! JSON is the same rows as an array of objects:
+//!
+//! ```json
+//! [{"device": 0, "t_s": 0, "rate_factor": 1.0, "uplink_factor": 1.0}]
+//! ```
+//!
+//! Semantics: factors hold piecewise-constant from each point's `t_s`
+//! until the device's next point (and past the last point forever);
+//! before a device's first point — and for devices the trace never
+//! mentions — the identity `(1, 1, 1)` applies. Values are
+//! multiplicative factors on the device's nominal rate and sampled
+//! profile links, so traces compose with `--hetero` and other dynamics
+//! stages.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+use super::process::RateProcess;
+
+/// One piecewise-constant segment start.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    pub t_s: f64,
+    pub rate_factor: f64,
+    pub uplink_factor: f64,
+    pub downlink_factor: f64,
+}
+
+impl TracePoint {
+    /// The identity point in effect before any trace data.
+    pub const IDENTITY: TracePoint = TracePoint {
+        t_s: 0.0,
+        rate_factor: 1.0,
+        uplink_factor: 1.0,
+        downlink_factor: 1.0,
+    };
+}
+
+/// Most devices a trace may address. Guards the per-device track table
+/// against absurd ids (a malformed row must error, not allocate a
+/// device-id-sized Vec); matches the engine's per-stage substream
+/// budget ([`crate::dynamics`]).
+const MAX_TRACE_DEVICES: usize = 65_536;
+
+/// All devices' tracks, sorted by time (immutable after load; shared by
+/// the rate and bandwidth cursors via `Arc`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceData {
+    tracks: Vec<Vec<TracePoint>>,
+}
+
+impl TraceData {
+    /// Load a trace file, dispatching on extension (`.json` → JSON,
+    /// anything else → CSV).
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading dynamics trace {}", path.display()))?;
+        let data = if path.extension().is_some_and(|e| e.eq_ignore_ascii_case("json")) {
+            Self::from_json(&text)
+        } else {
+            Self::from_csv(&text)
+        };
+        data.with_context(|| format!("parsing dynamics trace {}", path.display()))
+    }
+
+    /// Parse the CSV format documented in the module header.
+    pub fn from_csv(text: &str) -> Result<Self> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().context("empty trace: missing CSV header")?;
+        let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+        ensure!(
+            cols.len() >= 3 && cols[0] == "device" && cols[1] == "t_s" && cols[2] == "rate_factor",
+            "trace header must start with device,t_s,rate_factor (got {header:?})"
+        );
+        let mut data = Self::default();
+        for (lineno, line) in lines.enumerate() {
+            let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+            ensure!(
+                fields.len() >= 3 && fields.len() <= cols.len(),
+                "trace line {}: expected 3..={} fields, got {}",
+                lineno + 2,
+                cols.len(),
+                fields.len()
+            );
+            let num = |idx: usize, name: &str| -> Result<f64> {
+                fields[idx]
+                    .parse()
+                    .with_context(|| format!("trace line {}: bad {name} {:?}", lineno + 2, fields[idx]))
+            };
+            // device ids parse as integers: negative, fractional or
+            // overflowing ids are rejected, never truncated
+            let device: usize = fields[0]
+                .parse()
+                .with_context(|| format!("trace line {}: bad device {:?}", lineno + 2, fields[0]))?;
+            let point = TracePoint {
+                t_s: num(1, "t_s")?,
+                rate_factor: num(2, "rate_factor")?,
+                uplink_factor: if fields.len() > 3 { num(3, "uplink_factor")? } else { 1.0 },
+                downlink_factor: if fields.len() > 4 { num(4, "downlink_factor")? } else { 1.0 },
+            };
+            data.push(device, point)?;
+        }
+        data.finish()
+    }
+
+    /// Parse the JSON format documented in the module header.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text)?;
+        let mut data = Self::default();
+        for (i, row) in doc.as_arr().context("trace JSON must be an array")?.iter().enumerate() {
+            let ctx = |name: &str| format!("trace row {i}: {name}");
+            let opt_num = |name: &str, default: f64| -> Result<f64> {
+                match row.opt(name) {
+                    None => Ok(default),
+                    Some(v) => v.as_f64().with_context(|| ctx(name)),
+                }
+            };
+            let device = row
+                .get("device")
+                .and_then(Json::as_usize)
+                .with_context(|| ctx("device"))?;
+            let point = TracePoint {
+                t_s: row.get("t_s").and_then(Json::as_f64).with_context(|| ctx("t_s"))?,
+                rate_factor: row
+                    .get("rate_factor")
+                    .and_then(Json::as_f64)
+                    .with_context(|| ctx("rate_factor"))?,
+                uplink_factor: opt_num("uplink_factor", 1.0)?,
+                downlink_factor: opt_num("downlink_factor", 1.0)?,
+            };
+            data.push(device, point)?;
+        }
+        data.finish()
+    }
+
+    fn push(&mut self, device: usize, point: TracePoint) -> Result<()> {
+        ensure!(
+            device < MAX_TRACE_DEVICES,
+            "trace device id {device} out of range (max {})",
+            MAX_TRACE_DEVICES - 1
+        );
+        if self.tracks.len() <= device {
+            self.tracks.resize(device + 1, Vec::new());
+        }
+        self.tracks[device].push(point);
+        Ok(())
+    }
+
+    /// Sort each track by time and validate values.
+    fn finish(mut self) -> Result<Self> {
+        for (device, track) in self.tracks.iter_mut().enumerate() {
+            track.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+            for p in track.iter() {
+                ensure!(
+                    p.t_s >= 0.0 && p.t_s.is_finite(),
+                    "device {device}: trace times must be finite and ≥ 0 (got {})",
+                    p.t_s
+                );
+                for (name, v) in [
+                    ("rate_factor", p.rate_factor),
+                    ("uplink_factor", p.uplink_factor),
+                    ("downlink_factor", p.downlink_factor),
+                ] {
+                    ensure!(
+                        v >= 0.0 && v.is_finite(),
+                        "device {device}: {name} must be finite and ≥ 0 (got {v})"
+                    );
+                }
+            }
+            ensure!(
+                track.windows(2).all(|w| w[0].t_s < w[1].t_s),
+                "device {device}: trace times must be strictly increasing"
+            );
+        }
+        Ok(self)
+    }
+
+    /// Devices the trace mentions (tracks beyond this index are identity).
+    pub fn devices(&self) -> usize {
+        self.tracks.len()
+    }
+
+    fn track(&self, device: usize) -> &[TracePoint] {
+        match self.tracks.get(device) {
+            Some(t) => t,
+            None => &[],
+        }
+    }
+}
+
+/// A monotone reader over [`TraceData`]: holds one segment index per
+/// device, advanced lazily — O(1) amortized per round, no allocation.
+#[derive(Debug, Clone)]
+pub struct TraceCursor {
+    data: Arc<TraceData>,
+    pos: Vec<usize>,
+}
+
+impl TraceCursor {
+    pub fn new(data: Arc<TraceData>, devices: usize) -> Self {
+        Self { data, pos: vec![0; devices] }
+    }
+
+    /// The point in effect for `device` at time `t` (identity before the
+    /// first point and for devices the trace never mentions). Queries
+    /// must be non-decreasing in `t` per device.
+    pub fn point(&mut self, device: usize, t: f64) -> TracePoint {
+        let track = self.data.track(device);
+        let Some(pos) = self.pos.get_mut(device) else {
+            return TracePoint::IDENTITY;
+        };
+        while *pos < track.len() && track[*pos].t_s <= t {
+            *pos += 1;
+        }
+        if *pos == 0 {
+            TracePoint::IDENTITY
+        } else {
+            track[*pos - 1]
+        }
+    }
+}
+
+/// [`RateProcess`] view of a trace (the bandwidth view lives in
+/// [`super::bandwidth::BandwidthProcess::Trace`], sharing the same
+/// `Arc<TraceData>` with its own cursor).
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    cursor: TraceCursor,
+}
+
+impl TraceReplay {
+    pub fn new(data: Arc<TraceData>, devices: usize) -> Self {
+        Self { cursor: TraceCursor::new(data, devices) }
+    }
+}
+
+impl RateProcess for TraceReplay {
+    fn rate_factor(&mut self, device: usize, t: f64) -> f64 {
+        self.cursor.point(device, t).rate_factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CSV: &str = "\
+device,t_s,rate_factor,uplink_factor,downlink_factor
+0,0,1.0,1.0,1.0
+0,30,0.2,0.5,1.0
+0,60,2.0
+1,10,4.0,0.25,0.25
+";
+
+    #[test]
+    fn csv_parses_and_holds_piecewise_constant() {
+        let data = Arc::new(TraceData::from_csv(CSV).unwrap());
+        assert_eq!(data.devices(), 2);
+        let mut c = TraceCursor::new(data, 3);
+        assert_eq!(c.point(0, 0.0).rate_factor, 1.0);
+        assert_eq!(c.point(0, 29.9).rate_factor, 1.0);
+        let mid = c.point(0, 30.0);
+        assert_eq!(mid.rate_factor, 0.2);
+        assert_eq!(mid.uplink_factor, 0.5);
+        // omitted columns default to 1
+        assert_eq!(c.point(0, 61.0), TracePoint { t_s: 60.0, rate_factor: 2.0, ..TracePoint::IDENTITY });
+        // holds past the last point forever
+        assert_eq!(c.point(0, 1e9).rate_factor, 2.0);
+    }
+
+    #[test]
+    fn identity_before_first_point_and_for_unlisted_devices() {
+        let data = Arc::new(TraceData::from_csv(CSV).unwrap());
+        let mut c = TraceCursor::new(data, 3);
+        assert_eq!(c.point(1, 5.0), TracePoint::IDENTITY); // first point at t=10
+        assert_eq!(c.point(2, 50.0), TracePoint::IDENTITY); // never mentioned
+        assert_eq!(c.point(7, 50.0), TracePoint::IDENTITY); // beyond cursor too
+    }
+
+    #[test]
+    fn json_matches_csv() {
+        let json = r#"[
+            {"device": 0, "t_s": 0, "rate_factor": 1.0},
+            {"device": 0, "t_s": 30, "rate_factor": 0.2, "uplink_factor": 0.5},
+            {"device": 1, "t_s": 10, "rate_factor": 4.0, "uplink_factor": 0.25, "downlink_factor": 0.25}
+        ]"#;
+        let data = TraceData::from_json(json).unwrap();
+        let mut c = TraceCursor::new(Arc::new(data), 2);
+        assert_eq!(c.point(0, 45.0).rate_factor, 0.2);
+        assert_eq!(c.point(0, 45.0).uplink_factor, 0.5);
+        assert_eq!(c.point(1, 10.0).downlink_factor, 0.25);
+    }
+
+    #[test]
+    fn rejects_malformed_traces() {
+        assert!(TraceData::from_csv("").is_err()); // no header
+        assert!(TraceData::from_csv("a,b,c\n0,0,1").is_err()); // wrong header
+        assert!(TraceData::from_csv("device,t_s,rate_factor\n0,0,-1").is_err()); // negative factor
+        assert!(TraceData::from_csv("device,t_s,rate_factor\n0,5,1\n0,5,2").is_err()); // duplicate time
+        assert!(TraceData::from_csv("device,t_s,rate_factor\n0,nope,1").is_err());
+        assert!(TraceData::from_json("{\"not\": \"an array\"}").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_device_ids_instead_of_truncating_or_allocating() {
+        // negative and fractional ids must error, not cast-truncate
+        assert!(TraceData::from_csv("device,t_s,rate_factor\n-1,0,1").is_err());
+        assert!(TraceData::from_csv("device,t_s,rate_factor\n2.7,0,1").is_err());
+        // absurd ids must error, not resize a device-id-sized table
+        assert!(TraceData::from_csv("device,t_s,rate_factor\n999999999999,0,1").is_err());
+        assert!(
+            TraceData::from_json(r#"[{"device": 999999999999, "t_s": 0, "rate_factor": 1}]"#)
+                .is_err()
+        );
+        // the largest admissible id is fine
+        let ok = format!("device,t_s,rate_factor\n{},0,1\n", MAX_TRACE_DEVICES - 1);
+        assert_eq!(TraceData::from_csv(&ok).unwrap().devices(), MAX_TRACE_DEVICES);
+    }
+
+    #[test]
+    fn unsorted_rows_are_sorted_on_load() {
+        let csv = "device,t_s,rate_factor\n0,60,3\n0,0,1\n0,30,2\n";
+        let mut c = TraceCursor::new(Arc::new(TraceData::from_csv(csv).unwrap()), 1);
+        assert_eq!(c.point(0, 15.0).rate_factor, 1.0);
+        assert_eq!(c.point(0, 45.0).rate_factor, 2.0);
+        assert_eq!(c.point(0, 75.0).rate_factor, 3.0);
+    }
+
+    #[test]
+    fn replay_is_a_rate_process() {
+        let data = Arc::new(TraceData::from_csv(CSV).unwrap());
+        let mut r = TraceReplay::new(data, 2);
+        assert_eq!(r.rate_factor(1, 9.0), 1.0);
+        assert_eq!(r.rate_factor(1, 10.0), 4.0);
+    }
+}

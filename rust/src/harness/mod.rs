@@ -12,6 +12,7 @@
 
 pub mod ablation;
 pub mod analytic;
+pub mod dynamics;
 pub mod fig6;
 pub mod hetero;
 pub mod training;
@@ -59,7 +60,7 @@ pub const EXPERIMENTS: &[&str] = &[
 ];
 
 /// Extension studies beyond the paper (DESIGN.md §5b).
-pub const EXTENSIONS: &[&str] = &["ablation", "emd", "fedavg", "hetero"];
+pub const EXTENSIONS: &[&str] = &["ablation", "emd", "fedavg", "hetero", "dynamics"];
 
 /// Dispatch one experiment by id.
 pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
@@ -85,6 +86,7 @@ pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
         "emd" => ablation::emd_table(opts),
         "fedavg" => ablation::fedavg(opts),
         "hetero" => hetero::hetero(opts),
+        "dynamics" => dynamics::dynamics(opts),
         "all" => {
             for e in EXPERIMENTS {
                 eprintln!("\n================ {e} ================");

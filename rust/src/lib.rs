@@ -23,6 +23,14 @@
 //! per-round straggler attribution (stream-wait vs compute vs sync)
 //! lands in [`metrics::Timeline`]. See `examples/two_tier_cluster.rs`.
 //!
+//! The time axis is first-class too: a [`config::DynamicsPreset`]
+//! scenario (`static` default, `diurnal`, `burst`, `churn`, `linkfade`,
+//! `trace:PATH`, composable with `+`) drives the [`dynamics`] engine,
+//! which modulates per-device streaming rates, link bandwidths and
+//! cluster membership as virtual time advances — deterministic at any
+//! worker-pool width, with `static` reproducing the frozen-profile
+//! engine bitwise. See `examples/diurnal_burst.rs`.
+//!
 //! Layers 1–2 (Pallas kernels + JAX models) are AOT-lowered to HLO text at
 //! build time (`make artifacts`) and executed through the PJRT CPU client
 //! by [`runtime`]. Python never runs on the training path.
@@ -48,6 +56,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dynamics;
 pub mod harness;
 pub mod injection;
 pub mod metrics;

@@ -35,6 +35,13 @@ USAGE:
                                k80-homogeneous | uniform[:spread] |
                                two-tier[:frac] | lognormal-compute[:sigma] |
                                constrained-uplink[:frac])
+              [--dynamics D]  (stream-dynamics scenario, stages joined with '+':
+                               static | diurnal[:amp[:period]] |
+                               burst[:boost[:calm[:mean_on[:mean_off]]]] |
+                               churn[:frac[:period[:down]]] |
+                               linkfade[:floor[:period]] | trace:PATH;
+                               e.g. --dynamics diurnal:0.5 or burst:4+churn:0.25,
+                               composes with --hetero)
   repro exp <id|all> [--artifacts DIR] [--devices N] [--rounds R]
               [--model M] [--out-dir DIR] [--echo N] [--seed S]
   repro info  [--artifacts DIR]
@@ -187,6 +194,7 @@ fn main() -> anyhow::Result<()> {
                 .mode(parse_mode(&args.get_str("mode", "scadles"))?)
                 .rate_jitter(args.get("jitter", 0.0f64)?)
                 .hetero(args.get_str("hetero", "k80-homogeneous").parse()?)
+                .dynamics(args.get_str("dynamics", "static").parse()?)
                 .seed(args.get("seed", 42u64)?)
                 .echo_every(args.get("echo", 10usize)?)
                 .worker_threads(args.get("workers", 0usize)?);
@@ -217,7 +225,8 @@ fn main() -> anyhow::Result<()> {
                         "round", "wall_clock_s", "global_batch", "train_loss",
                         "test_top1", "test_top5", "lr", "buffered_samples",
                         "floats_sent", "compressed", "injection_bytes",
-                        "straggler_device", "straggler_cause",
+                        "straggler_device", "straggler_cause", "active_devices",
+                        "rate_est",
                     ],
                 )?;
                 for r in out.logs.rounds() {
@@ -235,6 +244,8 @@ fn main() -> anyhow::Result<()> {
                         r.injection_bytes.to_string(),
                         r.straggler_device.to_string(),
                         r.straggler_cause.name().into(),
+                        r.active_devices.to_string(),
+                        format!("{:.2}", r.rate_est),
                     ])?;
                 }
                 w.flush()?;

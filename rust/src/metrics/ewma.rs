@@ -84,6 +84,35 @@ mod tests {
     }
 
     #[test]
+    fn windowed_rate_estimate_tracks_a_step_change_within_k_rounds() {
+        // The trainer's per-round rate estimator: a stream running at
+        // 100 samples/s steps to 400 (a burst onset). With α = 0.3 the
+        // bias-corrected EWMA must be within 10% of the new level after
+        // k = 10 rounds — the "current window" the effective-rate
+        // retention reasons about — and within 35% after just 3.
+        let mut e = Ewma::new(0.3);
+        for _ in 0..50 {
+            e.update(100.0);
+        }
+        assert!((e.get() - 100.0).abs() < 1e-6);
+        let mut after3 = 0.0;
+        for k in 0..10 {
+            e.update(400.0);
+            if k == 2 {
+                after3 = e.get();
+            }
+        }
+        assert!((after3 - 400.0).abs() / 400.0 < 0.35, "after 3: {after3}");
+        let after10 = e.get();
+        assert!((after10 - 400.0).abs() / 400.0 < 0.10, "after 10: {after10}");
+        // and the step down tracks symmetrically
+        for _ in 0..10 {
+            e.update(100.0);
+        }
+        assert!((e.get() - 100.0).abs() / 100.0 < 0.15, "down: {}", e.get());
+    }
+
+    #[test]
     #[should_panic]
     fn rejects_bad_alpha() {
         Ewma::new(0.0);

@@ -32,6 +32,12 @@ pub struct RoundLog {
     pub straggler_device: usize,
     /// Which phase made it the straggler (stream-wait/compute/sync).
     pub straggler_cause: StragglerCause,
+    /// Cluster members this round (devices not churned out; they may
+    /// still sit out on an empty stream).
+    pub active_devices: usize,
+    /// EWMA estimate of the cluster's aggregate effective streaming rate
+    /// (samples/s) — the windowed rate the buffer policies see.
+    pub rate_est: f64,
 }
 
 /// Accumulates [`RoundLog`]s for one run; the harness renders them into

@@ -49,6 +49,11 @@ pub struct DeviceRoundRow {
     pub wait_s: f64,
     /// The device's local compute seconds.
     pub compute_s: f64,
+    /// Effective streaming rate this round (nominal × jitter × dynamics
+    /// factor; 0 while churned out).
+    pub effective_rate: f64,
+    /// Whether the device was a cluster member this round (churn).
+    pub active: bool,
     /// Whether this device bounded the round's critical path.
     pub straggler: bool,
     /// Why (set on the straggler's row; `None` elsewhere).
@@ -98,6 +103,24 @@ impl Timeline {
         }
         counts
     }
+
+    /// Device-rounds spent churned out (the timeline-side churn counter;
+    /// the dynamics engine's [`crate::dynamics::DynamicsCounters`] carry
+    /// the edge counts).
+    pub fn inactive_rounds(&self) -> u64 {
+        self.rows.iter().filter(|r| !r.active).count() as u64
+    }
+
+    /// Min/max effective rate observed across all device-rounds (burst
+    /// spread; `(0, 0)` on an empty timeline).
+    pub fn effective_rate_span(&self) -> (f64, f64) {
+        if self.rows.is_empty() {
+            return (0.0, 0.0);
+        }
+        self.rows.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), r| {
+            (lo.min(r.effective_rate), hi.max(r.effective_rate))
+        })
+    }
 }
 
 #[cfg(test)]
@@ -110,6 +133,7 @@ mod tests {
             device,
             straggler,
             cause,
+            active: true,
             ..Default::default()
         }
     }
@@ -125,6 +149,18 @@ mod tests {
         assert_eq!(t.cause_counts(), (1, 1, 1));
         assert_eq!(t.device_counts(2), vec![0, 3]);
         assert_eq!(t.rows().len(), 5);
+    }
+
+    #[test]
+    fn dynamics_columns_feed_the_churn_and_rate_counters() {
+        let mut t = Timeline::new();
+        t.push(DeviceRoundRow { effective_rate: 40.0, active: true, ..Default::default() });
+        t.push(DeviceRoundRow { effective_rate: 0.0, active: false, ..Default::default() });
+        t.push(DeviceRoundRow { effective_rate: 160.0, active: true, ..Default::default() });
+        assert_eq!(t.inactive_rounds(), 1);
+        assert_eq!(t.effective_rate_span(), (0.0, 160.0));
+        assert_eq!(Timeline::new().effective_rate_span(), (0.0, 0.0));
+        assert_eq!(Timeline::new().inactive_rounds(), 0);
     }
 
     #[test]

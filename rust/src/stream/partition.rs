@@ -39,9 +39,14 @@ impl Partition {
         self.retention
     }
 
-    /// Replace the retention policy (takes effect on the next append/enforce).
+    /// Replace the retention policy and enforce it immediately: a
+    /// narrowing window (stream dynamics dropping a device's effective
+    /// rate) discards the now-excess oldest records right away instead
+    /// of waiting for the next append — which may never come if the
+    /// stream stalled.
     pub fn set_retention(&mut self, retention: Retention) {
         self.retention = retention;
+        self.enforce_retention();
     }
 
     /// Append one record; the broker assigns its offset here.
@@ -172,6 +177,20 @@ mod tests {
         assert_eq!(p.dropped(), 1000 - 64);
         // newest survive
         assert_eq!(p.earliest_offset(), Some(1000 - 64));
+    }
+
+    #[test]
+    fn narrowing_retention_enforces_immediately() {
+        let mut p = Partition::new(Retention::Truncate { keep: 100 });
+        p.append_batch((0..80).map(rec));
+        assert_eq!(p.len(), 80);
+        p.set_retention(Retention::Truncate { keep: 10 });
+        assert_eq!(p.len(), 10, "no append needed to shed the excess");
+        assert_eq!(p.dropped(), 70);
+        // widening back is free: nothing reappears, nothing drops
+        p.set_retention(Retention::Truncate { keep: 100 });
+        assert_eq!(p.len(), 10);
+        assert_eq!(p.dropped(), 70);
     }
 
     #[test]

@@ -60,6 +60,16 @@ impl Producer {
         self.cfg.rate
     }
 
+    /// Retarget the streaming rate (stream dynamics: diurnal cycles,
+    /// bursts, churn gating inflow to zero). The fractional-sample carry
+    /// is preserved, so piecewise-constant rate changes integrate
+    /// exactly: `advance` publishes `⌊∫rate·dt + carry⌋` whatever the
+    /// sequence of retargets.
+    pub fn set_rate(&mut self, rate: f64) {
+        debug_assert!(rate >= 0.0 && rate.is_finite(), "producer rate must be ≥ 0");
+        self.cfg.rate = rate.max(0.0);
+    }
+
     pub fn produced(&self) -> u64 {
         self.produced
     }
@@ -141,6 +151,25 @@ mod tests {
         let mut p = producer(0.4, vec![0]);
         let total: usize = (0..10).map(|_| p.advance(1.0)).sum();
         assert_eq!(total, 4); // 0.4 * 10
+    }
+
+    #[test]
+    fn retargeted_rate_integrates_exactly_with_carry() {
+        // 10 s at 38/s, then 10 s at 9.5/s: 380 + 95 records, the carry
+        // surviving every retarget
+        let mut p = producer(38.0, vec![0]);
+        let mut total = 0;
+        for _ in 0..20 {
+            total += p.advance(0.5);
+        }
+        p.set_rate(9.5);
+        for _ in 0..20 {
+            total += p.advance(0.5);
+        }
+        assert_eq!(total, 380 + 95);
+        // rate 0 gates inflow entirely
+        p.set_rate(0.0);
+        assert_eq!(p.advance(100.0), 0);
     }
 
     #[test]

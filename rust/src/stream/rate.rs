@@ -33,6 +33,15 @@ impl RateLimiter {
         self.rate
     }
 
+    /// Retarget the limiter to a new rate (real-time producers following
+    /// a stream-dynamics process). Accrued tokens are settled at the old
+    /// rate first, so a retarget never grants or forfeits tokens
+    /// retroactively; the burst ceiling is left as configured.
+    pub fn set_rate(&mut self, rate: f64) {
+        self.refill(Instant::now());
+        self.rate = rate.max(f64::MIN_POSITIVE);
+    }
+
     fn refill(&mut self, now: Instant) {
         let dt = now.duration_since(self.last).as_secs_f64();
         self.last = now;
@@ -100,6 +109,24 @@ mod tests {
         let dt = t0.elapsed().as_secs_f64();
         assert!(dt > 0.05, "too fast: {dt}s");
         assert!(dt < 1.0, "too slow: {dt}s");
+    }
+
+    #[test]
+    fn retarget_changes_pacing_without_retroactive_tokens() {
+        // drain the bucket at a slow rate, then retarget 10x faster: the
+        // deficit is repriced at the new rate but no tokens appear from
+        // the past
+        let mut rl = RateLimiter::with_burst(10.0, 5.0);
+        assert!(rl.try_acquire(5));
+        let slow = rl.delay_for(10).as_secs_f64();
+        rl.set_rate(100.0);
+        let fast = rl.delay_for(10).as_secs_f64();
+        assert!(fast > 0.0, "retarget must not mint tokens");
+        assert!(fast < slow / 5.0, "slow {slow} fast {fast}");
+        // and retargeting down stretches the wait
+        rl.set_rate(1.0);
+        let crawl = rl.delay_for(10).as_secs_f64();
+        assert!(crawl > fast * 10.0, "crawl {crawl} fast {fast}");
     }
 
     #[test]

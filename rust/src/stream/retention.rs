@@ -13,7 +13,12 @@ pub enum Retention {
     /// Keep everything until consumed (paper: Stream Persistence).
     Persist,
     /// Keep only the newest `keep` unconsumed records, dropping the oldest
-    /// (paper: Stream Truncation with `keep ≈ S⁽ⁱ⁾`).
+    /// (paper: Stream Truncation with `keep ≈ S⁽ⁱ⁾`, re-derived from the
+    /// *effective* rate when stream dynamics move it). `keep` is floored
+    /// at 1 by [`crate::buffer::BufferPolicy::retention`] even at an
+    /// effective rate of 0, so a stalled stream's window never
+    /// underflows: the newest record survives and the buffer drains as
+    /// the consumer polls.
     Truncate { keep: usize },
     /// Keep at most `bytes` of payload (oldest evicted first).
     SizeBytes { bytes: usize },

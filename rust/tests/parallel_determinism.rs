@@ -5,33 +5,39 @@
 //!
 //! Matrix: seeds {1,2,3} x devices {1,4,8} x engine paths {plain,
 //! truncation, Top-k compression, Top-k + error feedback, DDL baseline,
-//! two heterogeneous cluster profiles} x pool widths {1 (sequential),
-//! 4, 8}. The heterogeneous cases also pin the scenario layer's
-//! per-device-substream sampling: profiles must not depend on pool width.
+//! two heterogeneous cluster profiles, two stream-dynamics scenarios
+//! (diurnal+topk, burst+churn)} x pool widths {1 (sequential), 4, 8}.
+//! The heterogeneous cases pin the scenario layer's per-device-substream
+//! sampling, and the dynamics cases pin the time-varying process layer
+//! (effective rates, membership, counters): neither may depend on pool
+//! width.
 
 use scadles::buffer::BufferPolicy;
 use scadles::config::{
-    CompressionConfig, ExperimentConfig, HeteroPreset, StreamPreset, TrainMode,
+    CompressionConfig, DynamicsPreset, ExperimentConfig, HeteroPreset, StreamPreset, TrainMode,
 };
 use scadles::coordinator::{MockBackend, Trainer, TrainerOutput};
 use scadles::metrics::RoundLog;
 
-#[derive(Clone, Copy)]
+#[derive(Clone)]
 struct Case {
     name: &'static str,
     mode: TrainMode,
     policy: BufferPolicy,
     compression: Option<CompressionConfig>,
     hetero: HeteroPreset,
+    dynamics: DynamicsPreset,
 }
 
-const CASES: [Case; 7] = [
+fn cases() -> Vec<Case> {
+    vec![
     Case {
         name: "plain",
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: None,
         hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
     },
     Case {
         name: "truncation",
@@ -39,6 +45,7 @@ const CASES: [Case; 7] = [
         policy: BufferPolicy::Truncation,
         compression: None,
         hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
     },
     Case {
         name: "topk",
@@ -51,6 +58,7 @@ const CASES: [Case; 7] = [
             error_feedback: false,
         }),
         hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
     },
     Case {
         name: "topk+ef",
@@ -63,6 +71,7 @@ const CASES: [Case; 7] = [
             error_feedback: true,
         }),
         hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
     },
     Case {
         name: "ddl",
@@ -70,6 +79,7 @@ const CASES: [Case; 7] = [
         policy: BufferPolicy::Persistence,
         compression: None,
         hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
     },
     Case {
         name: "two-tier",
@@ -77,6 +87,7 @@ const CASES: [Case; 7] = [
         policy: BufferPolicy::Persistence,
         compression: None,
         hetero: HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
+        dynamics: DynamicsPreset::Static,
     },
     Case {
         name: "lognormal+topk",
@@ -89,10 +100,36 @@ const CASES: [Case; 7] = [
             error_feedback: true,
         }),
         hetero: HeteroPreset::LognormalCompute { sigma: 0.6 },
+        dynamics: DynamicsPreset::Static,
     },
-];
+    Case {
+        name: "diurnal+topk",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Persistence,
+        compression: Some(CompressionConfig {
+            ratio: 0.1,
+            delta: 0.5,
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        }),
+        hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Diurnal { amplitude: 0.8, period_s: 15.0 },
+    },
+    Case {
+        name: "burst+churn",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Truncation,
+        compression: None,
+        hetero: HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
+        dynamics: DynamicsPreset::Compose(vec![
+            DynamicsPreset::Burst { boost: 4.0, calm: 0.25, mean_boost_s: 5.0, mean_calm_s: 10.0 },
+            DynamicsPreset::Churn { fraction: 0.5, period_s: 20.0, down_fraction: 0.5 },
+        ]),
+    },
+    ]
+}
 
-fn run(case: Case, seed: u64, devices: usize, threads: usize) -> TrainerOutput {
+fn run(case: &Case, seed: u64, devices: usize, threads: usize) -> TrainerOutput {
     let mut b = ExperimentConfig::builder("mlp_c10")
         .devices(devices)
         .rounds(12)
@@ -101,6 +138,7 @@ fn run(case: Case, seed: u64, devices: usize, threads: usize) -> TrainerOutput {
         .mode(case.mode)
         .buffer_policy(case.policy)
         .hetero(case.hetero)
+        .dynamics(case.dynamics.clone())
         .rate_jitter(0.2)
         .eval_every(4)
         .worker_threads(threads);
@@ -136,6 +174,8 @@ fn assert_logs_identical(a: &RoundLog, b: &RoundLog, ctx: &str) {
     assert_eq!(a.injection_bytes, b.injection_bytes, "{ctx}: injection");
     assert_eq!(a.straggler_device, b.straggler_device, "{ctx}: straggler device");
     assert_eq!(a.straggler_cause, b.straggler_cause, "{ctx}: straggler cause");
+    assert_eq!(a.active_devices, b.active_devices, "{ctx}: active devices");
+    assert!(feq(a.rate_est, b.rate_est), "{ctx}: rate estimate");
 }
 
 fn assert_outputs_identical(a: &TrainerOutput, b: &TrainerOutput, ctx: &str) {
@@ -173,19 +213,25 @@ fn assert_outputs_identical(a: &TrainerOutput, b: &TrainerOutput, ctx: &str) {
         assert_eq!(x.batch, y.batch, "{ctx}: timeline batch");
         assert!(feq(x.wait_s, y.wait_s), "{ctx}: timeline wait");
         assert!(feq(x.compute_s, y.compute_s), "{ctx}: timeline compute");
+        assert!(
+            feq(x.effective_rate, y.effective_rate),
+            "{ctx}: timeline effective rate"
+        );
+        assert_eq!(x.active, y.active, "{ctx}: timeline active");
         assert_eq!(x.straggler, y.straggler, "{ctx}: timeline straggler");
         assert_eq!(x.cause, y.cause, "{ctx}: timeline cause");
     }
+    assert_eq!(a.dynamics, b.dynamics, "{ctx}: dynamics counters");
 }
 
 #[test]
 fn sequential_and_parallel_reports_are_bitwise_identical() {
-    for case in CASES {
+    for case in cases() {
         for seed in [1u64, 2, 3] {
             for devices in [1usize, 4, 8] {
-                let sequential = run(case, seed, devices, 1);
+                let sequential = run(&case, seed, devices, 1);
                 for threads in [4usize, 8] {
-                    let parallel = run(case, seed, devices, threads);
+                    let parallel = run(&case, seed, devices, threads);
                     let ctx = format!(
                         "{} seed={seed} devices={devices} threads={threads}",
                         case.name
@@ -201,10 +247,27 @@ fn sequential_and_parallel_reports_are_bitwise_identical() {
 fn auto_width_matches_sequential() {
     // worker_threads = 0 resolves to the host's core count — whatever it
     // is, the run must still be bitwise identical to the 1-thread engine.
-    let case = CASES[3]; // topk+ef exercises the most per-device state
-    let sequential = run(case, 42, 8, 1);
-    let auto = run(case, 42, 8, 0);
+    let case = cases()[3].clone(); // topk+ef exercises the most per-device state
+    let sequential = run(&case, 42, 8, 1);
+    let auto = run(&case, 42, 8, 0);
     assert_outputs_identical(&sequential, &auto, "auto-width seed=42 devices=8");
+}
+
+#[test]
+fn static_dynamics_reproduce_the_frozen_profile_engine_bitwise() {
+    // The acceptance regression: `--dynamics static` (the default) and
+    // an identity modulation (amplitude-0 diurnal + fraction-0 churn +
+    // floor-1 linkfade, which runs the whole dynamics path — producer
+    // retargeting, retention re-derivation, effective-ring pricing) must
+    // be bitwise indistinguishable, at sequential and parallel widths.
+    let fixed = cases()[3].clone(); // topk+ef over truncation
+    let mut identity = fixed.clone();
+    identity.dynamics = "diurnal:0+churn:0+linkfade:1".parse().unwrap();
+    for threads in [1usize, 4, 8] {
+        let a = run(&fixed, 7, 8, threads);
+        let b = run(&identity, 7, 8, threads);
+        assert_outputs_identical(&a, &b, &format!("static-vs-identity threads={threads}"));
+    }
 }
 
 #[test]

@@ -114,7 +114,7 @@ fn prop_plan_respects_bounds_and_buckets() {
         let rates: Vec<f64> = (0..n).map(|_| 1.0 + rng.f64() * 500.0).collect();
         let backlogs: Vec<usize> = (0..n).map(|_| rng.below(2000)).collect();
         let cluster = HeteroPreset::K80Homogeneous.sample_cluster("mlp_c10", n, 0);
-        let plan = RoundPlan::plan(&cfg, &ladder, &cluster, &rates, &backlogs);
+        let plan = RoundPlan::plan(&cfg, &ladder, &cluster, &rates, &backlogs, &vec![true; n]);
         assert_eq!(plan.devices.len(), n);
         for p in &plan.devices {
             assert!(p.batch >= 8 && p.batch <= 256, "batch {}", p.batch);
@@ -142,7 +142,7 @@ fn prop_scadles_wait_bounded_by_one_second_of_stream() {
         let rates: Vec<f64> = (0..n).map(|_| 8.0 + rng.f64() * 500.0).collect();
         let backlogs = vec![0usize; n];
         let cluster = HeteroPreset::K80Homogeneous.sample_cluster("mlp_c10", n, 0);
-        let plan = RoundPlan::plan(&cfg, &ladder, &cluster, &rates, &backlogs);
+        let plan = RoundPlan::plan(&cfg, &ladder, &cluster, &rates, &backlogs, &vec![true; n]);
         assert!(plan.wait_s <= 1.13, "wait {}", plan.wait_s); // b_i = round(S_i) can exceed S_i by <1
     });
 }

@@ -1,12 +1,14 @@
 //! Scenario smoke-matrix (CI-gated): the mock-backend trainer must run
 //! panic-free with finite losses across
-//! {k80-homogeneous, two-tier, constrained-uplink} × {scadles, ddl}.
+//! {k80-homogeneous, two-tier, constrained-uplink} × {scadles, ddl},
+//! and across the stream-dynamics presets {diurnal, burst, churn,
+//! linkfade, burst+churn} × {scadles, ddl}.
 //!
-//! This is the cheap end-to-end guard on the heterogeneity scenario
-//! layer: every preset must thread through config → plan → workers →
-//! clock → metrics without degenerate numbers, in both training modes.
+//! This is the cheap end-to-end guard on the scenario layers: every
+//! preset must thread through config → plan → workers → clock → metrics
+//! without degenerate numbers, in both training modes.
 
-use scadles::config::{ExperimentConfig, HeteroPreset, StreamPreset, TrainMode};
+use scadles::config::{DynamicsPreset, ExperimentConfig, HeteroPreset, StreamPreset, TrainMode};
 use scadles::coordinator::{MockBackend, Trainer, TrainerOutput};
 
 fn run(hetero: HeteroPreset, mode: TrainMode) -> TrainerOutput {
@@ -80,6 +82,63 @@ fn heterogeneous_scenarios_never_beat_the_flat_cluster_clock() {
                 "{hetero} × {}: {t} well below flat {flat}",
                 mode.name()
             );
+        }
+    }
+}
+
+#[test]
+fn dynamics_matrix_trains_with_finite_losses() {
+    let presets = [
+        "diurnal:0.8:20",
+        "burst:4:0.25:5:10",
+        "churn:0.5:20:0.5",
+        "linkfade:0.1:20",
+        "burst:4:0.25:5:10+churn:0.5:20:0.5",
+    ];
+    for spec in presets {
+        let dynamics: DynamicsPreset = spec.parse().unwrap();
+        for mode in [TrainMode::Scadles, TrainMode::Ddl] {
+            let cfg = ExperimentConfig::builder("mlp_c10")
+                .devices(4)
+                .rounds(8)
+                .preset(StreamPreset::S1)
+                .dynamics(dynamics.clone())
+                .mode(mode)
+                .eval_every(4)
+                .build()
+                .unwrap();
+            let out = Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10)))
+                .unwrap()
+                .run()
+                .unwrap();
+            let ctx = format!("{dynamics} × {}", mode.name());
+            assert_eq!(out.logs.rounds().len(), 8, "{ctx}: round count");
+            for r in out.logs.rounds() {
+                assert!(r.train_loss.is_finite(), "{ctx}: loss r{} = {}", r.round, r.train_loss);
+                assert!(
+                    r.wall_clock_s.is_finite() && r.wall_clock_s > 0.0,
+                    "{ctx}: clock r{} = {}",
+                    r.round,
+                    r.wall_clock_s
+                );
+                assert!(r.rate_est.is_finite() && r.rate_est >= 0.0, "{ctx}: rate_est");
+                assert!(r.active_devices <= 4, "{ctx}: active_devices");
+            }
+            assert_eq!(
+                out.timeline.rows().len(),
+                8 * 4,
+                "{ctx}: one timeline row per device-round"
+            );
+            for row in out.timeline.rows() {
+                assert!(
+                    row.effective_rate.is_finite() && row.effective_rate >= 0.0,
+                    "{ctx}: effective rate {}",
+                    row.effective_rate
+                );
+                if !row.active {
+                    assert_eq!(row.batch, 0, "{ctx}: departed device trained");
+                }
+            }
         }
     }
 }
