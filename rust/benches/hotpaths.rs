@@ -3,8 +3,12 @@
 //! Covers every per-round operation of the coordinator, plus
 //! kernel-vs-native ablations for the Pallas artifacts:
 //!
-//!   * weighted aggregation        (L1 wagg kernel vs native Rust loop)
-//!   * top-k threshold + mask      (select-nth + L1 topk kernel vs native)
+//!   * weighted aggregation        (L1 wagg kernel vs native Rust loop vs
+//!     the O(Σ nnz) sparse scatter and the coordinate-chunked parallel
+//!     variant — `agg/sparse-native` vs `agg/wagg-native` is the
+//!     compressed-round speedup the sparse fast path claims)
+//!   * top-k threshold + mask      (select-nth + L1 topk kernel vs native;
+//!     scratch-reuse vs allocating selection)
 //!   * momentum update             (update artifact vs native loop)
 //!   * round engine                (parallel worker pool vs sequential)
 //!   * train-step dispatch         (PJRT end-to-end per bucket)
@@ -17,11 +21,16 @@
 use std::sync::Arc;
 
 use scadles::buffer::BufferPolicy;
-use scadles::compress::{mask_stats_native, threshold_for_ratio};
+use scadles::compress::{
+    mask_stats_native, mask_stats_only, threshold_for_ratio, threshold_for_ratio_with,
+    SelectScratch, SparseGrad,
+};
 use scadles::config::{
     CompressionConfig, ExperimentConfig, HeteroPreset, StreamPreset, TrainMode,
 };
-use scadles::coordinator::{aggregate_native, MockBackend, Trainer};
+use scadles::coordinator::{
+    aggregate_chunked_native, aggregate_native, aggregate_sparse_native, MockBackend, Trainer,
+};
 use scadles::data::{materialize, Synthetic};
 use scadles::dynamics::StreamDynamics;
 use scadles::rng::Pcg64;
@@ -43,16 +52,61 @@ fn main() {
     let grads = randvec(n * d, 1);
     let weights: Vec<f32> = (0..n).map(|i| (i + 1) as f32 / 36.0).collect();
 
-    b.header("aggregation (n=8, d=820874)");
-    b.case("wagg/native", || aggregate_native(&grads, &weights, d));
+    b.header("aggregation (n=8, d=820874, CR=0.1 for the sparse rows)");
+    let dense_agg_ns = b
+        .case("agg/wagg-native", || aggregate_native(&grads, &weights, d))
+        .ns_per_iter();
+    // the same 8 rows Top-k-masked at CR=0.1, in coordinate form — the
+    // compressed round's actual aggregation input
+    let sparse_rows: Vec<SparseGrad> = (0..n)
+        .map(|i| {
+            let row = &grads[i * d..(i + 1) * d];
+            let (_k, t) = threshold_for_ratio(row, 0.1);
+            let (_n2, _k2, nnz) = mask_stats_only(row, t);
+            let mut s = SparseGrad::new();
+            s.fill_from_threshold(row, t, nnz);
+            s
+        })
+        .collect();
+    let sparse_agg_ns = b
+        .case("agg/sparse-native", || {
+            aggregate_sparse_native(&sparse_rows, &weights, d)
+        })
+        .ns_per_iter();
+    let agg_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let chunked_agg_ns = b
+        .case("agg/parallel-chunked", || {
+            aggregate_chunked_native(&grads, &weights, d, agg_threads)
+        })
+        .ns_per_iter();
+    println!(
+        "agg: sparse-native {:.2}x fewer ns/op than wagg-native at CR=0.1 \
+         (target >= 4x); parallel-chunked {:.2}x over {agg_threads} threads",
+        dense_agg_ns / sparse_agg_ns,
+        dense_agg_ns / chunked_agg_ns
+    );
 
     b.header("top-k compression (d=820874, CR=0.1)");
     let g = randvec(d, 2);
     b.case("topk/select-threshold", || threshold_for_ratio(&g, 0.1));
+    let mut scratch = SelectScratch::with_capacity(d);
+    b.case("topk/select-scratch-reuse", || {
+        threshold_for_ratio_with(&g, 0.1, &mut scratch)
+    });
     let (_, thresh) = threshold_for_ratio(&g, 0.1);
     b.case("topk/mask-stats-native", || {
         let mut gm = g.clone();
         mask_stats_native(&mut gm, thresh)
+    });
+    b.case("topk/mask-stats-only", || mask_stats_only(&g, thresh));
+    let sparse_nnz = {
+        let (_n2, _k2, nnz) = mask_stats_only(&g, thresh);
+        nnz
+    };
+    let mut sparse_out = SparseGrad::with_capacity(sparse_nnz);
+    b.case("topk/sparse-fill-reuse", || {
+        sparse_out.fill_from_threshold(&g, thresh, sparse_nnz);
+        sparse_out.nnz()
     });
     b.case("topk/clone-baseline", || g.clone());
 
@@ -245,5 +299,16 @@ fn main() {
         eprintln!("\nNOTE: artifacts missing — PJRT benches skipped (run `make artifacts`)");
     }
 
-    println!("\n{} cases measured.", b.results().len());
+    // machine-readable trajectory: ns/op per case, archived by CI so
+    // perf claims are diffable across PRs (SCADLES_BENCH_JSON overrides
+    // the output path; cargo runs benches from the package root).
+    let json_path = std::env::var_os("SCADLES_BENCH_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_hotpaths.json"));
+    match b.write_json(&json_path) {
+        Ok(()) => println!("\nwrote {} ({} cases)", json_path.display(), b.results().len()),
+        Err(e) => eprintln!("\nWARNING: could not write bench json: {e}"),
+    }
+
+    println!("{} cases measured.", b.results().len());
 }

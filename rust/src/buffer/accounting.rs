@@ -10,6 +10,13 @@ pub struct BufferTracker {
     history: Vec<u64>,
     /// Peak total buffered samples.
     peak: u64,
+    /// Reused selection buffer for [`Self::percentile`]: `report()`
+    /// asks for two percentiles per call, and a clone-and-full-sort per
+    /// ask is O(r log r) with a fresh allocation each time; select-nth
+    /// over one warm scratch is O(r) and allocation-free once the
+    /// capacity covers the history. `RefCell` keeps the accessor `&self`
+    /// (reports are taken from shared borrows of the trainer).
+    scratch: std::cell::RefCell<Vec<u64>>,
 }
 
 /// Summary of a tracked run (basis for Fig. 8 / Tables IV & VI and the
@@ -56,15 +63,24 @@ impl BufferTracker {
 
     /// Nearest-rank percentile of the per-round occupancy history
     /// (`q` in [0,1]; 0 on an empty history).
+    ///
+    /// Nearest-rank needs only the element at sorted position
+    /// `rank − 1`, so this runs `select_nth_unstable` (O(r) average,
+    /// in-place) over a reused scratch copy instead of cloning and
+    /// fully sorting the history on every call. Results are pinned
+    /// against the sort-based definition by
+    /// `percentiles_match_the_sort_based_definition`.
     pub fn percentile(&self, q: f64) -> u64 {
         if self.history.is_empty() {
             return 0;
         }
-        let mut sorted = self.history.clone();
-        sorted.sort_unstable();
-        let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize)
-            .clamp(1, sorted.len());
-        sorted[rank - 1]
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.clear();
+        scratch.extend_from_slice(&self.history);
+        let rank = ((q.clamp(0.0, 1.0) * scratch.len() as f64).ceil() as usize)
+            .clamp(1, scratch.len());
+        let (_, nth, _) = scratch.select_nth_unstable(rank - 1);
+        *nth
     }
 
     pub fn report(&self) -> BufferReport {
@@ -123,6 +139,69 @@ mod tests {
         assert_eq!(t.percentile(0.0), 1); // floored at the first rank
         assert_eq!(t.percentile(1.0), 100);
         assert_eq!(BufferTracker::new().percentile(0.5), 0);
+    }
+
+    /// The pre-optimization implementation, kept as the semantic pin.
+    fn percentile_by_sort(history: &[u64], q: f64) -> u64 {
+        if history.is_empty() {
+            return 0;
+        }
+        let mut sorted = history.to_vec();
+        sorted.sort_unstable();
+        let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize)
+            .clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    #[test]
+    fn percentiles_match_the_sort_based_definition() {
+        // pseudo-random histories with duplicates and plateaus, across
+        // the whole q range incl. out-of-range clamps
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        let mut histories: Vec<Vec<u64>> = vec![vec![], vec![7], vec![3, 3, 3, 3]];
+        for len in [2usize, 5, 17, 100, 257] {
+            let mut h = Vec::with_capacity(len);
+            for _ in 0..len {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                h.push(x % 1000);
+            }
+            histories.push(h);
+        }
+        for h in &histories {
+            let mut t = BufferTracker::new();
+            for &v in h {
+                t.record(v);
+            }
+            for q in [-0.5, 0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 1.0, 2.0] {
+                assert_eq!(
+                    t.percentile(q),
+                    percentile_by_sort(h, q),
+                    "len={} q={q}",
+                    h.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_scratch_is_reused_not_reallocated() {
+        let mut t = BufferTracker::new();
+        for v in 0..500u64 {
+            t.record(v);
+        }
+        t.percentile(0.5); // warm the scratch
+        let (cap, ptr) = {
+            let s = t.scratch.borrow();
+            (s.capacity(), s.as_ptr())
+        };
+        for q in [0.1, 0.5, 0.9, 1.0] {
+            t.percentile(q);
+        }
+        let s = t.scratch.borrow();
+        assert_eq!(s.capacity(), cap);
+        assert_eq!(s.as_ptr(), ptr);
     }
 
     #[test]

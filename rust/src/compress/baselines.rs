@@ -41,22 +41,17 @@ pub fn qsgd(g: &[f32], levels: u32, rng: &mut Pcg64) -> Encoded {
         };
     }
     let mut decoded = Vec::with_capacity(g.len());
-    let mut nonzero = 0u64;
     for &v in g {
         let ratio = (v.abs() / norm) * levels as f32; // in [0, levels]
         let floor = ratio.floor();
         let p = ratio - floor; // probability of rounding up
         let q = floor + if (rng.f64() as f32) < p { 1.0 } else { 0.0 };
-        if q > 0.0 {
-            nonzero += 1;
-        }
         decoded.push(v.signum() * norm * q / levels as f32);
     }
     // wire format: one f32 norm + per-coordinate sign+level. For levels
     // ≤ 15 that's ≤ 5 bits/coord; QSGD's Elias coding does better on
     // sparse ξ but we charge the dense bound.
     let bits_per_coord = (32 - (levels as u32).leading_zeros()) as f64 + 1.0;
-    let _ = nonzero;
     Encoded {
         decoded,
         float_equiv: 1.0 + g.len() as f64 * bits_per_coord / 32.0,

@@ -57,6 +57,36 @@ impl ErrorFeedback {
         self.residual_norm2 = n2;
     }
 
+    /// Sparse-path [`Self::absorb`]: the sent tensor is the Top-k
+    /// survivor set, so the residual is exactly the corrected gradient
+    /// with the kept coordinates zeroed. Instead of a d-length
+    /// subtraction against a materialized dense mask, this **swaps** the
+    /// corrected buffer in as the new residual (zero copies), zeroes the
+    /// `nnz` kept coordinates, and re-derives the norm in one read pass.
+    ///
+    /// Bitwise identical to the dense path: for kept coordinates the
+    /// dense residual is `c − c = +0.0` and this writes a literal `+0.0`;
+    /// for dropped ones it is `c − 0.0 = c` and this keeps `c`'s bits;
+    /// the `Σ r²` accumulator visits coordinates in the same order, and
+    /// adding the kept coordinates' exact `0.0` squares never moves a
+    /// non-negative f64 sum. Pinned by `tests/sparse_dense_equivalence.rs`.
+    ///
+    /// On return `corrected` holds the *previous* residual — garbage to
+    /// the caller, to be overwritten when the next round's corrected
+    /// gradient is built into the same buffer.
+    pub fn absorb_sparse(&mut self, corrected: &mut Vec<f32>, sent: &crate::compress::SparseGrad) {
+        debug_assert_eq!(corrected.len(), self.residual.len());
+        std::mem::swap(&mut self.residual, corrected);
+        for &i in &sent.idx {
+            self.residual[i as usize] = 0.0;
+        }
+        let mut n2 = 0f64;
+        for r in &self.residual {
+            n2 += (*r as f64) * (*r as f64);
+        }
+        self.residual_norm2 = n2;
+    }
+
     /// Dense round: everything was sent, residual clears.
     pub fn clear(&mut self) {
         self.residual.iter_mut().for_each(|r| *r = 0.0);
@@ -125,6 +155,46 @@ mod tests {
                 "coord {i}: {residual_i} vs {}",
                 ef.residual[i]
             );
+        }
+    }
+
+    #[test]
+    fn sparse_absorb_is_bitwise_equal_to_dense_absorb() {
+        use crate::compress::{mask_stats_only, SparseGrad};
+        let d = 800;
+        for (seed, cr) in [(1u64, 0.1), (2, 0.01), (3, 1.0)] {
+            let mut dense_ef = ErrorFeedback::new(d);
+            let mut sparse_ef = ErrorFeedback::new(d);
+            let mut sparse = SparseGrad::new();
+            let mut corrected_s = vec![0f32; d];
+            for round in 0..8 {
+                let g = grad(d, seed * 1000 + round);
+                // dense reference path
+                let mut corrected_d = g.clone();
+                dense_ef.correct(&mut corrected_d);
+                let (_k, t) = threshold_for_ratio(&corrected_d, cr);
+                let mut sent = corrected_d.clone();
+                mask_stats_native(&mut sent, t);
+                dense_ef.absorb(&corrected_d, &sent);
+                // sparse path over reused buffers
+                corrected_s.copy_from_slice(&g);
+                sparse_ef.correct(&mut corrected_s);
+                let (_n2, _k2, nnz) = mask_stats_only(&corrected_s, t);
+                sparse.fill_from_threshold(&corrected_s, t, nnz);
+                sparse_ef.absorb_sparse(&mut corrected_s, &sparse);
+                assert_eq!(
+                    dense_ef.residual_norm2.to_bits(),
+                    sparse_ef.residual_norm2.to_bits(),
+                    "seed={seed} cr={cr} round={round}: norm"
+                );
+                for i in 0..d {
+                    assert_eq!(
+                        dense_ef.residual[i].to_bits(),
+                        sparse_ef.residual[i].to_bits(),
+                        "seed={seed} cr={cr} round={round}: coord {i}"
+                    );
+                }
+            }
         }
     }
 

@@ -6,8 +6,11 @@
 //! compressed tensor is exchanged only while the EWMA of the relative
 //! compression error stays below δ; otherwise the dense gradient is sent.
 //!
-//! * [`topk`]     — O(d) k-th-magnitude threshold selection (select-nth)
-//!   plus a pure-Rust mask/stats fallback mirroring the Pallas kernel.
+//! * [`topk`]     — O(d) k-th-magnitude threshold selection (select-nth,
+//!   optionally over a reusable [`SelectScratch`]) plus a pure-Rust
+//!   mask/stats fallback mirroring the Pallas kernel.
+//! * [`sparse`]   — [`SparseGrad`], the coordinate form the mask phase
+//!   emits directly so the round engine can aggregate in O(nnz).
 //! * [`adaptive`] — the EWMA-gated send rule.
 //! * [`cnc`]      — Compression-to-No-Compression ratio + floats-sent
 //!   accounting (Table V's metrics).
@@ -19,6 +22,7 @@ pub mod baselines;
 pub mod cnc;
 pub mod feedback;
 pub mod schemes;
+pub mod sparse;
 pub mod topk;
 
 pub use adaptive::AdaptiveGate;
@@ -26,4 +30,8 @@ pub use baselines::{fp16_roundtrip, qsgd, terngrad, Encoded};
 pub use cnc::CncCounter;
 pub use feedback::ErrorFeedback;
 pub use schemes::{CompressionDecision, CompressionScheme};
-pub use topk::{mask_stats_native, threshold_for_ratio, topk_threshold};
+pub use sparse::SparseGrad;
+pub use topk::{
+    mask_stats_native, mask_stats_only, threshold_for_ratio, threshold_for_ratio_with,
+    topk_threshold, topk_threshold_with, SelectScratch,
+};

@@ -1,0 +1,200 @@
+//! Sparse gradient views: the `(index, value)` pairs that survive a
+//! Top-k mask.
+//!
+//! ScaDLES's communication argument (paper §III-C, Table V) is that
+//! Top-k at CR=0.1 moves ~10× less data; [`SparseGrad`] makes the
+//! *simulator* pay the same reduced cost. The mask phase produces the
+//! coordinate form directly from the corrected gradient — the dense
+//! masked tensor is never materialized on the native path — and the
+//! coordinator aggregates it in O(nnz) scatters
+//! ([`crate::coordinator::aggregate::aggregate_sparse_native`]).
+//!
+//! Buffers are owned per device and reused round over round: `fill_*`
+//! reserves from the exact nnz reported by
+//! [`super::topk::mask_stats_only`], so after the first few rounds the
+//! capacity has converged and the compressed steady state allocates
+//! nothing (pinned by `tests/alloc_steady_state.rs`).
+//!
+//! Indices are ascending by construction (a single left-to-right scan),
+//! which is what makes sparse aggregation bitwise-identical to the
+//! dense mirror: per coordinate, contributions still arrive in device
+//! order, and coordinates are visited in memory order.
+
+/// A masked gradient in coordinate form: `val[j]` lives at dense index
+/// `idx[j]`. Everything not listed is an exact `0.0`.
+///
+/// `u32` indices cap the dense dimension at 2³²−1 — far above any model
+/// in the repo (mlp_c10 is d = 820 874) — and halve the wire/index
+/// footprint versus `usize`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseGrad {
+    /// Dense coordinates of the survivors, strictly ascending.
+    pub idx: Vec<u32>,
+    /// Survivor values, parallel to `idx`.
+    pub val: Vec<f32>,
+}
+
+impl SparseGrad {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size for an expected survivor count (e.g. `ceil(CR · d)`).
+    pub fn with_capacity(nnz: usize) -> Self {
+        Self {
+            idx: Vec::with_capacity(nnz),
+            val: Vec::with_capacity(nnz),
+        }
+    }
+
+    /// Number of stored coordinates.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// Rebuild from a *corrected* (unmasked) gradient and the magnitude
+    /// threshold: keeps every `|g_j| >= thresh`, exactly the coordinates
+    /// [`super::topk::mask_stats_native`] would keep. `nnz_hint` (the
+    /// count from [`super::topk::mask_stats_only`]) sizes the reserve so
+    /// a warm buffer never reallocates.
+    pub fn fill_from_threshold(&mut self, g: &[f32], thresh: f32, nnz_hint: usize) {
+        debug_assert!(g.len() <= u32::MAX as usize, "dense dim exceeds u32 index space");
+        self.clear();
+        self.idx.reserve(nnz_hint);
+        self.val.reserve(nnz_hint);
+        for (i, &v) in g.iter().enumerate() {
+            if v.abs() >= thresh {
+                self.idx.push(i as u32);
+                self.val.push(v);
+            }
+        }
+    }
+
+    /// Rebuild from an already-masked dense tensor: keeps the non-zeros
+    /// (the wire format [`super::topk::sparsify`] exposes). Note this is
+    /// *not* interchangeable with [`Self::fill_from_threshold`] when the
+    /// threshold is exactly `0`: a `±0.0` survivor is dropped here but
+    /// kept there, which shifts `nnz` and which coordinates the
+    /// error-feedback residual zeroes — the round engine therefore
+    /// re-thresholds the kernel's masked output instead of scanning it.
+    pub fn fill_from_masked(&mut self, masked: &[f32], nnz_hint: usize) {
+        debug_assert!(masked.len() <= u32::MAX as usize, "dense dim exceeds u32 index space");
+        self.clear();
+        self.idx.reserve(nnz_hint);
+        self.val.reserve(nnz_hint);
+        for (i, &v) in masked.iter().enumerate() {
+            if v != 0.0 {
+                self.idx.push(i as u32);
+                self.val.push(v);
+            }
+        }
+    }
+
+    /// Scatter into a dense buffer (zeroed first). `out.len()` is the
+    /// dense dimension and must cover every stored index.
+    pub fn densify_into(&self, out: &mut [f32]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+    }
+
+    /// Allocating convenience for tests/benches.
+    pub fn densify(&self, d: usize) -> Vec<f32> {
+        let mut out = vec![0f32; d];
+        self.densify_into(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::topk::{mask_stats_native, mask_stats_only, threshold_for_ratio};
+    use crate::rng::Pcg64;
+
+    fn grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 0);
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn threshold_fill_matches_dense_mask_exactly() {
+        let g = grad(2000, 3);
+        let (_k, t) = threshold_for_ratio(&g, 0.1);
+        let (_n2, _k2, nnz) = mask_stats_only(&g, t);
+        let mut s = SparseGrad::new();
+        s.fill_from_threshold(&g, t, nnz);
+        assert_eq!(s.nnz(), nnz);
+        let mut masked = g.clone();
+        mask_stats_native(&mut masked, t);
+        assert_eq!(s.densify(g.len()), masked);
+        // indices strictly ascending by construction
+        assert!(s.idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn masked_fill_agrees_with_threshold_fill_on_nonzero_survivors() {
+        let g = grad(512, 9);
+        let (_k, t) = threshold_for_ratio(&g, 0.25);
+        let mut masked = g.clone();
+        let (_n2, _k2, nnz) = mask_stats_native(&mut masked, t);
+        let mut a = SparseGrad::new();
+        a.fill_from_threshold(&g, t, nnz);
+        let mut b = SparseGrad::new();
+        b.fill_from_masked(&masked, nnz);
+        assert_eq!(a, b); // normal gradients have no exact-zero survivors
+    }
+
+    #[test]
+    fn zero_threshold_keeps_explicit_zeros_only_on_the_threshold_path() {
+        // CR=1.0 → thresh 0 → the threshold fill stores kept zeros, the
+        // masked fill drops them; both densify to the same tensor.
+        let g = vec![0f32, 1.0, 0.0, -2.0];
+        let mut a = SparseGrad::new();
+        a.fill_from_threshold(&g, 0.0, 4);
+        assert_eq!(a.nnz(), 4);
+        let mut b = SparseGrad::new();
+        b.fill_from_masked(&g, 4);
+        assert_eq!(b.nnz(), 2);
+        assert_eq!(a.densify(4), g);
+        assert_eq!(b.densify(4), g);
+    }
+
+    #[test]
+    fn warm_buffer_does_not_grow_capacity() {
+        let g = grad(1000, 5);
+        let (_k, t) = threshold_for_ratio(&g, 0.1);
+        let (_n2, _k2, nnz) = mask_stats_only(&g, t);
+        let mut s = SparseGrad::new();
+        s.fill_from_threshold(&g, t, nnz);
+        let (cap_i, cap_v) = (s.idx.capacity(), s.val.capacity());
+        let (ptr_i, ptr_v) = (s.idx.as_ptr(), s.val.as_ptr());
+        for _ in 0..5 {
+            s.fill_from_threshold(&g, t, nnz);
+        }
+        assert_eq!(s.idx.capacity(), cap_i);
+        assert_eq!(s.val.capacity(), cap_v);
+        assert_eq!(s.idx.as_ptr(), ptr_i);
+        assert_eq!(s.val.as_ptr(), ptr_v);
+    }
+
+    #[test]
+    fn empty_and_infinite_threshold() {
+        let mut s = SparseGrad::with_capacity(8);
+        s.fill_from_threshold(&[], 0.0, 0);
+        assert!(s.is_empty());
+        s.fill_from_threshold(&[1.0, -2.0], f32::INFINITY, 0);
+        assert!(s.is_empty());
+        assert_eq!(s.densify(2), vec![0.0, 0.0]);
+    }
+}

@@ -5,9 +5,40 @@
 //! [`mask_stats_native`], its bit-exact Rust mirror used by tests and the
 //! kernel-ablation bench) then applies the mask in one streaming pass.
 
+/// Reusable magnitude buffer for threshold selection.
+///
+/// `select_nth_unstable` is in-place, so the only allocation in
+/// [`topk_threshold`] is the d-length magnitude copy — 3.2 MB per
+/// device-round at mlp_c10's d = 820 874. Workers own one of these and
+/// route through [`topk_threshold_with`], which refills the same buffer
+/// each round; the compressed steady state allocates nothing for
+/// selection (pinned by `tests/alloc_steady_state.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct SelectScratch {
+    buf: Vec<f32>,
+}
+
+impl SelectScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size for a gradient dimension.
+    pub fn with_capacity(d: usize) -> Self {
+        Self { buf: Vec::with_capacity(d) }
+    }
+}
+
 /// k-th largest magnitude of `g` (the mask keeps `|g_j| >= thresh`).
 /// `k = 0` returns +inf (nothing survives); `k >= d` returns 0 (all pass).
 pub fn topk_threshold(g: &[f32], k: usize) -> f32 {
+    topk_threshold_with(g, k, &mut SelectScratch::new())
+}
+
+/// [`topk_threshold`] over a caller-owned magnitude buffer — identical
+/// result (same data, same deterministic select-nth), no allocation once
+/// the scratch capacity has reached `g.len()`.
+pub fn topk_threshold_with(g: &[f32], k: usize, scratch: &mut SelectScratch) -> f32 {
     let d = g.len();
     if k == 0 || d == 0 {
         return f32::INFINITY;
@@ -15,16 +46,26 @@ pub fn topk_threshold(g: &[f32], k: usize) -> f32 {
     if k >= d {
         return 0.0;
     }
-    let mut mags: Vec<f32> = g.iter().map(|v| v.abs()).collect();
+    scratch.buf.clear();
+    scratch.buf.extend(g.iter().map(|v| v.abs()));
     // nth element in descending order = index k-1
-    let (_, nth, _) = mags.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
+    let (_, nth, _) = scratch.buf.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
     *nth
 }
 
 /// Threshold for keeping a `ratio` fraction (CR) of `g`'s elements.
 pub fn threshold_for_ratio(g: &[f32], ratio: f64) -> (usize, f32) {
+    threshold_for_ratio_with(g, ratio, &mut SelectScratch::new())
+}
+
+/// [`threshold_for_ratio`] over a caller-owned selection scratch.
+pub fn threshold_for_ratio_with(
+    g: &[f32],
+    ratio: f64,
+    scratch: &mut SelectScratch,
+) -> (usize, f32) {
     let k = ((g.len() as f64 * ratio).ceil() as usize).clamp(1, g.len().max(1));
-    (k, topk_threshold(g, k))
+    (k, topk_threshold_with(g, k, scratch))
 }
 
 /// Native mirror of the Pallas `topk_mask_stats` kernel: zero sub-threshold
@@ -46,18 +87,40 @@ pub fn mask_stats_native(g: &mut [f32], thresh: f32) -> (f64, f64, usize) {
     (norm2, knorm2, nnz)
 }
 
-/// Sparse view of a masked gradient: (indices, values) of survivors.
-/// What actually crosses the network at 8 bytes/element.
-pub fn sparsify(g: &[f32]) -> (Vec<u32>, Vec<f32>) {
-    let mut idx = Vec::new();
-    let mut val = Vec::new();
-    for (i, &v) in g.iter().enumerate() {
-        if v != 0.0 {
-            idx.push(i as u32);
-            val.push(v);
+/// Stats-only pass of [`mask_stats_native`]: same `(|g|², |Topk(g)|²,
+/// nnz)` — bit for bit, same accumulation order — without zeroing the
+/// input. The sparse fast path runs this first so the survivor count is
+/// known before [`super::SparseGrad::fill_from_threshold`] reserves,
+/// and keeps `g` intact as the *corrected* gradient the error-feedback
+/// residual is taken against.
+pub fn mask_stats_only(g: &[f32], thresh: f32) -> (f64, f64, usize) {
+    let mut norm2 = 0f64;
+    let mut knorm2 = 0f64;
+    let mut nnz = 0usize;
+    for v in g {
+        let x = *v as f64;
+        norm2 += x * x;
+        if v.abs() >= thresh {
+            knorm2 += x * x;
+            nnz += 1;
         }
     }
-    (idx, val)
+    (norm2, knorm2, nnz)
+}
+
+/// Sparse view of a masked gradient: (indices, values) of survivors.
+/// What actually crosses the network at 8 bytes/element. `nnz_hint`
+/// (known from the mask-stats pass) sizes the output vectors in one
+/// reserve instead of growing from empty; a wrong hint only costs the
+/// usual doubling growth. Thin wrapper over
+/// [`super::SparseGrad::fill_from_masked`] — one implementation of the
+/// non-zero scan, two shapes of output.
+pub fn sparsify(g: &[f32], nnz_hint: usize) -> (Vec<u32>, Vec<f32>) {
+    // with_capacity (exact) rather than a bare reserve (amortized, may
+    // round up): the capacity-respecting contract is part of the API
+    let mut s = super::SparseGrad::with_capacity(nnz_hint);
+    s.fill_from_masked(g, nnz_hint);
+    (s.idx, s.val)
 }
 
 /// Reassemble a dense gradient from its sparse view.
@@ -115,9 +178,67 @@ mod tests {
     #[test]
     fn sparsify_roundtrip() {
         let g = vec![0f32, 3.0, 0.0, -1.0, 0.0];
-        let (i, v) = sparsify(&g);
+        let (i, v) = sparsify(&g, 2);
         assert_eq!(i, vec![1, 3]);
         assert_eq!(densify(5, &i, &v), g);
+    }
+
+    #[test]
+    fn sparsify_respects_the_capacity_hint() {
+        let g = vec![0f32, 3.0, 0.0, -1.0, 0.0, 2.5];
+        // the hint pre-sizes the vectors (with_capacity guarantees *at
+        // least* n — exactness is a std implementation detail we don't
+        // pin); an exact hint must not trigger any growth reallocation,
+        // which we observe as capacity staying at its initial value
+        let (i, v) = sparsify(&g, 3);
+        assert_eq!(i.len(), 3);
+        let hinted_cap = crate::compress::SparseGrad::with_capacity(3).idx.capacity();
+        assert_eq!(i.capacity(), hinted_cap);
+        assert_eq!(v.capacity(), hinted_cap);
+        // an under-hint still produces the right answer (vec growth)
+        let (i2, v2) = sparsify(&g, 0);
+        assert_eq!(i2, i);
+        assert_eq!(v2, v);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_the_allocating_path() {
+        let g: Vec<f32> = (0..500)
+            .map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.3)
+            .collect();
+        let mut scratch = SelectScratch::with_capacity(g.len());
+        for k in [1usize, 3, 50, 499, 500, 600] {
+            assert_eq!(
+                topk_threshold(&g, k).to_bits(),
+                topk_threshold_with(&g, k, &mut scratch).to_bits(),
+                "k={k}"
+            );
+        }
+        for ratio in [0.001, 0.1, 0.5, 1.0] {
+            assert_eq!(
+                threshold_for_ratio(&g, ratio),
+                threshold_for_ratio_with(&g, ratio, &mut scratch),
+                "ratio={ratio}"
+            );
+        }
+        // warm scratch never reallocates
+        let (cap, ptr) = (scratch.buf.capacity(), scratch.buf.as_ptr());
+        topk_threshold_with(&g, 10, &mut scratch);
+        assert_eq!(scratch.buf.capacity(), cap);
+        assert_eq!(scratch.buf.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn stats_only_matches_the_masking_pass_bitwise() {
+        let g: Vec<f32> = (0..300).map(|i| (i as f32 - 150.0) * 0.01).collect();
+        for thresh in [0.0f32, 0.4, 1.2, f32::INFINITY] {
+            let (n2a, k2a, nnza) = mask_stats_only(&g, thresh);
+            let mut masked = g.clone();
+            let (n2b, k2b, nnzb) = mask_stats_native(&mut masked, thresh);
+            assert_eq!(n2a.to_bits(), n2b.to_bits(), "thresh={thresh}");
+            assert_eq!(k2a.to_bits(), k2b.to_bits(), "thresh={thresh}");
+            assert_eq!(nnza, nnzb, "thresh={thresh}");
+        }
     }
 
     #[test]

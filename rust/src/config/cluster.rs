@@ -218,11 +218,18 @@ impl ClusterProfile {
             .allreduce_time_slowest(self.paper_params() * 4, self.n(), bps)
     }
 
-    /// Sparse (Top-k) synchronization time given the surviving fraction.
-    pub fn sparse_sync_time(&self, keep_fraction: f64) -> f64 {
-        let nnz = (self.paper_params() as f64 * keep_fraction) as u64;
+    /// Sparse (Top-k) synchronization time for a **real** survivor
+    /// count (the round engine's Σ nnz, scaled onto `paper_params`).
+    pub fn sparse_sync_time_nnz(&self, nnz: u64) -> f64 {
         let (_, bps) = self.slowest_link();
-        self.network.allreduce_time_slowest(nnz * 8, self.n(), bps)
+        self.network.sparse_sync_time_slowest(nnz, self.n(), bps)
+    }
+
+    /// Sparse synchronization time from a surviving *fraction* —
+    /// analytic-harness convenience; the round engine prices the real
+    /// nnz via [`Self::sparse_sync_time_nnz`].
+    pub fn sparse_sync_time(&self, keep_fraction: f64) -> f64 {
+        self.sparse_sync_time_nnz((self.paper_params() as f64 * keep_fraction) as u64)
     }
 }
 

@@ -4,32 +4,113 @@
 //! here compute the weights, provide the native mirror (tests + the
 //! kernel-vs-native ablation bench), and define the DDL baseline's
 //! uniform weighting.
+//!
+//! # The sparse fast path and why every variant is bitwise identical
+//!
+//! Three native implementations share one determinism argument:
+//!
+//! * [`aggregate_native`] — the kernel mirror: for each device `i` in
+//!   order, `out[j] += w_i · g_i[j]` over every dense coordinate.
+//! * [`aggregate_sparse_native`] — O(Σ nnz): for each device in the
+//!   *same fixed order*, scatter `w_i · val` into the accumulator at
+//!   `idx`. Coordinates a device's mask dropped are exact `0.0`s in the
+//!   dense mirror, and adding `w · 0.0 = ±0.0` to an accumulator that
+//!   started at `+0.0` and only ever receives f32 adds can never change
+//!   its bits (IEEE-754 round-to-nearest: `x + ±0.0 = x` for every `x`
+//!   the accumulator can hold, and a sum that starts at `+0.0` never
+//!   becomes `−0.0`). Skipping them therefore leaves every coordinate's
+//!   *sequence of effective adds* — and hence its bits — unchanged.
+//! * [`aggregate_chunked_native`] / the chunked arm of
+//!   [`aggregate_rows_into`] — coordinate-parallel: the dense dimension
+//!   is split into contiguous chunks fanned over scoped threads, and
+//!   each chunk runs the per-device loop in the same device order.
+//!   Per-coordinate accumulation never crosses a chunk boundary, so the
+//!   arithmetic per coordinate is literally the serial loop's; threads
+//!   change scheduling only.
+//!
+//! Fixed device order is the whole contract: floats are only combined
+//! per coordinate, in device order, in every variant — which is what
+//! `tests/parallel_determinism.rs` and
+//! `tests/sparse_dense_equivalence.rs` pin.
+
+use crate::compress::SparseGrad;
+
+/// Below this dense dimension the chunked path runs serially: the scoped
+/// thread spawn costs more than the loop.
+const CHUNK_MIN_D: usize = 4096;
+
+/// One device's contribution to the round's aggregation: the dense
+/// corrected row, or the Top-k survivor set on compressed rounds.
+#[derive(Debug, Clone, Copy)]
+pub enum RowView<'a> {
+    Dense(&'a [f32]),
+    Sparse(&'a SparseGrad),
+}
 
 /// ScaDLES weights: `r_i = b_i / Σ_j b_j` (Eqn. 4a, with the *actual*
 /// trained batch b_i — equal to S_i unless clamped by [b_min, b_max]).
 /// Devices with an empty batch get weight 0; weights of active devices
 /// sum to 1.
 pub fn weights_from_batches(batches: &[usize]) -> Vec<f32> {
+    let mut out = Vec::new();
+    weights_from_batches_into(batches, &mut out);
+    out
+}
+
+/// [`weights_from_batches`] into a caller-owned buffer (cleared first;
+/// no allocation once its capacity covers the device count).
+pub fn weights_from_batches_into(batches: &[usize], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(batches.len());
     let total: usize = batches.iter().sum();
     if total == 0 {
-        return vec![0.0; batches.len()];
+        out.extend(batches.iter().map(|_| 0.0));
+        return;
     }
-    batches
-        .iter()
-        .map(|&b| b as f32 / total as f32)
-        .collect()
+    out.extend(batches.iter().map(|&b| b as f32 / total as f32));
 }
 
 /// DDL baseline weights: uniform 1/N over devices that trained (Eqn. 1).
 pub fn uniform_weights(batches: &[usize]) -> Vec<f32> {
+    let mut out = Vec::new();
+    uniform_weights_into(batches, &mut out);
+    out
+}
+
+/// [`uniform_weights`] into a caller-owned buffer.
+pub fn uniform_weights_into(batches: &[usize], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(batches.len());
     let active = batches.iter().filter(|&&b| b > 0).count();
     if active == 0 {
-        return vec![0.0; batches.len()];
+        out.extend(batches.iter().map(|_| 0.0));
+        return;
     }
-    batches
-        .iter()
-        .map(|&b| if b > 0 { 1.0 / active as f32 } else { 0.0 })
-        .collect()
+    out.extend(
+        batches
+            .iter()
+            .map(|&b| if b > 0 { 1.0 / active as f32 } else { 0.0 }),
+    );
+}
+
+/// Accumulate one dense row: `out[j] += w · row[j]`. The inner loop of
+/// every dense variant (and of the Pallas `wagg` mirror).
+#[inline]
+pub fn accumulate_dense(out: &mut [f32], row: &[f32], w: f32) {
+    debug_assert_eq!(out.len(), row.len());
+    for (o, &g) in out.iter_mut().zip(row) {
+        *o += w * g;
+    }
+}
+
+/// Accumulate one sparse row: `out[idx[j]] += w · val[j]` — O(nnz)
+/// scatters, indices ascending by construction so the walk is
+/// memory-ordered. Panics if an index exceeds `out.len()`.
+#[inline]
+pub fn accumulate_sparse(out: &mut [f32], row: &SparseGrad, w: f32) {
+    for (&i, &v) in row.idx.iter().zip(&row.val) {
+        out[i as usize] += w * v;
+    }
 }
 
 /// Native weighted aggregation: `g̃ = Σ_i r_i · g_i` over row-major
@@ -42,17 +123,104 @@ pub fn aggregate_native(grads: &[f32], weights: &[f32], d: usize) -> Vec<f32> {
         if w == 0.0 {
             continue;
         }
-        let row = &grads[i * d..(i + 1) * d];
-        for (o, &g) in out.iter_mut().zip(row) {
-            *o += w * g;
-        }
+        accumulate_dense(&mut out, &grads[i * d..(i + 1) * d], w);
     }
     out
+}
+
+/// O(Σ nnz) aggregation over sparse rows, one scatter pass per device in
+/// fixed device order. Bitwise identical to [`aggregate_native`] over
+/// the densified rows (see the module docs).
+pub fn aggregate_sparse_native(rows: &[SparseGrad], weights: &[f32], d: usize) -> Vec<f32> {
+    debug_assert_eq!(rows.len(), weights.len());
+    let mut out = vec![0f32; d];
+    for (row, &w) in rows.iter().zip(weights) {
+        if w == 0.0 {
+            continue;
+        }
+        accumulate_sparse(&mut out, row, w);
+    }
+    out
+}
+
+/// Coordinate-chunked parallel mirror of [`aggregate_native`]: the dense
+/// dimension is split into `threads` contiguous chunks over scoped
+/// threads, each running the device-order loop on its own slice of the
+/// accumulator. Bitwise identical at every width.
+pub fn aggregate_chunked_native(
+    grads: &[f32],
+    weights: &[f32],
+    d: usize,
+    threads: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(grads.len(), weights.len() * d);
+    let mut out = vec![0f32; d];
+    aggregate_rows_into(
+        &mut out,
+        weights,
+        |i| RowView::Dense(&grads[i * d..(i + 1) * d]),
+        threads,
+    );
+    out
+}
+
+/// Aggregate straight from per-device row views into a caller-owned
+/// accumulator (zeroed first) — the round engine's allocation-free path.
+///
+/// Dense rounds with `threads > 1` and a large enough dimension fan the
+/// coordinate range over scoped threads (see the module docs for why
+/// that cannot move a bit); sparse rounds run the O(Σ nnz) scatter
+/// serially in device order — at CR=0.1 the whole pass touches ~10% of
+/// the dense volume, below the parallelization payoff. Zero-weight
+/// devices are skipped, so stale views from sat-out devices are never
+/// read.
+pub fn aggregate_rows_into<'a, R>(out: &mut [f32], weights: &[f32], rows: R, threads: usize)
+where
+    R: Fn(usize) -> RowView<'a> + Sync,
+{
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let d = out.len();
+    let t = threads.max(1);
+    let all_dense = weights
+        .iter()
+        .enumerate()
+        .all(|(i, &w)| w == 0.0 || matches!(rows(i), RowView::Dense(_)));
+    if all_dense && t > 1 && d >= CHUNK_MIN_D {
+        let chunk = d.div_ceil(t);
+        std::thread::scope(|scope| {
+            for (ci, piece) in out.chunks_mut(chunk).enumerate() {
+                let rows = &rows;
+                scope.spawn(move || {
+                    let off = ci * chunk;
+                    for (i, &w) in weights.iter().enumerate() {
+                        if w == 0.0 {
+                            continue;
+                        }
+                        if let RowView::Dense(r) = rows(i) {
+                            accumulate_dense(piece, &r[off..off + piece.len()], w);
+                        }
+                    }
+                });
+            }
+        });
+        return;
+    }
+    for (i, &w) in weights.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        match rows(i) {
+            RowView::Dense(r) => accumulate_dense(out, r, w),
+            RowView::Sparse(s) => accumulate_sparse(out, s, w),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::{mask_stats_native, threshold_for_ratio};
+    use crate::rng::Pcg64;
 
     #[test]
     fn weights_sum_to_one_and_track_batches() {
@@ -81,6 +249,19 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_reuse_the_buffer_and_match() {
+        let batches = [3usize, 0, 9, 4];
+        let mut buf = Vec::new();
+        weights_from_batches_into(&batches, &mut buf);
+        assert_eq!(buf, weights_from_batches(&batches));
+        let (cap, ptr) = (buf.capacity(), buf.as_ptr());
+        uniform_weights_into(&batches, &mut buf);
+        assert_eq!(buf, uniform_weights(&batches));
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf.as_ptr(), ptr);
+    }
+
+    #[test]
     fn aggregate_matches_hand_computation() {
         // g0 = [1,2], g1 = [3,4], r = [0.25, 0.75]
         let g = vec![1f32, 2.0, 3.0, 4.0];
@@ -96,5 +277,81 @@ mod tests {
         let out = aggregate_native(&g, &w, 2);
         assert!(out[0] >= 1.0 && out[0] <= 3.0);
         assert!(out[1] >= -1.0 && out[1] <= 5.0);
+    }
+
+    fn masked_matrix(n: usize, d: usize, cr: f64, seed: u64) -> (Vec<f32>, Vec<SparseGrad>) {
+        let mut rng = Pcg64::new(seed, 0);
+        let mut dense = vec![0f32; n * d];
+        let mut rows = Vec::new();
+        for i in 0..n {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let (_k, t) = threshold_for_ratio(&row, cr);
+            let mut masked = row;
+            let (_n2, _k2, nnz) = mask_stats_native(&mut masked, t);
+            let mut s = SparseGrad::new();
+            s.fill_from_masked(&masked, nnz);
+            dense[i * d..(i + 1) * d].copy_from_slice(&masked);
+            rows.push(s);
+        }
+        (dense, rows)
+    }
+
+    #[test]
+    fn sparse_aggregation_is_bitwise_equal_to_dense() {
+        for (n, cr) in [(1usize, 0.1), (4, 0.01), (8, 0.5), (3, 1.0)] {
+            let d = 257;
+            let (dense, rows) = masked_matrix(n, d, cr, 42 + n as u64);
+            let mut weights = weights_from_batches(&vec![7; n]);
+            if n > 1 {
+                weights[0] = 0.0; // a sat-out device must be skipped identically
+            }
+            let a = aggregate_native(&dense, &weights, d);
+            let b = aggregate_sparse_native(&rows, &weights, d);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n} cr={cr}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_aggregation_is_bitwise_equal_at_every_width() {
+        let mut rng = Pcg64::new(5, 0);
+        for d in [64usize, CHUNK_MIN_D, CHUNK_MIN_D + 513] {
+            let n = 5;
+            let grads: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            let weights = vec![0.3f32, 0.0, 0.25, 0.25, 0.2];
+            let serial = aggregate_native(&grads, &weights, d);
+            for threads in [1usize, 2, 3, 8, 64] {
+                let par = aggregate_chunked_native(&grads, &weights, d, threads);
+                for (x, y) in serial.iter().zip(&par) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "d={d} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_into_mixes_views_and_reuses_the_accumulator() {
+        let d = 128;
+        let (dense, rows) = masked_matrix(3, d, 0.2, 11);
+        let weights = [0.5f32, 0.25, 0.25];
+        let expect = aggregate_native(&dense, &weights, d);
+        let mut out = vec![9f32; d]; // must be zeroed by the call
+        // mixed: device 1 presents dense, the others sparse
+        aggregate_rows_into(
+            &mut out,
+            &weights,
+            |i| {
+                if i == 1 {
+                    RowView::Dense(&dense[d..2 * d])
+                } else {
+                    RowView::Sparse(&rows[i])
+                }
+            },
+            4,
+        );
+        for (x, y) in expect.iter().zip(&out) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 }

@@ -26,11 +26,23 @@ pub trait Backend: Send + Sync {
     fn train_step(&self, params: &[f32], x: &[f32], y: &[i32], bucket: usize)
         -> Result<TrainOut>;
     fn eval_step(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut>;
-    /// In-place momentum-SGD update.
+    /// In-place momentum-SGD update (no allocation: the round engine's
+    /// steady state reuses its accumulator).
     fn update(&self, params: &mut [f32], mom: &mut [f32], grad: &[f32], lr: f32) -> Result<()>;
     /// `g̃ = Σ r_i g_i` over row-major `[n, d]`.
+    ///
+    /// This is the **kernel** aggregation entry point (Pallas `wagg`),
+    /// reached only behind the `SCADLES_KERNEL_AGG` opt-in: the round
+    /// engine's default is [`super::aggregate::aggregate_rows_into`]
+    /// over worker-owned row views, which skips the `[n, d]` staging
+    /// copy entirely and scatters O(Σ nnz) on compressed rounds.
     fn weighted_aggregate(&self, grads: &[f32], weights: &[f32]) -> Result<Vec<f32>>;
     /// Masked gradient + `(|g|², |Topk|², nnz)` at a magnitude threshold.
+    ///
+    /// Kernel mask entry point (Pallas `topk`), reached behind
+    /// `SCADLES_KERNEL_TOPK`: by default workers run the native
+    /// stats-only pass and emit [`crate::compress::SparseGrad`] views
+    /// without materializing the masked tensor.
     fn topk_mask_stats(&self, g: &[f32], thresh: f32) -> Result<(Vec<f32>, f64, f64, u64)>;
 }
 

@@ -14,7 +14,7 @@
 //! trade-off.
 
 use crate::config::{ClusterProfile, ExperimentConfig};
-use crate::coordinator::aggregate::weights_from_batches;
+use crate::coordinator::aggregate::{aggregate_rows_into, weights_from_batches_into, RowView};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::clock::VirtualClock;
 use crate::coordinator::device::Device;
@@ -40,6 +40,23 @@ pub struct FedAvgTrainer {
     clock: VirtualClock,
     logs: RunLogger,
     round: usize,
+    /// Reusable round buffers (same discipline as [`super::Trainer`]'s
+    /// sparse fast path: the steady-state sync round allocates no
+    /// model-sized vectors). `replicas` is the row-major `[n, d]` stack
+    /// of post-local-step models; `local`/`mom` are the per-device SGD
+    /// state, reforked per device; `agg`/`weights` feed the shared
+    /// [`aggregate_rows_into`] path.
+    replicas: Vec<f32>,
+    local: Vec<f32>,
+    mom: Vec<f32>,
+    agg: Vec<f32>,
+    weights: Vec<f32>,
+    /// `SCADLES_KERNEL_AGG` resolved once: the Pallas `wagg` artifact is
+    /// opt-in, native aggregation is the CPU-substrate default — the
+    /// same gate the round engine uses. Cleared on the first kernel
+    /// failure (no artifact for this device count) so later rounds skip
+    /// the doomed dispatch, mirroring `Trainer::wagg_artifact_ok`.
+    kernel_agg: bool,
 }
 
 impl FedAvgTrainer {
@@ -65,6 +82,7 @@ impl FedAvgTrainer {
             })
             .collect();
         let params = backend.init_params()?;
+        let d = params.len();
         let logs = RunLogger::new(format!("fedavg{}-{}", local_steps, cfg.preset.name()))
             .with_echo(cfg.echo_every);
         Ok(Self {
@@ -79,6 +97,12 @@ impl FedAvgTrainer {
             clock: VirtualClock::new(),
             logs,
             round: 0,
+            replicas: Vec::with_capacity(cfg.devices * d),
+            local: vec![0.0; d],
+            mom: vec![0.0; d],
+            agg: vec![0.0; d],
+            weights: Vec::with_capacity(cfg.devices),
+            kernel_agg: std::env::var_os("SCADLES_KERNEL_AGG").is_some(),
         })
     }
 
@@ -95,15 +119,17 @@ impl FedAvgTrainer {
         }
 
         let lr = self.cfg.base_lr * self.cfg.lr_factor_at(self.round);
-        let mut replicas: Vec<f32> = Vec::with_capacity(n * d);
+        self.replicas.clear();
         let mut samples = vec![0usize; n];
         let mut loss_acc = 0f64;
         let mut loss_w = 0f64;
         let mut max_compute = 0f64;
 
         for (i, dev) in self.devices.iter_mut().enumerate() {
-            let mut local = self.params.clone();
-            let mut mom = vec![0f32; d];
+            // refork this device's replica + momentum from the global
+            // model into the reused buffers
+            self.local.copy_from_slice(&self.params);
+            self.mom.iter_mut().for_each(|m| *m = 0.0);
             let mut compute = 0f64;
             for _ in 0..self.local_steps {
                 let want = (dev.rate.round() as usize).clamp(self.cfg.b_min, self.cfg.b_max);
@@ -117,10 +143,9 @@ impl FedAvgTrainer {
                 }
                 let (x, y) = materialize(&self.data, &recs);
                 let bucket = self.backend.ladder().fit_clamped(y.len());
-                let out = self.backend.train_step(&local, &x, &y, bucket)?;
-                let mut m = std::mem::take(&mut mom);
-                self.backend.update(&mut local, &mut m, &out.grads, lr as f32)?;
-                mom = m;
+                let out = self.backend.train_step(&self.local, &x, &y, bucket)?;
+                self.backend
+                    .update(&mut self.local, &mut self.mom, &out.grads, lr as f32)?;
                 samples[i] += recs.len();
                 loss_acc += out.loss as f64 * recs.len() as f64;
                 loss_w += recs.len() as f64;
@@ -129,16 +154,36 @@ impl FedAvgTrainer {
                 dev.advance_stream(step_t);
             }
             max_compute = max_compute.max(compute);
-            replicas.extend_from_slice(&local);
+            self.replicas.extend_from_slice(&self.local);
         }
 
-        // sample-weighted parameter average (FedAvg's n_k/n weighting)
-        let weights = weights_from_batches(&samples);
+        // sample-weighted parameter average (FedAvg's n_k/n weighting),
+        // through the same native row-aggregation path as the round
+        // engine; the Pallas wagg kernel stays env-gated opt-in
+        weights_from_batches_into(&samples, &mut self.weights);
         if samples.iter().any(|&s| s > 0) {
-            self.params = self.backend.weighted_aggregate(&replicas, &weights)
-                .unwrap_or_else(|_| {
-                    crate::coordinator::aggregate::aggregate_native(&replicas, &weights, d)
-                });
+            let mut kernel_done = false;
+            if self.kernel_agg {
+                match self.backend.weighted_aggregate(&self.replicas, &self.weights) {
+                    Ok(v) => {
+                        self.params.copy_from_slice(&v);
+                        kernel_done = true;
+                    }
+                    // no wagg artifact for this device count — use the
+                    // native path for the rest of the run
+                    Err(_) => self.kernel_agg = false,
+                }
+            }
+            if !kernel_done {
+                let replicas = &self.replicas;
+                aggregate_rows_into(
+                    &mut self.agg,
+                    &self.weights,
+                    |i| RowView::Dense(&replicas[i * d..(i + 1) * d]),
+                    1,
+                );
+                std::mem::swap(&mut self.params, &mut self.agg);
+            }
         }
 
         // time: slowest device's local phase + one model allreduce

@@ -29,6 +29,21 @@
 //! every pool width produces bitwise-identical runs
 //! (`ExperimentConfig::worker_threads`).
 //!
+//! **Sparse fast path:** on compressed rounds the mask phase emits each
+//! shard's Top-k survivor set directly as a
+//! [`crate::compress::SparseGrad`] — the dense masked tensor is never
+//! materialized — and the coordinator aggregates O(Σ nnz) scatters
+//! straight from the worker-owned views
+//! ([`aggregate::aggregate_rows_into`]); dense rounds fan the
+//! coordinate range over the worker pool instead. Both are bitwise
+//! identical to the serial dense mirror (see [`aggregate`]'s module
+//! docs). Every model-sized buffer on the round path — selection
+//! scratch, corrected row, sparse vectors, weights, the global
+//! accumulator — is allocated once and reused, so the compressed steady
+//! state performs no heap allocation for threshold selection, masking,
+//! aggregation or the optimizer update
+//! (`tests/alloc_steady_state.rs`).
+//!
 //! **Heterogeneity:** each worker owns a sampled
 //! [`crate::config::DeviceProfile`] (compute class, uplink/downlink,
 //! memory budget) from the scenario layer
@@ -68,7 +83,10 @@ pub mod plan;
 pub mod trainer;
 pub mod worker;
 
-pub use aggregate::{aggregate_native, weights_from_batches};
+pub use aggregate::{
+    aggregate_chunked_native, aggregate_native, aggregate_rows_into, aggregate_sparse_native,
+    weights_from_batches, RowView,
+};
 pub use backend::{Backend, MockBackend};
 pub use clock::{DevicePhase, RoundTiming, VirtualClock};
 pub use device::Device;

@@ -19,7 +19,9 @@
 use crate::buffer::BufferTracker;
 use crate::compress::{CncCounter, CompressionScheme};
 use crate::config::{ClusterProfile, ExperimentConfig, HeteroPreset, TrainMode};
-use crate::coordinator::aggregate::{aggregate_native, uniform_weights, weights_from_batches};
+use crate::coordinator::aggregate::{
+    aggregate_rows_into, uniform_weights_into, weights_from_batches_into, RowView,
+};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::clock::{DevicePhase, RoundTiming, VirtualClock};
 use crate::coordinator::device::Device;
@@ -90,11 +92,22 @@ pub struct Trainer {
     /// The most recent round's timing breakdown.
     last_timing: Option<RoundTiming>,
     round: usize,
-    /// Row-major [n, d] staging buffer gathering worker gradient rows
-    /// for the aggregation kernel.
-    grad_matrix: Vec<f32>,
+    /// Reusable aggregation accumulator (length `d`): the global
+    /// gradient is built here every round, straight from worker-owned
+    /// row views — no `[n, d]` staging copy on the native path.
+    agg: Vec<f32>,
+    /// Reusable per-device aggregation weights (length `n`).
+    weights: Vec<f32>,
+    /// Row-major `[n, d]` staging matrix for the Pallas `wagg` kernel —
+    /// allocated lazily on first kernel use, empty on the (default)
+    /// native path.
+    staging: Vec<f32>,
     /// Whether the backend's wagg path is usable for this device count.
     wagg_artifact_ok: bool,
+    /// `SCADLES_KERNEL_AGG` / `SCADLES_KERNEL_TOPK` resolved once at
+    /// construction (an env probe allocates; the round loop must not).
+    kernel_agg: bool,
+    kernel_topk: bool,
     /// Resolved worker-pool width (1 = sequential engine).
     threads: usize,
 }
@@ -173,8 +186,12 @@ impl Trainer {
             timeline: Timeline::new(),
             last_timing: None,
             round: 0,
-            grad_matrix: vec![0.0; n * d],
+            agg: vec![0.0; d],
+            weights: Vec::with_capacity(n),
+            staging: Vec::new(),
             wagg_artifact_ok: true,
+            kernel_agg: std::env::var_os("SCADLES_KERNEL_AGG").is_some(),
+            kernel_topk: std::env::var_os("SCADLES_KERNEL_TOPK").is_some(),
             threads,
         })
     }
@@ -340,12 +357,16 @@ impl Trainer {
         //       (Table V's CNC), decision applied back to every shard
         let floats_sent;
         let mut compressed_round = false;
-        let mut kept_fraction = 1.0f64;
+        // real survivor accounting for the round (Σ nnz over shards /
+        // trained·d) — also what the sync pricing consumes below
+        let mut round_kept = 0u64;
+        let mut round_dense = trained * d as u64;
         if let Some(ratio) = self.scheme.ratio() {
             {
                 let backend = self.backend.as_ref();
+                let kernel_topk = self.kernel_topk;
                 for_each_worker(&mut self.workers, threads, |_, w| {
-                    w.compress_stats(backend, ratio);
+                    w.compress_stats(backend, ratio, kernel_topk);
                 });
             }
             self.take_worker_error()?;
@@ -364,9 +385,8 @@ impl Trainer {
             compressed_round = dec.compress;
             floats_sent = dec.floats_sent;
             self.cnc.record(dec.compress, dense_total, kept_total);
-            if dec.compress {
-                kept_fraction = kept_total as f64 / dense_total.max(1) as f64;
-            }
+            round_kept = kept_total;
+            round_dense = dense_total;
             let compress = dec.compress;
             for_each_worker(&mut self.workers, threads, |_, w| {
                 w.apply_decision(compress);
@@ -377,36 +397,57 @@ impl Trainer {
         }
 
         // -- 8. weighted aggregation (Eqn. 4b), fixed device order --------
-        for (i, w) in self.workers.iter().enumerate() {
-            self.grad_matrix[i * d..(i + 1) * d].copy_from_slice(w.grad());
+        //       straight from worker-owned row views: O(Σ nnz) sparse
+        //       scatters on compressed rounds, coordinate-chunked over
+        //       the worker pool on dense ones; the accumulator and the
+        //       weight vector are reused round over round (no [n, d]
+        //       staging copy, no steady-state allocation)
+        match self.cfg.mode {
+            TrainMode::Scadles => weights_from_batches_into(&batches, &mut self.weights),
+            TrainMode::Ddl => uniform_weights_into(&batches, &mut self.weights),
         }
-        let weights = match self.cfg.mode {
-            TrainMode::Scadles => weights_from_batches(&batches),
-            TrainMode::Ddl => uniform_weights(&batches),
-        };
-        // Aggregation path: the Pallas wagg artifact is bit-equivalent to
-        // the native mirror (runtime_e2e::wagg_artifact_matches_native) but
+        // Kernel path: the Pallas wagg artifact is bit-equivalent to the
+        // native mirror (runtime_e2e::wagg_artifact_matches_native) but
         // interpret-mode Pallas through CPU-PJRT costs ~200x the native
         // loop (EXPERIMENTS.md §Perf L3 iter. 4), so the CPU substrate
         // defaults to native; SCADLES_KERNEL_AGG=1 re-enables the kernel
-        // (the right default on a real accelerator).
-        let use_kernel =
-            self.wagg_artifact_ok && std::env::var_os("SCADLES_KERNEL_AGG").is_some();
-        let agg = if global_batch == 0 {
-            vec![0.0; d]
-        } else if use_kernel {
-            match self.backend.weighted_aggregate(&self.grad_matrix, &weights) {
-                Ok(v) => v,
+        // (the right default on a real accelerator). The kernel wants the
+        // dense [n, d] matrix, so only its opt-in path pays the staging
+        // copy (sparse rows are densified into it).
+        let mut kernel_done = false;
+        if global_batch > 0 && self.kernel_agg && self.wagg_artifact_ok {
+            let n = self.workers.len();
+            if self.staging.is_empty() {
+                self.staging.resize(n * d, 0.0);
+            }
+            let staging = &mut self.staging;
+            for (i, w) in self.workers.iter().enumerate() {
+                let row = &mut staging[i * d..(i + 1) * d];
+                match w.row() {
+                    RowView::Dense(g) => row.copy_from_slice(g),
+                    RowView::Sparse(s) => s.densify_into(row),
+                }
+            }
+            match self.backend.weighted_aggregate(&self.staging, &self.weights) {
+                Ok(v) => {
+                    self.agg.copy_from_slice(&v);
+                    kernel_done = true;
+                }
                 Err(_) => {
                     // no wagg artifact for this device count — fall back to
                     // the native mirror for the rest of the run.
                     self.wagg_artifact_ok = false;
-                    aggregate_native(&self.grad_matrix, &weights, d)
                 }
             }
-        } else {
-            aggregate_native(&self.grad_matrix, &weights, d)
-        };
+        }
+        if !kernel_done {
+            if global_batch == 0 {
+                self.agg.iter_mut().for_each(|v| *v = 0.0);
+            } else {
+                let workers = &self.workers;
+                aggregate_rows_into(&mut self.agg, &self.weights, |i| workers[i].row(), threads);
+            }
+        }
 
         // -- 9. optimizer update with scaled LR ---------------------------
         let lr = match self.cfg.mode {
@@ -415,7 +456,7 @@ impl Trainer {
         };
         if global_batch > 0 {
             self.backend
-                .update(&mut self.params, &mut self.momentum, &agg, lr as f32)?;
+                .update(&mut self.params, &mut self.momentum, &self.agg, lr as f32)?;
         }
 
         // -- 10. price the round on the virtual clock ---------------------
@@ -440,10 +481,13 @@ impl Trainer {
         let sync_s = if global_batch == 0 {
             0.0
         } else if compressed_round {
-            let nnz = (self.cluster.paper_params() as f64 * kept_fraction) as u64;
+            // price the wire from the *real* survivor count: Σ nnz over
+            // the shards, scaled exactly (integer math, no f64 fraction
+            // round-trip) onto the paper model's parameter count
+            let nnz = scale_nnz_to_paper(self.cluster.paper_params(), round_kept, round_dense);
             self.cluster
                 .network
-                .allreduce_time_slowest(nnz * 8, ring_n, ring_bps)
+                .sparse_sync_time_slowest(nnz, ring_n, ring_bps)
         } else {
             self.cluster
                 .network
@@ -505,7 +549,7 @@ impl Trainer {
         let train_loss = self
             .workers
             .iter()
-            .zip(&weights)
+            .zip(&self.weights)
             .map(|(w, &wt)| w.out.loss as f64 * wt as f64)
             .sum::<f64>();
         let (top1, top5) = self
@@ -582,6 +626,17 @@ impl Trainer {
     pub fn broker(&self) -> &Broker {
         &self.broker
     }
+}
+
+/// Scale the round's real survivor count onto the paper model's
+/// parameter space: `paper_params · kept / dense`, computed in u128 so
+/// the ratio is exact (no f64 fraction round-trip). `kept = dense`
+/// degenerates to the dense wire volume; an empty round prices zero.
+fn scale_nnz_to_paper(paper_params: u64, kept: u64, dense: u64) -> u64 {
+    if dense == 0 {
+        return 0;
+    }
+    ((paper_params as u128 * kept as u128) / dense as u128) as u64
 }
 
 /// Per-device RNG seed for stream/jitter state. XOR with a fixed offset
@@ -758,6 +813,46 @@ mod tests {
             .run()
             .unwrap();
         assert_ne!(a.report.wall_clock_s, b.report.wall_clock_s);
+    }
+
+    #[test]
+    fn nnz_paper_scaling_is_exact_integer_math() {
+        assert_eq!(scale_nnz_to_paper(1000, 0, 0), 0);
+        assert_eq!(scale_nnz_to_paper(1000, 0, 10), 0);
+        assert_eq!(scale_nnz_to_paper(1000, 5, 10), 500);
+        assert_eq!(scale_nnz_to_paper(1000, 10, 10), 1000);
+        // magnitudes past f64's 2^53 integer range stay exact in u128
+        let p = 60_200_000u64;
+        let dense = 8 * 820_874u64;
+        let kept = dense / 10;
+        assert_eq!(
+            scale_nnz_to_paper(p, kept, dense),
+            ((p as u128 * kept as u128) / dense as u128) as u64
+        );
+        assert!(scale_nnz_to_paper(p, kept, dense) <= p);
+    }
+
+    #[test]
+    fn compressed_sync_prices_the_real_survivor_count() {
+        // always-compress: every round's sync must be strictly cheaper
+        // than the dense wire, and scale with the survivor volume
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.compression = Some(CompressionConfig::new(0.1, 10.0));
+        let mut t = trainer(&cfg);
+        let mut t_dense = trainer(&base(TrainMode::Scadles));
+        for _ in 0..3 {
+            let log = t.round().unwrap();
+            t_dense.round().unwrap();
+            assert!(log.compressed);
+            let sparse_sync = t.last_timing().unwrap().sync_s;
+            let dense_sync = t_dense.last_timing().unwrap().sync_s;
+            // 8-byte sparse elements at CR≈0.1 → ~0.2x the dense volume
+            assert!(
+                sparse_sync < dense_sync * 0.5,
+                "sparse {sparse_sync} vs dense {dense_sync}"
+            );
+            assert!(sparse_sync > 0.0);
+        }
     }
 
     #[test]

@@ -24,8 +24,11 @@
 //! against that snapshot, so no process evaluation ever happens on a
 //! pool thread.
 
-use crate::compress::ErrorFeedback;
+use crate::compress::{
+    mask_stats_only, threshold_for_ratio_with, ErrorFeedback, SelectScratch, SparseGrad,
+};
 use crate::config::cluster::DeviceProfile;
+use crate::coordinator::aggregate::RowView;
 use crate::coordinator::backend::Backend;
 use crate::coordinator::device::Device;
 use crate::data::{materialize, Synthetic};
@@ -66,16 +69,28 @@ pub struct DeviceWorker {
     pub profile: DeviceProfile,
     /// Shard-local DGC residual (None when error feedback is disabled).
     pub feedback: Option<ErrorFeedback>,
-    /// This round's gradient row (length `d`; zeroed when the device
+    /// This round's raw gradient row (length `d`; zeroed when the device
     /// sits out).
     grad: Vec<f32>,
     /// Records polled this round (consumed by [`Self::train`]).
     fresh: Vec<Record>,
-    /// Residual-corrected gradient, held between the stats and apply
-    /// phases of a compressed round.
+    /// Residual-corrected gradient (length `d`, allocated once). Holds
+    /// the round's outgoing dense row after a dense decision; after a
+    /// compressed decision with error feedback its storage has been
+    /// swapped into the residual and its contents are stale until the
+    /// next round rebuilds it.
     corrected: Vec<f32>,
-    /// Top-k-masked gradient, held between the stats and apply phases.
-    masked: Vec<f32>,
+    /// The Top-k survivor set, emitted directly by the mask phase —
+    /// buffers reused round over round, so the compressed steady state
+    /// allocates nothing here.
+    sparse: SparseGrad,
+    /// Reusable magnitude buffer for threshold selection: `topk_threshold`
+    /// would otherwise allocate d floats (3.2 MB at mlp_c10's d=820 874)
+    /// per device-round.
+    scratch: SelectScratch,
+    /// Whether this round's outgoing row is the sparse view (set by
+    /// [`Self::apply_decision`] on a compressed round).
+    sent_sparse: bool,
     /// Scalar round outputs.
     pub out: WorkerRound,
     /// First error hit by a parallel phase (drained by the coordinator
@@ -91,16 +106,39 @@ impl DeviceWorker {
             feedback: use_error_feedback.then(|| ErrorFeedback::new(d)),
             grad: vec![0.0; d],
             fresh: Vec::new(),
-            corrected: Vec::new(),
-            masked: Vec::new(),
+            corrected: vec![0.0; d],
+            sparse: SparseGrad::new(),
+            scratch: SelectScratch::new(),
+            sent_sparse: false,
             out: WorkerRound::default(),
             error: None,
         }
     }
 
-    /// The gradient row this worker contributes to aggregation.
+    /// The raw (pre-compression) gradient row from this round's local
+    /// step.
     pub fn grad(&self) -> &[f32] {
         &self.grad
+    }
+
+    /// This round's Top-k survivor set (meaningful after a compressed
+    /// [`Self::apply_decision`]).
+    pub fn sparse(&self) -> &SparseGrad {
+        &self.sparse
+    }
+
+    /// The row this worker contributes to aggregation: the sparse
+    /// survivor set on compressed rounds, the residual-corrected dense
+    /// row on dense-decision rounds, and the raw gradient when no
+    /// compression scheme ran this round.
+    pub fn row(&self) -> RowView<'_> {
+        if self.sent_sparse {
+            RowView::Sparse(&self.sparse)
+        } else if self.out.has_stats {
+            RowView::Dense(&self.corrected)
+        } else {
+            RowView::Dense(&self.grad)
+        }
     }
 
     /// Records staged for the injection step (drained and restored by
@@ -140,6 +178,7 @@ impl DeviceWorker {
             batch: self.fresh.len(),
             ..WorkerRound::default()
         };
+        self.sent_sparse = false;
         // a stale error from an aborted round must not fail this one
         self.error = None;
         if self.fresh.is_empty() {
@@ -163,55 +202,81 @@ impl DeviceWorker {
 
     /// Phase: residual correction + Top-k mask statistics.
     ///
-    /// Holds the corrected and masked rows until the coordinator's global
-    /// gate decides whether this round compresses.
-    pub fn compress_stats(&mut self, backend: &dyn Backend, ratio: f64) {
+    /// The native fast path (`use_kernel = false`, the CPU-substrate
+    /// default) never materializes the dense masked tensor: a stats-only
+    /// pass over the corrected row yields `(|g|², |Topk|², nnz)`, then
+    /// the survivor set is written straight into the reusable
+    /// [`SparseGrad`] — every buffer (corrected row, selection scratch,
+    /// sparse vectors) is worker-owned and reused, so the compressed
+    /// steady state allocates nothing here. With `use_kernel` the Pallas
+    /// `topk` artifact produces the masked tensor and the sparse view is
+    /// re-thresholded from it; both routes keep identical coordinates,
+    /// stats bits and downstream arithmetic (including zero-magnitude
+    /// survivors at `thresh == 0`).
+    ///
+    /// Holds the corrected row and survivor set until the coordinator's
+    /// global gate decides whether this round compresses.
+    pub fn compress_stats(&mut self, backend: &dyn Backend, ratio: f64, use_kernel: bool) {
         self.out.has_stats = false;
+        self.sent_sparse = false;
         if self.out.batch == 0 {
             return;
         }
         // DGC-style error feedback: re-add the residual dropped in
         // earlier compressed rounds before thresholding.
-        let mut row = self.grad.clone();
+        self.corrected.copy_from_slice(&self.grad);
         if let Some(ef) = &self.feedback {
-            ef.correct(&mut row);
+            ef.correct(&mut self.corrected);
         }
-        let (_k, thresh) = crate::compress::threshold_for_ratio(&row, ratio);
-        match backend.topk_mask_stats(&row, thresh) {
-            Ok((masked, n2, k2, nnz)) => {
-                self.out.norm2 = n2;
-                self.out.knorm2 = k2;
-                self.out.nnz = nnz;
-                self.out.has_stats = true;
-                self.masked = masked;
-                self.corrected = row;
+        let (_k, thresh) = threshold_for_ratio_with(&self.corrected, ratio, &mut self.scratch);
+        if use_kernel {
+            match backend.topk_mask_stats(&self.corrected, thresh) {
+                Ok((masked, n2, k2, nnz)) => {
+                    // re-apply the threshold to the kernel's masked
+                    // tensor rather than scanning non-zeros: at
+                    // thresh == 0 a surviving ±0.0 must stay in the
+                    // view (and count toward nnz) for the residual to
+                    // match the dense and native paths bit for bit
+                    self.sparse.fill_from_threshold(&masked, thresh, nnz as usize);
+                    self.out.norm2 = n2;
+                    self.out.knorm2 = k2;
+                    self.out.nnz = nnz;
+                    self.out.has_stats = true;
+                }
+                Err(e) => self.error = Some(e),
             }
-            Err(e) => self.error = Some(e),
+        } else {
+            let (n2, k2, nnz) = mask_stats_only(&self.corrected, thresh);
+            self.sparse.fill_from_threshold(&self.corrected, thresh, nnz);
+            self.out.norm2 = n2;
+            self.out.knorm2 = k2;
+            self.out.nnz = nnz as u64;
+            self.out.has_stats = true;
         }
     }
 
     /// Phase: commit the global gate's decision to this shard.
     ///
-    /// Compressed round: the masked row goes out, the residual absorbs
-    /// the dropped mass. Dense round: the corrected row goes out whole
-    /// and the residual clears.
+    /// Compressed round: the sparse survivor set goes out and the
+    /// residual absorbs the dropped mass in one swap-and-zero pass
+    /// ([`ErrorFeedback::absorb_sparse`] — which leaves `corrected`
+    /// holding stale storage until the next round rebuilds it). Dense
+    /// round: the corrected row goes out whole and the residual clears.
     pub fn apply_decision(&mut self, compress: bool) {
         if !self.out.has_stats {
             return;
         }
         if compress {
             if let Some(ef) = &mut self.feedback {
-                ef.absorb(&self.corrected, &self.masked);
+                ef.absorb_sparse(&mut self.corrected, &self.sparse);
             }
-            std::mem::swap(&mut self.grad, &mut self.masked);
+            self.sent_sparse = true;
         } else {
-            std::mem::swap(&mut self.grad, &mut self.corrected);
             if let Some(ef) = &mut self.feedback {
                 ef.clear();
             }
+            self.sent_sparse = false;
         }
-        self.masked = Vec::new();
-        self.corrected = Vec::new();
     }
 }
 
@@ -258,12 +323,16 @@ mod tests {
     }
 
     fn assert_send<T: Send>() {}
+    fn assert_sync<T: Sync>() {}
 
     #[test]
-    fn worker_is_send() {
-        // the whole point: shards move onto scoped threads
+    fn worker_is_send_and_sync() {
+        // Send: shards move onto scoped threads. Sync: the chunked
+        // aggregation path shares `&[DeviceWorker]` row views across
+        // coordinate-chunk threads.
         assert_send::<DeviceWorker>();
         assert_send::<Vec<DeviceWorker>>();
+        assert_sync::<DeviceWorker>();
     }
 
     #[test]
@@ -307,11 +376,16 @@ mod tests {
         let params = vec![0.3f32; 64];
         w.train(&be, &params, &Synthetic::standard(10, 42));
         let raw = w.grad().to_vec();
-        w.compress_stats(&be, 0.25);
+        w.compress_stats(&be, 0.25, false);
         assert!(w.out.has_stats);
         assert!(w.out.nnz >= 16);
         w.apply_decision(true);
-        let sent = w.grad().to_vec();
+        // the outgoing row is the sparse survivor set
+        let sent = match w.row() {
+            RowView::Sparse(s) => s.densify(64),
+            RowView::Dense(_) => panic!("compressed round must send the sparse view"),
+        };
+        assert_eq!(w.sparse().nnz() as u64, w.out.nnz);
         // residual + sent == raw (residual was zero before this round)
         let ef = w.feedback.as_ref().unwrap();
         assert!(ef.residual_norm2 > 0.0);
@@ -328,10 +402,45 @@ mod tests {
         w.drain(0.0, 32);
         let params = vec![0.2f32; 32];
         w.train(&be, &params, &Synthetic::standard(10, 42));
-        w.compress_stats(&be, 0.1);
+        w.compress_stats(&be, 0.1, false);
         w.apply_decision(false);
         assert_eq!(w.feedback.as_ref().unwrap().residual_norm2, 0.0);
-        assert!(w.grad().iter().filter(|&&v| v != 0.0).count() > w.out.nnz as usize);
+        let row = match w.row() {
+            RowView::Dense(r) => r,
+            RowView::Sparse(_) => panic!("dense decision must send the dense row"),
+        };
+        assert!(row.iter().filter(|&&v| v != 0.0).count() > w.out.nnz as usize);
+    }
+
+    #[test]
+    fn kernel_and_native_mask_paths_agree_bitwise() {
+        // MockBackend::topk_mask_stats is the Pallas mirror; the sparse
+        // fast path must keep the same survivors and stat bits.
+        let be = MockBackend::new(96, 10);
+        let data = Synthetic::standard(10, 42);
+        let params = vec![0.4f32; 96];
+        let run = |use_kernel: bool| {
+            let mut w = worker(100.0, true, 96);
+            w.device.advance_stream(1.0);
+            w.drain(0.0, 64);
+            w.train(&be, &params, &data);
+            w.compress_stats(&be, 0.1, use_kernel);
+            w.apply_decision(true);
+            (
+                w.out.norm2.to_bits(),
+                w.out.knorm2.to_bits(),
+                w.out.nnz,
+                w.sparse().clone(),
+                w.feedback.as_ref().unwrap().residual_norm2.to_bits(),
+            )
+        };
+        let native = run(false);
+        let kernel = run(true);
+        assert_eq!(native.0, kernel.0, "norm2");
+        assert_eq!(native.1, kernel.1, "knorm2");
+        assert_eq!(native.2, kernel.2, "nnz");
+        assert_eq!(native.3, kernel.3, "survivor set");
+        assert_eq!(native.4, kernel.4, "residual norm");
     }
 
     #[test]

@@ -63,8 +63,18 @@ impl NetworkModel {
     /// Sparse exchange: Top-k sends (index, value) pairs — 8 bytes per
     /// surviving element (the paper's "floats sent" metric counts 4-byte
     /// floats; CNC accounting uses [`crate::compress::cnc`]).
+    ///
+    /// `nnz` is the **real** survivor count of the exchange (the round
+    /// engine reports Σ nnz from the mask phase and scales it exactly
+    /// onto the priced model) — not a CR-derived estimate.
     pub fn sparse_sync_time(&self, nnz: u64, n: usize) -> f64 {
-        self.allreduce_time(nnz * 8, n)
+        self.sparse_sync_time_slowest(nnz, n, self.bandwidth_bps)
+    }
+
+    /// [`Self::sparse_sync_time`] through a heterogeneous/faded ring's
+    /// slowest participating link.
+    pub fn sparse_sync_time_slowest(&self, nnz: u64, n: usize, slowest_bps: f64) -> f64 {
+        self.allreduce_time_slowest(nnz * 8, n, slowest_bps)
     }
 }
 
@@ -125,5 +135,15 @@ mod tests {
         // CR=0.1 with 8-byte sparse elements → 0.2× the dense volume
         let sparse = m.sparse_sync_time(1_000_000, 16);
         assert!(sparse < dense * 0.25, "sparse {sparse} dense {dense}");
+    }
+
+    #[test]
+    fn sparse_slowest_link_matches_global_when_equal_and_throttles_otherwise() {
+        let m = NetworkModel::paper_5gbps();
+        let a = m.sparse_sync_time(2_000_000, 8);
+        let b = m.sparse_sync_time_slowest(2_000_000, 8, m.bandwidth_bps);
+        assert_eq!(a.to_bits(), b.to_bits());
+        let narrow = m.sparse_sync_time_slowest(2_000_000, 8, 1e9);
+        assert!(narrow > a * 4.0, "narrow {narrow} vs {a}");
     }
 }

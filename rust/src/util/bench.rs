@@ -3,6 +3,9 @@
 //! `cargo bench` targets use [`Bench`] to time closures with warm-up,
 //! multiple samples, and mean/std/min reporting — enough to drive the
 //! §Perf iteration loop and the paper-table regeneration benches.
+//! [`Bench::write_json`] additionally emits the machine-readable
+//! `BENCH_hotpaths.json` trajectory CI archives per run, so ns/op per
+//! case can be compared across PRs instead of asserted from memory.
 
 use std::time::{Duration, Instant};
 
@@ -121,6 +124,50 @@ impl Bench {
     pub fn results(&self) -> &[Sample] {
         &self.results
     }
+
+    /// Serialize every measured case as machine-readable JSON:
+    ///
+    /// ```json
+    /// { "schema": "scadles-bench-v1",
+    ///   "cases": [ { "name": "agg/sparse-native", "ns_per_iter": …,
+    ///                "min_ns": …, "std_ns": …, "iters": … }, … ] }
+    /// ```
+    ///
+    /// CI writes this to `BENCH_hotpaths.json` and uploads it as an
+    /// artifact — the perf trajectory future PRs diff against.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(s.name.clone()));
+                m.insert("ns_per_iter".to_string(), Json::Num(s.ns_per_iter()));
+                m.insert("min_ns".to_string(), Json::Num(s.min.as_nanos() as f64));
+                m.insert("std_ns".to_string(), Json::Num(s.std.as_nanos() as f64));
+                m.insert("iters".to_string(), Json::Num(s.iters as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert(
+            "schema".to_string(),
+            Json::Str("scadles-bench-v1".to_string()),
+        );
+        root.insert("cases".to_string(), Json::Arr(cases));
+        Json::Obj(root)
+    }
+
+    /// Write [`Self::to_json`] to `path` (pretty-printed, trailing
+    /// newline so the artifact diffs cleanly).
+    pub fn write_json(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("writing bench json to {}: {e}", path.display()))
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +180,30 @@ mod tests {
         let s = b.case("noop-ish", || std::hint::black_box(42u64).wrapping_mul(3));
         assert!(s.mean < Duration::from_micros(50));
         assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn json_emission_round_trips() {
+        use crate::util::json::Json;
+        let mut b = Bench::new().with_budget(Duration::from_millis(20));
+        b.case("fast/one", || (0..500u64).map(std::hint::black_box).sum::<u64>());
+        b.case("fast/two", || (0..1000u64).map(std::hint::black_box).sum::<u64>());
+        let parsed = Json::parse(&b.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "scadles-bench-v1");
+        let cases = parsed.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("name").unwrap().as_str().unwrap(), "fast/one");
+        assert!(cases[0].get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
+        assert!(cases[1].get("iters").unwrap().as_u64().unwrap() > 0);
+        // file round trip
+        let path = std::env::temp_dir().join(format!(
+            "scadles_bench_json_{}.json",
+            std::process::id()
+        ));
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(Json::parse(text.trim_end()).unwrap(), parsed);
     }
 
     #[test]

@@ -4,13 +4,18 @@
 //! happen in fixed device order on the coordinator thread.
 //!
 //! Matrix: seeds {1,2,3} x devices {1,4,8} x engine paths {plain,
-//! truncation, Top-k compression, Top-k + error feedback, DDL baseline,
-//! two heterogeneous cluster profiles, two stream-dynamics scenarios
-//! (diurnal+topk, burst+churn)} x pool widths {1 (sequential), 4, 8}.
+//! truncation, Top-k compression, Top-k + error feedback, Top-k at
+//! CR=0.01 always-compress (single-survivor sparse scatter), Top-k at
+//! CR=1.0 (whole-row sparse view), DDL baseline, two heterogeneous
+//! cluster profiles, two stream-dynamics scenarios (diurnal+topk,
+//! burst+churn)} x pool widths {1 (sequential), 4, 8}.
 //! The heterogeneous cases pin the scenario layer's per-device-substream
 //! sampling, and the dynamics cases pin the time-varying process layer
 //! (effective rates, membership, counters): neither may depend on pool
-//! width.
+//! width. Every compressed case runs the sparse fast path (O(Σ nnz)
+//! aggregation straight from worker-owned `SparseGrad` views) and every
+//! dense case the coordinate-chunked parallel aggregation, so this
+//! matrix is also the determinism contract for both.
 
 use scadles::buffer::BufferPolicy;
 use scadles::config::{
@@ -69,6 +74,36 @@ fn cases() -> Vec<Case> {
             delta: 0.5,
             ewma_alpha: 0.3,
             error_feedback: true,
+        }),
+        hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
+    },
+    Case {
+        // sparse fast path at an aggressive CR: k = ceil(0.01·d) = 1 at
+        // d=96, the single-survivor scatter every round
+        name: "topk-aggressive",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Persistence,
+        compression: Some(CompressionConfig {
+            ratio: 0.01,
+            delta: 10.0, // always compress: every round takes the sparse path
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        }),
+        hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
+    },
+    Case {
+        // CR=1.0: threshold 0, the sparse view carries the whole row
+        // (explicit zeros included) — the dense-equivalence edge
+        name: "topk-cr1",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Truncation,
+        compression: Some(CompressionConfig {
+            ratio: 1.0,
+            delta: 10.0,
+            ewma_alpha: 0.3,
+            error_feedback: false,
         }),
         hetero: HeteroPreset::K80Homogeneous,
         dynamics: DynamicsPreset::Static,
@@ -267,6 +302,39 @@ fn static_dynamics_reproduce_the_frozen_profile_engine_bitwise() {
         let a = run(&fixed, 7, 8, threads);
         let b = run(&identity, 7, 8, threads);
         assert_outputs_identical(&a, &b, &format!("static-vs-identity threads={threads}"));
+    }
+}
+
+#[test]
+fn chunked_dense_aggregation_in_the_round_engine_is_width_invariant() {
+    // The matrix above runs a tiny mock gradient (d=96), below the
+    // coordinate-chunked aggregation's serial cutoff; this case uses a
+    // d large enough that dense-round aggregation actually fans the
+    // coordinate range over the pool — and must still be bitwise equal
+    // to the sequential engine.
+    let mk = |threads: usize| {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(4)
+            .rounds(6)
+            .seed(9)
+            .preset(StreamPreset::S1)
+            .eval_every(3)
+            .worker_threads(threads)
+            .build()
+            .unwrap();
+        Trainer::with_backend(&cfg, Box::new(MockBackend::new(8192, 10)))
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let sequential = mk(1);
+    for threads in [2usize, 4] {
+        let parallel = mk(threads);
+        assert_outputs_identical(
+            &sequential,
+            &parallel,
+            &format!("chunked-dense threads={threads}"),
+        );
     }
 }
 

@@ -1,0 +1,209 @@
+//! The sparse fast path's contract: masking straight into
+//! `SparseGrad`, `ErrorFeedback::absorb_sparse`, and
+//! `aggregate_sparse_native` are **bitwise** equal to the dense
+//! reference pipeline (clone → `mask_stats_native` → dense `absorb` →
+//! `aggregate_native`) — per round, per coordinate, including the
+//! momentum-SGD update that consumes the aggregate. If this holds at
+//! every round of a multi-round error-feedback loop, the two engines
+//! produce identical global models forever, which is what lets the
+//! round engine run O(Σ nnz) without a correctness caveat.
+//!
+//! Matrix: seeds {1,2,3} × devices {1,4,8} × CR {0.01, 0.1, 1.0}, plus
+//! the all-zero-gradient and single-survivor edge cases and the
+//! coordinate-chunked dense variant at several widths.
+
+use scadles::compress::{
+    mask_stats_native, mask_stats_only, threshold_for_ratio, threshold_for_ratio_with,
+    ErrorFeedback, SelectScratch, SparseGrad,
+};
+use scadles::coordinator::{
+    aggregate_chunked_native, aggregate_native, aggregate_sparse_native, weights_from_batches,
+};
+use scadles::rng::Pcg64;
+
+const D: usize = 700;
+const ROUNDS: u64 = 10;
+const LR: f32 = 0.05;
+const MOMENTUM: f32 = 0.9;
+
+fn grad(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 0);
+    (0..d).map(|_| rng.normal() as f32).collect()
+}
+
+/// Momentum-SGD mirror of `MockBackend::update`.
+fn sgd_update(params: &mut [f32], mom: &mut [f32], grad: &[f32]) {
+    for ((p, m), g) in params.iter_mut().zip(mom.iter_mut()).zip(grad) {
+        *m = MOMENTUM * *m + g;
+        *p -= LR * *m;
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: coord {i} ({x} vs {y})");
+    }
+}
+
+/// Run `rounds` of the full compressed pipeline both ways and pin every
+/// cross-checkable intermediate bit-for-bit.
+fn run_equivalence(seed: u64, n: usize, cr: f64) {
+    let ctx = format!("seed={seed} n={n} cr={cr}");
+    // dense reference state
+    let mut params_d = vec![0.1f32; D];
+    let mut mom_d = vec![0f32; D];
+    let mut efs_d: Vec<ErrorFeedback> = (0..n).map(|_| ErrorFeedback::new(D)).collect();
+    // sparse-path state: persistent per-device buffers, as the workers own
+    let mut params_s = params_d.clone();
+    let mut mom_s = vec![0f32; D];
+    let mut efs_s: Vec<ErrorFeedback> = (0..n).map(|_| ErrorFeedback::new(D)).collect();
+    let mut corrected_s: Vec<Vec<f32>> = (0..n).map(|_| vec![0f32; D]).collect();
+    let mut sparse_rows: Vec<SparseGrad> = (0..n).map(|_| SparseGrad::new()).collect();
+    let mut scratch = SelectScratch::new();
+
+    let batches: Vec<usize> = (0..n).map(|i| 8 + 3 * i).collect();
+    let weights = weights_from_batches(&batches);
+
+    for round in 0..ROUNDS {
+        let mut matrix = vec![0f32; n * D];
+        for i in 0..n {
+            let g = grad(D, seed * 10_000 + round * 100 + i as u64);
+
+            // dense reference
+            let mut corrected_d = g.clone();
+            efs_d[i].correct(&mut corrected_d);
+            let (_k, thresh) = threshold_for_ratio(&corrected_d, cr);
+            let mut masked = corrected_d.clone();
+            let (n2_d, k2_d, nnz_d) = mask_stats_native(&mut masked, thresh);
+            efs_d[i].absorb(&corrected_d, &masked);
+            matrix[i * D..(i + 1) * D].copy_from_slice(&masked);
+
+            // sparse fast path over reused buffers
+            corrected_s[i].copy_from_slice(&g);
+            efs_s[i].correct(&mut corrected_s[i]);
+            let (_k2, thresh_s) = threshold_for_ratio_with(&corrected_s[i], cr, &mut scratch);
+            assert_eq!(thresh.to_bits(), thresh_s.to_bits(), "{ctx} r{round} d{i}: thresh");
+            let (n2_s, k2_s, nnz_s) = mask_stats_only(&corrected_s[i], thresh_s);
+            assert_eq!(n2_d.to_bits(), n2_s.to_bits(), "{ctx} r{round} d{i}: |g|2");
+            assert_eq!(k2_d.to_bits(), k2_s.to_bits(), "{ctx} r{round} d{i}: |topk|2");
+            assert_eq!(nnz_d, nnz_s, "{ctx} r{round} d{i}: nnz");
+            sparse_rows[i].fill_from_threshold(&corrected_s[i], thresh_s, nnz_s);
+            efs_s[i].absorb_sparse(&mut corrected_s[i], &sparse_rows[i]);
+            assert_eq!(
+                efs_d[i].residual_norm2.to_bits(),
+                efs_s[i].residual_norm2.to_bits(),
+                "{ctx} r{round} d{i}: residual norm"
+            );
+        }
+
+        let agg_d = aggregate_native(&matrix, &weights, D);
+        let agg_s = aggregate_sparse_native(&sparse_rows, &weights, D);
+        assert_bits_eq(&agg_d, &agg_s, &format!("{ctx} r{round}: aggregate"));
+
+        sgd_update(&mut params_d, &mut mom_d, &agg_d);
+        sgd_update(&mut params_s, &mut mom_s, &agg_s);
+        assert_bits_eq(&params_d, &params_s, &format!("{ctx} r{round}: params"));
+        assert_bits_eq(&mom_d, &mom_s, &format!("{ctx} r{round}: momentum"));
+    }
+}
+
+#[test]
+fn sparse_path_global_models_match_dense_bit_for_bit_across_the_matrix() {
+    for seed in [1u64, 2, 3] {
+        for n in [1usize, 4, 8] {
+            for cr in [0.01f64, 0.1, 1.0] {
+                run_equivalence(seed, n, cr);
+            }
+        }
+    }
+}
+
+#[test]
+fn all_zero_gradients_survive_both_paths_identically() {
+    // zero gradient → threshold 0 → *everything* is "kept": the sparse
+    // view carries d explicit zeros, the dense mask keeps all-zeros,
+    // and residual, aggregate and model must all stay exactly zero.
+    let g = vec![0f32; 64];
+    let (_k, thresh) = threshold_for_ratio(&g, 0.1);
+    assert_eq!(thresh, 0.0);
+
+    let mut masked = g.clone();
+    let (n2, k2, nnz) = mask_stats_native(&mut masked, thresh);
+    assert_eq!((n2, k2, nnz), (0.0, 0.0, 64));
+    let mut ef_d = ErrorFeedback::new(64);
+    ef_d.absorb(&g, &masked);
+
+    let (n2s, k2s, nnzs) = mask_stats_only(&g, thresh);
+    assert_eq!((n2s, k2s, nnzs), (0.0, 0.0, 64));
+    let mut sparse = SparseGrad::new();
+    sparse.fill_from_threshold(&g, thresh, nnzs);
+    assert_eq!(sparse.nnz(), 64);
+    let mut corrected = g.clone();
+    let mut ef_s = ErrorFeedback::new(64);
+    ef_s.absorb_sparse(&mut corrected, &sparse);
+
+    assert_eq!(ef_d.residual_norm2, 0.0);
+    assert_eq!(ef_s.residual_norm2, 0.0);
+    let w = [1.0f32];
+    let agg_d = aggregate_native(&masked, &w, 64);
+    let agg_s = aggregate_sparse_native(std::slice::from_ref(&sparse), &w, 64);
+    assert_bits_eq(&agg_d, &agg_s, "all-zero aggregate");
+    assert!(agg_s.iter().all(|v| v.to_bits() == 0), "aggregate must be +0.0");
+}
+
+#[test]
+fn single_survivor_edge_case_matches() {
+    // k clamps to 1 at a tiny CR: exactly one coordinate crosses the
+    // wire; the residual absorbs everything else.
+    let mut g = vec![0.25f32; 100];
+    g[37] = -9.0; // unique magnitude maximum
+    let (k, thresh) = threshold_for_ratio(&g, 1e-9);
+    assert_eq!(k, 1);
+    assert_eq!(thresh, 9.0);
+
+    let mut masked = g.clone();
+    let (_n2, _k2, nnz) = mask_stats_native(&mut masked, thresh);
+    assert_eq!(nnz, 1);
+    let mut ef_d = ErrorFeedback::new(100);
+    ef_d.absorb(&g, &masked);
+
+    let mut sparse = SparseGrad::new();
+    let (_s1, _s2, nnzs) = mask_stats_only(&g, thresh);
+    sparse.fill_from_threshold(&g, thresh, nnzs);
+    assert_eq!(sparse.nnz(), 1);
+    assert_eq!(sparse.idx, vec![37]);
+    assert_eq!(sparse.val, vec![-9.0]);
+    let mut corrected = g.clone();
+    let mut ef_s = ErrorFeedback::new(100);
+    ef_s.absorb_sparse(&mut corrected, &sparse);
+    assert_eq!(ef_d.residual_norm2.to_bits(), ef_s.residual_norm2.to_bits());
+
+    let w = [1.0f32];
+    let agg_d = aggregate_native(&masked, &w, 100);
+    let agg_s = aggregate_sparse_native(std::slice::from_ref(&sparse), &w, 100);
+    assert_bits_eq(&agg_d, &agg_s, "single-survivor aggregate");
+    assert_eq!(agg_s.iter().filter(|v| **v != 0.0).count(), 1);
+}
+
+#[test]
+fn chunked_dense_aggregation_matches_serial_at_every_width() {
+    // large enough that the coordinate-chunked arm actually spawns
+    // threads (it falls back to serial below ~4k coordinates)
+    const DBIG: usize = 10_000;
+    for seed in [5u64, 6] {
+        for n in [1usize, 4, 8] {
+            let grads: Vec<f32> =
+                (0..n).flat_map(|i| grad(DBIG, seed * 100 + i as u64)).collect();
+            let mut weights = weights_from_batches(&vec![10; n]);
+            if n > 1 {
+                weights[n - 1] = 0.0; // skipped devices must not differ either
+            }
+            let serial = aggregate_native(&grads, &weights, DBIG);
+            for threads in [1usize, 2, 4, 8, 16] {
+                let par = aggregate_chunked_native(&grads, &weights, DBIG, threads);
+                assert_bits_eq(&serial, &par, &format!("seed={seed} n={n} t={threads}"));
+            }
+        }
+    }
+}
