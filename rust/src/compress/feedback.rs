@@ -87,6 +87,22 @@ impl ErrorFeedback {
         self.residual_norm2 = n2;
     }
 
+    /// A round where this device's contribution was *withheld* entirely
+    /// — a semi-synchronous laggard past the commit point (K-sync). The
+    /// wire carried nothing, so the whole gradient joins the residual
+    /// (`residual += g`) and no mass is lost: the next committed round's
+    /// corrected gradient re-adds it, exactly like Top-k's dropped
+    /// coordinates.
+    pub fn absorb_unsent(&mut self, g: &[f32]) {
+        debug_assert_eq!(g.len(), self.residual.len());
+        let mut n2 = 0f64;
+        for (r, v) in self.residual.iter_mut().zip(g) {
+            *r += *v;
+            n2 += (*r as f64) * (*r as f64);
+        }
+        self.residual_norm2 = n2;
+    }
+
     /// Dense round: everything was sent, residual clears.
     pub fn clear(&mut self) {
         self.residual.iter_mut().for_each(|r| *r = 0.0);
@@ -195,6 +211,32 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn absorb_unsent_preserves_all_mass() {
+        // a withheld round is equivalent to sending nothing: the whole
+        // corrected gradient (g + old residual) becomes the residual
+        let d = 200;
+        let mut ef = ErrorFeedback::new(d);
+        let g0 = grad(d, 5);
+        ef.absorb_unsent(&g0);
+        for i in 0..d {
+            assert_eq!(ef.residual[i].to_bits(), g0[i].to_bits());
+        }
+        let g1 = grad(d, 6);
+        ef.absorb_unsent(&g1);
+        for i in 0..d {
+            assert_eq!(ef.residual[i].to_bits(), (g0[i] + g1[i]).to_bits());
+        }
+        let expect: f64 = ef.residual.iter().map(|r| (*r as f64) * (*r as f64)).sum();
+        assert_eq!(ef.residual_norm2.to_bits(), expect.to_bits());
+        // a later correct() re-injects everything
+        let mut corrected = vec![0f32; d];
+        ef.correct(&mut corrected);
+        for i in 0..d {
+            assert_eq!(corrected[i].to_bits(), (g0[i] + g1[i]).to_bits());
         }
     }
 

@@ -8,6 +8,7 @@ use super::cluster::ClusterProfile;
 use super::dynamics::DynamicsPreset;
 use super::hetero::HeteroPreset;
 use super::presets::StreamPreset;
+use super::sync::SyncPreset;
 use crate::buffer::BufferPolicy;
 use crate::data::LabelMap;
 use crate::Result;
@@ -130,6 +131,11 @@ pub struct ExperimentConfig {
     /// processes layered multiplicatively on the sampled profiles
     /// (`static` default reproduces frozen-profile timings bitwise).
     pub dynamics: DynamicsPreset,
+    /// Synchronization policy for the round engine: who commits a round
+    /// and with what weight (`bsp` default reproduces the fully
+    /// synchronous engine bitwise; `ksync`/`stale`/`local` open the
+    /// semi-synchronous design space).
+    pub sync: SyncPreset,
     /// Per-round multiplicative jitter std on device rates (intra-device
     /// heterogeneity, §II-A; 0 = constant rates).
     pub rate_jitter: f64,
@@ -188,6 +194,7 @@ impl ExperimentConfig {
         ensure!(self.rate_jitter >= 0.0, "rate_jitter ≥ 0");
         self.hetero.validate()?;
         self.dynamics.validate()?;
+        self.sync.validate()?;
         if let Some(c) = &self.compression {
             c.validate()?;
         }
@@ -226,6 +233,7 @@ impl ExperimentBuilder {
                 preset: StreamPreset::S1,
                 hetero: HeteroPreset::K80Homogeneous,
                 dynamics: DynamicsPreset::Static,
+                sync: SyncPreset::Bsp,
                 rate_jitter: 0.0,
                 label_map: LabelMap::Iid,
                 mode: TrainMode::Scadles,
@@ -283,6 +291,11 @@ impl ExperimentBuilder {
     /// Stream-dynamics scenario (see [`DynamicsPreset`]).
     pub fn dynamics(mut self, d: DynamicsPreset) -> Self {
         self.cfg.dynamics = d;
+        self
+    }
+    /// Synchronization policy (see [`SyncPreset`]).
+    pub fn sync(mut self, s: SyncPreset) -> Self {
+        self.cfg.sync = s;
         self
     }
     pub fn rate_jitter(mut self, j: f64) -> Self {
@@ -444,6 +457,22 @@ mod tests {
         // invalid dynamics are rejected at build time
         let mut bad = d.clone();
         bad.dynamics = DynamicsPreset::Diurnal { amplitude: 2.0, period_s: 60.0 };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn sync_preset_flows_through_builder_and_validates() {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .sync("ksync:0.75".parse().unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(cfg.sync, SyncPreset::ksync(0.75));
+        // default stays the bitwise-identical BSP engine
+        let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
+        assert!(d.sync.is_bsp());
+        // invalid sync presets are rejected at build time
+        let mut bad = d.clone();
+        bad.sync = SyncPreset::Local { steps: 0 };
         assert!(bad.validate().is_err());
     }
 

@@ -1,14 +1,17 @@
 //! Configuration: Table I stream presets, virtual cluster + heterogeneity
-//! scenarios, stream-dynamics presets, experiments.
+//! scenarios, stream-dynamics presets, synchronization policies,
+//! experiments.
 
 pub mod cluster;
 pub mod dynamics;
 pub mod experiment;
 pub mod hetero;
 pub mod presets;
+pub mod sync;
 
 pub use cluster::{ClusterProfile, DeviceProfile, VirtualCost};
 pub use dynamics::DynamicsPreset;
 pub use experiment::{CompressionConfig, ExperimentConfig, InjectionConfig, TrainMode};
 pub use hetero::HeteroPreset;
 pub use presets::StreamPreset;
+pub use sync::SyncPreset;

@@ -1,0 +1,219 @@
+//! Synchronization-policy presets: how a round decides *who commits*.
+//!
+//! The paper's straggler analysis (§II-A) assumes fully-synchronous BSP
+//! rounds — every device holds the barrier for every other. Related
+//! edge systems sidestep the straggler with looser synchronization
+//! (ADSP-style adaptive sync, DISTREAL's resource-aware partial
+//! participation); a [`SyncPreset`] names one point in that design
+//! space and the round engine runs it through the
+//! [`SyncPolicy`](crate::coordinator::SyncPolicy) layer:
+//!
+//! * `bsp` — bulk-synchronous (the paper's regime; the default, bitwise
+//!   identical to the pre-policy engine).
+//! * `ksync:frac` — semi-synchronous K-sync: the round commits when the
+//!   fastest `⌈frac·n⌉` planned devices finish; laggards' gradients fold
+//!   into their error-feedback residual instead of holding the barrier.
+//! * `stale:s` — bounded staleness: laggards contribute
+//!   staleness-discounted gradients without bounding the barrier, up to
+//!   `s` rounds behind; at the bound they force a full sync.
+//! * `local:h` — local SGD (FedAvg): `h` local steps per device, then a
+//!   sample-weighted parameter average (one model per device per sync).
+//!
+//! CLI syntax (`repro train --sync ...`): `name[:param]`, e.g.
+//! `ksync:0.75`, `stale:2`, `local:4`; composable with `--hetero` and
+//! `--dynamics`.
+
+use anyhow::{bail, ensure};
+
+use crate::Result;
+
+/// A named synchronization policy for the round engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPreset {
+    /// Bulk-synchronous parallel: every device holds the barrier.
+    Bsp,
+    /// Semi-synchronous: commit on the fastest `⌈frac·n⌉` devices
+    /// (`frac` is stored in per-mille so the preset stays `Eq`/hashable;
+    /// see [`SyncPreset::ksync`] / [`SyncPreset::frac`]).
+    KSync {
+        /// Committing fraction in per-mille (750 = fastest 75 %).
+        frac_pm: u32,
+    },
+    /// Bounded staleness: laggards go up to `bound` rounds stale.
+    Stale { bound: u32 },
+    /// Local SGD / FedAvg: `steps` local steps between parameter syncs.
+    Local { steps: u32 },
+}
+
+impl Default for SyncPreset {
+    fn default() -> Self {
+        SyncPreset::Bsp
+    }
+}
+
+impl SyncPreset {
+    /// Build a K-sync preset from a fraction in `(0, 1]`.
+    pub fn ksync(frac: f64) -> Self {
+        SyncPreset::KSync { frac_pm: (frac * 1000.0).round() as u32 }
+    }
+
+    /// The K-sync committing fraction as a float (0 for other presets).
+    pub fn frac(&self) -> f64 {
+        match self {
+            SyncPreset::KSync { frac_pm } => *frac_pm as f64 / 1000.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Policy family name (the CLI spelling, without parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncPreset::Bsp => "bsp",
+            SyncPreset::KSync { .. } => "ksync",
+            SyncPreset::Stale { .. } => "stale",
+            SyncPreset::Local { .. } => "local",
+        }
+    }
+
+    /// Whether this is the (bitwise pre-refactor) BSP default.
+    pub fn is_bsp(&self) -> bool {
+        matches!(self, SyncPreset::Bsp)
+    }
+
+    /// The policies the synchronization harness sweeps (`repro exp sync`).
+    pub fn sweep() -> [SyncPreset; 4] {
+        [
+            SyncPreset::Bsp,
+            SyncPreset::ksync(0.75),
+            SyncPreset::Stale { bound: 2 },
+            SyncPreset::Local { steps: 4 },
+        ]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            SyncPreset::Bsp => {}
+            SyncPreset::KSync { frac_pm } => {
+                ensure!(
+                    frac_pm >= 1 && frac_pm <= 1000,
+                    "ksync fraction must be in (0, 1]"
+                );
+            }
+            SyncPreset::Stale { bound } => {
+                ensure!(bound >= 1, "staleness bound must be ≥ 1");
+            }
+            SyncPreset::Local { steps } => {
+                ensure!(steps >= 1, "need at least one local step");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for SyncPreset {
+    /// The parseable spelling: `name[:param]` — labels distinguish every
+    /// configuration and `to_string().parse()` restores the preset.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            SyncPreset::Bsp => f.write_str(self.name()),
+            SyncPreset::KSync { .. } => write!(f, "{}:{}", self.name(), self.frac()),
+            SyncPreset::Stale { bound } => write!(f, "{}:{bound}", self.name()),
+            SyncPreset::Local { steps } => write!(f, "{}:{steps}", self.name()),
+        }
+    }
+}
+
+impl std::str::FromStr for SyncPreset {
+    type Err = anyhow::Error;
+
+    /// Parse `name[:param]` — e.g. `bsp`, `ksync:0.75`, `stale:2`,
+    /// `local:4`. Omitted parameters take the sweep defaults
+    /// (`ksync:0.75`, `stale:2`, `local:4`).
+    fn from_str(s: &str) -> Result<Self> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or_default();
+        let args: Vec<&str> = parts.collect();
+        ensure!(args.len() <= 1, "too many ':' parameters in sync preset {s:?}");
+        let float = |default: f64| -> Result<f64> {
+            match args.first() {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --sync parameter {a:?}: {e}")),
+            }
+        };
+        let int = |default: u32| -> Result<u32> {
+            match args.first() {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --sync parameter {a:?}: {e}")),
+            }
+        };
+        let preset = match name.to_lowercase().as_str() {
+            "bsp" => {
+                ensure!(args.is_empty(), "bsp takes no parameters");
+                SyncPreset::Bsp
+            }
+            "ksync" | "k-sync" => SyncPreset::ksync(float(0.75)?),
+            "stale" | "staleness" => SyncPreset::Stale { bound: int(2)? },
+            "local" | "localsgd" | "fedavg" => SyncPreset::Local { steps: int(4)? },
+            other => bail!(
+                "unknown sync preset {other:?} \
+                 (bsp|ksync[:frac]|stale[:s]|local[:h])"
+            ),
+        };
+        preset.validate()?;
+        Ok(preset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_cli_spellings() {
+        assert_eq!("bsp".parse::<SyncPreset>().unwrap(), SyncPreset::Bsp);
+        assert_eq!(
+            "ksync:0.75".parse::<SyncPreset>().unwrap(),
+            SyncPreset::KSync { frac_pm: 750 }
+        );
+        assert_eq!("ksync".parse::<SyncPreset>().unwrap(), SyncPreset::ksync(0.75));
+        assert_eq!("stale:3".parse::<SyncPreset>().unwrap(), SyncPreset::Stale { bound: 3 });
+        assert_eq!("local:8".parse::<SyncPreset>().unwrap(), SyncPreset::Local { steps: 8 });
+        assert_eq!("fedavg".parse::<SyncPreset>().unwrap(), SyncPreset::Local { steps: 4 });
+        assert!("ksync:0".parse::<SyncPreset>().is_err()); // frac out of (0,1]
+        assert!("ksync:1.5".parse::<SyncPreset>().is_err());
+        assert!("stale:0".parse::<SyncPreset>().is_err());
+        assert!("local:0".parse::<SyncPreset>().is_err());
+        assert!("bsp:1".parse::<SyncPreset>().is_err());
+        assert!("gossip".parse::<SyncPreset>().is_err());
+        assert!("ksync:0.5:2".parse::<SyncPreset>().is_err());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for p in SyncPreset::sweep() {
+            let back: SyncPreset = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{p}");
+        }
+        assert_eq!(SyncPreset::ksync(0.75).to_string(), "ksync:0.75");
+        assert_eq!(SyncPreset::Stale { bound: 2 }.to_string(), "stale:2");
+        assert_eq!(SyncPreset::Local { steps: 4 }.to_string(), "local:4");
+        assert_eq!(SyncPreset::Bsp.to_string(), "bsp");
+    }
+
+    #[test]
+    fn frac_round_trips_through_per_mille() {
+        for f in [0.001, 0.25, 0.5, 0.75, 1.0] {
+            assert!((SyncPreset::ksync(f).frac() - f).abs() < 1e-9, "{f}");
+        }
+    }
+
+    #[test]
+    fn default_is_bsp() {
+        assert!(SyncPreset::default().is_bsp());
+        assert!(!SyncPreset::ksync(0.75).is_bsp());
+    }
+}

@@ -93,6 +93,63 @@ pub fn uniform_weights_into(batches: &[usize], out: &mut Vec<f32>) {
     );
 }
 
+/// Staleness-discounted ScaDLES weights over participating rows:
+/// `w_i = φ_i·b_i / Σ_j φ_j·b_j` with per-device discount factors
+/// `φ_i ∈ [0, 1]` (0 excludes a row entirely; all-1 recovers the plain
+/// batch weighting up to f32 rounding). The bounded-staleness policy
+/// feeds `φ_i = 1/(1 + staleness_i)` here so late contributions count
+/// less the further behind the global model they are. Accumulated in
+/// f64 so tiny discounts cannot cancel catastrophically.
+pub fn discounted_weights_from_batches_into(
+    batches: &[usize],
+    discount: &[f32],
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(batches.len(), discount.len());
+    out.clear();
+    out.reserve(batches.len());
+    let total: f64 = batches
+        .iter()
+        .zip(discount)
+        .map(|(&b, &f)| b as f64 * f as f64)
+        .sum();
+    if total <= 0.0 {
+        out.extend(batches.iter().map(|_| 0.0));
+        return;
+    }
+    out.extend(
+        batches
+            .iter()
+            .zip(discount)
+            .map(|(&b, &f)| (b as f64 * f as f64 / total) as f32),
+    );
+}
+
+/// Discounted DDL weights: uniform over trained devices, scaled by the
+/// per-device discount and renormalized — `w_i = φ_i / Σ_{j: b_j>0} φ_j`
+/// for `b_i > 0`, else 0.
+pub fn discounted_uniform_weights_into(batches: &[usize], discount: &[f32], out: &mut Vec<f32>) {
+    debug_assert_eq!(batches.len(), discount.len());
+    out.clear();
+    out.reserve(batches.len());
+    let total: f64 = batches
+        .iter()
+        .zip(discount)
+        .filter(|(&b, _)| b > 0)
+        .map(|(_, &f)| f as f64)
+        .sum();
+    if total <= 0.0 {
+        out.extend(batches.iter().map(|_| 0.0));
+        return;
+    }
+    out.extend(
+        batches
+            .iter()
+            .zip(discount)
+            .map(|(&b, &f)| if b > 0 { (f as f64 / total) as f32 } else { 0.0 }),
+    );
+}
+
 /// Accumulate one dense row: `out[j] += w · row[j]`. The inner loop of
 /// every dense variant (and of the Pallas `wagg` mirror).
 #[inline]
@@ -259,6 +316,48 @@ mod tests {
         assert_eq!(buf, uniform_weights(&batches));
         assert_eq!(buf.capacity(), cap);
         assert_eq!(buf.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn discounted_weights_track_staleness_and_exclude_zeros() {
+        let batches = [100usize, 100, 100, 0];
+        // device 1 one round stale (φ=1/2), device 2 dropped (φ=0)
+        let discount = [1.0f32, 0.5, 0.0, 1.0];
+        let mut w = Vec::new();
+        discounted_weights_from_batches_into(&batches, &discount, &mut w);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((w[0] / w[1] - 2.0).abs() < 1e-5, "{w:?}");
+        assert_eq!(w[2], 0.0, "zero discount excludes the row");
+        assert_eq!(w[3], 0.0, "empty batch excluded even at full discount");
+        // all-1 discounts recover the plain batch weighting
+        let plain = weights_from_batches(&[10, 30, 60]);
+        let mut d1 = Vec::new();
+        discounted_weights_from_batches_into(&[10, 30, 60], &[1.0; 3], &mut d1);
+        for (a, b) in plain.iter().zip(&d1) {
+            assert!((a - b).abs() < 1e-6, "{plain:?} vs {d1:?}");
+        }
+        // all-zero total degenerates to all-zero weights
+        let mut z = Vec::new();
+        discounted_weights_from_batches_into(&[5, 5], &[0.0, 0.0], &mut z);
+        assert_eq!(z, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn discounted_uniform_weights_renormalize_over_trained_rows() {
+        let batches = [64usize, 64, 0, 64];
+        let discount = [1.0f32, 0.5, 1.0, 0.0];
+        let mut w = Vec::new();
+        discounted_uniform_weights_into(&batches, &discount, &mut w);
+        // trained contributors: φ = {1, 0.5, ·, 0} → total 1.5
+        assert!((w[0] - 1.0 / 1.5).abs() < 1e-6, "{w:?}");
+        assert!((w[1] - 0.5 / 1.5).abs() < 1e-6, "{w:?}");
+        assert_eq!(w[2], 0.0, "untrained row gets no weight");
+        assert_eq!(w[3], 0.0, "dropped row gets no weight");
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        // all-1 discounts recover the plain uniform weighting
+        let mut u = Vec::new();
+        discounted_uniform_weights_into(&[10, 0, 20], &[1.0; 3], &mut u);
+        assert_eq!(u, uniform_weights(&[10, 0, 20]));
     }
 
     #[test]

@@ -64,6 +64,9 @@ pub struct RoundTiming {
     pub per_device: Vec<DevicePhase>,
     /// Device holding the ring's slowest link (sync attribution).
     pub sync_bottleneck: Option<usize>,
+    /// Devices inside the synchronous barrier (semi-sync policies drop
+    /// laggards out of it). Empty = everyone, the BSP default.
+    pub barrier: Vec<bool>,
 }
 
 impl RoundTiming {
@@ -71,12 +74,21 @@ impl RoundTiming {
         self.wait_s + self.compute_s + self.sync_s + self.injection_s
     }
 
+    /// Whether device `i` bounds this round's barrier (laggards a
+    /// semi-sync policy let run past the commit point do not).
+    fn in_barrier(&self, i: usize) -> bool {
+        self.barrier.is_empty() || self.barrier.get(i).copied().unwrap_or(true)
+    }
+
     /// Attribute the round to its straggler: the dominant phase among
     /// stream-wait / compute / sync, and the device that bounded it.
+    /// Only barrier members can be stragglers — a K-sync laggard's
+    /// longer phases never bounded the round.
     pub fn straggler(&self) -> (StragglerCause, usize) {
         let argmax = |pick: fn(&DevicePhase) -> f64| {
             self.per_device
                 .iter()
+                .filter(|p| self.in_barrier(p.device))
                 .fold((0usize, f64::NEG_INFINITY), |(bi, bv), p| {
                     if pick(p) > bv {
                         (p.device, pick(p))
@@ -169,5 +181,32 @@ mod tests {
     fn idle_round_has_no_straggler() {
         let t = RoundTiming::default();
         assert_eq!(t.straggler(), (StragglerCause::None, 0));
+    }
+
+    #[test]
+    fn laggards_outside_the_barrier_are_never_the_straggler() {
+        // device 2 has the longest wait but a semi-sync policy dropped
+        // it past the commit point: attribution must go to the slowest
+        // *barrier member* instead
+        let t = RoundTiming {
+            wait_s: 0.5,
+            compute_s: 0.2,
+            sync_s: 0.1,
+            per_device: phases(&[0.1, 0.5, 3.0], &[0.2, 0.1, 0.0]),
+            barrier: vec![true, true, false],
+            ..Default::default()
+        };
+        assert_eq!(t.straggler(), (StragglerCause::StreamWait, 1));
+        // an all-true barrier behaves exactly like the empty (BSP) one
+        let mut bsp = t.clone();
+        bsp.barrier = vec![true, true, true];
+        let mut empty = t.clone();
+        empty.barrier = Vec::new();
+        assert_eq!(
+            bsp.straggler(),
+            (StragglerCause::StreamWait, 2),
+            "all-true barrier considers everyone"
+        );
+        assert_eq!(bsp.straggler(), empty.straggler());
     }
 }

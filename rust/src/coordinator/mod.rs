@@ -23,6 +23,19 @@
 //! batches, uniform weights, no scaling, no compression, no injection —
 //! so every comparison in the harness is like-for-like.
 //!
+//! **Synchronization policies:** the round sequence above is one
+//! [`engine::RoundEngine`]; *who commits* a round and *with what
+//! weight* is delegated to a [`policy::SyncPolicy`]
+//! ([`crate::config::SyncPreset`]: `bsp` default — bitwise identical to
+//! the fully synchronous engine — `ksync:frac` semi-sync commit on the
+//! fastest `⌈frac·n⌉` devices with laggard gradients folded into the
+//! error-feedback residual, `stale:s` bounded staleness with
+//! staleness-discounted weights, `local:h` FedAvg-style local SGD with
+//! sample-weighted parameter averaging). Policies decide from the
+//! plan's virtual finish estimates in fixed device order, so the
+//! bitwise-determinism contract holds for every policy at every pool
+//! width.
+//!
 //! Per-device phases (stream drain, polling, train_step, Top-k masking)
 //! run concurrently on [`worker::DeviceWorker`] shards over a scoped
 //! thread pool; cross-device reductions stay in fixed device order, so
@@ -77,21 +90,24 @@ pub mod aggregate;
 pub mod backend;
 pub mod clock;
 pub mod device;
-pub mod fedavg;
+pub mod engine;
 pub mod lr;
 pub mod plan;
+pub mod policy;
 pub mod trainer;
 pub mod worker;
 
 pub use aggregate::{
     aggregate_chunked_native, aggregate_native, aggregate_rows_into, aggregate_sparse_native,
-    weights_from_batches, RowView,
+    discounted_uniform_weights_into, discounted_weights_from_batches_into, weights_from_batches,
+    RowView,
 };
 pub use backend::{Backend, MockBackend};
 pub use clock::{DevicePhase, RoundTiming, VirtualClock};
 pub use device::Device;
-pub use fedavg::FedAvgTrainer;
+pub use engine::{RoundEngine, TrainerOutput};
 pub use lr::scaled_lr;
 pub use plan::{DevicePlan, RoundPlan};
-pub use trainer::{Trainer, TrainerOutput};
-pub use worker::{DeviceWorker, WorkerRound};
+pub use policy::{Bsp, BoundedStaleness, KSync, LocalSgd, Participation, SyncPolicy};
+pub use trainer::Trainer;
+pub use worker::{completion_order_into, DeviceWorker, WorkerRound};

@@ -62,6 +62,17 @@ pub struct DevicePlan {
     pub est_compute_s: f64,
 }
 
+impl DevicePlan {
+    /// Virtual completion estimate for the upcoming round: own-stream
+    /// fill wait plus profile-priced compute. The synchronization
+    /// policies rank devices by this to pick who commits — a pure
+    /// function of the plan, so the decision is identical at every
+    /// worker-pool width.
+    pub fn finish_est_s(&self) -> f64 {
+        self.wait_s + self.est_compute_s
+    }
+}
+
 /// The synchronized plan for a round.
 #[derive(Debug, Clone)]
 pub struct RoundPlan {
@@ -350,6 +361,26 @@ mod tests {
         );
         assert_eq!(p.devices[0].batch, cap.min(256));
         assert_eq!(p.devices[1].batch, 256, "unconstrained device unaffected");
+    }
+
+    #[test]
+    fn finish_estimates_order_slow_devices_last() {
+        let mut c = cluster(3);
+        c.devices[2].compute = c.devices[2].compute.scaled(8.0);
+        let p = RoundPlan::plan(
+            &cfg(TrainMode::Ddl),
+            &ladder(),
+            &c,
+            &[100.0, 10.0, 100.0],
+            &[64, 0, 64],
+            &up(3),
+        );
+        // device 1 waits on its stream, device 2 computes 8x slower;
+        // device 0 does neither and must finish first
+        let est: Vec<f64> = p.devices.iter().map(|d| d.finish_est_s()).collect();
+        assert_eq!(est[0].to_bits(), (p.devices[0].wait_s + p.devices[0].est_compute_s).to_bits());
+        assert!(est[0] < est[1], "{est:?}");
+        assert!(est[0] < est[2], "{est:?}");
     }
 
     #[test]

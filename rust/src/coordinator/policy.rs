@@ -1,0 +1,541 @@
+//! Synchronization policies: who commits a round, and with what weight.
+//!
+//! The paper's engine is bulk-synchronous — every device holds the
+//! barrier for every other, which is exactly why low-volume streams act
+//! like stragglers (§II-A). This module factors that decision out of
+//! the round engine behind [`SyncPolicy`], with four implementations
+//! spanning the synchronization design space related edge systems use:
+//!
+//! * [`Bsp`] — the paper's regime. Everybody commits, everybody bounds
+//!   the barrier; **bitwise identical** to the pre-policy engine (it
+//!   routes through the exact same weight functions).
+//! * [`KSync`] — semi-synchronous K-sync (ADSP-style): the round
+//!   commits once the fastest `⌈frac·m⌉` of the `m` planned devices
+//!   finish. Laggards neither bound the barrier nor contribute; their
+//!   gradients fold into the error-feedback residual
+//!   ([`super::worker::DeviceWorker::withhold`]) so no mass is lost.
+//! * [`BoundedStaleness`] — SSP-flavored: laggards keep contributing,
+//!   but late — their gradients carry a per-device staleness counter
+//!   and a `1/(1+staleness)` weight discount, and they stop bounding
+//!   the barrier. A device at the bound `s` forces a full sync (it
+//!   rejoins the barrier and resets). The engine's numerics stay
+//!   synchronous (every gradient is computed against the current
+//!   params); staleness is modelled where this repo prices everything —
+//!   the virtual clock and the aggregation weights.
+//! * [`LocalSgd`] — FedAvg as a policy: `h` local SGD steps per device,
+//!   then a sample-weighted (`n_k/n`) parameter average. The engine
+//!   switches to its local-step round shape
+//!   ([`SyncPolicy::is_local`]); one model per device crosses the wire
+//!   per sync instead of one gradient per round.
+//!
+//! **Determinism contract:** policies decide from the plan's virtual
+//! finish estimates ([`completion_order_into`]) in fixed device order
+//! on the coordinator thread — a pure function of `(plan, policy
+//! state)`, so every worker-pool width sees the identical decision.
+//! All per-round buffers are owned and reused; steady-state decisions
+//! allocate nothing.
+
+use crate::config::{SyncPreset, TrainMode};
+use crate::coordinator::aggregate::{
+    discounted_uniform_weights_into, discounted_weights_from_batches_into, uniform_weights_into,
+    weights_from_batches_into,
+};
+use crate::coordinator::plan::RoundPlan;
+use crate::coordinator::worker::completion_order_into;
+
+/// Commit point of a bounded-staleness round: the fastest half of the
+/// planned devices define the barrier; the slower half go stale. Kept a
+/// named constant (not a preset knob) so `stale:s` stays a one-parameter
+/// family — `s` bounds *how far* behind the slow half may drift, which
+/// is the axis the policy exists to explore.
+const STALE_COMMIT_FRACTION: f64 = 0.5;
+
+/// One round's membership decision, in fixed device order. The engine
+/// owns one instance and the policy rewrites it each round (buffers are
+/// reused; no steady-state allocation).
+#[derive(Debug, Clone, Default)]
+pub struct Participation {
+    /// `contributes[i]`: device `i`'s row enters this round's aggregate
+    /// (at whatever weight the policy assigns).
+    pub contributes: Vec<bool>,
+    /// `in_barrier[i]`: device `i` bounds the round's wait/compute
+    /// barrier and joins the sync ring's critical path.
+    pub in_barrier: Vec<bool>,
+    /// `staleness[i]`: rounds device `i`'s contribution lags the global
+    /// model (0 = fresh; only [`BoundedStaleness`] sets it).
+    pub staleness: Vec<u32>,
+}
+
+impl Participation {
+    /// Reset to the BSP identity (everyone commits, everyone bounds the
+    /// barrier, nothing stale) for `n` devices.
+    pub fn reset(&mut self, n: usize) {
+        self.contributes.clear();
+        self.contributes.resize(n, true);
+        self.in_barrier.clear();
+        self.in_barrier.resize(n, true);
+        self.staleness.clear();
+        self.staleness.resize(n, 0);
+    }
+}
+
+/// A synchronization policy: the round engine delegates *membership*
+/// (who commits, who bounds the barrier) and *weighting* (how committed
+/// rows combine) here; everything else — streams, training, compression,
+/// pricing — is the engine's.
+pub trait SyncPolicy: Send {
+    /// The preset's CLI spelling (run labels), e.g. `ksync:0.75`.
+    fn label(&self) -> String;
+
+    /// Whether rounds run local SGD steps + parameter averaging instead
+    /// of the gradient phase sequence.
+    fn is_local(&self) -> bool {
+        false
+    }
+
+    /// Local steps per round (local-SGD policies only).
+    fn local_steps(&self) -> usize {
+        1
+    }
+
+    /// Decide this round's membership from the plan's virtual finish
+    /// estimates, in fixed device order. `active` is the dynamics
+    /// layer's churn membership (a departed device never contributes —
+    /// the plan already gives it an empty batch).
+    fn decide(&mut self, plan: &RoundPlan, active: &[bool], part: &mut Participation);
+
+    /// Aggregation weights over the decided participation, written into
+    /// the engine's reused weight buffer.
+    fn weights(
+        &mut self,
+        mode: TrainMode,
+        batches: &[usize],
+        part: &Participation,
+        out: &mut Vec<f32>,
+    );
+}
+
+/// Build the policy a preset names.
+pub fn from_preset(preset: &SyncPreset) -> Box<dyn SyncPolicy> {
+    match *preset {
+        SyncPreset::Bsp => Box::new(Bsp),
+        SyncPreset::KSync { .. } => Box::new(KSync::new(preset.frac())),
+        SyncPreset::Stale { bound } => Box::new(BoundedStaleness::new(bound)),
+        SyncPreset::Local { steps } => Box::new(LocalSgd { steps: steps as usize }),
+    }
+}
+
+/// Bulk-synchronous parallel: the paper's (and the seed engine's)
+/// regime. Weighting routes through the *exact* functions the
+/// pre-policy trainer called, so a BSP run is bitwise identical to it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Bsp;
+
+impl SyncPolicy for Bsp {
+    fn label(&self) -> String {
+        "bsp".into()
+    }
+
+    fn decide(&mut self, plan: &RoundPlan, _active: &[bool], part: &mut Participation) {
+        part.reset(plan.devices.len());
+    }
+
+    fn weights(
+        &mut self,
+        mode: TrainMode,
+        batches: &[usize],
+        _part: &Participation,
+        out: &mut Vec<f32>,
+    ) {
+        match mode {
+            TrainMode::Scadles => weights_from_batches_into(batches, out),
+            TrainMode::Ddl => uniform_weights_into(batches, out),
+        }
+    }
+}
+
+/// Semi-synchronous K-sync: commit on the fastest `⌈frac·m⌉` planned
+/// devices; the rest are dropped from the round (barrier, ring and
+/// aggregate) and their gradients ride the error-feedback residual.
+#[derive(Debug, Clone, Default)]
+pub struct KSync {
+    frac: f64,
+    /// Planned devices by ascending finish estimate (reused).
+    order: Vec<usize>,
+    /// Batches with laggards zeroed — feeds the same integer-exact
+    /// weight functions BSP uses (reused).
+    masked: Vec<usize>,
+}
+
+impl KSync {
+    pub fn new(frac: f64) -> Self {
+        Self { frac, ..Default::default() }
+    }
+
+    /// Committing devices for `m` planned candidates: `⌈frac·m⌉`,
+    /// clamped into `[1, m]` so a round always commits somebody.
+    fn k_of(&self, m: usize) -> usize {
+        ((self.frac * m as f64).ceil() as usize).clamp(1, m)
+    }
+}
+
+impl SyncPolicy for KSync {
+    fn label(&self) -> String {
+        format!("ksync:{}", self.frac)
+    }
+
+    fn decide(&mut self, plan: &RoundPlan, _active: &[bool], part: &mut Participation) {
+        part.reset(plan.devices.len());
+        completion_order_into(plan, &mut self.order);
+        if self.order.is_empty() {
+            return; // nobody planned in: nothing to drop
+        }
+        let k = self.k_of(self.order.len());
+        for &i in &self.order[k..] {
+            part.contributes[i] = false;
+            part.in_barrier[i] = false;
+        }
+        // devices with no batch stay "in" the barrier at zero cost,
+        // exactly as under BSP — only ranked laggards are dropped
+    }
+
+    fn weights(
+        &mut self,
+        mode: TrainMode,
+        batches: &[usize],
+        part: &Participation,
+        out: &mut Vec<f32>,
+    ) {
+        self.masked.clear();
+        self.masked.extend(
+            batches
+                .iter()
+                .zip(&part.contributes)
+                .map(|(&b, &c)| if c { b } else { 0 }),
+        );
+        match mode {
+            TrainMode::Scadles => weights_from_batches_into(&self.masked, out),
+            TrainMode::Ddl => uniform_weights_into(&self.masked, out),
+        }
+    }
+}
+
+/// Bounded staleness: the fastest [`STALE_COMMIT_FRACTION`] of planned
+/// devices commit fresh and bound the barrier; slower devices still
+/// contribute, but stale — weight-discounted by `1/(1+staleness)` and
+/// outside the barrier — until their per-device staleness hits the
+/// bound, at which point they force a full sync and reset.
+#[derive(Debug, Clone, Default)]
+pub struct BoundedStaleness {
+    bound: u32,
+    /// Per-device staleness counters (lazily sized to the cluster).
+    st: Vec<u32>,
+    order: Vec<usize>,
+    /// Per-device weight discounts for this round (reused).
+    discount: Vec<f32>,
+}
+
+impl BoundedStaleness {
+    pub fn new(bound: u32) -> Self {
+        Self { bound: bound.max(1), ..Default::default() }
+    }
+}
+
+impl SyncPolicy for BoundedStaleness {
+    fn label(&self) -> String {
+        format!("stale:{}", self.bound)
+    }
+
+    fn decide(&mut self, plan: &RoundPlan, _active: &[bool], part: &mut Participation) {
+        let n = plan.devices.len();
+        part.reset(n);
+        if self.st.len() != n {
+            self.st = vec![0; n];
+        }
+        completion_order_into(plan, &mut self.order);
+        if self.order.is_empty() {
+            // an empty round leaves nothing in flight: staleness holds
+            return;
+        }
+        let m = self.order.len();
+        let k = ((STALE_COMMIT_FRACTION * m as f64).ceil() as usize).clamp(1, m);
+        for (rank, &i) in self.order.iter().enumerate() {
+            let forced = self.st[i] >= self.bound;
+            if rank < k || forced {
+                // commits fresh: inside the barrier, full weight
+                self.st[i] = 0;
+            } else {
+                // late: contributes a stale, discounted gradient without
+                // holding the barrier (capped at `bound` by the forced
+                // sync above)
+                self.st[i] += 1;
+                part.in_barrier[i] = false;
+                part.staleness[i] = self.st[i];
+            }
+        }
+        // devices with no batch this round neither advance nor reset
+        // their counter: nothing of theirs is in flight
+    }
+
+    fn weights(
+        &mut self,
+        mode: TrainMode,
+        batches: &[usize],
+        part: &Participation,
+        out: &mut Vec<f32>,
+    ) {
+        self.discount.clear();
+        self.discount.extend(
+            part.staleness
+                .iter()
+                .zip(&part.contributes)
+                .map(|(&s, &c)| if c { 1.0 / (1.0 + s as f32) } else { 0.0 }),
+        );
+        match mode {
+            TrainMode::Scadles => {
+                discounted_weights_from_batches_into(batches, &self.discount, out)
+            }
+            TrainMode::Ddl => discounted_uniform_weights_into(batches, &self.discount, out),
+        }
+    }
+}
+
+/// FedAvg as a policy: `steps` local SGD steps per device, then a
+/// sample-weighted (`n_k/n`) parameter average — McMahan et al.'s
+/// weighting, regardless of the engine's ScaDLES/DDL mode (the mode
+/// governs batching, which local rounds derive from the stream rate).
+#[derive(Debug, Clone, Copy)]
+pub struct LocalSgd {
+    pub steps: usize,
+}
+
+impl SyncPolicy for LocalSgd {
+    fn label(&self) -> String {
+        format!("local:{}", self.steps)
+    }
+
+    fn is_local(&self) -> bool {
+        true
+    }
+
+    fn local_steps(&self) -> usize {
+        self.steps.max(1)
+    }
+
+    fn decide(&mut self, plan: &RoundPlan, _active: &[bool], part: &mut Participation) {
+        part.reset(plan.devices.len());
+    }
+
+    fn weights(
+        &mut self,
+        _mode: TrainMode,
+        batches: &[usize],
+        _part: &Participation,
+        out: &mut Vec<f32>,
+    ) {
+        weights_from_batches_into(batches, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HeteroPreset;
+    use crate::coordinator::aggregate::weights_from_batches;
+    use crate::coordinator::plan::DevicePlan;
+
+    /// A plan with the given batches; device `i` finishes at `est[i]`.
+    fn plan(batches: &[usize], est: &[f64]) -> RoundPlan {
+        let devices = batches
+            .iter()
+            .zip(est)
+            .enumerate()
+            .map(|(device, (&batch, &e))| DevicePlan {
+                device,
+                batch,
+                bucket: batch.max(8),
+                wait_s: 0.0,
+                est_compute_s: e,
+            })
+            .collect();
+        RoundPlan { devices, wait_s: 0.0 }
+    }
+
+    #[test]
+    fn bsp_is_the_identity_participation_and_the_seed_weights() {
+        let mut bsp = Bsp;
+        let mut part = Participation::default();
+        let p = plan(&[64, 0, 32], &[1.0, 0.0, 9.0]);
+        bsp.decide(&p, &[true; 3], &mut part);
+        assert_eq!(part.contributes, vec![true; 3]);
+        assert_eq!(part.in_barrier, vec![true; 3]);
+        assert_eq!(part.staleness, vec![0; 3]);
+        let mut w = Vec::new();
+        bsp.weights(TrainMode::Scadles, &[64, 0, 32], &part, &mut w);
+        let seed = weights_from_batches(&[64, 0, 32]);
+        for (a, b) in w.iter().zip(&seed) {
+            assert_eq!(a.to_bits(), b.to_bits(), "BSP must route the seed weights");
+        }
+    }
+
+    #[test]
+    fn ksync_commits_the_fastest_ceil_frac_m() {
+        let mut ks = KSync::new(0.75);
+        let mut part = Participation::default();
+        // 4 planned devices; device 2 is the slowest
+        let p = plan(&[64, 64, 64, 64], &[1.0, 2.0, 9.0, 3.0]);
+        ks.decide(&p, &[true; 4], &mut part);
+        // ⌈0.75·4⌉ = 3 commit; device 2 is dropped
+        assert_eq!(part.contributes, vec![true, true, false, true]);
+        assert_eq!(part.in_barrier, vec![true, true, false, true]);
+        let mut w = Vec::new();
+        ks.weights(TrainMode::Scadles, &[64, 64, 64, 64], &part, &mut w);
+        assert_eq!(w[2], 0.0, "laggard weight must be zero");
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((w[0] - 1.0 / 3.0).abs() < 1e-6, "{w:?}");
+    }
+
+    #[test]
+    fn ksync_one_commits_everyone_like_bsp() {
+        let mut ks = KSync::new(1.0);
+        let mut part = Participation::default();
+        let batches = [64usize, 0, 32, 8];
+        let p = plan(&batches, &[5.0, 0.0, 1.0, 2.0]);
+        ks.decide(&p, &[true; 4], &mut part);
+        assert_eq!(part.contributes, vec![true; 4]);
+        assert_eq!(part.in_barrier, vec![true; 4]);
+        let mut w = Vec::new();
+        ks.weights(TrainMode::Scadles, &batches, &part, &mut w);
+        let seed = weights_from_batches(&batches);
+        for (a, b) in w.iter().zip(&seed) {
+            assert_eq!(a.to_bits(), b.to_bits(), "ksync:1 must be exactly BSP");
+        }
+    }
+
+    #[test]
+    fn ksync_always_commits_at_least_one_device() {
+        let mut ks = KSync::new(0.1);
+        let mut part = Participation::default();
+        let p = plan(&[64, 64], &[2.0, 1.0]);
+        ks.decide(&p, &[true; 2], &mut part);
+        // ⌈0.1·2⌉ = 1: only the fastest (device 1) commits
+        assert_eq!(part.contributes, vec![false, true]);
+        // and an empty plan drops nobody (degenerate round)
+        let empty = plan(&[0, 0], &[0.0, 0.0]);
+        ks.decide(&empty, &[true; 2], &mut part);
+        assert_eq!(part.contributes, vec![true, true]);
+    }
+
+    #[test]
+    fn bounded_staleness_tracks_counts_and_forces_sync_at_the_bound() {
+        let mut st = BoundedStaleness::new(2);
+        let mut part = Participation::default();
+        // device 1 is persistently the slowest of two: commit point
+        // ⌈0.5·2⌉ = 1, so it goes stale every round until forced
+        let p = plan(&[64, 64], &[1.0, 5.0]);
+        // round 1: staleness 1
+        st.decide(&p, &[true; 2], &mut part);
+        assert_eq!(part.staleness, vec![0, 1]);
+        assert!(part.contributes[1], "stale devices still contribute");
+        assert!(!part.in_barrier[1], "stale devices leave the barrier");
+        // round 2: staleness 2 (= bound)
+        st.decide(&p, &[true; 2], &mut part);
+        assert_eq!(part.staleness, vec![0, 2]);
+        // round 3: at the bound it forces a full sync and resets
+        st.decide(&p, &[true; 2], &mut part);
+        assert_eq!(part.staleness, vec![0, 0]);
+        assert!(part.in_barrier[1], "forced sync rejoins the barrier");
+        // round 4: the cycle restarts
+        st.decide(&p, &[true; 2], &mut part);
+        assert_eq!(part.staleness, vec![0, 1]);
+    }
+
+    #[test]
+    fn bounded_staleness_discounts_weights_by_age() {
+        let mut st = BoundedStaleness::new(3);
+        let mut part = Participation::default();
+        let p = plan(&[64, 64], &[1.0, 5.0]);
+        st.decide(&p, &[true; 2], &mut part);
+        st.decide(&p, &[true; 2], &mut part); // device 1 now 2 stale
+        let mut w = Vec::new();
+        st.weights(TrainMode::Scadles, &[64, 64], &part, &mut w);
+        // φ = {1, 1/3} on equal batches → w = {3/4, 1/4}
+        assert!((w[0] - 0.75).abs() < 1e-6, "{w:?}");
+        assert!((w[1] - 0.25).abs() < 1e-6, "{w:?}");
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn local_sgd_reports_its_round_shape_and_sample_weights() {
+        let mut local = LocalSgd { steps: 4 };
+        assert!(local.is_local());
+        assert_eq!(local.local_steps(), 4);
+        let mut part = Participation::default();
+        let p = plan(&[10, 30], &[1.0, 1.0]);
+        local.decide(&p, &[true; 2], &mut part);
+        let mut w = Vec::new();
+        // n_k/n weighting in both engine modes
+        for mode in [TrainMode::Scadles, TrainMode::Ddl] {
+            local.weights(mode, &[10, 30], &part, &mut w);
+            assert!((w[0] - 0.25).abs() < 1e-6, "{mode:?}: {w:?}");
+            assert!((w[1] - 0.75).abs() < 1e-6, "{mode:?}: {w:?}");
+        }
+    }
+
+    #[test]
+    fn from_preset_builds_the_named_policy() {
+        use crate::config::SyncPreset;
+        assert_eq!(from_preset(&SyncPreset::Bsp).label(), "bsp");
+        assert_eq!(from_preset(&SyncPreset::ksync(0.75)).label(), "ksync:0.75");
+        assert_eq!(from_preset(&SyncPreset::Stale { bound: 2 }).label(), "stale:2");
+        let local = from_preset(&SyncPreset::Local { steps: 4 });
+        assert_eq!(local.label(), "local:4");
+        assert!(local.is_local());
+    }
+
+    #[test]
+    fn decisions_reuse_their_buffers() {
+        // the per-round decision path must not allocate in steady state:
+        // after one warm round, buffers hold their storage
+        let mut ks = KSync::new(0.5);
+        let mut part = Participation::default();
+        let p = plan(&[64, 64, 64, 64], &[1.0, 2.0, 3.0, 4.0]);
+        ks.decide(&p, &[true; 4], &mut part);
+        let ptrs = (part.contributes.as_ptr(), ks.order.as_ptr());
+        for _ in 0..5 {
+            ks.decide(&p, &[true; 4], &mut part);
+        }
+        assert_eq!(ptrs.0, part.contributes.as_ptr());
+        assert_eq!(ptrs.1, ks.order.as_ptr());
+    }
+
+    #[test]
+    fn ksync_ranks_on_real_cluster_estimates() {
+        // end-to-end through RoundPlan::plan: under a two-tier cluster
+        // the slow tier's higher compute estimates push it past the
+        // commit point
+        use crate::config::{ExperimentConfig, TrainMode};
+        use crate::runtime::BucketLadder;
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(4)
+            .mode(TrainMode::Ddl)
+            .build()
+            .unwrap();
+        let ladder = BucketLadder::new(vec![8, 16, 32, 64, 128, 256]).unwrap();
+        let mut cluster = HeteroPreset::K80Homogeneous.sample_cluster("mlp_c10", 4, 0);
+        cluster.devices[3].compute = cluster.devices[3].compute.scaled(8.0);
+        let p = RoundPlan::plan(
+            &cfg,
+            &ladder,
+            &cluster,
+            &[100.0; 4],
+            &[1000; 4],
+            &[true; 4],
+        );
+        let mut ks = KSync::new(0.75);
+        let mut part = Participation::default();
+        ks.decide(&p, &[true; 4], &mut part);
+        assert!(!part.contributes[3], "the 8x-slower device must be the laggard");
+        assert_eq!(part.contributes.iter().filter(|&&c| c).count(), 3);
+    }
+}

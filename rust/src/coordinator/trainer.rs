@@ -1,115 +1,29 @@
-//! The training engine: ScaDLES and the DDL baseline over one code path.
+//! `Trainer`: the config/IO shell over the round engine.
 //!
-//! See the module docs of [`crate::coordinator`] for the round anatomy.
-//! Everything mode-specific is factored into [`super::plan`] (batching /
-//! waits), [`super::aggregate`] (weights), [`super::lr`] (scaling) and the
-//! compression/injection policy objects, so the engine itself is shared —
-//! which is what makes ScaDLES-vs-DDL comparisons like-for-like.
-//!
-//! All per-device work — stream drain, polling, the local
-//! forward/backward, error-feedback Top-k masking — lives in
-//! [`super::worker::DeviceWorker`] shards and fans out over a scoped
-//! worker pool ([`super::worker::for_each_worker`]); the coordinator
-//! thread keeps the cross-device reductions (planning, the global
-//! compression gate, weighted aggregation, the optimizer update) in
-//! fixed device order, so any thread count produces bitwise-identical
-//! runs (`ExperimentConfig::worker_threads`, enforced by
-//! `tests/parallel_determinism.rs`).
+//! The actual phase sequence lives in [`super::engine::RoundEngine`];
+//! `Trainer` is what the CLI and the harnesses construct — it loads the
+//! runtime (for the PJRT path), builds the engine with the
+//! synchronization policy named by `ExperimentConfig::sync`, and
+//! forwards the run/round/report surface. Everything mode-specific is
+//! factored into [`super::plan`] (batching / waits), [`super::policy`]
+//! (membership / weighting), [`super::aggregate`] (weight math),
+//! [`super::lr`] (scaling) and the compression/injection policy
+//! objects, so every ScaDLES-vs-DDL-vs-policy comparison is
+//! like-for-like.
 
-use crate::buffer::BufferTracker;
-use crate::compress::{CncCounter, CompressionScheme};
-use crate::config::{ClusterProfile, ExperimentConfig, HeteroPreset, TrainMode};
-use crate::coordinator::aggregate::{
-    aggregate_rows_into, uniform_weights_into, weights_from_batches_into, RowView,
-};
+use crate::config::ExperimentConfig;
 use crate::coordinator::backend::Backend;
-use crate::coordinator::clock::{DevicePhase, RoundTiming, VirtualClock};
-use crate::coordinator::device::Device;
-use crate::coordinator::lr::{baseline_lr, scaled_lr};
-use crate::coordinator::plan::RoundPlan;
-use crate::coordinator::worker::{for_each_worker, DeviceWorker};
-use crate::data::{EvalSet, Synthetic};
-use crate::dynamics::{effective_ring, DynamicsCounters, StreamDynamics};
-use crate::injection::DataInjector;
-use crate::metrics::{
-    DeviceRoundRow, Ewma, RoundLog, RunLogger, RunReport, StragglerCause, Timeline,
-};
-use crate::rng::Pcg64;
+use crate::coordinator::clock::RoundTiming;
+use crate::coordinator::engine::{RoundEngine, TrainerOutput};
+use crate::metrics::{RoundLog, Timeline};
 use crate::runtime::Runtime;
-use crate::stream::{Broker, Record};
+use crate::stream::Broker;
 use crate::Result;
 
-/// Smoothing for the per-round aggregate effective-rate estimate
-/// (`RoundLog::rate_est`): tracks a step-change in stream rate to within
-/// 10% inside ~10 rounds (metrics::ewma tests).
-const RATE_EST_ALPHA: f64 = 0.3;
-
-/// Virtual seconds a fully idle round costs (all devices churned out):
-/// the coordinator "polls" once a second until somebody rejoins.
-const IDLE_ROUND_S: f64 = 1.0;
-
-/// Full output of a run: the report plus raw logs for figure rendering.
-pub struct TrainerOutput {
-    pub report: RunReport,
-    pub logs: RunLogger,
-    pub cnc: CncCounter,
-    /// Streaming rates the devices were sampled with.
-    pub rates: Vec<f64>,
-    /// Per-device per-round rows with straggler attribution.
-    pub timeline: Timeline,
-    /// Stream-dynamics counters (churn edges, rate-regime flips).
-    pub dynamics: DynamicsCounters,
-}
-
-/// The L3 coordinator: owns the device shards, model state, policies and
-/// the clock.
+/// The L3 coordinator entry point: a [`RoundEngine`] behind the
+/// constructor surface the CLI, harnesses and tests use.
 pub struct Trainer {
-    cfg: ExperimentConfig,
-    backend: Box<dyn Backend>,
-    /// One shard per device: stream ends, residual, gradient row.
-    workers: Vec<DeviceWorker>,
-    broker: Broker,
-    data: Synthetic,
-    eval: EvalSet,
-    params: Vec<f32>,
-    momentum: Vec<f32>,
-    scheme: CompressionScheme,
-    injector: Option<DataInjector>,
-    clock: VirtualClock,
-    tracker: BufferTracker,
-    logs: RunLogger,
-    cnc: CncCounter,
-    /// Sampled per-device profiles (scenario layer); device `i`'s copy
-    /// also lives on its worker.
-    cluster: ClusterProfile,
-    /// Time-varying stream dynamics, sampled once per round at the
-    /// round's virtual start time (coordinator thread, device order).
-    dynamics: StreamDynamics,
-    /// EWMA of the cluster's aggregate effective streaming rate.
-    rate_est: Ewma,
-    /// Per-device timeline rows (straggler attribution).
-    timeline: Timeline,
-    /// The most recent round's timing breakdown.
-    last_timing: Option<RoundTiming>,
-    round: usize,
-    /// Reusable aggregation accumulator (length `d`): the global
-    /// gradient is built here every round, straight from worker-owned
-    /// row views — no `[n, d]` staging copy on the native path.
-    agg: Vec<f32>,
-    /// Reusable per-device aggregation weights (length `n`).
-    weights: Vec<f32>,
-    /// Row-major `[n, d]` staging matrix for the Pallas `wagg` kernel —
-    /// allocated lazily on first kernel use, empty on the (default)
-    /// native path.
-    staging: Vec<f32>,
-    /// Whether the backend's wagg path is usable for this device count.
-    wagg_artifact_ok: bool,
-    /// `SCADLES_KERNEL_AGG` / `SCADLES_KERNEL_TOPK` resolved once at
-    /// construction (an env probe allocates; the round loop must not).
-    kernel_agg: bool,
-    kernel_topk: bool,
-    /// Resolved worker-pool width (1 = sequential engine).
-    threads: usize,
+    engine: RoundEngine,
 }
 
 impl Trainer {
@@ -122,549 +36,93 @@ impl Trainer {
 
     /// Build over any backend (mocks in tests, PJRT in production).
     pub fn with_backend(cfg: &ExperimentConfig, backend: Box<dyn Backend>) -> Result<Self> {
-        cfg.validate()?;
-        let mut rng = Pcg64::new(cfg.seed, 0x5CAD);
-        let rates = cfg.preset.distribution().sample_n(&mut rng, cfg.devices);
-        let cluster = cfg.cluster_profile();
-        let data = Synthetic::standard(backend.num_classes(), cfg.seed);
-        let eval = EvalSet::new(&data, cfg.eval_per_class);
-        let broker = Broker::new();
-        let params = backend.init_params()?;
-        let d = backend.param_count();
-        let use_ef = cfg.compression.is_some_and(|c| c.error_feedback);
-        let workers: Vec<DeviceWorker> = rates
-            .iter()
-            .enumerate()
-            .map(|(i, &rate)| {
-                let labels = cfg.label_map.device_labels(i, backend.num_classes());
-                let dev = Device::new(
-                    &broker,
-                    i,
-                    rate,
-                    labels,
-                    cfg.buffer_policy,
-                    device_seed(cfg.seed, i),
-                );
-                DeviceWorker::new(dev, cluster.device(i), use_ef, d)
-            })
-            .collect();
-        let scheme = CompressionScheme::from_config(cfg.compression);
-        let injector = cfg
-            .injection
-            .map(|ic| DataInjector::new(ic, cfg.seed ^ 0xBEEF));
-        let n = cfg.devices;
-        let dynamics = StreamDynamics::from_preset(&cfg.dynamics, n, cfg.seed)?;
-        let mut label = format!("{}-{}", cfg.mode.name(), cfg.preset.name());
-        if cfg.hetero != HeteroPreset::K80Homogeneous {
-            label.push('-');
-            label.push_str(&cluster.scenario);
-        }
-        if !dynamics.is_static() {
-            label.push('-');
-            label.push_str(dynamics.label());
-        }
-        let logs = RunLogger::new(label).with_echo(cfg.echo_every);
-        let threads = resolve_threads(cfg.worker_threads, n);
-        Ok(Self {
-            cfg: cfg.clone(),
-            backend,
-            workers,
-            broker,
-            data,
-            eval,
-            momentum: vec![0.0; d],
-            params,
-            scheme,
-            injector,
-            clock: VirtualClock::new(),
-            tracker: BufferTracker::new(),
-            logs,
-            cnc: CncCounter::new(),
-            cluster,
-            dynamics,
-            rate_est: Ewma::new(RATE_EST_ALPHA),
-            timeline: Timeline::new(),
-            last_timing: None,
-            round: 0,
-            agg: vec![0.0; d],
-            weights: Vec::with_capacity(n),
-            staging: Vec::new(),
-            wagg_artifact_ok: true,
-            kernel_agg: std::env::var_os("SCADLES_KERNEL_AGG").is_some(),
-            kernel_topk: std::env::var_os("SCADLES_KERNEL_TOPK").is_some(),
-            threads,
-        })
+        Ok(Self { engine: RoundEngine::new(cfg, backend)? })
     }
 
     pub fn config(&self) -> &ExperimentConfig {
-        &self.cfg
+        self.engine.config()
     }
 
     pub fn params(&self) -> &[f32] {
-        &self.params
+        self.engine.params()
     }
 
     pub fn clock_now(&self) -> f64 {
-        self.clock.now()
+        self.engine.clock_now()
     }
 
     /// Worker-pool width the engine resolved (1 = sequential).
     pub fn worker_pool_width(&self) -> usize {
-        self.threads
+        self.engine.worker_pool_width()
     }
 
     /// The sampled per-device cluster profiles this run is priced on.
-    pub fn cluster(&self) -> &ClusterProfile {
-        &self.cluster
+    pub fn cluster(&self) -> &crate::config::ClusterProfile {
+        self.engine.cluster()
     }
 
     /// The stream-dynamics engine (most recent frame + counters).
-    pub fn dynamics(&self) -> &StreamDynamics {
-        &self.dynamics
+    pub fn dynamics(&self) -> &crate::dynamics::StreamDynamics {
+        self.engine.dynamics()
+    }
+
+    /// The synchronization policy's CLI-spelling label.
+    pub fn policy_label(&self) -> String {
+        self.engine.policy_label()
     }
 
     /// Timing breakdown of the most recent round (per-device phases +
     /// straggler attribution).
     pub fn last_timing(&self) -> Option<&RoundTiming> {
-        self.last_timing.as_ref()
+        self.engine.last_timing()
     }
 
     /// Per-device timeline rows accumulated so far.
     pub fn timeline(&self) -> &Timeline {
-        &self.timeline
+        self.engine.timeline()
     }
 
     pub fn rates(&self) -> Vec<f64> {
-        self.workers.iter().map(|w| w.device.base_rate).collect()
+        self.engine.rates()
     }
 
     /// Total unread samples across device queues.
     pub fn total_backlog(&self) -> u64 {
-        self.workers.iter().map(|w| w.device.backlog() as u64).sum()
+        self.engine.total_backlog()
     }
 
-    fn advance_streams(&mut self, dt: f64) {
-        for_each_worker(&mut self.workers, self.threads, |_, w| {
-            w.device.advance_stream(dt);
-        });
-    }
-
-    /// Drain every worker's error, propagating the first in device order
-    /// (keeps error reporting deterministic across thread schedules and
-    /// leaves no stale error behind to fail a later, healthy round).
-    fn take_worker_error(&mut self) -> Result<()> {
-        let mut first = None;
-        for w in &mut self.workers {
-            if let Some(e) = w.error.take() {
-                first.get_or_insert(e);
-            }
-        }
-        match first {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
-    }
-
-    /// Execute one synchronous round; returns its log entry.
+    /// Execute one round under the configured policy; returns its log
+    /// entry.
     pub fn round(&mut self) -> Result<RoundLog> {
-        let r = self.round;
-        let d = self.backend.param_count();
-        let threads = self.threads;
-
-        // -- 0. prime the very first round with one second of stream ------
-        if r == 0 {
-            self.advance_streams(1.0);
-        }
-
-        // -- 1. intra-device rate jitter ----------------------------------
-        for w in &mut self.workers {
-            w.device.jitter_rate(self.cfg.rate_jitter);
-        }
-
-        // -- 1b. stream dynamics: sample every device's effective rate,
-        //        link factors and membership at the round's virtual start
-        //        time (coordinator thread, device order — pool-width
-        //        independent), then retarget producers and retention
-        self.dynamics.sample(self.clock.now());
-        {
-            let frame = self.dynamics.frame();
-            for (w, f) in self.workers.iter_mut().zip(frame) {
-                w.device.apply_dynamics(f.rate_factor, f.active);
-            }
-        }
-
-        // -- 2. plan batches + waits (per-device profiles cap batches;
-        //       effective rates drive batching, churn forces sit-outs) ----
-        let rates: Vec<f64> = self.workers.iter().map(|w| w.device.effective_rate).collect();
-        let active: Vec<bool> = self.workers.iter().map(|w| w.device.active).collect();
-        let backlogs: Vec<usize> = self.workers.iter().map(|w| w.device.backlog()).collect();
-        let rate_est = self.rate_est.update(rates.iter().sum());
-        let plan = RoundPlan::plan(
-            &self.cfg,
-            self.backend.ladder(),
-            &self.cluster,
-            &rates,
-            &backlogs,
-            &active,
-        );
-
-        // -- 3+4. wait + poll: streams keep flowing while each device ----
-        //         gathers its own batch (parallel per shard)
-        {
-            let plan_devices = &plan.devices;
-            let wait_s = plan.wait_s;
-            for_each_worker(&mut self.workers, threads, |i, w| {
-                w.drain(wait_s, plan_devices[i].batch);
-            });
-        }
-
-        // -- 5. data injection (non-IID mitigation; cross-device, serial) -
-        let inj_stats = match &mut self.injector {
-            Some(inj) => {
-                let mut fresh: Vec<Vec<Record>> =
-                    self.workers.iter_mut().map(|w| w.take_fresh()).collect();
-                let stats = inj.inject(&mut fresh);
-                for (w, f) in self.workers.iter_mut().zip(fresh) {
-                    w.put_fresh(f);
-                }
-                stats
-            }
-            None => Default::default(),
-        };
-        let cap = self.backend.ladder().max();
-        for w in &mut self.workers {
-            w.truncate_fresh(cap);
-        }
-
-        // -- 6. device-local training steps (parallel per shard; each
-        //       shard prices compute on its own profile) ------------------
-        {
-            let backend = self.backend.as_ref();
-            let params = &self.params;
-            let data = &self.data;
-            for_each_worker(&mut self.workers, threads, |_, w| {
-                w.train(backend, params, data);
-            });
-        }
-        self.take_worker_error()?;
-
-        let batches: Vec<usize> = self.workers.iter().map(|w| w.out.batch).collect();
-        let global_batch: usize = batches.iter().sum();
-        // devices that actually trained this round (≤ churn-active count)
-        let trained = batches.iter().filter(|&&b| b > 0).count() as u64;
-
-        // -- 7. compression: per-shard stats, one global gate per round ---
-        //       (Table V's CNC), decision applied back to every shard
-        let floats_sent;
-        let mut compressed_round = false;
-        // real survivor accounting for the round (Σ nnz over shards /
-        // trained·d) — also what the sync pricing consumes below
-        let mut round_kept = 0u64;
-        let mut round_dense = trained * d as u64;
-        if let Some(ratio) = self.scheme.ratio() {
-            {
-                let backend = self.backend.as_ref();
-                let kernel_topk = self.kernel_topk;
-                for_each_worker(&mut self.workers, threads, |_, w| {
-                    w.compress_stats(backend, ratio, kernel_topk);
-                });
-            }
-            self.take_worker_error()?;
-            let mut tot_n2 = 0f64;
-            let mut tot_k2 = 0f64;
-            let mut kept_total = 0u64;
-            for w in &self.workers {
-                if w.out.has_stats {
-                    tot_n2 += w.out.norm2;
-                    tot_k2 += w.out.knorm2;
-                    kept_total += w.out.nnz;
-                }
-            }
-            let dense_total = trained * d as u64;
-            let dec = self.scheme.decide(tot_n2, tot_k2, kept_total, dense_total);
-            compressed_round = dec.compress;
-            floats_sent = dec.floats_sent;
-            self.cnc.record(dec.compress, dense_total, kept_total);
-            round_kept = kept_total;
-            round_dense = dense_total;
-            let compress = dec.compress;
-            for_each_worker(&mut self.workers, threads, |_, w| {
-                w.apply_decision(compress);
-            });
-        } else {
-            floats_sent = trained * d as u64;
-            self.cnc.record(false, floats_sent, 0);
-        }
-
-        // -- 8. weighted aggregation (Eqn. 4b), fixed device order --------
-        //       straight from worker-owned row views: O(Σ nnz) sparse
-        //       scatters on compressed rounds, coordinate-chunked over
-        //       the worker pool on dense ones; the accumulator and the
-        //       weight vector are reused round over round (no [n, d]
-        //       staging copy, no steady-state allocation)
-        match self.cfg.mode {
-            TrainMode::Scadles => weights_from_batches_into(&batches, &mut self.weights),
-            TrainMode::Ddl => uniform_weights_into(&batches, &mut self.weights),
-        }
-        // Kernel path: the Pallas wagg artifact is bit-equivalent to the
-        // native mirror (runtime_e2e::wagg_artifact_matches_native) but
-        // interpret-mode Pallas through CPU-PJRT costs ~200x the native
-        // loop (EXPERIMENTS.md §Perf L3 iter. 4), so the CPU substrate
-        // defaults to native; SCADLES_KERNEL_AGG=1 re-enables the kernel
-        // (the right default on a real accelerator). The kernel wants the
-        // dense [n, d] matrix, so only its opt-in path pays the staging
-        // copy (sparse rows are densified into it).
-        let mut kernel_done = false;
-        if global_batch > 0 && self.kernel_agg && self.wagg_artifact_ok {
-            let n = self.workers.len();
-            if self.staging.is_empty() {
-                self.staging.resize(n * d, 0.0);
-            }
-            let staging = &mut self.staging;
-            for (i, w) in self.workers.iter().enumerate() {
-                let row = &mut staging[i * d..(i + 1) * d];
-                match w.row() {
-                    RowView::Dense(g) => row.copy_from_slice(g),
-                    RowView::Sparse(s) => s.densify_into(row),
-                }
-            }
-            match self.backend.weighted_aggregate(&self.staging, &self.weights) {
-                Ok(v) => {
-                    self.agg.copy_from_slice(&v);
-                    kernel_done = true;
-                }
-                Err(_) => {
-                    // no wagg artifact for this device count — fall back to
-                    // the native mirror for the rest of the run.
-                    self.wagg_artifact_ok = false;
-                }
-            }
-        }
-        if !kernel_done {
-            if global_batch == 0 {
-                self.agg.iter_mut().for_each(|v| *v = 0.0);
-            } else {
-                let workers = &self.workers;
-                aggregate_rows_into(&mut self.agg, &self.weights, |i| workers[i].row(), threads);
-            }
-        }
-
-        // -- 9. optimizer update with scaled LR ---------------------------
-        let lr = match self.cfg.mode {
-            TrainMode::Scadles => scaled_lr(&self.cfg, global_batch, r),
-            TrainMode::Ddl => baseline_lr(&self.cfg, r),
-        };
-        if global_batch > 0 {
-            self.backend
-                .update(&mut self.params, &mut self.momentum, &self.agg, lr as f32)?;
-        }
-
-        // -- 10. price the round on the virtual clock ---------------------
-        //        barrier totals are maxima over the per-device phases;
-        //        sync rings over the *participating* devices through the
-        //        slowest *effective* (dynamics-faded) link — with the
-        //        identity frame this is exactly the cluster's static
-        //        slowest-link pricing, bit for bit
-        let per_device: Vec<DevicePhase> = self
-            .workers
-            .iter()
-            .enumerate()
-            .map(|(i, w)| DevicePhase {
-                device: i,
-                wait_s: plan.devices[i].wait_s,
-                compute_s: w.out.compute_s,
-            })
-            .collect();
-        let max_compute = per_device.iter().fold(0f64, |m, p| m.max(p.compute_s));
-        let (ring_n, ring_bottleneck, ring_bps) =
-            effective_ring(&self.cluster, self.dynamics.frame());
-        let sync_s = if global_batch == 0 {
-            0.0
-        } else if compressed_round {
-            // price the wire from the *real* survivor count: Σ nnz over
-            // the shards, scaled exactly (integer math, no f64 fraction
-            // round-trip) onto the paper model's parameter count
-            let nnz = scale_nnz_to_paper(self.cluster.paper_params(), round_kept, round_dense);
-            self.cluster
-                .network
-                .sparse_sync_time_slowest(nnz, ring_n, ring_bps)
-        } else {
-            self.cluster
-                .network
-                .allreduce_time_slowest(self.cluster.paper_params() * 4, ring_n, ring_bps)
-        };
-        let timing = RoundTiming {
-            wait_s: plan.wait_s,
-            compute_s: max_compute,
-            sync_s,
-            injection_s: self.cluster.network.transfer_time(inj_stats.bytes_moved),
-            per_device,
-            sync_bottleneck: Some(ring_bottleneck),
-        };
-        // A fully idle round (every device churned out or stalled at
-        // zero rate) still costs one virtual second: time must advance
-        // or the membership/rate schedules could never bring a device
-        // back. Unreachable under static dynamics — preset rates are
-        // ≥ 1 sample/s, so some device always waits, trains or syncs.
-        let advance = if timing.total() > 0.0 { timing.total() } else { IDLE_ROUND_S };
-        self.clock.advance(advance);
-        // streams keep flowing during compute + sync + injection
-        self.advance_streams(timing.compute_s + timing.sync_s + timing.injection_s);
-        let (straggler_cause, straggler_device) = timing.straggler();
-        for p in &timing.per_device {
-            self.timeline.push(DeviceRoundRow {
-                round: r,
-                device: p.device,
-                batch: batches[p.device],
-                wait_s: p.wait_s,
-                compute_s: p.compute_s,
-                effective_rate: rates[p.device],
-                active: active[p.device],
-                straggler: straggler_cause != StragglerCause::None
-                    && p.device == straggler_device,
-                cause: if straggler_cause != StragglerCause::None
-                    && p.device == straggler_device
-                {
-                    straggler_cause
-                } else {
-                    StragglerCause::None
-                },
-            });
-        }
-        self.last_timing = Some(timing);
-
-        // -- 11. buffer accounting -----------------------------------------
-        let buffered = self.total_backlog();
-        self.tracker.record(buffered);
-
-        // -- 12. periodic held-out evaluation ------------------------------
-        let (mut test_top1, mut test_top5) = (f64::NAN, f64::NAN);
-        if r % self.cfg.eval_every == 0 || r + 1 == self.cfg.rounds {
-            let (t1, t5) = self.evaluate()?;
-            test_top1 = t1;
-            test_top5 = t5;
-        }
-
-        // -- 13. log --------------------------------------------------------
-        let train_loss = self
-            .workers
-            .iter()
-            .zip(&self.weights)
-            .map(|(w, &wt)| w.out.loss as f64 * wt as f64)
-            .sum::<f64>();
-        let (top1, top5) = self
-            .workers
-            .iter()
-            .fold((0f64, 0f64), |(t1, t5), w| {
-                (t1 + w.out.top1 as f64, t5 + w.out.top5 as f64)
-            });
-        let log = RoundLog {
-            round: r,
-            wall_clock_s: self.clock.now(),
-            global_batch,
-            train_loss,
-            train_top1: top1 / global_batch.max(1) as f64,
-            train_top5: top5 / global_batch.max(1) as f64,
-            test_top1,
-            test_top5,
-            lr,
-            buffered_samples: buffered,
-            floats_sent,
-            compressed: compressed_round,
-            injection_bytes: inj_stats.bytes_moved,
-            straggler_device,
-            straggler_cause,
-            active_devices: active.iter().filter(|&&a| a).count(),
-            rate_est,
-        };
-        self.logs.push(log);
-        self.round += 1;
-        Ok(log)
+        self.engine.round()
     }
 
     /// Held-out (top1, top5) accuracy.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        let mut t1 = 0f64;
-        let mut t5 = 0f64;
-        let mut total = 0f64;
-        for (x, y) in self.eval.chunks(self.backend.eval_bucket()) {
-            let out = self.backend.eval_step(&self.params, x, y)?;
-            t1 += out.top1_correct as f64;
-            t5 += out.top5_correct as f64;
-            total += y.len() as f64;
-        }
-        Ok((t1 / total.max(1.0), t5 / total.max(1.0)))
+        self.engine.evaluate()
     }
 
     /// Run all configured rounds and assemble the report.
     pub fn run(&mut self) -> Result<TrainerOutput> {
-        while self.round < self.cfg.rounds {
-            self.round()?;
-        }
-        Ok(self.finish())
+        self.engine.run()
     }
 
     /// Build the output from the rounds run so far.
     pub fn finish(&self) -> TrainerOutput {
-        let report = RunReport::from_logs(
-            self.logs.label().to_string(),
-            &self.logs,
-            self.tracker.report(),
-            self.cfg.target_top5,
-        );
-        TrainerOutput {
-            report,
-            logs: self.logs.clone(),
-            cnc: self.cnc,
-            rates: self.rates(),
-            timeline: self.timeline.clone(),
-            dynamics: self.dynamics.counters(),
-        }
+        self.engine.finish()
     }
 
     /// Broker handle (stream stats / tests).
     pub fn broker(&self) -> &Broker {
-        &self.broker
+        self.engine.broker()
     }
-}
-
-/// Scale the round's real survivor count onto the paper model's
-/// parameter space: `paper_params · kept / dense`, computed in u128 so
-/// the ratio is exact (no f64 fraction round-trip). `kept = dense`
-/// degenerates to the dense wire volume; an empty round prices zero.
-fn scale_nnz_to_paper(paper_params: u64, kept: u64, dense: u64) -> u64 {
-    if dense == 0 {
-        return 0;
-    }
-    ((paper_params as u128 * kept as u128) / dense as u128) as u64
-}
-
-/// Per-device RNG seed for stream/jitter state. XOR with a fixed offset
-/// of `i` keeps seeds pairwise distinct per device (XOR with a constant
-/// is injective in `0xD0 + i`); the grouping is explicit because `^`
-/// binds looser than `+`.
-fn device_seed(seed: u64, i: usize) -> u64 {
-    seed ^ (0xD0 + i as u64)
-}
-
-/// Resolve the configured pool width: 0 = one thread per available core,
-/// capped at the device count (extra threads would only idle).
-fn resolve_threads(requested: usize, devices: usize) -> usize {
-    let t = if requested == 0 {
-        std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1)
-    } else {
-        requested
-    };
-    t.clamp(1, devices.max(1))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::buffer::BufferPolicy;
-    use crate::config::{CompressionConfig, InjectionConfig, StreamPreset};
+    use crate::config::{CompressionConfig, InjectionConfig, StreamPreset, TrainMode};
     use crate::coordinator::backend::MockBackend;
     use crate::data::LabelMap;
 
@@ -816,23 +274,6 @@ mod tests {
     }
 
     #[test]
-    fn nnz_paper_scaling_is_exact_integer_math() {
-        assert_eq!(scale_nnz_to_paper(1000, 0, 0), 0);
-        assert_eq!(scale_nnz_to_paper(1000, 0, 10), 0);
-        assert_eq!(scale_nnz_to_paper(1000, 5, 10), 500);
-        assert_eq!(scale_nnz_to_paper(1000, 10, 10), 1000);
-        // magnitudes past f64's 2^53 integer range stay exact in u128
-        let p = 60_200_000u64;
-        let dense = 8 * 820_874u64;
-        let kept = dense / 10;
-        assert_eq!(
-            scale_nnz_to_paper(p, kept, dense),
-            ((p as u128 * kept as u128) / dense as u128) as u64
-        );
-        assert!(scale_nnz_to_paper(p, kept, dense) <= p);
-    }
-
-    #[test]
     fn compressed_sync_prices_the_real_survivor_count() {
         // always-compress: every round's sync must be strictly cheaper
         // than the dense wire, and scale with the survivor volume
@@ -852,15 +293,6 @@ mod tests {
                 "sparse {sparse_sync} vs dense {dense_sync}"
             );
             assert!(sparse_sync > 0.0);
-        }
-    }
-
-    #[test]
-    fn device_seeds_pairwise_distinct_up_to_64_devices() {
-        for seed in [0u64, 42, 0xD0, u64::MAX] {
-            let seeds: std::collections::HashSet<u64> =
-                (0..64).map(|i| device_seed(seed, i)).collect();
-            assert_eq!(seeds.len(), 64, "collision under experiment seed {seed}");
         }
     }
 
@@ -1163,5 +595,27 @@ mod tests {
             seq.logs.rounds().last().unwrap().train_loss,
             par.logs.rounds().last().unwrap().train_loss
         );
+    }
+
+    #[test]
+    fn bsp_rounds_commit_everyone_who_trained() {
+        // the BSP identity participation: nothing is ever dropped, and
+        // committed_devices tracks the trained-device count exactly
+        let cfg = base(TrainMode::Scadles);
+        let mut t = trainer(&cfg);
+        for _ in 0..5 {
+            let log = t.round().unwrap();
+            assert_eq!(log.dropped_devices, 0);
+            let trained = t
+                .timeline()
+                .rows()
+                .iter()
+                .filter(|r| r.round == log.round && r.batch > 0)
+                .count();
+            assert_eq!(log.committed_devices, trained);
+        }
+        assert_eq!(t.timeline().withheld_rounds(), 0);
+        assert_eq!(t.timeline().max_staleness(), 0);
+        assert_eq!(t.policy_label(), "bsp");
     }
 }

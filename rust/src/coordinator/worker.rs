@@ -31,6 +31,7 @@ use crate::config::cluster::DeviceProfile;
 use crate::coordinator::aggregate::RowView;
 use crate::coordinator::backend::Backend;
 use crate::coordinator::device::Device;
+use crate::coordinator::plan::RoundPlan;
 use crate::data::{materialize, Synthetic};
 use crate::stream::Record;
 
@@ -255,6 +256,26 @@ impl DeviceWorker {
         }
     }
 
+    /// Phase (semi-sync policies): this round's gradient was **withheld**
+    /// from aggregation — a K-sync laggard past the commit point. With
+    /// error feedback the raw gradient folds into the residual
+    /// ([`ErrorFeedback::absorb_unsent`]), so no mass is lost: it rides
+    /// the next committed round's corrected gradient. Without error
+    /// feedback the contribution is dropped, exactly as a real
+    /// semi-synchronous round drops a late arrival. Clears the
+    /// stats/sparse flags so the outgoing row is never mistaken for a
+    /// compressed one (its weight is zero regardless).
+    pub fn withhold(&mut self) {
+        self.out.has_stats = false;
+        self.sent_sparse = false;
+        if self.out.batch == 0 {
+            return;
+        }
+        if let Some(ef) = &mut self.feedback {
+            ef.absorb_unsent(&self.grad);
+        }
+    }
+
     /// Phase: commit the global gate's decision to this shard.
     ///
     /// Compressed round: the sparse survivor set goes out and the
@@ -278,6 +299,26 @@ impl DeviceWorker {
             self.sent_sparse = false;
         }
     }
+}
+
+/// Completion-time ordering for the synchronization policies: device
+/// indices with a planned batch, sorted ascending by the plan's virtual
+/// finish estimate ([`crate::coordinator::plan::DevicePlan::finish_est_s`],
+/// own-stream wait + profile-priced compute), ties broken by device id
+/// so the order is total. A pure function of the plan, evaluated on the
+/// coordinator thread — pool width can never reorder it. Writes into a
+/// caller-owned buffer so per-round policy decisions allocate nothing
+/// in the steady state.
+pub fn completion_order_into(plan: &RoundPlan, out: &mut Vec<usize>) {
+    out.clear();
+    out.extend(plan.devices.iter().filter(|d| d.batch > 0).map(|d| d.device));
+    out.sort_by(|&a, &b| {
+        plan.devices[a]
+            .finish_est_s()
+            .partial_cmp(&plan.devices[b].finish_est_s())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
 }
 
 /// Run `f(index, worker)` once per worker, fanned out over at most
@@ -491,5 +532,76 @@ mod tests {
     fn for_each_worker_handles_empty_slice() {
         let mut ws: Vec<DeviceWorker> = Vec::new();
         for_each_worker(&mut ws, 4, |_, _| panic!("no workers to visit"));
+    }
+
+    #[test]
+    fn withhold_folds_the_whole_gradient_into_the_residual() {
+        let be = MockBackend::new(32, 10);
+        let mut w = worker(100.0, true, 32);
+        w.device.advance_stream(1.0);
+        w.drain(0.0, 32);
+        let params = vec![0.2f32; 32];
+        w.train(&be, &params, &Synthetic::standard(10, 42));
+        let raw = w.grad().to_vec();
+        let raw_n2: f64 = raw.iter().map(|&g| (g as f64) * (g as f64)).sum();
+        w.withhold();
+        let ef = w.feedback.as_ref().unwrap();
+        assert_eq!(ef.residual_norm2.to_bits(), raw_n2.to_bits(), "residual = raw grad");
+        assert!(!w.out.has_stats);
+        // a later committed round re-injects the withheld mass
+        w.compress_stats(&be, 1.0, false);
+        // CR=1.0 keeps everything: corrected = grad + residual = 2·grad
+        match w.row() {
+            RowView::Dense(r) => {
+                for (c, g) in r.iter().zip(&raw) {
+                    assert_eq!(c.to_bits(), (g + g).to_bits());
+                }
+            }
+            RowView::Sparse(_) => panic!("stats-only phase presents the dense row"),
+        }
+    }
+
+    #[test]
+    fn withhold_without_error_feedback_is_a_flag_reset() {
+        let be = MockBackend::new(16, 10);
+        let mut w = worker(100.0, false, 16);
+        w.device.advance_stream(1.0);
+        w.drain(0.0, 16);
+        let params = vec![0.1f32; 16];
+        w.train(&be, &params, &Synthetic::standard(10, 42));
+        w.compress_stats(&be, 0.5, false);
+        assert!(w.out.has_stats);
+        w.withhold();
+        assert!(!w.out.has_stats);
+        assert!(w.feedback.is_none());
+    }
+
+    #[test]
+    fn completion_order_ranks_by_finish_estimate_with_stable_ties() {
+        use crate::coordinator::plan::DevicePlan;
+        let mk = |device: usize, batch: usize, wait_s: f64, est: f64| DevicePlan {
+            device,
+            batch,
+            bucket: batch.max(8),
+            wait_s,
+            est_compute_s: est,
+        };
+        let plan = RoundPlan {
+            devices: vec![
+                mk(0, 64, 0.0, 2.0), // finishes at 2.0
+                mk(1, 64, 1.0, 0.5), // finishes at 1.5
+                mk(2, 0, 0.0, 0.0),  // sat out: not in the order
+                mk(3, 64, 0.5, 1.0), // finishes at 1.5 — tie with 1, id breaks it
+            ],
+            wait_s: 1.0,
+        };
+        let mut order = Vec::new();
+        completion_order_into(&plan, &mut order);
+        assert_eq!(order, vec![1, 3, 0]);
+        // reuse keeps the buffer and stays stable
+        let ptr = order.as_ptr();
+        completion_order_into(&plan, &mut order);
+        assert_eq!(order, vec![1, 3, 0]);
+        assert_eq!(order.as_ptr(), ptr);
     }
 }

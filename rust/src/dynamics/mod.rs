@@ -272,12 +272,25 @@ pub fn effective_ring(
     cluster: &ClusterProfile,
     frame: &[DeviceDynamics],
 ) -> (usize, usize, f64) {
+    effective_ring_among(cluster, frame, |_| true)
+}
+
+/// [`effective_ring`] restricted to the devices a synchronization
+/// policy lets into this round's allreduce: only churn-active devices
+/// with `include(i)` join (and can bound) the ring. A K-sync laggard
+/// whose gradient was withheld is excluded; under the all-inclusive
+/// predicate this is exactly [`effective_ring`], bit for bit.
+pub fn effective_ring_among<F: Fn(usize) -> bool>(
+    cluster: &ClusterProfile,
+    frame: &[DeviceDynamics],
+    include: F,
+) -> (usize, usize, f64) {
     debug_assert_eq!(cluster.n(), frame.len());
     let mut n_active = 0usize;
     let mut dev = 0usize;
     let mut bps = f64::INFINITY;
     for (i, (d, f)) in cluster.devices.iter().zip(frame).enumerate() {
-        if !f.active {
+        if !f.active || !include(i) {
             continue;
         }
         n_active += 1;
@@ -432,6 +445,28 @@ mod tests {
         // everyone gone: no links bound the ring, backbone fallback
         let gone = vec![DeviceDynamics { active: false, ..Default::default() }; 4];
         let (n, _, bps) = effective_ring(&cluster, &gone);
+        assert_eq!(n, 0);
+        assert_eq!(bps, cluster.network.bandwidth_bps);
+    }
+
+    #[test]
+    fn ring_restricted_to_participants_excludes_withheld_devices() {
+        let cluster = HeteroPreset::K80Homogeneous.sample_cluster("mlp_c10", 4, 0);
+        let mut frame = vec![DeviceDynamics::default(); 4];
+        frame[1].uplink_factor = 0.1; // slowest link belongs to device 1
+        // all-inclusive predicate == the plain effective ring, bitwise
+        let all = effective_ring(&cluster, &frame);
+        let among = effective_ring_among(&cluster, &frame, |_| true);
+        assert_eq!(all.0, among.0);
+        assert_eq!(all.1, among.1);
+        assert_eq!(all.2.to_bits(), among.2.to_bits());
+        // drop device 1 from the round: the ring shrinks and re-prices
+        let (n, dev, bps) = effective_ring_among(&cluster, &frame, |i| i != 1);
+        assert_eq!(n, 3);
+        assert_ne!(dev, 1);
+        assert_eq!(bps, 5e9);
+        // nobody included: backbone fallback, same as everyone-departed
+        let (n, _, bps) = effective_ring_among(&cluster, &frame, |_| false);
         assert_eq!(n, 0);
         assert_eq!(bps, cluster.network.bandwidth_bps);
     }

@@ -12,8 +12,8 @@
 use super::training::{devices_or, model_or, rounds_or};
 use super::HarnessOpts;
 use crate::compress::{fp16_roundtrip, qsgd, terngrad};
-use crate::config::{CompressionConfig, ExperimentConfig, StreamPreset, TrainMode};
-use crate::coordinator::{FedAvgTrainer, Trainer};
+use crate::config::{CompressionConfig, ExperimentConfig, StreamPreset, SyncPreset, TrainMode};
+use crate::coordinator::Trainer;
 use crate::data::{mean_skew, LabelMap};
 use crate::rng::Pcg64;
 use crate::Result;
@@ -125,7 +125,9 @@ pub fn emd_table(_opts: &HarnessOpts) -> Result<()> {
     Ok(())
 }
 
-/// ScaDLES (sync every round) vs FedAvg (local steps, periodic sync).
+/// ScaDLES (sync every round) vs FedAvg-style local SGD — now just the
+/// `local:h` synchronization policy on the same round engine, so the
+/// comparison shares streams, profiles, clock and report shape.
 pub fn fedavg(opts: &HarnessOpts) -> Result<()> {
     let model = model_or(opts, "mlp_c10");
     let rounds = rounds_or(opts, 12);
@@ -133,7 +135,7 @@ pub fn fedavg(opts: &HarnessOpts) -> Result<()> {
     println!("ScaDLES vs FedAvg-style local steps ({model}, {devices} devices)");
     println!("{:<22} {:>10} {:>14} {:>10} {:>12}",
              "system", "top5", "floats sent", "rounds", "wall_clock");
-    let base = || {
+    let base = |sync: SyncPreset| {
         ExperimentConfig::builder(&model)
             .artifacts_dir(opts.artifacts_dir.clone())
             .seed(opts.seed)
@@ -141,24 +143,22 @@ pub fn fedavg(opts: &HarnessOpts) -> Result<()> {
             .rounds(rounds)
             .preset(StreamPreset::S1Prime)
             .mode(TrainMode::Scadles)
+            .sync(sync)
             .eval_every(3)
             .echo_every(opts.echo_every)
+            .build()
     };
-    let scadles = Trainer::from_config(&base().build()?)?.run()?;
+    let scadles = Trainer::from_config(&base(SyncPreset::Bsp)?)?.run()?;
     println!("{:<22} {:>9.1}% {:>14.3e} {:>10} {:>11.0}s",
              "scadles", 100.0 * scadles.report.best_test_top5,
              scadles.report.total_floats_sent as f64, rounds,
              scadles.report.wall_clock_s);
-    for local_steps in [2usize, 4] {
-        let cfg = base().build()?;
-        let rt = std::sync::Arc::new(crate::runtime::Runtime::load(&cfg.artifacts_dir)?);
-        let backend = Box::new(rt.model(&cfg.model)?);
-        let mut t = FedAvgTrainer::new(&cfg, backend, local_steps)?;
-        let report = t.run()?;
+    for local_steps in [2u32, 4] {
+        let out = Trainer::from_config(&base(SyncPreset::Local { steps: local_steps })?)?.run()?;
         println!("{:<22} {:>9.1}% {:>14.3e} {:>10} {:>11.0}s",
                  format!("fedavg k={local_steps}"),
-                 100.0 * report.best_test_top5,
-                 report.total_floats_sent as f64, rounds, report.wall_clock_s);
+                 100.0 * out.report.best_test_top5,
+                 out.report.total_floats_sent as f64, rounds, out.report.wall_clock_s);
     }
     println!("\n(the paper's §III-C trade-off: fewer syncs, more local drift)");
     Ok(())

@@ -10,7 +10,7 @@
 //! numerics — so the sweep is artifact-free and CI-runnable.
 
 use super::training::{devices_or, rounds_or};
-use super::HarnessOpts;
+use super::{cause_shares, HarnessOpts};
 use crate::config::{ExperimentConfig, HeteroPreset, StreamPreset, TrainMode};
 use crate::coordinator::{MockBackend, Trainer, TrainerOutput};
 use crate::Result;
@@ -50,17 +50,6 @@ fn run_one(
         preset
     );
     Ok(out)
-}
-
-/// Straggler-cause percentages of a run: (stream-wait, compute, sync).
-fn cause_shares(out: &TrainerOutput) -> (f64, f64, f64) {
-    let (w, c, s) = out.timeline.cause_counts();
-    let total = (w + c + s).max(1) as f64;
-    (
-        100.0 * w as f64 / total,
-        100.0 * c as f64 / total,
-        100.0 * s as f64 / total,
-    )
 }
 
 /// `exp hetero` — ScaDLES-vs-DDL speedup as a function of compute and

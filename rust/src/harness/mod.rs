@@ -15,6 +15,7 @@ pub mod analytic;
 pub mod dynamics;
 pub mod fig6;
 pub mod hetero;
+pub mod sync;
 pub mod training;
 
 use std::path::PathBuf;
@@ -60,7 +61,7 @@ pub const EXPERIMENTS: &[&str] = &[
 ];
 
 /// Extension studies beyond the paper (DESIGN.md §5b).
-pub const EXTENSIONS: &[&str] = &["ablation", "emd", "fedavg", "hetero", "dynamics"];
+pub const EXTENSIONS: &[&str] = &["ablation", "emd", "fedavg", "hetero", "dynamics", "sync"];
 
 /// Dispatch one experiment by id.
 pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
@@ -87,6 +88,7 @@ pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
         "fedavg" => ablation::fedavg(opts),
         "hetero" => hetero::hetero(opts),
         "dynamics" => dynamics::dynamics(opts),
+        "sync" => sync::sync(opts),
         "all" => {
             for e in EXPERIMENTS {
                 eprintln!("\n================ {e} ================");
@@ -98,6 +100,19 @@ pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
             "unknown experiment {other:?}; choices: {EXPERIMENTS:?}, {EXTENSIONS:?} or 'all'"
         )),
     }
+}
+
+/// Straggler-cause percentages of a run: (stream-wait, compute, sync)
+/// shares of the attributed rounds — the breakdown the hetero and sync
+/// sweeps print.
+pub(crate) fn cause_shares(out: &crate::coordinator::TrainerOutput) -> (f64, f64, f64) {
+    let (w, c, s) = out.timeline.cause_counts();
+    let total = (w + c + s).max(1) as f64;
+    (
+        100.0 * w as f64 / total,
+        100.0 * c as f64 / total,
+        100.0 * s as f64 / total,
+    )
 }
 
 /// Open a CSV writer under `opts.out_dir` if configured.

@@ -31,6 +31,15 @@
 //! worker-pool width, with `static` reproducing the frozen-profile
 //! engine bitwise. See `examples/diurnal_burst.rs`.
 //!
+//! *Who commits* a round is pluggable as well: a [`config::SyncPreset`]
+//! names a [`coordinator::SyncPolicy`] for the round engine — `bsp`
+//! (the paper's fully-synchronous regime, the bitwise-identical
+//! default), `ksync:frac` (semi-sync commit on the fastest `⌈frac·n⌉`
+//! devices, laggard gradients riding the error-feedback residual),
+//! `stale:s` (bounded staleness with discounted late contributions) and
+//! `local:h` (FedAvg-style local SGD with sample-weighted parameter
+//! averaging). See `examples/ksync_two_tier.rs`.
+//!
 //! Layers 1–2 (Pallas kernels + JAX models) are AOT-lowered to HLO text at
 //! build time (`make artifacts`) and executed through the PJRT CPU client
 //! by [`runtime`]. Python never runs on the training path.

@@ -42,6 +42,11 @@ USAGE:
                                linkfade[:floor[:period]] | trace:PATH;
                                e.g. --dynamics diurnal:0.5 or burst:4+churn:0.25,
                                composes with --hetero)
+              [--sync P]      (synchronization policy, name[:param]:
+                               bsp | ksync[:frac] | stale[:s] | local[:h];
+                               e.g. --sync ksync:0.75 commits each round on the
+                               fastest 75% of devices; composes with --hetero
+                               and --dynamics)
   repro exp <id|all> [--artifacts DIR] [--devices N] [--rounds R]
               [--model M] [--out-dir DIR] [--echo N] [--seed S]
   repro info  [--artifacts DIR]
@@ -195,6 +200,7 @@ fn main() -> anyhow::Result<()> {
                 .rate_jitter(args.get("jitter", 0.0f64)?)
                 .hetero(args.get_str("hetero", "k80-homogeneous").parse()?)
                 .dynamics(args.get_str("dynamics", "static").parse()?)
+                .sync(args.get_str("sync", "bsp").parse()?)
                 .seed(args.get("seed", 42u64)?)
                 .echo_every(args.get("echo", 10usize)?)
                 .worker_threads(args.get("workers", 0usize)?);
@@ -226,7 +232,7 @@ fn main() -> anyhow::Result<()> {
                         "test_top1", "test_top5", "lr", "buffered_samples",
                         "floats_sent", "compressed", "injection_bytes",
                         "straggler_device", "straggler_cause", "active_devices",
-                        "rate_est",
+                        "rate_est", "committed_devices", "dropped_devices",
                     ],
                 )?;
                 for r in out.logs.rounds() {
@@ -246,6 +252,8 @@ fn main() -> anyhow::Result<()> {
                         r.straggler_cause.name().into(),
                         r.active_devices.to_string(),
                         format!("{:.2}", r.rate_est),
+                        r.committed_devices.to_string(),
+                        r.dropped_devices.to_string(),
                     ])?;
                 }
                 w.flush()?;

@@ -38,6 +38,13 @@ pub struct RoundLog {
     /// EWMA estimate of the cluster's aggregate effective streaming rate
     /// (samples/s) — the windowed rate the buffer policies see.
     pub rate_est: f64,
+    /// Devices whose contribution (gradient or model) entered this
+    /// round's aggregate (≤ `active_devices`).
+    pub committed_devices: usize,
+    /// Devices that trained but whose contribution the synchronization
+    /// policy withheld (K-sync laggards past the commit point; their
+    /// gradients fold into the error-feedback residual).
+    pub dropped_devices: usize,
 }
 
 /// Accumulates [`RoundLog`]s for one run; the harness renders them into

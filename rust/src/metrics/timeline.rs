@@ -54,6 +54,13 @@ pub struct DeviceRoundRow {
     pub effective_rate: f64,
     /// Whether the device was a cluster member this round (churn).
     pub active: bool,
+    /// Whether this device's contribution entered the round's aggregate
+    /// (false for sat-out devices *and* for laggards a semi-sync policy
+    /// dropped past the commit point).
+    pub participated: bool,
+    /// Rounds this device's contribution lagged the global model
+    /// (bounded-staleness policy; 0 = fresh or not contributing).
+    pub staleness: u32,
     /// Whether this device bounded the round's critical path.
     pub straggler: bool,
     /// Why (set on the straggler's row; `None` elsewhere).
@@ -111,6 +118,21 @@ impl Timeline {
         self.rows.iter().filter(|r| !r.active).count() as u64
     }
 
+    /// Device-rounds where a trained gradient was withheld from the
+    /// aggregate (K-sync laggards: `batch > 0` but not participated).
+    pub fn withheld_rounds(&self) -> u64 {
+        self.rows
+            .iter()
+            .filter(|r| r.batch > 0 && !r.participated)
+            .count() as u64
+    }
+
+    /// Largest staleness any contribution carried (bounded-staleness
+    /// policy; 0 under BSP/K-sync).
+    pub fn max_staleness(&self) -> u32 {
+        self.rows.iter().map(|r| r.staleness).max().unwrap_or(0)
+    }
+
     /// Min/max effective rate observed across all device-rounds (burst
     /// spread; `(0, 0)` on an empty timeline).
     pub fn effective_rate_span(&self) -> (f64, f64) {
@@ -161,6 +183,28 @@ mod tests {
         assert_eq!(t.effective_rate_span(), (0.0, 160.0));
         assert_eq!(Timeline::new().effective_rate_span(), (0.0, 0.0));
         assert_eq!(Timeline::new().inactive_rounds(), 0);
+    }
+
+    #[test]
+    fn participation_columns_feed_the_sync_policy_counters() {
+        let mut t = Timeline::new();
+        // committed contributor
+        t.push(DeviceRoundRow { batch: 32, participated: true, ..Default::default() });
+        // K-sync laggard: trained, withheld
+        t.push(DeviceRoundRow { batch: 16, participated: false, ..Default::default() });
+        // sat-out device: no batch, not withheld
+        t.push(DeviceRoundRow { batch: 0, participated: false, ..Default::default() });
+        // stale contributor
+        t.push(DeviceRoundRow {
+            batch: 8,
+            participated: true,
+            staleness: 2,
+            ..Default::default()
+        });
+        assert_eq!(t.withheld_rounds(), 1);
+        assert_eq!(t.max_staleness(), 2);
+        assert_eq!(Timeline::new().withheld_rounds(), 0);
+        assert_eq!(Timeline::new().max_staleness(), 0);
     }
 
     #[test]

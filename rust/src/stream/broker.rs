@@ -1,7 +1,7 @@
 //! The broker: topic registry + cluster-wide counters.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use anyhow::anyhow;
 
@@ -43,9 +43,27 @@ impl Broker {
         Self::default()
     }
 
+    /// Read-lock the registry, recovering from poison: a panicked
+    /// producer/consumer thread must not cascade into registry
+    /// deadpoints for every other device. The map's only mutations are
+    /// whole-entry inserts, so a poisoned guard still holds a
+    /// consistent registry.
+    fn registry(&self) -> RwLockReadGuard<'_, BTreeMap<String, Topic>> {
+        self.topics
+            .read()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Write-lock the registry with the same poison recovery.
+    fn registry_mut(&self) -> RwLockWriteGuard<'_, BTreeMap<String, Topic>> {
+        self.topics
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Create a topic; errors if it already exists.
     pub fn create_topic(&self, name: &str, retention: Retention) -> Result<Topic> {
-        let mut topics = self.topics.write().unwrap();
+        let mut topics = self.registry_mut();
         if topics.contains_key(name) {
             return Err(anyhow!("topic {name:?} already exists"));
         }
@@ -56,9 +74,7 @@ impl Broker {
 
     /// Look up an existing topic.
     pub fn topic(&self, name: &str) -> Result<Topic> {
-        self.topics
-            .read()
-            .unwrap()
+        self.registry()
             .get(name)
             .cloned()
             .ok_or_else(|| anyhow!("unknown topic {name:?}"))
@@ -74,7 +90,7 @@ impl Broker {
     }
 
     pub fn topic_names(&self) -> Vec<String> {
-        self.topics.read().unwrap().keys().cloned().collect()
+        self.registry().keys().cloned().collect()
     }
 
     /// Produce into a named topic.
@@ -84,7 +100,7 @@ impl Broker {
 
     /// Snapshot cluster-wide counters.
     pub fn stats(&self) -> BrokerStats {
-        let topics = self.topics.read().unwrap();
+        let topics = self.registry();
         let mut s = BrokerStats {
             topics: topics.len(),
             ..Default::default()
@@ -157,6 +173,30 @@ mod tests {
         assert_eq!(stats.produced, 8 * 500);
         assert_eq!(stats.buffered, 8 * 500);
         assert_eq!(stats.dropped, 0);
+    }
+
+    #[test]
+    fn poisoned_registry_lock_still_serves_the_broker() {
+        // a thread that panics holding the registry write lock must not
+        // wedge topic lookup, creation or stats for everyone else
+        let b = Broker::new();
+        b.create_topic("d0", Retention::Persist).unwrap();
+        b.produce("d0", (0..5).map(rec)).unwrap();
+        let b2 = b.clone();
+        let died = std::thread::spawn(move || {
+            let _guard = b2.registry_mut();
+            panic!("producer dies holding the registry lock");
+        })
+        .join();
+        assert!(died.is_err(), "the producer must actually have panicked");
+        // lookups, creation and stats recover through the poison
+        assert!(b.topic("d0").is_ok());
+        let t1 = b.ensure_topic("d1", Retention::Persist);
+        t1.produce([rec(9)]);
+        let s = b.stats();
+        assert_eq!(s.topics, 2);
+        assert_eq!(s.produced, 6);
+        assert_eq!(b.topic_names(), vec!["d0".to_string(), "d1".to_string()]);
     }
 
     #[test]

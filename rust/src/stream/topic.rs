@@ -29,8 +29,18 @@ impl Topic {
 
     /// Lock the backing partition. Private to the stream module — external
     /// code goes through produce/consume APIs.
+    ///
+    /// **Poison recovery:** a worker thread that panics while holding
+    /// this lock poisons the mutex; `lock().unwrap()` would then turn
+    /// every other device's produce/poll into a cascade of panics and
+    /// wedge the broker. The partition is a bounded log of `Copy`
+    /// records mutated through append/trim operations that never leave
+    /// it half-written across an unwind boundary, so the state behind a
+    /// poisoned lock is still consistent — recover it and keep serving.
     pub(super) fn lock(&self) -> MutexGuard<'_, Partition> {
-        self.partition.lock().unwrap()
+        self.partition
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
     /// Append records; returns the first assigned offset.
@@ -118,6 +128,30 @@ mod tests {
         let t2 = t.clone();
         t.produce((0..5).map(rec));
         assert_eq!(t2.len(), 5);
+    }
+
+    #[test]
+    fn poisoned_partition_lock_still_serves_reads_and_writes() {
+        // a worker that dies holding the partition lock must not wedge
+        // the topic for every other device sharing the broker
+        let t = Topic::new("device-0", Retention::Persist);
+        t.produce((0..10).map(rec));
+        let t2 = t.clone();
+        let died = std::thread::spawn(move || {
+            let _guard = t2.lock();
+            panic!("worker dies holding the partition lock");
+        })
+        .join();
+        assert!(died.is_err(), "the worker must actually have panicked");
+        // reads recover through the poisoned mutex...
+        assert_eq!(t.fetch(0, 100).len(), 10);
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.latest_offset(), 10);
+        // ...and so do writes and retention changes
+        t.produce([rec(10)]);
+        assert_eq!(t.len(), 11);
+        t.set_retention(Retention::Truncate { keep: 5 });
+        assert!(t.len() <= 5);
     }
 
     #[test]

@@ -8,18 +8,22 @@
 //! CR=0.01 always-compress (single-survivor sparse scatter), Top-k at
 //! CR=1.0 (whole-row sparse view), DDL baseline, two heterogeneous
 //! cluster profiles, two stream-dynamics scenarios (diurnal+topk,
-//! burst+churn)} x pool widths {1 (sequential), 4, 8}.
+//! burst+churn), three synchronization policies (ksync:0.75+two-tier,
+//! stale:2+diurnal, local:4)} x pool widths {1 (sequential), 4, 8}.
 //! The heterogeneous cases pin the scenario layer's per-device-substream
-//! sampling, and the dynamics cases pin the time-varying process layer
-//! (effective rates, membership, counters): neither may depend on pool
-//! width. Every compressed case runs the sparse fast path (O(Σ nnz)
-//! aggregation straight from worker-owned `SparseGrad` views) and every
-//! dense case the coordinate-chunked parallel aggregation, so this
-//! matrix is also the determinism contract for both.
+//! sampling, the dynamics cases pin the time-varying process layer
+//! (effective rates, membership, counters), and the policy cases pin
+//! the synchronization layer (commit sets, staleness counters, local
+//! steps): none may depend on pool width. Every compressed case runs
+//! the sparse fast path (O(Σ nnz) aggregation straight from
+//! worker-owned `SparseGrad` views) and every dense case the
+//! coordinate-chunked parallel aggregation, so this matrix is also the
+//! determinism contract for both.
 
 use scadles::buffer::BufferPolicy;
 use scadles::config::{
-    CompressionConfig, DynamicsPreset, ExperimentConfig, HeteroPreset, StreamPreset, TrainMode,
+    CompressionConfig, DynamicsPreset, ExperimentConfig, HeteroPreset, StreamPreset, SyncPreset,
+    TrainMode,
 };
 use scadles::coordinator::{MockBackend, Trainer, TrainerOutput};
 use scadles::metrics::RoundLog;
@@ -32,6 +36,7 @@ struct Case {
     compression: Option<CompressionConfig>,
     hetero: HeteroPreset,
     dynamics: DynamicsPreset,
+    sync: SyncPreset,
 }
 
 fn cases() -> Vec<Case> {
@@ -43,6 +48,7 @@ fn cases() -> Vec<Case> {
         compression: None,
         hetero: HeteroPreset::K80Homogeneous,
         dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
     },
     Case {
         name: "truncation",
@@ -51,6 +57,7 @@ fn cases() -> Vec<Case> {
         compression: None,
         hetero: HeteroPreset::K80Homogeneous,
         dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
     },
     Case {
         name: "topk",
@@ -64,6 +71,7 @@ fn cases() -> Vec<Case> {
         }),
         hetero: HeteroPreset::K80Homogeneous,
         dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
     },
     Case {
         name: "topk+ef",
@@ -77,6 +85,7 @@ fn cases() -> Vec<Case> {
         }),
         hetero: HeteroPreset::K80Homogeneous,
         dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
     },
     Case {
         // sparse fast path at an aggressive CR: k = ceil(0.01·d) = 1 at
@@ -92,6 +101,7 @@ fn cases() -> Vec<Case> {
         }),
         hetero: HeteroPreset::K80Homogeneous,
         dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
     },
     Case {
         // CR=1.0: threshold 0, the sparse view carries the whole row
@@ -107,6 +117,7 @@ fn cases() -> Vec<Case> {
         }),
         hetero: HeteroPreset::K80Homogeneous,
         dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
     },
     Case {
         name: "ddl",
@@ -115,6 +126,7 @@ fn cases() -> Vec<Case> {
         compression: None,
         hetero: HeteroPreset::K80Homogeneous,
         dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
     },
     Case {
         name: "two-tier",
@@ -123,6 +135,7 @@ fn cases() -> Vec<Case> {
         compression: None,
         hetero: HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
         dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
     },
     Case {
         name: "lognormal+topk",
@@ -136,6 +149,7 @@ fn cases() -> Vec<Case> {
         }),
         hetero: HeteroPreset::LognormalCompute { sigma: 0.6 },
         dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
     },
     Case {
         name: "diurnal+topk",
@@ -149,6 +163,7 @@ fn cases() -> Vec<Case> {
         }),
         hetero: HeteroPreset::K80Homogeneous,
         dynamics: DynamicsPreset::Diurnal { amplitude: 0.8, period_s: 15.0 },
+        sync: SyncPreset::Bsp,
     },
     Case {
         name: "burst+churn",
@@ -160,6 +175,47 @@ fn cases() -> Vec<Case> {
             DynamicsPreset::Burst { boost: 4.0, calm: 0.25, mean_boost_s: 5.0, mean_calm_s: 10.0 },
             DynamicsPreset::Churn { fraction: 0.5, period_s: 20.0, down_fraction: 0.5 },
         ]),
+        sync: SyncPreset::Bsp,
+    },
+    Case {
+        // semi-sync commit set over a skewed cluster: the policy's
+        // completion-time ranking, laggard drops and EF absorption must
+        // all be pool-width independent
+        name: "ksync+two-tier",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Persistence,
+        compression: Some(CompressionConfig {
+            ratio: 0.1,
+            delta: 0.5,
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        }),
+        hetero: HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
+        dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::KSync { frac_pm: 750 },
+    },
+    Case {
+        // bounded staleness under a moving stream: per-device staleness
+        // counters, discounts and forced syncs layered on the diurnal
+        // rate cycle
+        name: "stale+diurnal",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Truncation,
+        compression: None,
+        hetero: HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
+        dynamics: DynamicsPreset::Diurnal { amplitude: 0.6, period_s: 20.0 },
+        sync: SyncPreset::Stale { bound: 2 },
+    },
+    Case {
+        // FedAvg-as-a-policy: the local-step round shape through the
+        // same engine, streams and report
+        name: "local:4",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Persistence,
+        compression: None,
+        hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Local { steps: 4 },
     },
     ]
 }
@@ -174,6 +230,7 @@ fn run(case: &Case, seed: u64, devices: usize, threads: usize) -> TrainerOutput 
         .buffer_policy(case.policy)
         .hetero(case.hetero)
         .dynamics(case.dynamics.clone())
+        .sync(case.sync)
         .rate_jitter(0.2)
         .eval_every(4)
         .worker_threads(threads);
@@ -211,6 +268,8 @@ fn assert_logs_identical(a: &RoundLog, b: &RoundLog, ctx: &str) {
     assert_eq!(a.straggler_cause, b.straggler_cause, "{ctx}: straggler cause");
     assert_eq!(a.active_devices, b.active_devices, "{ctx}: active devices");
     assert!(feq(a.rate_est, b.rate_est), "{ctx}: rate estimate");
+    assert_eq!(a.committed_devices, b.committed_devices, "{ctx}: committed devices");
+    assert_eq!(a.dropped_devices, b.dropped_devices, "{ctx}: dropped devices");
 }
 
 fn assert_outputs_identical(a: &TrainerOutput, b: &TrainerOutput, ctx: &str) {
@@ -253,6 +312,8 @@ fn assert_outputs_identical(a: &TrainerOutput, b: &TrainerOutput, ctx: &str) {
             "{ctx}: timeline effective rate"
         );
         assert_eq!(x.active, y.active, "{ctx}: timeline active");
+        assert_eq!(x.participated, y.participated, "{ctx}: timeline participated");
+        assert_eq!(x.staleness, y.staleness, "{ctx}: timeline staleness");
         assert_eq!(x.straggler, y.straggler, "{ctx}: timeline straggler");
         assert_eq!(x.cause, y.cause, "{ctx}: timeline cause");
     }
@@ -303,6 +364,78 @@ fn static_dynamics_reproduce_the_frozen_profile_engine_bitwise() {
         let b = run(&identity, 7, 8, threads);
         assert_outputs_identical(&a, &b, &format!("static-vs-identity threads={threads}"));
     }
+}
+
+#[test]
+fn bsp_policy_reproduces_seed_trainer_bitwise() {
+    // The refactor's acceptance regression. The pre-refactor trainer's
+    // trajectory is pinned two ways:
+    //
+    // 1. `ksync:1.0` runs the *entire* policy machinery — completion
+    //    ranking, commit-set selection, masked weight recomputation,
+    //    participation-filtered barriers and rings — at its identity
+    //    point (k = m drops nobody), and must be bitwise
+    //    indistinguishable from `bsp`, which routes the seed trainer's
+    //    exact code paths. Any behavioural drift the policy layer
+    //    introduced into the shared phases would split the two.
+    // 2. Every bsp round's timing must still satisfy the seed engine's
+    //    analytic pricing identities (clock = wait + compute + sync per
+    //    round under the homogeneous default; the same formulas the
+    //    pre-refactor loss/timing trajectory was built from).
+    let exercised = Case {
+        name: "bsp-vs-ksync1",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Truncation,
+        compression: Some(CompressionConfig {
+            ratio: 0.05,
+            delta: 0.5,
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        }),
+        hetero: HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
+        dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
+    };
+    let mut identity = exercised.clone();
+    identity.sync = SyncPreset::KSync { frac_pm: 1000 };
+    for threads in [1usize, 4, 8] {
+        let bsp = run(&exercised, 7, 8, threads);
+        let ksync1 = run(&identity, 7, 8, threads);
+        // labels differ by design (ksync:1 is tagged); everything the
+        // engine computed must not
+        assert_outputs_identical(&bsp, &ksync1, &format!("bsp-vs-ksync1 threads={threads}"));
+    }
+    // the analytic per-round pricing identity on the homogeneous default
+    let plain = Case {
+        name: "bsp-analytic",
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Persistence,
+        compression: None,
+        hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
+    };
+    let out = run(&plain, 1, 4, 1);
+    let mut prev = 0.0f64;
+    for r in out.logs.rounds() {
+        assert!(r.wall_clock_s > prev, "clock must advance every round");
+        prev = r.wall_clock_s;
+        assert_eq!(r.dropped_devices, 0, "bsp drops nobody (r{})", r.round);
+        assert_eq!(
+            r.committed_devices,
+            out.timeline
+                .rows()
+                .iter()
+                .filter(|row| row.round == r.round && row.batch > 0)
+                .count(),
+            "bsp commits every trained device (r{})",
+            r.round
+        );
+    }
+    // bsp rows are never stale and never withheld
+    assert_eq!(out.timeline.withheld_rounds(), 0);
+    assert_eq!(out.timeline.max_staleness(), 0);
+    assert!(out.timeline.rows().iter().all(|row| row.participated == (row.batch > 0)));
 }
 
 #[test]
