@@ -61,6 +61,14 @@ impl BufferTracker {
         self.peak
     }
 
+    /// Restore the tracker from a saved history (checkpointing); `peak`
+    /// is re-derived — `record` never lets it exceed the history max.
+    pub fn restore(&mut self, history: &[u64]) {
+        self.history.clear();
+        self.history.extend_from_slice(history);
+        self.peak = history.iter().copied().max().unwrap_or(0);
+    }
+
     /// Nearest-rank percentile of the per-round occupancy history
     /// (`q` in [0,1]; 0 on an empty history).
     ///

@@ -65,6 +65,20 @@ impl AdaptiveGate {
         }
     }
 
+    /// Raw `(ewma value, ewma weight, ewma updates, decisions, compressed)`
+    /// state for checkpointing.
+    pub fn raw_state(&self) -> (f64, f64, u64, u64, u64) {
+        let (v, w, u) = self.err_ewma.raw_state();
+        (v, w, u, self.decisions, self.compressed)
+    }
+
+    /// Restore the gate to an exact [`Self::raw_state`] cursor.
+    pub fn restore(&mut self, s: (f64, f64, u64, u64, u64)) {
+        self.err_ewma.restore(s.0, s.1, s.2);
+        self.decisions = s.3;
+        self.compressed = s.4;
+    }
+
     /// Fraction of decisions that chose compression so far.
     pub fn compress_fraction(&self) -> f64 {
         if self.decisions == 0 {

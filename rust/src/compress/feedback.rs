@@ -108,6 +108,19 @@ impl ErrorFeedback {
         self.residual.iter_mut().for_each(|r| *r = 0.0);
         self.residual_norm2 = 0.0;
     }
+
+    /// The raw residual vector (checkpointing).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Restore the residual to exact saved bits; `residual_norm2` is set
+    /// by the caller (it is a `pub` field) so the restored diagnostic is
+    /// bitwise what the uninterrupted run carried.
+    pub fn restore_residual(&mut self, r: &[f32]) {
+        assert_eq!(r.len(), self.residual.len(), "residual dim mismatch");
+        self.residual.copy_from_slice(r);
+    }
 }
 
 #[cfg(test)]

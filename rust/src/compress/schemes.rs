@@ -97,6 +97,21 @@ impl CompressionScheme {
             CompressionScheme::AdaptiveTopk { .. } => "adaptive-topk",
         }
     }
+
+    /// Adaptive-gate state for checkpointing (`None` for stateless schemes).
+    pub fn gate_state(&self) -> Option<(f64, f64, u64, u64, u64)> {
+        match self {
+            CompressionScheme::AdaptiveTopk { gate } => Some(gate.raw_state()),
+            _ => None,
+        }
+    }
+
+    /// Restore the adaptive gate (no-op for stateless schemes).
+    pub fn restore_gate(&mut self, s: (f64, f64, u64, u64, u64)) {
+        if let CompressionScheme::AdaptiveTopk { gate } = self {
+            gate.restore(s);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@ use anyhow::ensure;
 
 use super::cluster::ClusterProfile;
 use super::dynamics::DynamicsPreset;
+use super::faults::{AggPreset, FaultPreset};
 use super::hetero::HeteroPreset;
 use super::presets::StreamPreset;
 use super::sync::SyncPreset;
@@ -136,6 +137,14 @@ pub struct ExperimentConfig {
     /// synchronous engine bitwise; `ksync`/`stale`/`local` open the
     /// semi-synchronous design space).
     pub sync: SyncPreset,
+    /// Fault-injection scenario: deterministic per-device crash/corrupt/
+    /// stale/byzantine processes the round engine applies (`none` default
+    /// is an exact no-op — zero RNG draws, bitwise the fault-free engine).
+    pub faults: FaultPreset,
+    /// Aggregation rule: how committed rows combine into the global
+    /// gradient (`mean` default is bitwise the paper's weighted mean;
+    /// `trimmed`/`median`/`krum` are the robust alternatives).
+    pub agg: AggPreset,
     /// Per-round multiplicative jitter std on device rates (intra-device
     /// heterogeneity, §II-A; 0 = constant rates).
     pub rate_jitter: f64,
@@ -195,6 +204,8 @@ impl ExperimentConfig {
         self.hetero.validate()?;
         self.dynamics.validate()?;
         self.sync.validate()?;
+        self.faults.validate()?;
+        self.agg.validate()?;
         if let Some(c) = &self.compression {
             c.validate()?;
         }
@@ -234,6 +245,8 @@ impl ExperimentBuilder {
                 hetero: HeteroPreset::K80Homogeneous,
                 dynamics: DynamicsPreset::Static,
                 sync: SyncPreset::Bsp,
+                faults: FaultPreset::None,
+                agg: AggPreset::Mean,
                 rate_jitter: 0.0,
                 label_map: LabelMap::Iid,
                 mode: TrainMode::Scadles,
@@ -296,6 +309,16 @@ impl ExperimentBuilder {
     /// Synchronization policy (see [`SyncPreset`]).
     pub fn sync(mut self, s: SyncPreset) -> Self {
         self.cfg.sync = s;
+        self
+    }
+    /// Fault-injection scenario (see [`FaultPreset`]).
+    pub fn faults(mut self, f: FaultPreset) -> Self {
+        self.cfg.faults = f;
+        self
+    }
+    /// Aggregation rule (see [`AggPreset`]).
+    pub fn agg(mut self, a: AggPreset) -> Self {
+        self.cfg.agg = a;
         self
     }
     pub fn rate_jitter(mut self, j: f64) -> Self {
@@ -473,6 +496,28 @@ mod tests {
         // invalid sync presets are rejected at build time
         let mut bad = d.clone();
         bad.sync = SyncPreset::Local { steps: 0 };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn fault_and_agg_presets_flow_through_builder_and_validate() {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .faults("byzantine:0.25".parse().unwrap())
+            .agg("krum:1".parse().unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(cfg.faults, FaultPreset::byzantine(0.25));
+        assert_eq!(cfg.agg, AggPreset::Krum { f: 1 });
+        // defaults stay the bitwise no-op pair
+        let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
+        assert!(d.faults.is_none());
+        assert!(d.agg.is_mean());
+        // invalid presets are rejected at build time
+        let mut bad = d.clone();
+        bad.agg = AggPreset::TrimmedMean { beta_pm: 900 };
+        assert!(bad.validate().is_err());
+        let mut bad = d;
+        bad.faults = FaultPreset::Stale { frac_pm: 500, lag: 0 };
         assert!(bad.validate().is_err());
     }
 

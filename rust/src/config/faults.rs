@@ -1,0 +1,476 @@
+//! Fault-injection and robust-aggregation presets.
+//!
+//! The paper's churn model assumes devices leave *cleanly between*
+//! rounds; real edge fleets crash mid-round, deliver stale or corrupt
+//! gradients, and lie. A [`FaultPreset`] names a deterministic fault
+//! process the round engine injects (per-device Pcg64 substreams, like
+//! the dynamics layer), and an [`AggPreset`] names the aggregation rule
+//! that defends against it:
+//!
+//! * `none` — no faults (the default; the injection layer is an exact
+//!   no-op: zero RNG draws, zero extra work).
+//! * `crash[:frac[:phase]]` — each round each device crashes with
+//!   probability `frac`. Phase `sync` (default) kills it after local
+//!   compute + compression but before synchronization: the gradient is
+//!   *lost* (no error-feedback absorption — the device died holding it).
+//!   Phase `train` kills it before training: the polled batch is
+//!   discarded with the device.
+//! * `corrupt[:frac[:scale]]` — with probability `frac` the device's
+//!   outgoing gradient row is scaled by `scale` (a fault the engine does
+//!   **not** flag to the aggregator — defending is the aggregator's job).
+//! * `stale[:frac[:lag]]` — with probability `frac` the device replays
+//!   the row it sent `lag` rounds ago instead of this round's.
+//! * `byzantine[:frac]` — with probability `frac` the device sends an
+//!   adversarial row: its true gradient sign-flipped and amplified
+//!   ([`BYZANTINE_SCALE`]×), the classic ascent attack.
+//!
+//! CLI syntax (`repro train --faults ... --agg ...`): composable with
+//! `--hetero`, `--dynamics` and `--sync`.
+
+use anyhow::{bail, ensure};
+
+use crate::Result;
+
+/// Amplification applied to a byzantine device's sign-flipped gradient.
+pub const BYZANTINE_SCALE: f32 = -10.0;
+
+/// When a `crash` fault kills the device within the round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CrashPhase {
+    /// After compute + compression, before synchronization: the gradient
+    /// is computed, then lost.
+    #[default]
+    Sync,
+    /// Before training: the polled batch dies with the device.
+    Train,
+}
+
+impl CrashPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CrashPhase::Sync => "sync",
+            CrashPhase::Train => "train",
+        }
+    }
+}
+
+/// A named fault process for the round engine.
+///
+/// Probabilities and scales are stored in per-mille so the preset stays
+/// `Eq`/hashable (same convention as [`super::SyncPreset`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum FaultPreset {
+    /// No faults (exact no-op).
+    #[default]
+    None,
+    /// Mid-round device crashes.
+    Crash { frac_pm: u32, phase: CrashPhase },
+    /// Scaled (garbage) gradient rows.
+    Corrupt { frac_pm: u32, scale_pm: u32 },
+    /// Replayed rows from `lag` rounds ago.
+    Stale { frac_pm: u32, lag: u32 },
+    /// Sign-flipped, amplified adversarial rows.
+    Byzantine { frac_pm: u32 },
+}
+
+impl FaultPreset {
+    /// Build a crash preset from a probability in `(0, 1]`.
+    pub fn crash(frac: f64, phase: CrashPhase) -> Self {
+        FaultPreset::Crash { frac_pm: to_pm(frac), phase }
+    }
+
+    /// Build a corrupt preset from a probability and a scale factor.
+    pub fn corrupt(frac: f64, scale: f64) -> Self {
+        FaultPreset::Corrupt { frac_pm: to_pm(frac), scale_pm: to_pm(scale) }
+    }
+
+    /// Build a stale-replay preset.
+    pub fn stale(frac: f64, lag: u32) -> Self {
+        FaultPreset::Stale { frac_pm: to_pm(frac), lag }
+    }
+
+    /// Build a byzantine preset from a probability in `(0, 1]`.
+    pub fn byzantine(frac: f64) -> Self {
+        FaultPreset::Byzantine { frac_pm: to_pm(frac) }
+    }
+
+    /// Per-round fault probability as a float (0 for `none`).
+    pub fn frac(&self) -> f64 {
+        match *self {
+            FaultPreset::None => 0.0,
+            FaultPreset::Crash { frac_pm, .. }
+            | FaultPreset::Corrupt { frac_pm, .. }
+            | FaultPreset::Stale { frac_pm, .. }
+            | FaultPreset::Byzantine { frac_pm } => frac_pm as f64 / 1000.0,
+        }
+    }
+
+    /// Corrupt-scale factor (1 for other presets).
+    pub fn scale(&self) -> f64 {
+        match *self {
+            FaultPreset::Corrupt { scale_pm, .. } => scale_pm as f64 / 1000.0,
+            _ => 1.0,
+        }
+    }
+
+    /// Stale-replay lag in rounds (0 for other presets).
+    pub fn lag(&self) -> u32 {
+        match *self {
+            FaultPreset::Stale { lag, .. } => lag,
+            _ => 0,
+        }
+    }
+
+    /// Fault family name (the CLI spelling, without parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultPreset::None => "none",
+            FaultPreset::Crash { .. } => "crash",
+            FaultPreset::Corrupt { .. } => "corrupt",
+            FaultPreset::Stale { .. } => "stale",
+            FaultPreset::Byzantine { .. } => "byzantine",
+        }
+    }
+
+    /// Whether this is the fault-free default (the exact no-op path).
+    pub fn is_none(&self) -> bool {
+        matches!(self, FaultPreset::None)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let frac_ok = |frac_pm: u32| -> Result<()> {
+            ensure!(
+                frac_pm >= 1 && frac_pm <= 1000,
+                "fault fraction must be in (0, 1]"
+            );
+            Ok(())
+        };
+        match *self {
+            FaultPreset::None => {}
+            FaultPreset::Crash { frac_pm, .. } => frac_ok(frac_pm)?,
+            FaultPreset::Corrupt { frac_pm, scale_pm } => {
+                frac_ok(frac_pm)?;
+                ensure!(scale_pm >= 1, "corrupt scale must be > 0");
+            }
+            FaultPreset::Stale { frac_pm, lag } => {
+                frac_ok(frac_pm)?;
+                ensure!(lag >= 1, "stale lag must be ≥ 1 round");
+            }
+            FaultPreset::Byzantine { frac_pm } => frac_ok(frac_pm)?,
+        }
+        Ok(())
+    }
+}
+
+fn to_pm(x: f64) -> u32 {
+    (x * 1000.0).round() as u32
+}
+
+impl std::fmt::Display for FaultPreset {
+    /// The parseable spelling: `name[:param...]` — `to_string().parse()`
+    /// restores the preset (default crash phase omitted).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            FaultPreset::None => f.write_str(self.name()),
+            FaultPreset::Crash { phase, .. } => {
+                write!(f, "{}:{}", self.name(), self.frac())?;
+                if phase != CrashPhase::Sync {
+                    write!(f, ":{}", phase.name())?;
+                }
+                Ok(())
+            }
+            FaultPreset::Corrupt { .. } => {
+                write!(f, "{}:{}:{}", self.name(), self.frac(), self.scale())
+            }
+            FaultPreset::Stale { lag, .. } => {
+                write!(f, "{}:{}:{lag}", self.name(), self.frac())
+            }
+            FaultPreset::Byzantine { .. } => write!(f, "{}:{}", self.name(), self.frac()),
+        }
+    }
+}
+
+impl std::str::FromStr for FaultPreset {
+    type Err = anyhow::Error;
+
+    /// Parse `name[:frac[:extra]]` — e.g. `none`, `crash:0.25`,
+    /// `crash:0.25:train`, `corrupt:0.25:100`, `stale:0.5:2`,
+    /// `byzantine:0.25`. Omitted parameters take the sweep defaults.
+    fn from_str(s: &str) -> Result<Self> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or_default();
+        let args: Vec<&str> = parts.collect();
+        ensure!(args.len() <= 2, "too many ':' parameters in fault preset {s:?}");
+        let float = |idx: usize, default: f64| -> Result<f64> {
+            match args.get(idx) {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --faults parameter {a:?}: {e}")),
+            }
+        };
+        let int = |idx: usize, default: u32| -> Result<u32> {
+            match args.get(idx) {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --faults parameter {a:?}: {e}")),
+            }
+        };
+        let preset = match name.to_lowercase().as_str() {
+            "none" => {
+                ensure!(args.is_empty(), "none takes no parameters");
+                FaultPreset::None
+            }
+            "crash" => {
+                let phase = match args.get(1) {
+                    None => CrashPhase::Sync,
+                    Some(&"sync") => CrashPhase::Sync,
+                    Some(&"train") => CrashPhase::Train,
+                    Some(other) => bail!("unknown crash phase {other:?} (sync|train)"),
+                };
+                FaultPreset::crash(float(0, 0.25)?, phase)
+            }
+            "corrupt" => FaultPreset::corrupt(float(0, 0.25)?, float(1, 100.0)?),
+            "stale" => FaultPreset::stale(float(0, 0.25)?, int(1, 2)?),
+            "byzantine" | "byz" => {
+                ensure!(args.len() <= 1, "byzantine takes one parameter");
+                FaultPreset::byzantine(float(0, 0.25)?)
+            }
+            other => bail!(
+                "unknown fault preset {other:?} \
+                 (none|crash[:frac[:phase]]|corrupt[:frac[:scale]]|\
+                 stale[:frac[:lag]]|byzantine[:frac])"
+            ),
+        };
+        preset.validate()?;
+        Ok(preset)
+    }
+}
+
+/// A named aggregation rule for the round engine.
+///
+/// `mean` is the paper's sample-weighted mean (Eqn. 4), bitwise-pinned
+/// to the pre-fault engine; the robust rules trade exactness for
+/// resistance to garbage rows (see `coordinator::Aggregator`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum AggPreset {
+    /// Sample-weighted mean (the default; bitwise the pre-fault path).
+    #[default]
+    Mean,
+    /// Coordinate-wise β-trimmed mean over participating rows.
+    TrimmedMean { beta_pm: u32 },
+    /// Coordinate-wise median over participating rows.
+    Median,
+    /// Krum: the single row closest to its n−f−2 nearest neighbours.
+    Krum { f: u32 },
+}
+
+impl AggPreset {
+    /// Build a trimmed-mean preset from a trim fraction in `(0, 0.5)`.
+    pub fn trimmed(beta: f64) -> Self {
+        AggPreset::TrimmedMean { beta_pm: to_pm(beta) }
+    }
+
+    /// The trim fraction as a float (0 for other presets).
+    pub fn beta(&self) -> f64 {
+        match self {
+            AggPreset::TrimmedMean { beta_pm } => *beta_pm as f64 / 1000.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Aggregator family name (the CLI spelling, without parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggPreset::Mean => "mean",
+            AggPreset::TrimmedMean { .. } => "trimmed",
+            AggPreset::Median => "median",
+            AggPreset::Krum { .. } => "krum",
+        }
+    }
+
+    /// Whether this is the (bitwise pre-refactor) weighted-mean default.
+    pub fn is_mean(&self) -> bool {
+        matches!(self, AggPreset::Mean)
+    }
+
+    /// The aggregators the fault harness sweeps (`repro exp faults`).
+    pub fn sweep() -> [AggPreset; 4] {
+        [
+            AggPreset::Mean,
+            AggPreset::trimmed(0.25),
+            AggPreset::Median,
+            AggPreset::Krum { f: 1 },
+        ]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            AggPreset::Mean | AggPreset::Median => {}
+            AggPreset::TrimmedMean { beta_pm } => {
+                ensure!(
+                    beta_pm >= 1 && beta_pm < 500,
+                    "trimmed-mean beta must be in (0, 0.5)"
+                );
+            }
+            AggPreset::Krum { f } => {
+                ensure!(f >= 1, "krum tolerance f must be ≥ 1");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for AggPreset {
+    /// The parseable spelling: `name[:param]`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            AggPreset::Mean | AggPreset::Median => f.write_str(self.name()),
+            AggPreset::TrimmedMean { .. } => write!(f, "{}:{}", self.name(), self.beta()),
+            AggPreset::Krum { f: t } => write!(f, "{}:{t}", self.name()),
+        }
+    }
+}
+
+impl std::str::FromStr for AggPreset {
+    type Err = anyhow::Error;
+
+    /// Parse `name[:param]` — e.g. `mean`, `trimmed:0.25`, `median`,
+    /// `krum:1`.
+    fn from_str(s: &str) -> Result<Self> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or_default();
+        let args: Vec<&str> = parts.collect();
+        ensure!(args.len() <= 1, "too many ':' parameters in agg preset {s:?}");
+        let float = |default: f64| -> Result<f64> {
+            match args.first() {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --agg parameter {a:?}: {e}")),
+            }
+        };
+        let int = |default: u32| -> Result<u32> {
+            match args.first() {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --agg parameter {a:?}: {e}")),
+            }
+        };
+        let preset = match name.to_lowercase().as_str() {
+            "mean" | "wmean" | "weighted-mean" => {
+                ensure!(args.is_empty(), "mean takes no parameters");
+                AggPreset::Mean
+            }
+            "trimmed" | "trimmed-mean" | "trim" => AggPreset::trimmed(float(0.25)?),
+            "median" | "coordinate-median" => {
+                ensure!(args.is_empty(), "median takes no parameters");
+                AggPreset::Median
+            }
+            "krum" => AggPreset::Krum { f: int(1)? },
+            other => bail!(
+                "unknown agg preset {other:?} \
+                 (mean|trimmed[:beta]|median|krum[:f])"
+            ),
+        };
+        preset.validate()?;
+        Ok(preset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fault_spellings() {
+        assert_eq!("none".parse::<FaultPreset>().unwrap(), FaultPreset::None);
+        assert_eq!(
+            "crash:0.25".parse::<FaultPreset>().unwrap(),
+            FaultPreset::Crash { frac_pm: 250, phase: CrashPhase::Sync }
+        );
+        assert_eq!(
+            "crash:0.25:train".parse::<FaultPreset>().unwrap(),
+            FaultPreset::Crash { frac_pm: 250, phase: CrashPhase::Train }
+        );
+        assert_eq!(
+            "corrupt:0.5:10".parse::<FaultPreset>().unwrap(),
+            FaultPreset::Corrupt { frac_pm: 500, scale_pm: 10_000 }
+        );
+        assert_eq!(
+            "stale:0.5:3".parse::<FaultPreset>().unwrap(),
+            FaultPreset::Stale { frac_pm: 500, lag: 3 }
+        );
+        assert_eq!(
+            "byzantine:0.25".parse::<FaultPreset>().unwrap(),
+            FaultPreset::Byzantine { frac_pm: 250 }
+        );
+        // defaults fill in
+        assert_eq!("crash".parse::<FaultPreset>().unwrap(), FaultPreset::crash(0.25, CrashPhase::Sync));
+        assert_eq!("corrupt".parse::<FaultPreset>().unwrap(), FaultPreset::corrupt(0.25, 100.0));
+        assert_eq!("stale".parse::<FaultPreset>().unwrap(), FaultPreset::stale(0.25, 2));
+        assert_eq!("byz".parse::<FaultPreset>().unwrap(), FaultPreset::byzantine(0.25));
+        // rejections
+        assert!("none:1".parse::<FaultPreset>().is_err());
+        assert!("crash:0".parse::<FaultPreset>().is_err());
+        assert!("crash:1.5".parse::<FaultPreset>().is_err());
+        assert!("crash:0.5:later".parse::<FaultPreset>().is_err());
+        assert!("stale:0.5:0".parse::<FaultPreset>().is_err());
+        assert!("byzantine:0.5:2".parse::<FaultPreset>().is_err());
+        assert!("meteor".parse::<FaultPreset>().is_err());
+        assert!("corrupt:0.5:10:9".parse::<FaultPreset>().is_err());
+    }
+
+    #[test]
+    fn fault_display_round_trips() {
+        for p in [
+            FaultPreset::None,
+            FaultPreset::crash(0.25, CrashPhase::Sync),
+            FaultPreset::crash(0.5, CrashPhase::Train),
+            FaultPreset::corrupt(0.25, 100.0),
+            FaultPreset::stale(0.5, 2),
+            FaultPreset::byzantine(0.125),
+        ] {
+            let back: FaultPreset = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{p}");
+        }
+        assert_eq!(FaultPreset::crash(0.25, CrashPhase::Sync).to_string(), "crash:0.25");
+        assert_eq!(FaultPreset::byzantine(0.25).to_string(), "byzantine:0.25");
+    }
+
+    #[test]
+    fn parses_agg_spellings() {
+        assert_eq!("mean".parse::<AggPreset>().unwrap(), AggPreset::Mean);
+        assert_eq!(
+            "trimmed:0.2".parse::<AggPreset>().unwrap(),
+            AggPreset::TrimmedMean { beta_pm: 200 }
+        );
+        assert_eq!("trimmed-mean".parse::<AggPreset>().unwrap(), AggPreset::trimmed(0.25));
+        assert_eq!("median".parse::<AggPreset>().unwrap(), AggPreset::Median);
+        assert_eq!("krum:2".parse::<AggPreset>().unwrap(), AggPreset::Krum { f: 2 });
+        assert_eq!("krum".parse::<AggPreset>().unwrap(), AggPreset::Krum { f: 1 });
+        assert!("mean:1".parse::<AggPreset>().is_err());
+        assert!("trimmed:0.5".parse::<AggPreset>().is_err()); // β < 0.5 required
+        assert!("trimmed:0".parse::<AggPreset>().is_err());
+        assert!("krum:0".parse::<AggPreset>().is_err());
+        assert!("mode".parse::<AggPreset>().is_err());
+    }
+
+    #[test]
+    fn agg_display_round_trips() {
+        for p in AggPreset::sweep() {
+            let back: AggPreset = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{p}");
+        }
+        assert_eq!(AggPreset::trimmed(0.25).to_string(), "trimmed:0.25");
+        assert_eq!(AggPreset::Krum { f: 1 }.to_string(), "krum:1");
+    }
+
+    #[test]
+    fn defaults_are_the_no_op_pair() {
+        assert!(FaultPreset::default().is_none());
+        assert!(AggPreset::default().is_mean());
+    }
+}

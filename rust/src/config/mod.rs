@@ -5,6 +5,7 @@
 pub mod cluster;
 pub mod dynamics;
 pub mod experiment;
+pub mod faults;
 pub mod hetero;
 pub mod presets;
 pub mod sync;
@@ -12,6 +13,7 @@ pub mod sync;
 pub use cluster::{ClusterProfile, DeviceProfile, VirtualCost};
 pub use dynamics::DynamicsPreset;
 pub use experiment::{CompressionConfig, ExperimentConfig, InjectionConfig, TrainMode};
+pub use faults::{AggPreset, CrashPhase, FaultPreset};
 pub use hetero::HeteroPreset;
 pub use presets::StreamPreset;
 pub use sync::SyncPreset;

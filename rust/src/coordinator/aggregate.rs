@@ -273,6 +273,280 @@ where
     }
 }
 
+/// Pluggable round-level combine rule: turns the per-device row views
+/// into the single global gradient.
+///
+/// [`WeightedMean`] is the paper's Eqn. 4b and delegates verbatim to
+/// [`aggregate_rows_into`] — bitwise the historical path, sparse fast
+/// path and chunked threading included. The robust variants defend
+/// against faulty rows (see [`crate::faults`]) at the price of the
+/// sample weighting: every participating row (weight > 0) counts as one
+/// vote, because a byzantine device would otherwise just claim a huge
+/// batch. All variants keep the engine's allocation-free contract —
+/// scratch is owned by the aggregator and reused across rounds — and
+/// never read the view of a zero-weight device.
+pub trait Aggregator: Send {
+    /// Short label for run banners and CSVs (`mean`, `trimmed:0.25`, …).
+    fn label(&self) -> String;
+
+    /// Combine the participating rows into `out` (zeroed first).
+    /// `weights[i] == 0.0` marks a sat-out device whose view must never
+    /// be read; `rows(i)` is only called for participants.
+    fn aggregate<'a>(
+        &mut self,
+        out: &mut [f32],
+        weights: &[f32],
+        rows: &(dyn Fn(usize) -> RowView<'a> + Sync),
+        threads: usize,
+    );
+}
+
+/// Build the aggregator named by an [`crate::config::AggPreset`].
+pub fn aggregator_from_preset(preset: &crate::config::AggPreset) -> Box<dyn Aggregator> {
+    use crate::config::AggPreset;
+    match preset {
+        AggPreset::Mean => Box::new(WeightedMean),
+        AggPreset::TrimmedMean { .. } => Box::new(TrimmedMean::new(preset.beta())),
+        AggPreset::Median => Box::new(CoordinateMedian::default()),
+        AggPreset::Krum { f } => Box::new(Krum::new(*f as usize)),
+    }
+}
+
+/// The paper's sample-weighted mean (Eqn. 4b): a zero-cost shim over
+/// [`aggregate_rows_into`], so `--agg mean` is bitwise the pre-trait
+/// engine at every pool width.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WeightedMean;
+
+impl Aggregator for WeightedMean {
+    fn label(&self) -> String {
+        "mean".into()
+    }
+
+    fn aggregate<'a>(
+        &mut self,
+        out: &mut [f32],
+        weights: &[f32],
+        rows: &(dyn Fn(usize) -> RowView<'a> + Sync),
+        threads: usize,
+    ) {
+        aggregate_rows_into(out, weights, |i| rows(i), threads);
+    }
+}
+
+/// Participating rows densified `m × d` in device order — the shared
+/// scratch of the robust aggregators, reused across rounds.
+#[derive(Debug, Default)]
+struct DenseScratch {
+    rows: Vec<f32>,
+    m: usize,
+}
+
+impl DenseScratch {
+    fn fill<'a>(
+        &mut self,
+        weights: &[f32],
+        rows: &(dyn Fn(usize) -> RowView<'a> + Sync),
+        d: usize,
+    ) {
+        self.m = 0;
+        self.rows.clear();
+        for (i, &w) in weights.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let start = self.m * d;
+            self.rows.resize(start + d, 0.0);
+            let dst = &mut self.rows[start..start + d];
+            match rows(i) {
+                RowView::Dense(r) => dst.copy_from_slice(r),
+                RowView::Sparse(s) => {
+                    for (&j, &v) in s.idx.iter().zip(&s.val) {
+                        dst[j as usize] = v;
+                    }
+                }
+            }
+            self.m += 1;
+        }
+    }
+
+    fn row(&self, k: usize, d: usize) -> &[f32] {
+        &self.rows[k * d..(k + 1) * d]
+    }
+}
+
+/// β-trimmed coordinate-wise mean: per coordinate, sort the `m`
+/// participating values, drop `⌊β·m⌋` from each end (clamped so at least
+/// one value survives), average the rest in f64. Tolerates up to
+/// `⌊β·m⌋` arbitrary rows per coordinate.
+#[derive(Debug)]
+pub struct TrimmedMean {
+    beta: f64,
+    scratch: DenseScratch,
+    col: Vec<f32>,
+}
+
+impl TrimmedMean {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..0.5).contains(&beta), "trim fraction must be in [0, 0.5)");
+        Self { beta, scratch: DenseScratch::default(), col: Vec::new() }
+    }
+}
+
+impl Aggregator for TrimmedMean {
+    fn label(&self) -> String {
+        format!("trimmed:{}", self.beta)
+    }
+
+    fn aggregate<'a>(
+        &mut self,
+        out: &mut [f32],
+        weights: &[f32],
+        rows: &(dyn Fn(usize) -> RowView<'a> + Sync),
+        _threads: usize,
+    ) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let d = out.len();
+        self.scratch.fill(weights, rows, d);
+        let m = self.scratch.m;
+        if m == 0 {
+            return;
+        }
+        let trim = ((self.beta * m as f64).floor() as usize).min((m - 1) / 2);
+        let keep = m - 2 * trim;
+        for (j, o) in out.iter_mut().enumerate() {
+            self.col.clear();
+            self.col.extend((0..m).map(|k| self.scratch.rows[k * d + j]));
+            self.col.sort_by(f32::total_cmp);
+            let sum: f64 = self.col[trim..trim + keep].iter().map(|&v| v as f64).sum();
+            *o = (sum / keep as f64) as f32;
+        }
+    }
+}
+
+/// Coordinate-wise median over participating rows (even counts average
+/// the two central values). The β→0.5 limit of the trimmed mean; the
+/// strongest per-coordinate breakdown point (< m/2 arbitrary rows).
+#[derive(Debug, Default)]
+pub struct CoordinateMedian {
+    scratch: DenseScratch,
+    col: Vec<f32>,
+}
+
+impl Aggregator for CoordinateMedian {
+    fn label(&self) -> String {
+        "median".into()
+    }
+
+    fn aggregate<'a>(
+        &mut self,
+        out: &mut [f32],
+        weights: &[f32],
+        rows: &(dyn Fn(usize) -> RowView<'a> + Sync),
+        _threads: usize,
+    ) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let d = out.len();
+        self.scratch.fill(weights, rows, d);
+        let m = self.scratch.m;
+        if m == 0 {
+            return;
+        }
+        for (j, o) in out.iter_mut().enumerate() {
+            self.col.clear();
+            self.col.extend((0..m).map(|k| self.scratch.rows[k * d + j]));
+            self.col.sort_by(f32::total_cmp);
+            *o = if m % 2 == 1 {
+                self.col[m / 2]
+            } else {
+                ((self.col[m / 2 - 1] as f64 + self.col[m / 2] as f64) / 2.0) as f32
+            };
+        }
+    }
+}
+
+/// Krum (Blanchard et al., NeurIPS 2017): score every participating row
+/// by the summed squared distance to its `m − f − 2` nearest peers and
+/// commit the single lowest-scoring row verbatim. Selection, not
+/// averaging — a byzantine row can only win by sitting inside the honest
+/// cluster, where it is harmless. Tolerates `f` byzantine rows when
+/// `m ≥ 2f + 3`; with fewer rows the neighbour count clamps to
+/// `[1, m − 1]` and the guarantee degrades gracefully.
+#[derive(Debug)]
+pub struct Krum {
+    f: usize,
+    scratch: DenseScratch,
+    dist: Vec<f64>,
+    nearest: Vec<f64>,
+}
+
+impl Krum {
+    pub fn new(f: usize) -> Self {
+        Self { f, scratch: DenseScratch::default(), dist: Vec::new(), nearest: Vec::new() }
+    }
+}
+
+impl Aggregator for Krum {
+    fn label(&self) -> String {
+        format!("krum:{}", self.f)
+    }
+
+    fn aggregate<'a>(
+        &mut self,
+        out: &mut [f32],
+        weights: &[f32],
+        rows: &(dyn Fn(usize) -> RowView<'a> + Sync),
+        _threads: usize,
+    ) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let d = out.len();
+        self.scratch.fill(weights, rows, d);
+        let m = self.scratch.m;
+        if m == 0 {
+            return;
+        }
+        if m == 1 {
+            out.copy_from_slice(self.scratch.row(0, d));
+            return;
+        }
+        self.dist.clear();
+        self.dist.resize(m * m, 0.0);
+        for a in 0..m {
+            for b in (a + 1)..m {
+                let s: f64 = self
+                    .scratch
+                    .row(a, d)
+                    .iter()
+                    .zip(self.scratch.row(b, d))
+                    .map(|(&x, &y)| {
+                        let e = x as f64 - y as f64;
+                        e * e
+                    })
+                    .sum();
+                self.dist[a * m + b] = s;
+                self.dist[b * m + a] = s;
+            }
+        }
+        let k = m.saturating_sub(self.f + 2).clamp(1, m - 1);
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for a in 0..m {
+            self.nearest.clear();
+            self.nearest
+                .extend((0..m).filter(|&b| b != a).map(|b| self.dist[a * m + b]));
+            self.nearest.sort_by(f64::total_cmp);
+            let score: f64 = self.nearest[..k].iter().sum();
+            // strict < keeps the lowest device index on ties (and never
+            // selects a NaN score unless every score is NaN)
+            if score < best_score {
+                best_score = score;
+                best = a;
+            }
+        }
+        out.copy_from_slice(self.scratch.row(best, d));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -452,5 +726,141 @@ mod tests {
         for (x, y) in expect.iter().zip(&out) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn weighted_mean_aggregator_is_bitwise_the_rows_into_path() {
+        let d = 96;
+        let (dense, rows) = masked_matrix(4, d, 0.3, 21);
+        let weights = [0.4f32, 0.0, 0.35, 0.25];
+        for threads in [1usize, 4] {
+            let mut direct = vec![0f32; d];
+            aggregate_rows_into(&mut direct, &weights, |i| RowView::Sparse(&rows[i]), threads);
+            let mut via_trait = vec![7f32; d];
+            WeightedMean.aggregate(
+                &mut via_trait,
+                &weights,
+                &|i| RowView::Sparse(&rows[i]),
+                threads,
+            );
+            for (x, y) in direct.iter().zip(&via_trait) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+        }
+        let _ = dense;
+    }
+
+    #[test]
+    fn trimmed_mean_survives_one_outlier_per_end() {
+        // 5 rows: 4 honest near 1.0, one byzantine at 1e6
+        let rows = [
+            vec![1.0f32, -1.0],
+            vec![1.1, -1.1],
+            vec![0.9, -0.9],
+            vec![1.0, -1.0],
+            vec![1e6, -1e6],
+        ];
+        let weights = [0.2f32; 5];
+        let mut agg = TrimmedMean::new(0.25); // trim ⌊0.25·5⌋ = 1 each end
+        let mut out = vec![0f32; 2];
+        agg.aggregate(&mut out, &weights, &|i| RowView::Dense(&rows[i]), 1);
+        assert!((out[0] - 1.0).abs() < 0.1, "{out:?}");
+        assert!((out[1] + 1.0).abs() < 0.1, "{out:?}");
+    }
+
+    #[test]
+    fn coordinate_median_ignores_a_minority_of_garbage() {
+        let rows = [
+            vec![2.0f32],
+            vec![f32::NAN],
+            vec![3.0],
+            vec![1e9],
+            vec![1.0],
+        ];
+        let weights = [0.2f32; 5];
+        let mut agg = CoordinateMedian::default();
+        let mut out = vec![0f32; 1];
+        agg.aggregate(&mut out, &weights, &|i| RowView::Dense(&rows[i]), 1);
+        // total_cmp sorts NaN last: median of {1, 2, 3, 1e9, NaN} is 3
+        assert_eq!(out[0], 3.0);
+        // even count averages the two central values
+        let weights4 = [0.25f32, 0.25, 0.25, 0.25, 0.0];
+        agg.aggregate(&mut out, &weights4, &|i| RowView::Dense(&rows[i]), 1);
+        assert!(out[0] > 2.0 && out[0] < 1e9, "{out:?}");
+    }
+
+    #[test]
+    fn krum_commits_an_honest_row_under_byzantine_attack() {
+        let mut rng = Pcg64::new(77, 0);
+        let d = 32;
+        let honest: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..d).map(|_| rng.normal() as f32 * 0.01 + 1.0).collect())
+            .collect();
+        let mut rows = honest.clone();
+        rows.push((0..d).map(|_| -50.0).collect()); // the attacker
+        let weights = [0.2f32; 5];
+        let mut agg = Krum::new(1);
+        let mut out = vec![0f32; d];
+        agg.aggregate(&mut out, &weights, &|i| RowView::Dense(&rows[i]), 1);
+        // the committed row is one of the honest rows, verbatim
+        assert!(
+            honest.iter().any(|h| h == &out),
+            "krum picked the attacker: {:?}",
+            &out[..4]
+        );
+    }
+
+    #[test]
+    fn robust_aggregators_densify_sparse_views() {
+        let d = 64;
+        let (dense, rows) = masked_matrix(3, d, 0.2, 31);
+        let weights = [1.0f32 / 3.0; 3];
+        // krum over identical inputs presented sparse vs dense picks the
+        // same row
+        let mut k = Krum::new(1);
+        let mut from_sparse = vec![0f32; d];
+        k.aggregate(&mut from_sparse, &weights, &|i| RowView::Sparse(&rows[i]), 1);
+        let mut from_dense = vec![0f32; d];
+        k.aggregate(
+            &mut from_dense,
+            &weights,
+            &|i| RowView::Dense(&dense[i * d..(i + 1) * d]),
+            1,
+        );
+        assert_eq!(from_sparse, from_dense);
+    }
+
+    #[test]
+    fn robust_aggregators_handle_degenerate_rounds() {
+        let row = vec![1.0f32, 2.0];
+        let aggs: Vec<Box<dyn Aggregator>> = vec![
+            Box::new(TrimmedMean::new(0.25)),
+            Box::new(CoordinateMedian::default()),
+            Box::new(Krum::new(1)),
+        ];
+        for mut agg in aggs {
+            // no participants → zeroed output
+            let mut out = vec![9f32; 2];
+            agg.aggregate(&mut out, &[0.0, 0.0], &|_| RowView::Dense(&row), 1);
+            assert_eq!(out, vec![0.0, 0.0], "{}", agg.label());
+            // single participant → its row verbatim
+            agg.aggregate(&mut out, &[1.0, 0.0], &|_| RowView::Dense(&row), 1);
+            assert_eq!(out, row, "{}", agg.label());
+        }
+    }
+
+    #[test]
+    fn aggregator_from_preset_builds_the_named_variant() {
+        use crate::config::AggPreset;
+        assert_eq!(aggregator_from_preset(&AggPreset::Mean).label(), "mean");
+        assert_eq!(
+            aggregator_from_preset(&AggPreset::trimmed(0.25)).label(),
+            "trimmed:0.25"
+        );
+        assert_eq!(aggregator_from_preset(&AggPreset::Median).label(), "median");
+        assert_eq!(
+            aggregator_from_preset(&AggPreset::Krum { f: 2 }).label(),
+            "krum:2"
+        );
     }
 }

@@ -1,0 +1,597 @@
+//! Checkpoint encoding: kill a run at round `r`, restore, and the
+//! remaining rounds replay bitwise.
+//!
+//! The format is a deliberately boring length-checked byte stream — no
+//! serde, no schema evolution, no compression. Every scalar is
+//! little-endian; floats are stored as their IEEE-754 bit patterns so a
+//! round-trip is exact (including NaNs, which the logs use for
+//! "not evaluated this round"). The file is:
+//!
+//! ```text
+//! magic   [u8; 16]   b"SCADLES-CKPT-v1\n"
+//! config  u64        FNV-1a fingerprint of the run's ExperimentConfig
+//! len     u64        payload byte length
+//! payload [u8; len]  engine state (see RoundEngine::save_checkpoint)
+//! ```
+//!
+//! The fingerprint pins a checkpoint to the exact configuration that
+//! produced it: restoring state into an engine built from a *different*
+//! config would silently diverge (different stream rates, policies,
+//! fault schedules), so a mismatch is a hard error, not a warning.
+//!
+//! [`ByteReader`] is defensive end to end: every read is bounds-checked
+//! and every enum tag validated, so a truncated or corrupted file
+//! surfaces as a descriptive [`anyhow`] error instead of a panic or —
+//! worse — a silently wrong restore.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::faults::FaultCause;
+use crate::metrics::{DeviceRoundRow, RoundLog, StragglerCause};
+use crate::stream::{PartitionState, Record, Retention};
+use crate::Result;
+
+/// File magic: format name + version, padded to 16 bytes.
+pub const MAGIC: [u8; 16] = *b"SCADLES-CKPT-v1\n";
+
+/// FNV-1a over the config's debug rendering: cheap, dependency-free,
+/// and sensitive to every field — which is exactly the contract (any
+/// config drift invalidates the checkpoint).
+pub fn config_fingerprint(cfg_debug: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in cfg_debug.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only little-endian encoder for the checkpoint payload.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn u64s(&mut self, v: &[u64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+}
+
+/// Bounds-checked little-endian decoder; every failure is a descriptive
+/// error, never a panic.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.remaining() >= n,
+            "truncated checkpoint: wanted {n} bytes at offset {}, {} left",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => bail!("corrupt checkpoint: bool byte {v} at offset {}", self.pos - 1),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| {
+            anyhow::anyhow!("corrupt checkpoint: length {v} exceeds the address space")
+        })
+    }
+
+    /// A `usize` that will be used as an element count: additionally
+    /// bounded by the bytes actually left, so a corrupted length can
+    /// never drive an OOM-sized allocation.
+    pub fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.usize()?;
+        ensure!(
+            n.checked_mul(elem_bytes.max(1)).is_some_and(|b| b <= self.remaining()),
+            "corrupt checkpoint: count {n} at offset {} exceeds the {} bytes left",
+            self.pos - 8,
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+// ---- enum wire codecs ------------------------------------------------
+
+fn straggler_to_u8(c: StragglerCause) -> u8 {
+    match c {
+        StragglerCause::None => 0,
+        StragglerCause::StreamWait => 1,
+        StragglerCause::Compute => 2,
+        StragglerCause::Sync => 3,
+    }
+}
+
+fn straggler_from_u8(v: u8) -> Result<StragglerCause> {
+    Ok(match v {
+        0 => StragglerCause::None,
+        1 => StragglerCause::StreamWait,
+        2 => StragglerCause::Compute,
+        3 => StragglerCause::Sync,
+        _ => bail!("corrupt checkpoint: straggler cause tag {v}"),
+    })
+}
+
+fn fault_from_u8(v: u8) -> Result<FaultCause> {
+    FaultCause::from_u8(v)
+        .ok_or_else(|| anyhow::anyhow!("corrupt checkpoint: fault cause tag {v}"))
+}
+
+fn retention_write(w: &mut ByteWriter, r: Retention) {
+    match r {
+        Retention::Persist => w.u8(0),
+        Retention::Truncate { keep } => {
+            w.u8(1);
+            w.usize(keep);
+        }
+        Retention::SizeBytes { bytes } => {
+            w.u8(2);
+            w.usize(bytes);
+        }
+    }
+}
+
+fn retention_read(r: &mut ByteReader) -> Result<Retention> {
+    Ok(match r.u8()? {
+        0 => Retention::Persist,
+        1 => Retention::Truncate { keep: r.usize()? },
+        2 => Retention::SizeBytes { bytes: r.usize()? },
+        v => bail!("corrupt checkpoint: retention tag {v}"),
+    })
+}
+
+// ---- composite codecs ------------------------------------------------
+
+pub fn write_round_log(w: &mut ByteWriter, l: &RoundLog) {
+    w.usize(l.round);
+    w.f64(l.wall_clock_s);
+    w.usize(l.global_batch);
+    w.f64(l.train_loss);
+    w.f64(l.train_top1);
+    w.f64(l.train_top5);
+    w.f64(l.test_top1);
+    w.f64(l.test_top5);
+    w.f64(l.lr);
+    w.u64(l.buffered_samples);
+    w.u64(l.floats_sent);
+    w.bool(l.compressed);
+    w.u64(l.injection_bytes);
+    w.usize(l.straggler_device);
+    w.u8(straggler_to_u8(l.straggler_cause));
+    w.usize(l.active_devices);
+    w.f64(l.rate_est);
+    w.usize(l.committed_devices);
+    w.usize(l.dropped_devices);
+    w.usize(l.rejected_devices);
+    w.usize(l.faulted_devices);
+}
+
+pub fn read_round_log(r: &mut ByteReader) -> Result<RoundLog> {
+    Ok(RoundLog {
+        round: r.usize()?,
+        wall_clock_s: r.f64()?,
+        global_batch: r.usize()?,
+        train_loss: r.f64()?,
+        train_top1: r.f64()?,
+        train_top5: r.f64()?,
+        test_top1: r.f64()?,
+        test_top5: r.f64()?,
+        lr: r.f64()?,
+        buffered_samples: r.u64()?,
+        floats_sent: r.u64()?,
+        compressed: r.bool()?,
+        injection_bytes: r.u64()?,
+        straggler_device: r.usize()?,
+        straggler_cause: straggler_from_u8(r.u8()?)?,
+        active_devices: r.usize()?,
+        rate_est: r.f64()?,
+        committed_devices: r.usize()?,
+        dropped_devices: r.usize()?,
+        rejected_devices: r.usize()?,
+        faulted_devices: r.usize()?,
+    })
+}
+
+pub fn write_timeline_row(w: &mut ByteWriter, t: &DeviceRoundRow) {
+    w.usize(t.round);
+    w.usize(t.device);
+    w.usize(t.batch);
+    w.f64(t.wait_s);
+    w.f64(t.compute_s);
+    w.f64(t.effective_rate);
+    w.bool(t.active);
+    w.bool(t.participated);
+    w.u32(t.staleness);
+    w.bool(t.straggler);
+    w.u8(straggler_to_u8(t.cause));
+    w.u8(t.fault.as_u8());
+}
+
+pub fn read_timeline_row(r: &mut ByteReader) -> Result<DeviceRoundRow> {
+    Ok(DeviceRoundRow {
+        round: r.usize()?,
+        device: r.usize()?,
+        batch: r.usize()?,
+        wait_s: r.f64()?,
+        compute_s: r.f64()?,
+        effective_rate: r.f64()?,
+        active: r.bool()?,
+        participated: r.bool()?,
+        staleness: r.u32()?,
+        straggler: r.bool()?,
+        cause: straggler_from_u8(r.u8()?)?,
+        fault: fault_from_u8(r.u8()?)?,
+    })
+}
+
+pub fn write_partition_state(w: &mut ByteWriter, s: &PartitionState) {
+    w.usize(s.records.len());
+    for rec in &s.records {
+        w.u64(rec.offset);
+        w.u64(rec.timestamp_us);
+        w.u32(rec.label);
+        w.u64(rec.seed);
+    }
+    retention_write(w, s.retention);
+    w.u64(s.next_offset);
+    w.u64(s.dropped);
+    w.usize(s.peak_len);
+    w.u64(s.produced);
+}
+
+pub fn read_partition_state(r: &mut ByteReader) -> Result<PartitionState> {
+    let n = r.count(28)?; // 8 + 8 + 4 + 8 bytes per record
+    let records = (0..n)
+        .map(|_| {
+            Ok(Record {
+                offset: r.u64()?,
+                timestamp_us: r.u64()?,
+                label: r.u32()?,
+                seed: r.u64()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(PartitionState {
+        records,
+        retention: retention_read(r)?,
+        next_offset: r.u64()?,
+        dropped: r.u64()?,
+        peak_len: r.usize()?,
+        produced: r.u64()?,
+    })
+}
+
+// ---- file plumbing ---------------------------------------------------
+
+/// Write `payload` to `path` under the magic + fingerprint header.
+/// Atomic-enough for the simulator: write to `path.tmp`, then rename.
+pub fn save(path: &Path, fingerprint: u64, payload: &[u8]) -> Result<()> {
+    let mut file = Vec::with_capacity(MAGIC.len() + 16 + payload.len());
+    file.extend_from_slice(&MAGIC);
+    file.extend_from_slice(&fingerprint.to_le_bytes());
+    file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    file.extend_from_slice(payload);
+    let tmp = path.with_extension("ckpt.tmp");
+    std::fs::write(&tmp, &file)
+        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("committing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a checkpoint file back, verifying magic, fingerprint and the
+/// payload length before handing the payload to the engine.
+pub fn load(path: &Path, expect_fingerprint: u64) -> Result<Vec<u8>> {
+    let file = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    ensure!(
+        file.len() >= MAGIC.len() + 16,
+        "{} is not a checkpoint: {} bytes is shorter than the header",
+        path.display(),
+        file.len()
+    );
+    ensure!(
+        file[..MAGIC.len()] == MAGIC,
+        "{} is not a ScaDLES checkpoint (bad magic)",
+        path.display()
+    );
+    let fp = u64::from_le_bytes(file[16..24].try_into().unwrap());
+    ensure!(
+        fp == expect_fingerprint,
+        "checkpoint {} was written by a different experiment config \
+         (fingerprint {fp:#018x}, this run is {expect_fingerprint:#018x}); \
+         restore requires the exact config that produced the checkpoint",
+        path.display()
+    );
+    let len = u64::from_le_bytes(file[24..32].try_into().unwrap()) as usize;
+    let body = &file[32..];
+    ensure!(
+        body.len() == len,
+        "truncated checkpoint {}: header says {len} payload bytes, file has {}",
+        path.display(),
+        body.len()
+    );
+    Ok(body.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip_bitwise() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX);
+        w.usize(12345);
+        w.f32(-0.0);
+        w.f64(f64::NAN);
+        w.f32s(&[1.5, f32::NEG_INFINITY]);
+        w.u64s(&[3, 2, 1]);
+        w.bytes(b"abc");
+        let buf = w.into_bytes();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.usize().unwrap(), 12345);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), f64::NAN.to_bits());
+        let v = r.f32s().unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0], 1.5);
+        assert_eq!(v[1], f32::NEG_INFINITY);
+        assert_eq!(r.u64s().unwrap(), vec![3, 2, 1]);
+        assert_eq!(r.bytes().unwrap(), b"abc");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncated_reads_error_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.u64(42);
+        let buf = w.into_bytes();
+        let mut r = ByteReader::new(&buf[..5]);
+        let err = r.u64().unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // a corrupted length can't drive a huge allocation
+        let mut w = ByteWriter::new();
+        w.usize(usize::MAX / 2);
+        let buf = w.into_bytes();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn bad_enum_tags_are_rejected() {
+        assert!(straggler_from_u8(3).is_ok());
+        assert!(straggler_from_u8(4).is_err());
+        assert!(fault_from_u8(4).is_ok());
+        assert!(fault_from_u8(5).is_err());
+        let mut w = ByteWriter::new();
+        w.u8(9); // not a retention tag
+        let buf = w.into_bytes();
+        assert!(retention_read(&mut ByteReader::new(&buf)).is_err());
+        let mut w = ByteWriter::new();
+        w.u8(2); // not a bool
+        let buf = w.into_bytes();
+        assert!(ByteReader::new(&buf).bool().is_err());
+    }
+
+    #[test]
+    fn round_log_and_timeline_rows_round_trip() {
+        let log = RoundLog {
+            round: 9,
+            wall_clock_s: 123.456,
+            global_batch: 512,
+            train_loss: 0.25,
+            test_top5: f64::NAN,
+            lr: 0.1,
+            floats_sent: 4096,
+            compressed: true,
+            straggler_cause: StragglerCause::Sync,
+            straggler_device: 3,
+            committed_devices: 4,
+            rejected_devices: 1,
+            faulted_devices: 2,
+            ..Default::default()
+        };
+        let row = DeviceRoundRow {
+            round: 9,
+            device: 3,
+            batch: 128,
+            wait_s: 0.5,
+            active: true,
+            participated: true,
+            staleness: 2,
+            straggler: true,
+            cause: StragglerCause::Compute,
+            fault: FaultCause::Byzantine,
+            ..Default::default()
+        };
+        let mut w = ByteWriter::new();
+        write_round_log(&mut w, &log);
+        write_timeline_row(&mut w, &row);
+        let buf = w.into_bytes();
+        let mut r = ByteReader::new(&buf);
+        let log2 = read_round_log(&mut r).unwrap();
+        assert_eq!(format!("{log:?}"), format!("{log2:?}"));
+        let row2 = read_timeline_row(&mut r).unwrap();
+        assert_eq!(format!("{row:?}"), format!("{row2:?}"));
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn partition_state_round_trips_all_retentions() {
+        for retention in [
+            Retention::Persist,
+            Retention::Truncate { keep: 7 },
+            Retention::SizeBytes { bytes: 4096 },
+        ] {
+            let s = PartitionState {
+                records: vec![
+                    Record { offset: 5, timestamp_us: 100, label: 3, seed: 42 },
+                    Record { offset: 6, timestamp_us: 200, label: 1, seed: 43 },
+                ],
+                retention,
+                next_offset: 7,
+                dropped: 5,
+                peak_len: 4,
+                produced: 7,
+            };
+            let mut w = ByteWriter::new();
+            write_partition_state(&mut w, &s);
+            let buf = w.into_bytes();
+            let s2 = read_partition_state(&mut ByteReader::new(&buf)).unwrap();
+            assert_eq!(format!("{s:?}"), format!("{s2:?}"));
+        }
+    }
+
+    #[test]
+    fn file_header_is_verified_on_load() {
+        let dir = std::env::temp_dir().join("scadles-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("header.ckpt");
+        save(&path, 0xABCD, b"payload").unwrap();
+        assert_eq!(load(&path, 0xABCD).unwrap(), b"payload");
+        // wrong fingerprint
+        let err = load(&path, 0x1234).unwrap_err().to_string();
+        assert!(err.contains("different experiment config"), "{err}");
+        // bad magic
+        let bad = dir.join("magic.ckpt");
+        std::fs::write(&bad, b"definitely not a checkpoint file here").unwrap();
+        assert!(load(&bad, 0xABCD).unwrap_err().to_string().contains("bad magic"));
+        // truncated payload
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        let cut = dir.join("cut.ckpt");
+        std::fs::write(&cut, &bytes).unwrap();
+        assert!(load(&cut, 0xABCD).unwrap_err().to_string().contains("truncated"));
+        // missing file is a context-ful error, not a panic
+        assert!(load(&dir.join("absent.ckpt"), 0xABCD).is_err());
+    }
+
+    #[test]
+    fn fingerprint_separates_configs() {
+        let a = config_fingerprint("ExperimentConfig { devices: 4 }");
+        let b = config_fingerprint("ExperimentConfig { devices: 8 }");
+        assert_ne!(a, b);
+        assert_eq!(a, config_fingerprint("ExperimentConfig { devices: 4 }"));
+    }
+}

@@ -127,6 +127,32 @@ impl Device {
     pub fn consumed(&self) -> u64 {
         self.consumer.consumed()
     }
+
+    /// Stream internals for checkpointing.
+    pub fn producer(&self) -> &Producer {
+        &self.producer
+    }
+
+    pub fn producer_mut(&mut self) -> &mut Producer {
+        &mut self.producer
+    }
+
+    pub fn consumer(&self) -> &Consumer {
+        &self.consumer
+    }
+
+    pub fn consumer_mut(&mut self) -> &mut Consumer {
+        &mut self.consumer
+    }
+
+    /// Jitter-RNG cursor for checkpointing.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.raw_state()
+    }
+
+    pub fn restore_rng(&mut self, s: (u64, u64)) {
+        self.rng = Pcg64::from_raw(s.0, s.1);
+    }
 }
 
 #[cfg(test)]

@@ -32,8 +32,11 @@
 use crate::buffer::BufferTracker;
 use crate::compress::{CncCounter, CompressionScheme};
 use crate::config::{ClusterProfile, ExperimentConfig, HeteroPreset, SyncPreset, TrainMode};
-use crate::coordinator::aggregate::{aggregate_rows_into, RowView};
+use crate::coordinator::aggregate::{
+    aggregate_rows_into, aggregator_from_preset, Aggregator, RowView,
+};
 use crate::coordinator::backend::Backend;
+use crate::coordinator::checkpoint;
 use crate::coordinator::clock::{DevicePhase, RoundTiming, VirtualClock};
 use crate::coordinator::device::Device;
 use crate::coordinator::lr::{baseline_lr, scaled_lr};
@@ -42,6 +45,7 @@ use crate::coordinator::policy::{self, Participation, SyncPolicy};
 use crate::coordinator::worker::{for_each_worker, DeviceWorker};
 use crate::data::{materialize, EvalSet, Synthetic};
 use crate::dynamics::{effective_ring_among, DynamicsCounters, StreamDynamics};
+use crate::faults::{FaultCause, FaultCounters, FaultInjector};
 use crate::injection::DataInjector;
 use crate::metrics::{
     DeviceRoundRow, Ewma, RoundLog, RunLogger, RunReport, StragglerCause, Timeline,
@@ -72,6 +76,8 @@ pub struct TrainerOutput {
     pub timeline: Timeline,
     /// Stream-dynamics counters (churn edges, rate-regime flips).
     pub dynamics: DynamicsCounters,
+    /// Injector ground truth (`None` when the run was fault-free).
+    pub fault_counts: Option<FaultCounters>,
 }
 
 /// The L3 round engine: owns the device shards, model state, policies
@@ -109,6 +115,19 @@ pub struct RoundEngine {
     policy: Box<dyn SyncPolicy>,
     /// This round's membership decision (buffers reused).
     part: Participation,
+    /// Mid-round fault injection (`None` for the fault-free preset: the
+    /// engine then carries no fault state and runs the pre-fault path
+    /// bitwise).
+    faults: Option<FaultInjector>,
+    /// The pluggable combine rule (`--agg`); [`WeightedMean`]
+    /// (`super::aggregate::WeightedMean`) is bitwise the seed path.
+    aggregator: Box<dyn Aggregator>,
+    /// Whether the aggregator is the plain weighted mean — gates the
+    /// Pallas `wagg` kernel path, which only computes that rule.
+    agg_is_mean: bool,
+    /// Batches with crash-rejected devices zeroed, for the weight
+    /// functions (reused; only built on rounds with a rejection).
+    masked_batches: Vec<usize>,
     /// Reusable aggregation accumulator (length `d`): the global
     /// gradient is built here every round, straight from worker-owned
     /// row views — no `[n, d]` staging copy on the native path.
@@ -185,6 +204,14 @@ impl RoundEngine {
             label.push('-');
             label.push_str(&policy.label());
         }
+        if !cfg.faults.is_none() {
+            label.push('-');
+            label.push_str(&cfg.faults.to_string());
+        }
+        if !cfg.agg.is_mean() {
+            label.push('-');
+            label.push_str(&cfg.agg.to_string());
+        }
         let logs = RunLogger::new(label).with_echo(cfg.echo_every);
         let threads = resolve_threads(cfg.worker_threads, n);
         let is_local = policy.is_local();
@@ -211,6 +238,10 @@ impl RoundEngine {
             round: 0,
             policy,
             part: Participation::default(),
+            faults: FaultInjector::from_preset(&cfg.faults, n, d, cfg.seed),
+            aggregator: aggregator_from_preset(&cfg.agg),
+            agg_is_mean: cfg.agg.is_mean(),
+            masked_batches: Vec::with_capacity(n),
             agg: vec![0.0; d],
             weights: Vec::with_capacity(n),
             staging: Vec::new(),
@@ -237,6 +268,11 @@ impl RoundEngine {
         self.clock.now()
     }
 
+    /// Rounds executed so far (after a restore: the checkpoint's round).
+    pub fn rounds_completed(&self) -> usize {
+        self.round
+    }
+
     /// The synchronization policy's CLI-spelling label.
     pub fn policy_label(&self) -> String {
         self.policy.label()
@@ -255,6 +291,16 @@ impl RoundEngine {
     /// The stream-dynamics engine (most recent frame + counters).
     pub fn dynamics(&self) -> &StreamDynamics {
         &self.dynamics
+    }
+
+    /// Ground-truth fault-injection totals (`None` when fault-free).
+    pub fn fault_counters(&self) -> Option<FaultCounters> {
+        self.faults.as_ref().map(|f| f.counters())
+    }
+
+    /// The combine rule's label (`mean`, `trimmed:0.25`, `krum:1`, …).
+    pub fn aggregator_label(&self) -> String {
+        self.aggregator.label()
     }
 
     /// Timing breakdown of the most recent round (per-device phases +
@@ -361,6 +407,14 @@ impl RoundEngine {
         //        barrier — decided from the plan's virtual finish
         //        estimates in fixed device order (pool-width independent)
         self.policy.decide(&plan, &active, &mut self.part);
+
+        // -- 2c. fault draws: one Bernoulli per device per round from
+        //        its own substream, whatever happens downstream — so
+        //        fault schedules are pure in (seed, device, round) and
+        //        pool-width independent like everything else
+        if let Some(f) = &mut self.faults {
+            f.draw_round();
+        }
         // barrier wait: the longest fill wait among barrier members (for
         // BSP this is exactly the plan's all-device maximum)
         let barrier_wait = plan
@@ -399,6 +453,22 @@ impl RoundEngine {
             w.truncate_fresh(cap);
         }
 
+        // -- 5b. train-phase crashes: the device dies before its local
+        //        step — the polled records are lost with it (they were
+        //        already consumed off its queue) and it sits the round
+        //        out entirely
+        if let Some(f) = &mut self.faults {
+            if f.crashes_before_train() {
+                for (i, w) in self.workers.iter_mut().enumerate() {
+                    if f.hit(i) && w.fresh_len() > 0 {
+                        w.truncate_fresh(0);
+                        f.mark_crashed(i);
+                        self.part.contributes[i] = false;
+                    }
+                }
+            }
+        }
+
         // -- 6. device-local training steps (parallel per shard; each
         //       shard prices compute on its own profile) ------------------
         {
@@ -410,6 +480,27 @@ impl RoundEngine {
             });
         }
         self.take_worker_error()?;
+
+        // -- 6b. sync-phase crashes (the default phase): the device
+        //        finished its local step and dies before sync — its
+        //        gradient is *lost* (discarded without an error-feedback
+        //        absorb, unlike a policy withhold) and it leaves the
+        //        round's membership before any commit accounting
+        if let Some(f) = &mut self.faults {
+            if f.crashes_before_sync() {
+                for (i, w) in self.workers.iter().enumerate() {
+                    if f.hit(i) && self.part.contributes[i] && w.out.batch > 0 {
+                        f.mark_crashed(i);
+                        self.part.contributes[i] = false;
+                    }
+                }
+            }
+        }
+        // ground truth of this round's crash rejections (either phase)
+        let crashed: Option<&[FaultCause]> = self.faults.as_ref().map(|f| f.causes());
+        let is_crashed =
+            |i: usize| crashed.is_some_and(|c| c[i] == FaultCause::Crashed);
+        let rejected_devices = (0..self.workers.len()).filter(|&i| is_crashed(i)).count();
 
         let batches: Vec<usize> = self.workers.iter().map(|w| w.out.batch).collect();
         // committed global batch: what actually aggregates (drives the
@@ -427,11 +518,12 @@ impl RoundEngine {
             .zip(&self.part.contributes)
             .filter(|(&b, &c)| b > 0 && c)
             .count() as u64;
-        // devices that trained but were dropped past the commit point
+        // devices that trained but were dropped past the commit point —
+        // a policy decision, distinct from crash rejections
         let dropped_devices = batches
             .iter()
-            .zip(&self.part.contributes)
-            .filter(|(&b, &c)| b > 0 && !c)
+            .enumerate()
+            .filter(|&(i, &b)| b > 0 && !self.part.contributes[i] && !is_crashed(i))
             .count();
 
         // -- 7. compression: per-shard stats, one global gate per round ---
@@ -450,7 +542,11 @@ impl RoundEngine {
                 let kernel_topk = self.kernel_topk;
                 let contributes = &self.part.contributes;
                 for_each_worker(&mut self.workers, threads, |i, w| {
-                    if contributes[i] {
+                    if is_crashed(i) {
+                        // a crashed shard's gradient is gone: no stats,
+                        // no error-feedback absorb
+                        w.discard();
+                    } else if contributes[i] {
                         w.compress_stats(backend, ratio, kernel_topk);
                     } else {
                         w.withhold();
@@ -484,27 +580,58 @@ impl RoundEngine {
             self.cnc.record(false, floats_sent, 0);
             // no compression scheme: withheld laggards still clear their
             // flags and fold their gradient into the residual (a no-op
-            // without error feedback); BSP never enters this loop
-            if dropped_devices > 0 {
+            // without error feedback), while crashed shards discard
+            // theirs outright; BSP without faults never enters this loop
+            if dropped_devices > 0 || rejected_devices > 0 {
                 let contributes = &self.part.contributes;
                 for_each_worker(&mut self.workers, threads, |i, w| {
-                    if !contributes[i] {
+                    if is_crashed(i) {
+                        w.discard();
+                    } else if !contributes[i] {
                         w.withhold();
                     }
                 });
             }
         }
 
-        // -- 8. weighted aggregation (Eqn. 4b), fixed device order --------
-        //       straight from worker-owned row views: O(Σ nnz) sparse
-        //       scatters on compressed rounds, coordinate-chunked over
-        //       the worker pool on dense ones; the accumulator and the
-        //       weight vector are reused round over round (no [n, d]
+        // -- 7b. garbage faults: corrupt / stale / byzantine shards swap
+        //        their outgoing row for a doctored one — *silently*, so
+        //        the aggregator (not the accounting) has to defend; the
+        //        metrics layer records the ground truth separately
+        if let Some(f) = &mut self.faults {
+            let workers = &self.workers;
+            let contributes = &self.part.contributes;
+            f.build_overrides(
+                workers.len(),
+                |i| workers[i].row(),
+                |i| contributes[i] && workers[i].out.batch > 0,
+            );
+        }
+
+        // -- 8. aggregation (Eqn. 4b or a robust combine), fixed device
+        //       order — straight from worker-owned row views: O(Σ nnz)
+        //       sparse scatters on compressed rounds, coordinate-chunked
+        //       over the worker pool on dense ones; the accumulator and
+        //       the weight vector are reused round over round (no [n, d]
         //       staging copy, no steady-state allocation). The policy
         //       writes the weights: batch-proportional (BSP/K-sync over
-        //       committed rows) or staleness-discounted.
+        //       committed rows) or staleness-discounted. Crash-rejected
+        //       devices are zeroed out of the weight batches first (BSP
+        //       weighs raw batches and must not weigh a dead device);
+        //       fault-free rounds pass the untouched batches, bitwise.
+        if rejected_devices > 0 {
+            self.masked_batches.clear();
+            self.masked_batches.extend(
+                batches
+                    .iter()
+                    .zip(&self.part.contributes)
+                    .map(|(&b, &c)| if c { b } else { 0 }),
+            );
+        }
+        let weight_batches: &[usize] =
+            if rejected_devices > 0 { &self.masked_batches } else { &batches };
         self.policy
-            .weights(self.cfg.mode, &batches, &self.part, &mut self.weights);
+            .weights(self.cfg.mode, weight_batches, &self.part, &mut self.weights);
         // Kernel path: the Pallas wagg artifact is bit-equivalent to the
         // native mirror (runtime_e2e::wagg_artifact_matches_native) but
         // interpret-mode Pallas through CPU-PJRT costs ~200x the native
@@ -514,7 +641,15 @@ impl RoundEngine {
         // dense [n, d] matrix, so only its opt-in path pays the staging
         // copy (sparse rows are densified into it).
         let mut kernel_done = false;
-        if global_batch > 0 && self.kernel_agg && self.wagg_artifact_ok {
+        if global_batch > 0
+            && self.kernel_agg
+            && self.wagg_artifact_ok
+            && self.agg_is_mean
+            && self.faults.is_none()
+        {
+            // the Pallas wagg artifact computes exactly the weighted
+            // mean over unmodified rows, so robust aggregators and
+            // fault-doctored rows always take the native path
             let n = self.workers.len();
             if self.staging.is_empty() {
                 self.staging.resize(n * d, 0.0);
@@ -544,7 +679,17 @@ impl RoundEngine {
                 self.agg.iter_mut().for_each(|v| *v = 0.0);
             } else {
                 let workers = &self.workers;
-                aggregate_rows_into(&mut self.agg, &self.weights, |i| workers[i].row(), threads);
+                let faults = &self.faults;
+                let rows = |i: usize| {
+                    if let Some(f) = faults {
+                        if let Some(row) = f.override_row(i) {
+                            return RowView::Dense(row);
+                        }
+                    }
+                    workers[i].row()
+                };
+                self.aggregator
+                    .aggregate(&mut self.agg, &self.weights, &rows, threads);
             }
         }
 
@@ -669,6 +814,10 @@ impl RoundEngine {
             rate_est,
             committed_devices: trained as usize,
             dropped_devices,
+            rejected_devices,
+            faulted_devices: self.faults.as_ref().map_or(0, |f| {
+                f.causes().iter().filter(|&&c| c != FaultCause::None).count()
+            }),
         };
         self.logs.push(log);
         self.round += 1;
@@ -697,6 +846,21 @@ impl RoundEngine {
         let active: Vec<bool> = self.workers.iter().map(|w| w.device.active).collect();
         let rate_est = self.rate_est.update(rates.iter().sum());
 
+        // fault draws: same one-per-device-per-round contract as the
+        // gradient rounds; under local SGD a crashed device loses its
+        // whole local phase (either crash phase — there is no mid-round
+        // sync point to split on)
+        if let Some(f) = &mut self.faults {
+            f.draw_round();
+        }
+        let crash_skip: Vec<bool> = (0..n)
+            .map(|i| {
+                self.faults
+                    .as_ref()
+                    .is_some_and(|f| f.is_crash() && f.hit(i))
+            })
+            .collect();
+
         // local steps use the unscaled schedule LR (the global batch is
         // not a per-round quantity here)
         let lr = baseline_lr(&self.cfg, r);
@@ -708,7 +872,7 @@ impl RoundEngine {
         let mut per_device: Vec<DevicePhase> = Vec::with_capacity(n);
         for i in 0..n {
             let mut compute = 0f64;
-            if self.workers[i].device.active {
+            if self.workers[i].device.active && !crash_skip[i] {
                 // refork this device's replica + momentum from the
                 // global model into the reused buffers
                 self.local.copy_from_slice(&self.params);
@@ -749,12 +913,24 @@ impl RoundEngine {
         let global_batch: usize = self.samples.iter().sum();
         let trained = self.samples.iter().filter(|&&s| s > 0).count();
 
+        // crash ground truth: a skipped device that would have run its
+        // local phase (churn-active) counts as a rejection
+        let mut rejected_devices = 0usize;
+        if let Some(f) = &mut self.faults {
+            for i in 0..n {
+                if crash_skip[i] && active[i] {
+                    f.mark_crashed(i);
+                    rejected_devices += 1;
+                }
+            }
+        }
+
         // membership bookkeeping: contributors are the devices that
         // processed samples; churn-active devices bound the barrier
         self.part.reset(n);
         for i in 0..n {
             self.part.contributes[i] = self.samples[i] > 0;
-            self.part.in_barrier[i] = active[i];
+            self.part.in_barrier[i] = active[i] && !crash_skip[i];
         }
 
         // sample-weighted parameter average (FedAvg's n_k/n weighting)
@@ -765,9 +941,22 @@ impl RoundEngine {
         // native row aggregation is the default
         self.policy
             .weights(self.cfg.mode, &self.samples, &self.part, &mut self.weights);
+        // garbage faults doctor the post-local-step *replicas* here (the
+        // row the device ships is its model, so that is what a corrupt
+        // or byzantine device corrupts)
+        if let Some(f) = &mut self.faults {
+            let replicas = &self.replicas;
+            let contributes = &self.part.contributes;
+            f.build_overrides(
+                n,
+                |i| RowView::Dense(&replicas[i * d..(i + 1) * d]),
+                |i| contributes[i],
+            );
+        }
         if global_batch > 0 {
             let mut kernel_done = false;
-            if self.kernel_agg && self.wagg_artifact_ok {
+            if self.kernel_agg && self.wagg_artifact_ok && self.agg_is_mean && self.faults.is_none()
+            {
                 match self.backend.weighted_aggregate(&self.replicas, &self.weights) {
                     Ok(v) => {
                         self.params.copy_from_slice(&v);
@@ -780,12 +969,17 @@ impl RoundEngine {
             }
             if !kernel_done {
                 let replicas = &self.replicas;
-                aggregate_rows_into(
-                    &mut self.agg,
-                    &self.weights,
-                    |i| RowView::Dense(&replicas[i * d..(i + 1) * d]),
-                    self.threads,
-                );
+                let faults = &self.faults;
+                let rows = |i: usize| {
+                    if let Some(f) = faults {
+                        if let Some(row) = f.override_row(i) {
+                            return RowView::Dense(row);
+                        }
+                    }
+                    RowView::Dense(&replicas[i * d..(i + 1) * d])
+                };
+                self.aggregator
+                    .aggregate(&mut self.agg, &self.weights, &rows, self.threads);
                 std::mem::swap(&mut self.params, &mut self.agg);
             }
         }
@@ -855,6 +1049,10 @@ impl RoundEngine {
             rate_est,
             committed_devices: trained,
             dropped_devices: 0,
+            rejected_devices,
+            faulted_devices: self.faults.as_ref().map_or(0, |f| {
+                f.causes().iter().filter(|&&c| c != FaultCause::None).count()
+            }),
         };
         self.logs.push(log);
         self.round += 1;
@@ -878,6 +1076,10 @@ impl RoundEngine {
     ) -> (StragglerCause, usize) {
         let (straggler_cause, straggler_device) = timing.straggler();
         for p in &timing.per_device {
+            let fault = self
+                .faults
+                .as_ref()
+                .map_or(FaultCause::None, |f| f.causes()[p.device]);
             self.timeline.push(DeviceRoundRow {
                 round: r,
                 device: p.device,
@@ -888,6 +1090,7 @@ impl RoundEngine {
                 active: active[p.device],
                 participated: self.part.contributes[p.device] && batches[p.device] > 0,
                 staleness: self.part.staleness[p.device],
+                fault,
                 straggler: straggler_cause != StragglerCause::None
                     && p.device == straggler_device,
                 cause: if straggler_cause != StragglerCause::None
@@ -924,6 +1127,296 @@ impl RoundEngine {
         Ok(self.finish())
     }
 
+    /// FNV fingerprint of this run's full configuration — the key that
+    /// pins a checkpoint file to the exact experiment that wrote it.
+    fn fingerprint(&self) -> u64 {
+        checkpoint::config_fingerprint(&format!("{:?}", self.cfg))
+    }
+
+    /// Serialize the complete training state to `path`: a run killed
+    /// after any round and restored from its last checkpoint replays
+    /// the remaining rounds bitwise identical to an uninterrupted run
+    /// (pinned by `tests/parallel_determinism`).
+    ///
+    /// Everything with cross-round state is captured: model + momentum,
+    /// clock, RNG cursors (device jitter, producers, injection, faults),
+    /// stream logs and consumer offsets, error-feedback residuals, the
+    /// compression gate, policy state, dynamics cursors and all
+    /// accumulated metrics. Deliberately *not* captured (transient,
+    /// rebuilt every round): worker scratch rows, `last_timing`, the
+    /// `Participation` buffers, and the aggregation accumulators.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let mut w = checkpoint::ByteWriter::new();
+        w.usize(self.round);
+        w.f64(self.clock.now());
+        w.f32s(&self.params);
+        w.f32s(&self.momentum);
+        let (ev, ew, eu) = self.rate_est.raw_state();
+        w.f64(ev);
+        w.f64(ew);
+        w.u64(eu);
+        w.u64s(self.tracker.history());
+        w.u64(self.cnc.compressed_rounds);
+        w.u64(self.cnc.dense_rounds);
+        w.u64(self.cnc.floats_sent);
+        match self.scheme.gate_state() {
+            Some((a, b, c, d, e)) => {
+                w.bool(true);
+                w.f64(a);
+                w.f64(b);
+                w.u64(c);
+                w.u64(d);
+                w.u64(e);
+            }
+            None => w.bool(false),
+        }
+        w.bool(self.wagg_artifact_ok);
+        w.usize(self.logs.rounds().len());
+        for l in self.logs.rounds() {
+            checkpoint::write_round_log(&mut w, l);
+        }
+        w.usize(self.timeline.rows().len());
+        for t in self.timeline.rows() {
+            checkpoint::write_timeline_row(&mut w, t);
+        }
+        w.usize(self.workers.len());
+        for wk in &self.workers {
+            match &wk.feedback {
+                Some(ef) => {
+                    w.bool(true);
+                    w.f32s(ef.residual());
+                    w.f64(ef.residual_norm2);
+                }
+                None => w.bool(false),
+            }
+            let dev = &wk.device;
+            w.f64(dev.rate);
+            w.f64(dev.effective_rate);
+            w.bool(dev.active);
+            let (r0, r1) = dev.rng_state();
+            w.u64(r0);
+            w.u64(r1);
+            let (p_rate, p_carry, p_clock, p_prod, p_rng) = dev.producer().raw_state();
+            w.f64(p_rate);
+            w.f64(p_carry);
+            w.u64(p_clock);
+            w.u64(p_prod);
+            w.u64(p_rng.0);
+            w.u64(p_rng.1);
+            let c = dev.consumer();
+            w.u64(c.offset());
+            w.u64(c.consumed());
+            w.u64(c.missed());
+            checkpoint::write_partition_state(&mut w, &c.topic().partition_state());
+        }
+        match &self.injector {
+            Some(inj) => {
+                let s = inj.rng_state();
+                w.bool(true);
+                w.u64(s.0);
+                w.u64(s.1);
+            }
+            None => w.bool(false),
+        }
+        match self.dynamics.last_sample_t() {
+            Some(t) => {
+                w.bool(true);
+                w.f64(t);
+            }
+            None => w.bool(false),
+        }
+        let dc = self.dynamics.counters();
+        w.u64(dc.departures);
+        w.u64(dc.rejoins);
+        w.u64(dc.regime_flips);
+        w.u64(dc.inactive_device_rounds);
+        w.bytes(&self.policy.snapshot());
+        match &self.faults {
+            Some(f) => {
+                w.bool(true);
+                let s = f.state();
+                w.usize(s.rngs.len());
+                for r in &s.rngs {
+                    w.u64(r.0);
+                    w.u64(r.1);
+                }
+                w.usize(s.history.len());
+                for h in &s.history {
+                    w.usize(h.len());
+                    for row in h {
+                        w.f32s(row);
+                    }
+                }
+                w.u64(s.counters.crashes);
+                w.u64(s.counters.corrupt_rows);
+                w.u64(s.counters.stale_replays);
+                w.u64(s.counters.byzantine_rows);
+            }
+            None => w.bool(false),
+        }
+        checkpoint::save(path, self.fingerprint(), &w.into_bytes())
+    }
+
+    /// Restore a [`Self::save_checkpoint`] file into this engine. The
+    /// engine must have been built from the *exact* config that wrote
+    /// the checkpoint (enforced via the config fingerprint) — restoring
+    /// into a different experiment would silently diverge instead.
+    ///
+    /// Header, dimension and layout mismatches are all caught before
+    /// any state is touched; an error that surfaces *mid-stream* (a
+    /// corrupted interior byte) can leave the engine partially
+    /// restored — on any `Err` the engine must be rebuilt, not reused.
+    pub fn restore_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        use anyhow::ensure;
+        let payload = checkpoint::load(path, self.fingerprint())?;
+        let mut r = checkpoint::ByteReader::new(&payload);
+        let round = r.usize()?;
+        let now = r.f64()?;
+        let params = r.f32s()?;
+        ensure!(
+            params.len() == self.params.len(),
+            "checkpoint model has {} parameters, this backend has {}",
+            params.len(),
+            self.params.len()
+        );
+        let momentum = r.f32s()?;
+        ensure!(
+            momentum.len() == self.momentum.len(),
+            "checkpoint momentum has {} entries, this backend has {}",
+            momentum.len(),
+            self.momentum.len()
+        );
+        let (ev, ew, eu) = (r.f64()?, r.f64()?, r.u64()?);
+        let history = r.u64s()?;
+        let (cnc_c, cnc_d, cnc_f) = (r.u64()?, r.u64()?, r.u64()?);
+        let gate = if r.bool()? {
+            Some((r.f64()?, r.f64()?, r.u64()?, r.u64()?, r.u64()?))
+        } else {
+            None
+        };
+        let wagg_ok = r.bool()?;
+        let n_logs = r.count(8)?;
+        let logs = (0..n_logs)
+            .map(|_| checkpoint::read_round_log(&mut r))
+            .collect::<Result<Vec<_>>>()?;
+        let n_rows = r.count(8)?;
+        let rows = (0..n_rows)
+            .map(|_| checkpoint::read_timeline_row(&mut r))
+            .collect::<Result<Vec<_>>>()?;
+        let n = r.usize()?;
+        ensure!(
+            n == self.workers.len(),
+            "checkpoint has {n} devices, this engine has {}",
+            self.workers.len()
+        );
+        for wk in &mut self.workers {
+            let has_ef = r.bool()?;
+            ensure!(
+                has_ef == wk.feedback.is_some(),
+                "checkpoint error-feedback layout does not match this engine"
+            );
+            if has_ef {
+                let residual = r.f32s()?;
+                let norm2 = r.f64()?;
+                let ef = wk.feedback.as_mut().unwrap();
+                ensure!(
+                    residual.len() == ef.residual().len(),
+                    "checkpoint residual has {} entries, this backend has {}",
+                    residual.len(),
+                    ef.residual().len()
+                );
+                ef.restore_residual(&residual);
+                ef.residual_norm2 = norm2;
+            }
+            let dev = &mut wk.device;
+            dev.rate = r.f64()?;
+            dev.effective_rate = r.f64()?;
+            dev.active = r.bool()?;
+            dev.restore_rng((r.u64()?, r.u64()?));
+            let (p_rate, p_carry, p_clock, p_prod) = (r.f64()?, r.f64()?, r.u64()?, r.u64()?);
+            let p_rng = (r.u64()?, r.u64()?);
+            dev.producer_mut().restore(p_rate, p_carry, p_clock, p_prod, p_rng);
+            let (offset, consumed, missed) = (r.u64()?, r.u64()?, r.u64()?);
+            dev.consumer_mut().restore(offset, consumed, missed);
+            let part_state = checkpoint::read_partition_state(&mut r)?;
+            dev.consumer().topic().restore_partition(part_state);
+        }
+        let has_inj = r.bool()?;
+        ensure!(
+            has_inj == self.injector.is_some(),
+            "checkpoint injection layout does not match this engine"
+        );
+        if has_inj {
+            let s = (r.u64()?, r.u64()?);
+            self.injector.as_mut().unwrap().restore_rng(s);
+        }
+        let sampled_t = if r.bool()? { Some(r.f64()?) } else { None };
+        let dc = DynamicsCounters {
+            departures: r.u64()?,
+            rejoins: r.u64()?,
+            regime_flips: r.u64()?,
+            inactive_device_rounds: r.u64()?,
+        };
+        let policy_bytes = r.bytes()?;
+        let fault_state = if r.bool()? {
+            let n_rngs = r.count(16)?;
+            let rngs = (0..n_rngs)
+                .map(|_| Ok((r.u64()?, r.u64()?)))
+                .collect::<Result<Vec<_>>>()?;
+            let n_hist = r.count(8)?;
+            let history = (0..n_hist)
+                .map(|_| {
+                    let rows = r.count(8)?;
+                    (0..rows).map(|_| r.f32s()).collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let counters = crate::faults::FaultCounters {
+                crashes: r.u64()?,
+                corrupt_rows: r.u64()?,
+                stale_replays: r.u64()?,
+                byzantine_rows: r.u64()?,
+            };
+            Some(crate::faults::FaultInjectorState { rngs, history, counters })
+        } else {
+            None
+        };
+        ensure!(
+            fault_state.is_some() == self.faults.is_some(),
+            "checkpoint fault layout does not match this engine"
+        );
+        ensure!(r.remaining() == 0, "corrupt checkpoint: {} trailing bytes", r.remaining());
+
+        // coordinator-side state scatters only after the whole payload
+        // parsed (worker/device state was applied as it streamed above)
+        self.round = round;
+        self.clock = VirtualClock::new();
+        self.clock.advance(now);
+        self.params.copy_from_slice(&params);
+        self.momentum.copy_from_slice(&momentum);
+        self.rate_est.restore(ev, ew, eu);
+        self.tracker.restore(&history);
+        self.cnc.compressed_rounds = cnc_c;
+        self.cnc.dense_rounds = cnc_d;
+        self.cnc.floats_sent = cnc_f;
+        if let Some(s) = gate {
+            self.scheme.restore_gate(s);
+        }
+        self.wagg_artifact_ok = wagg_ok;
+        self.logs.restore_rounds(logs);
+        self.timeline.restore_rows(rows);
+        if let Some(t) = sampled_t {
+            // fast-forward the dynamics processes to the saved cursor;
+            // the re-sample's own counter edges are superseded below
+            self.dynamics.sample(t);
+        }
+        self.dynamics.restore_counters(dc);
+        self.policy.restore(&policy_bytes);
+        if let (Some(f), Some(s)) = (&mut self.faults, fault_state) {
+            f.restore(s);
+        }
+        Ok(())
+    }
+
     /// Build the output from the rounds run so far.
     pub fn finish(&self) -> TrainerOutput {
         let report = RunReport::from_logs(
@@ -939,6 +1432,7 @@ impl RoundEngine {
             rates: self.rates(),
             timeline: self.timeline.clone(),
             dynamics: self.dynamics.counters(),
+            fault_counts: self.fault_counters(),
         }
     }
 }
@@ -1244,6 +1738,130 @@ mod tests {
             "{}",
             ks.finish().report.label
         );
+    }
+
+    #[test]
+    fn crash_faults_reject_devices_and_the_ledgers_agree() {
+        let mut cfg = base(SyncPreset::Bsp);
+        cfg.devices = 4;
+        cfg.rounds = 12;
+        cfg.faults = "crash:0.5".parse().unwrap();
+        let mut e = engine(&cfg);
+        let mut total_rejected = 0usize;
+        for _ in 0..cfg.rounds {
+            let log = e.round().unwrap();
+            assert!(log.train_loss.is_finite(), "r{}", log.round);
+            // a crashed device neither commits nor counts as a policy drop
+            let trained_rows = e
+                .timeline()
+                .rows()
+                .iter()
+                .filter(|row| row.round == log.round && row.batch > 0)
+                .count();
+            assert_eq!(
+                log.committed_devices + log.dropped_devices + log.rejected_devices,
+                trained_rows,
+                "r{}",
+                log.round
+            );
+            assert!(log.faulted_devices >= log.rejected_devices);
+            total_rejected += log.rejected_devices;
+        }
+        assert!(total_rejected > 0, "crash:0.5 over 48 device-rounds never fired");
+        assert_eq!(e.timeline().rejected_rounds() as usize, total_rejected);
+        // crashes are not policy withholds
+        assert_eq!(e.timeline().withheld_rounds(), 0);
+        let counters = e.fault_counters().expect("fault engine active");
+        assert_eq!(counters.crashes as usize, total_rejected);
+        assert!(e.finish().report.label.contains("crash:0.5"));
+    }
+
+    #[test]
+    fn byzantine_quarter_diverges_the_mean_but_not_krum() {
+        let run = |agg: &str| {
+            let mut cfg = base(SyncPreset::Bsp);
+            cfg.devices = 8;
+            cfg.rounds = 15;
+            cfg.faults = "byzantine:0.25".parse().unwrap();
+            cfg.agg = agg.parse().unwrap();
+            engine(&cfg).run().unwrap()
+        };
+        let krum = run("krum:2");
+        let mean = run("mean");
+        // Krum commits one honest row per round and keeps converging
+        let krum_loss = krum.report.final_train_loss;
+        assert!(krum_loss.is_finite(), "krum diverged: {krum_loss}");
+        let first = krum.logs.rounds()[0].train_loss;
+        assert!(krum_loss < first, "krum made no progress: {first} -> {krum_loss}");
+        // the weighted mean is dragged by the −10× rows: it ends far
+        // above Krum (or leaves the finite range outright)
+        let mean_loss = mean.report.final_train_loss;
+        assert!(
+            !mean_loss.is_finite() || mean_loss > 5.0 * krum_loss.max(1e-3),
+            "mean should be wrecked by byzantine:0.25: mean {mean_loss} vs krum {krum_loss}"
+        );
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_bitwise() {
+        // deep-state config: EF compression (residuals), ksync (policy
+        // state), stale faults (replay history + RNG cursors), jitter
+        let mk_cfg = || {
+            let mut cfg = base(SyncPreset::ksync(0.75));
+            cfg.devices = 4;
+            cfg.rounds = 12;
+            cfg.hetero = "two-tier:0.5".parse().unwrap();
+            cfg.compression = Some(CompressionConfig::new(0.25, 10.0).with_error_feedback());
+            cfg.faults = "stale:0.4:2".parse().unwrap();
+            cfg
+        };
+        let cfg = mk_cfg();
+        // uninterrupted reference
+        let mut a = engine(&cfg);
+        let ref_out = a.run().unwrap();
+        // killed at round 6, restored into a fresh engine
+        let path = std::env::temp_dir().join("scadles-engine-resume.ckpt");
+        let mut b = engine(&cfg);
+        for _ in 0..6 {
+            b.round().unwrap();
+        }
+        b.save_checkpoint(&path).unwrap();
+        drop(b);
+        let mut c = engine(&cfg);
+        c.restore_checkpoint(&path).unwrap();
+        let out = c.run().unwrap();
+        // params, clock, logs and fault ledgers are all bitwise equal
+        assert_eq!(a.params().len(), c.params().len());
+        for (x, y) in a.params().iter().zip(c.params()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(
+            ref_out.report.wall_clock_s.to_bits(),
+            out.report.wall_clock_s.to_bits()
+        );
+        assert_eq!(ref_out.logs.rounds().len(), out.logs.rounds().len());
+        for (x, y) in ref_out.logs.rounds().iter().zip(out.logs.rounds()) {
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "r{}", x.round);
+            assert_eq!(x.floats_sent, y.floats_sent, "r{}", x.round);
+            assert_eq!(x.faulted_devices, y.faulted_devices, "r{}", x.round);
+        }
+        assert_eq!(ref_out.timeline.fault_counts(), out.timeline.fault_counts());
+        assert_eq!(ref_out.dynamics, out.dynamics);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_refuses_a_different_config() {
+        let cfg = base(SyncPreset::Bsp);
+        let mut e = engine(&cfg);
+        e.round().unwrap();
+        let path = std::env::temp_dir().join("scadles-engine-fingerprint.ckpt");
+        e.save_checkpoint(&path).unwrap();
+        let mut other = base(SyncPreset::Bsp);
+        other.devices = 8;
+        let err = engine(&other).restore_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("different experiment config"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -88,6 +88,7 @@
 
 pub mod aggregate;
 pub mod backend;
+pub mod checkpoint;
 pub mod clock;
 pub mod device;
 pub mod engine;
@@ -99,8 +100,9 @@ pub mod worker;
 
 pub use aggregate::{
     aggregate_chunked_native, aggregate_native, aggregate_rows_into, aggregate_sparse_native,
-    discounted_uniform_weights_into, discounted_weights_from_batches_into, weights_from_batches,
-    RowView,
+    aggregator_from_preset, discounted_uniform_weights_into,
+    discounted_weights_from_batches_into, weights_from_batches, Aggregator, CoordinateMedian,
+    Krum, RowView, TrimmedMean, WeightedMean,
 };
 pub use backend::{Backend, MockBackend};
 pub use clock::{DevicePhase, RoundTiming, VirtualClock};

@@ -113,6 +113,17 @@ pub trait SyncPolicy: Send {
         part: &Participation,
         out: &mut Vec<f32>,
     );
+
+    /// Opaque cross-round policy state for checkpointing. Stateless
+    /// policies (BSP, K-sync, local SGD decide each round from the plan
+    /// alone) return empty; [`BoundedStaleness`] serializes its
+    /// per-device staleness counters.
+    fn snapshot(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore a [`Self::snapshot`] taken from the same preset.
+    fn restore(&mut self, _bytes: &[u8]) {}
 }
 
 /// Build the policy a preset names.
@@ -297,6 +308,17 @@ impl SyncPolicy for BoundedStaleness {
             }
             TrainMode::Ddl => discounted_uniform_weights_into(batches, &self.discount, out),
         }
+    }
+
+    fn snapshot(&self) -> Vec<u8> {
+        self.st.iter().flat_map(|s| s.to_le_bytes()).collect()
+    }
+
+    fn restore(&mut self, bytes: &[u8]) {
+        self.st = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
     }
 }
 
@@ -507,6 +529,30 @@ mod tests {
         }
         assert_eq!(ptrs.0, part.contributes.as_ptr());
         assert_eq!(ptrs.1, ks.order.as_ptr());
+    }
+
+    #[test]
+    fn staleness_counters_survive_a_snapshot_round_trip() {
+        let mut a = BoundedStaleness::new(3);
+        let mut part = Participation::default();
+        let p = plan(&[64, 64], &[1.0, 5.0]);
+        a.decide(&p, &[true; 2], &mut part);
+        a.decide(&p, &[true; 2], &mut part); // device 1 now 2 stale
+        let snap = a.snapshot();
+        let mut b = BoundedStaleness::new(3);
+        b.restore(&snap);
+        // both continue identically from here
+        for _ in 0..4 {
+            let mut pa = Participation::default();
+            let mut pb = Participation::default();
+            a.decide(&p, &[true; 2], &mut pa);
+            b.decide(&p, &[true; 2], &mut pb);
+            assert_eq!(pa.staleness, pb.staleness);
+            assert_eq!(pa.in_barrier, pb.in_barrier);
+        }
+        // stateless policies snapshot empty
+        assert!(Bsp.snapshot().is_empty());
+        assert!(KSync::new(0.5).snapshot().is_empty());
     }
 
     #[test]

@@ -51,6 +51,11 @@ impl Trainer {
         self.engine.clock_now()
     }
 
+    /// Rounds executed so far (after a restore: the checkpoint's round).
+    pub fn rounds_completed(&self) -> usize {
+        self.engine.rounds_completed()
+    }
+
     /// Worker-pool width the engine resolved (1 = sequential).
     pub fn worker_pool_width(&self) -> usize {
         self.engine.worker_pool_width()
@@ -89,6 +94,28 @@ impl Trainer {
     /// Total unread samples across device queues.
     pub fn total_backlog(&self) -> u64 {
         self.engine.total_backlog()
+    }
+
+    /// Ground-truth fault-injection totals (`None` when fault-free).
+    pub fn fault_counters(&self) -> Option<crate::faults::FaultCounters> {
+        self.engine.fault_counters()
+    }
+
+    /// The combine rule's label (`mean`, `trimmed:0.25`, `krum:1`, …).
+    pub fn aggregator_label(&self) -> String {
+        self.engine.aggregator_label()
+    }
+
+    /// Serialize the complete training state (see
+    /// [`RoundEngine::save_checkpoint`]).
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        self.engine.save_checkpoint(path)
+    }
+
+    /// Restore a checkpoint written by the exact same config (see
+    /// [`RoundEngine::restore_checkpoint`]).
+    pub fn restore_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        self.engine.restore_checkpoint(path)
     }
 
     /// Execute one round under the configured policy; returns its log

@@ -152,6 +152,11 @@ impl DeviceWorker {
         self.fresh = fresh;
     }
 
+    /// Records currently staged for this round's local step.
+    pub fn fresh_len(&self) -> usize {
+        self.fresh.len()
+    }
+
     /// Cap the polled batch at the compiled bucket ladder's top (records
     /// gained through injection can exceed the planned batch).
     pub fn truncate_fresh(&mut self, cap: usize) {
@@ -274,6 +279,17 @@ impl DeviceWorker {
         if let Some(ef) = &mut self.feedback {
             ef.absorb_unsent(&self.grad);
         }
+    }
+
+    /// Phase (fault injection): this device **crashed** mid-round — its
+    /// contribution is rejected and, unlike [`Self::withhold`], nothing
+    /// is folded into the error-feedback residual: a crashed device's
+    /// gradient is simply *gone*, which is exactly the mass-loss the
+    /// fault layer exists to model. Clears the stats/sparse flags so the
+    /// outgoing row is never read as a compressed one.
+    pub fn discard(&mut self) {
+        self.out.has_stats = false;
+        self.sent_sparse = false;
     }
 
     /// Phase: commit the global gate's decision to this shard.
@@ -559,6 +575,23 @@ mod tests {
             }
             RowView::Sparse(_) => panic!("stats-only phase presents the dense row"),
         }
+    }
+
+    #[test]
+    fn discard_loses_the_gradient_instead_of_banking_it() {
+        let be = MockBackend::new(32, 10);
+        let mut w = worker(100.0, true, 32);
+        w.device.advance_stream(1.0);
+        w.drain(0.0, 32);
+        let params = vec![0.2f32; 32];
+        w.train(&be, &params, &Synthetic::standard(10, 42));
+        w.compress_stats(&be, 0.5, false);
+        assert!(w.out.has_stats);
+        w.discard();
+        assert!(!w.out.has_stats);
+        // the crash banked nothing: the residual is still empty, unlike
+        // withhold() which would hold the whole raw gradient
+        assert_eq!(w.feedback.as_ref().unwrap().residual_norm2, 0.0);
     }
 
     #[test]

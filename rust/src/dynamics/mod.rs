@@ -119,6 +119,8 @@ pub struct StreamDynamics {
     /// Last round's frame (counter edges).
     prev: Vec<DeviceDynamics>,
     sampled: bool,
+    /// Time of the most recent [`Self::sample`] (checkpointing).
+    last_t: f64,
     counters: DynamicsCounters,
 }
 
@@ -190,6 +192,7 @@ impl StreamDynamics {
             frame: vec![DeviceDynamics::default(); devices],
             prev: vec![DeviceDynamics::default(); devices],
             sampled: false,
+            last_t: 0.0,
             counters: DynamicsCounters::default(),
         })
     }
@@ -245,6 +248,7 @@ impl StreamDynamics {
             self.frame[i] = f;
         }
         self.sampled = true;
+        self.last_t = t;
         &self.frame
     }
 
@@ -256,6 +260,20 @@ impl StreamDynamics {
     /// Run-level counters accumulated so far.
     pub fn counters(&self) -> DynamicsCounters {
         self.counters
+    }
+
+    /// Time of the last [`Self::sample`], or `None` before the first
+    /// (checkpointing: the restore path re-samples at this time to
+    /// fast-forward the lazy process cursors and rebuild the frame).
+    pub fn last_sample_t(&self) -> Option<f64> {
+        self.sampled.then_some(self.last_t)
+    }
+
+    /// Overwrite the run-level counters (checkpoint restore; called after
+    /// the re-sample at [`Self::last_sample_t`], whose own counter edges
+    /// are superseded by the saved values).
+    pub fn restore_counters(&mut self, c: DynamicsCounters) {
+        self.counters = c;
     }
 }
 

@@ -1,0 +1,453 @@
+//! Deterministic mid-round fault injection.
+//!
+//! The dynamics layer models devices leaving *cleanly between* rounds;
+//! this layer models the failures that happen *inside* one: crashes
+//! after local compute but before synchronization, corrupt or stale
+//! gradient rows, and byzantine (adversarial) contributions. The round
+//! engine consults a [`FaultInjector`] at fixed points of the round and
+//! the robust aggregators (`coordinator::Aggregator`) defend — the
+//! injector never tells the aggregator which rows are garbage, only the
+//! metrics layer records the ground truth
+//! ([`FaultCause`] per device-round in the timeline,
+//! `rejected_devices` per round in `RoundLog`).
+//!
+//! **Determinism guarantee** (same contract as `dynamics`): device `i`
+//! draws exactly one uniform per round from its own Pcg64 substream
+//! (`FAULT_STREAM + i`), whatever the worker-pool width and whatever
+//! other devices roll. `FaultPreset::None` builds no injector at all —
+//! zero draws, zero buffers, the engine's fault-free path runs bitwise
+//! unchanged.
+
+use std::collections::VecDeque;
+
+use crate::config::faults::{CrashPhase, FaultPreset, BYZANTINE_SCALE};
+use crate::coordinator::RowView;
+use crate::rng::Pcg64;
+
+/// Pcg64 stream base for fault draws: device `i` draws from
+/// `FAULT_STREAM + i` (disjoint from the rate stream `0x5CAD`, hetero
+/// `0x4E7E_0000+i`, device `0xDE1C_E000+i` and dynamics `0xD1AA_0000+…`).
+const FAULT_STREAM: u64 = 0xFA17_0000;
+
+/// Ground truth of what the injector did to a device in one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultCause {
+    /// No fault injected (the overwhelmingly common row).
+    #[default]
+    None,
+    /// Device crashed mid-round; its contribution was rejected.
+    Crashed,
+    /// Device committed a scaled-garbage row.
+    Corrupt,
+    /// Device replayed a stale row.
+    Stale,
+    /// Device committed an adversarial (sign-flipped, amplified) row.
+    Byzantine,
+}
+
+impl FaultCause {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultCause::None => "none",
+            FaultCause::Crashed => "crashed",
+            FaultCause::Corrupt => "corrupt",
+            FaultCause::Stale => "stale",
+            FaultCause::Byzantine => "byzantine",
+        }
+    }
+
+    /// Stable wire id (checkpoint serialization).
+    pub fn as_u8(&self) -> u8 {
+        match self {
+            FaultCause::None => 0,
+            FaultCause::Crashed => 1,
+            FaultCause::Corrupt => 2,
+            FaultCause::Stale => 3,
+            FaultCause::Byzantine => 4,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => FaultCause::None,
+            1 => FaultCause::Crashed,
+            2 => FaultCause::Corrupt,
+            3 => FaultCause::Stale,
+            4 => FaultCause::Byzantine,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for FaultCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Run-level injection counters (ground truth totals).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub crashes: u64,
+    pub corrupt_rows: u64,
+    pub stale_replays: u64,
+    pub byzantine_rows: u64,
+}
+
+impl FaultCounters {
+    pub fn total(&self) -> u64 {
+        self.crashes + self.corrupt_rows + self.stale_replays + self.byzantine_rows
+    }
+}
+
+/// Full injector state for checkpointing.
+#[derive(Debug, Clone)]
+pub struct FaultInjectorState {
+    pub rngs: Vec<(u64, u64)>,
+    /// Per-device stale-replay history, oldest first.
+    pub history: Vec<Vec<Vec<f32>>>,
+    pub counters: FaultCounters,
+}
+
+/// The per-run fault engine: per-device Bernoulli processes plus the
+/// buffers that realize each fault's effect on the round.
+#[derive(Debug)]
+pub struct FaultInjector {
+    preset: FaultPreset,
+    rngs: Vec<Pcg64>,
+    /// This round's Bernoulli outcomes (one draw per device per round).
+    hit: Vec<bool>,
+    /// Ground-truth cause per device this round.
+    causes: Vec<FaultCause>,
+    /// Dense replacement rows for garbage faults, reused across rounds.
+    overrides: Vec<Vec<f32>>,
+    overridden: Vec<bool>,
+    /// Last `lag` committed rows per device (stale replay), oldest first.
+    history: Vec<VecDeque<Vec<f32>>>,
+    counters: FaultCounters,
+    d: usize,
+}
+
+impl FaultInjector {
+    /// Build the injector, or `None` for the fault-free preset (the
+    /// engine then carries no fault state at all).
+    pub fn from_preset(preset: &FaultPreset, devices: usize, d: usize, seed: u64) -> Option<Self> {
+        if preset.is_none() {
+            return None;
+        }
+        Some(Self {
+            preset: *preset,
+            rngs: (0..devices)
+                .map(|i| Pcg64::new(seed, FAULT_STREAM + i as u64))
+                .collect(),
+            hit: vec![false; devices],
+            causes: vec![FaultCause::None; devices],
+            overrides: vec![Vec::new(); devices],
+            overridden: vec![false; devices],
+            history: vec![VecDeque::new(); devices],
+            counters: FaultCounters::default(),
+            d,
+        })
+    }
+
+    pub fn preset(&self) -> &FaultPreset {
+        &self.preset
+    }
+
+    /// Whether the preset injects crashes at all (local-SGD rounds
+    /// treat either phase as "the device dies for the round").
+    pub fn is_crash(&self) -> bool {
+        matches!(self.preset, FaultPreset::Crash { .. })
+    }
+
+    /// Whether crashes fire before training (phase `train`).
+    pub fn crashes_before_train(&self) -> bool {
+        matches!(self.preset, FaultPreset::Crash { phase: CrashPhase::Train, .. })
+    }
+
+    /// Whether crashes fire between compression and sync (phase `sync`).
+    pub fn crashes_before_sync(&self) -> bool {
+        matches!(self.preset, FaultPreset::Crash { phase: CrashPhase::Sync, .. })
+    }
+
+    /// Roll every device's fault for this round: exactly one uniform per
+    /// device per round, in device order, whatever the outcomes. Resets
+    /// the per-round cause/override state.
+    pub fn draw_round(&mut self) {
+        let frac = self.preset.frac();
+        for (i, rng) in self.rngs.iter_mut().enumerate() {
+            self.hit[i] = rng.f64() < frac;
+            self.causes[i] = FaultCause::None;
+            self.overridden[i] = false;
+        }
+    }
+
+    /// This round's Bernoulli outcome for device `i`.
+    pub fn hit(&self, i: usize) -> bool {
+        self.hit[i]
+    }
+
+    /// Record that device `i`'s crash actually took effect (the engine
+    /// calls this only for devices that had work to lose).
+    pub fn mark_crashed(&mut self, i: usize) {
+        self.causes[i] = FaultCause::Crashed;
+        self.counters.crashes += 1;
+    }
+
+    /// Ground-truth causes for this round (one per device).
+    pub fn causes(&self) -> &[FaultCause] {
+        &self.causes
+    }
+
+    pub fn counters(&self) -> FaultCounters {
+        self.counters
+    }
+
+    /// Build the garbage replacement rows for this round. `rows(i)` is
+    /// the true outgoing row of device `i`; `eligible(i)` says whether
+    /// the device commits a row at all this round (contributing, batch
+    /// > 0, not crashed). Must be called after compression decisions and
+    /// before aggregation — [`Self::override_row`] then serves the
+    /// swapped rows to the aggregator.
+    pub fn build_overrides<'a, R, E>(&mut self, n: usize, rows: R, eligible: E)
+    where
+        R: Fn(usize) -> RowView<'a>,
+        E: Fn(usize) -> bool,
+    {
+        match self.preset {
+            FaultPreset::Corrupt { .. } | FaultPreset::Byzantine { .. } => {
+                let scale = match self.preset {
+                    FaultPreset::Corrupt { .. } => self.preset.scale() as f32,
+                    _ => BYZANTINE_SCALE,
+                };
+                for i in 0..n {
+                    if !(self.hit[i] && eligible(i)) {
+                        continue;
+                    }
+                    densify(&mut self.overrides[i], self.d, rows(i));
+                    for v in &mut self.overrides[i] {
+                        *v *= scale;
+                    }
+                    self.overridden[i] = true;
+                    match self.preset {
+                        FaultPreset::Corrupt { .. } => {
+                            self.causes[i] = FaultCause::Corrupt;
+                            self.counters.corrupt_rows += 1;
+                        }
+                        _ => {
+                            self.causes[i] = FaultCause::Byzantine;
+                            self.counters.byzantine_rows += 1;
+                        }
+                    }
+                }
+            }
+            FaultPreset::Stale { lag, .. } => {
+                for i in 0..n {
+                    if !eligible(i) {
+                        continue;
+                    }
+                    // replay only once `lag` committed rows exist, so the
+                    // front of the history is exactly `lag` rounds back
+                    if self.hit[i] && self.history[i].len() == lag as usize {
+                        let old = self.history[i].front().expect("non-empty history");
+                        self.overrides[i].clear();
+                        self.overrides[i].extend_from_slice(old);
+                        self.overridden[i] = true;
+                        self.causes[i] = FaultCause::Stale;
+                        self.counters.stale_replays += 1;
+                    }
+                    // the history always records the *true* row
+                    let mut row = if self.history[i].len() == lag as usize {
+                        self.history[i].pop_front().expect("non-empty history")
+                    } else {
+                        Vec::new()
+                    };
+                    densify(&mut row, self.d, rows(i));
+                    self.history[i].push_back(row);
+                }
+            }
+            FaultPreset::None | FaultPreset::Crash { .. } => {}
+        }
+    }
+
+    /// The replacement row the aggregator must see for device `i` this
+    /// round, if the injector swapped one in.
+    pub fn override_row(&self, i: usize) -> Option<&[f32]> {
+        self.overridden[i].then(|| self.overrides[i].as_slice())
+    }
+
+    /// Snapshot the persistent injector state (checkpointing). The
+    /// per-round scratch (`hit`/`causes`/`overrides`) is rebuilt by the
+    /// next `draw_round`.
+    pub fn state(&self) -> FaultInjectorState {
+        FaultInjectorState {
+            rngs: self.rngs.iter().map(|r| r.raw_state()).collect(),
+            history: self
+                .history
+                .iter()
+                .map(|h| h.iter().cloned().collect())
+                .collect(),
+            counters: self.counters,
+        }
+    }
+
+    /// Restore to an exact [`Self::state`] snapshot.
+    pub fn restore(&mut self, s: FaultInjectorState) {
+        assert_eq!(s.rngs.len(), self.rngs.len(), "device count mismatch");
+        self.rngs = s.rngs.iter().map(|&(a, b)| Pcg64::from_raw(a, b)).collect();
+        self.history = s.history.into_iter().map(VecDeque::from_iter).collect();
+        self.counters = s.counters;
+    }
+}
+
+/// Materialize a row view into `buf` (length `d`).
+fn densify(buf: &mut Vec<f32>, d: usize, row: RowView<'_>) {
+    buf.clear();
+    buf.resize(d, 0.0);
+    match row {
+        RowView::Dense(v) => buf.copy_from_slice(v),
+        RowView::Sparse(s) => {
+            for (&i, &v) in s.idx.iter().zip(&s.val) {
+                buf[i as usize] = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn injector(spec: &str, devices: usize, d: usize, seed: u64) -> FaultInjector {
+        FaultInjector::from_preset(&spec.parse().unwrap(), devices, d, seed).unwrap()
+    }
+
+    #[test]
+    fn none_builds_no_injector() {
+        assert!(FaultInjector::from_preset(&FaultPreset::None, 4, 8, 42).is_none());
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_per_device() {
+        let outcomes = |seed: u64| -> Vec<bool> {
+            let mut f = injector("crash:0.5", 8, 4, seed);
+            let mut out = Vec::new();
+            for _ in 0..50 {
+                f.draw_round();
+                out.extend_from_slice(&f.hit);
+            }
+            out
+        };
+        assert_eq!(outcomes(7), outcomes(7));
+        assert_ne!(outcomes(7), outcomes(8));
+        // hit frequency tracks the preset fraction
+        let hits = outcomes(7).iter().filter(|&&h| h).count();
+        let share = hits as f64 / 400.0;
+        assert!((share - 0.5).abs() < 0.1, "hit share {share}");
+    }
+
+    #[test]
+    fn device_streams_are_independent_of_cluster_width() {
+        // device 2's stream is the same whether the fleet has 4 or 16
+        // members (per-device substreams, not a shared cursor)
+        let mut small = injector("byzantine:0.3", 4, 4, 11);
+        let mut large = injector("byzantine:0.3", 16, 4, 11);
+        for _ in 0..30 {
+            small.draw_round();
+            large.draw_round();
+            assert_eq!(small.hit(2), large.hit(2));
+        }
+    }
+
+    #[test]
+    fn corrupt_scales_the_row() {
+        let mut f = injector("corrupt:1:10", 2, 4, 3);
+        f.draw_round();
+        let row = [1.0f32, -2.0, 0.5, 0.0];
+        f.build_overrides(2, |_| RowView::Dense(&row), |_| true);
+        let got = f.override_row(0).expect("frac 1 always hits");
+        assert_eq!(got, &[10.0, -20.0, 5.0, 0.0]);
+        assert_eq!(f.causes()[0], FaultCause::Corrupt);
+        assert_eq!(f.counters().corrupt_rows, 2);
+    }
+
+    #[test]
+    fn byzantine_flips_and_amplifies() {
+        let mut f = injector("byzantine:1", 1, 3, 3);
+        f.draw_round();
+        let row = [1.0f32, -0.5, 2.0];
+        f.build_overrides(1, |_| RowView::Dense(&row), |_| true);
+        let got = f.override_row(0).unwrap();
+        assert_eq!(got, &[-10.0, 5.0, -20.0]);
+        assert_eq!(f.causes()[0], FaultCause::Byzantine);
+    }
+
+    #[test]
+    fn stale_replays_the_lagged_row() {
+        let mut f = injector("stale:1:2", 1, 2, 3);
+        let rows = [[1.0f32, 1.0], [2.0, 2.0], [3.0, 3.0], [4.0, 4.0]];
+        for (r, row) in rows.iter().enumerate() {
+            f.draw_round();
+            f.build_overrides(1, |_| RowView::Dense(row), |_| true);
+            match r {
+                // no replay until `lag` rows of history exist
+                0 | 1 => assert!(f.override_row(0).is_none(), "round {r}"),
+                // round r replays round r−2's row
+                _ => assert_eq!(f.override_row(0).unwrap(), &rows[r - 2], "round {r}"),
+            }
+        }
+        assert_eq!(f.counters().stale_replays, 2);
+    }
+
+    #[test]
+    fn ineligible_devices_are_untouched_but_still_draw() {
+        let mut f = injector("corrupt:1:10", 2, 2, 3);
+        f.draw_round();
+        let row = [1.0f32, 1.0];
+        f.build_overrides(2, |_| RowView::Dense(&row), |i| i == 0);
+        assert!(f.override_row(0).is_some());
+        assert!(f.override_row(1).is_none());
+        assert_eq!(f.causes()[1], FaultCause::None);
+        // the ineligible device's stream still advanced (one draw per
+        // device per round): its next-round outcome matches a fresh
+        // injector that drew twice
+        let mut twin = injector("corrupt:1:10", 2, 2, 3);
+        twin.draw_round();
+        twin.draw_round();
+        f.draw_round();
+        assert_eq!(f.hit(1), twin.hit(1));
+    }
+
+    #[test]
+    fn state_round_trips_through_checkpoint() {
+        let mut a = injector("stale:0.5:2", 3, 4, 9);
+        let row = [1.0f32, 2.0, 3.0, 4.0];
+        for _ in 0..5 {
+            a.draw_round();
+            a.build_overrides(3, |_| RowView::Dense(&row), |_| true);
+        }
+        let saved = a.state();
+        let mut b = injector("stale:0.5:2", 3, 4, 0xDEAD); // wrong seed on purpose
+        b.restore(saved);
+        for _ in 0..10 {
+            a.draw_round();
+            b.draw_round();
+            assert_eq!(a.hit, b.hit);
+        }
+        assert_eq!(a.counters(), b.counters());
+    }
+
+    #[test]
+    fn cause_wire_ids_round_trip() {
+        for c in [
+            FaultCause::None,
+            FaultCause::Crashed,
+            FaultCause::Corrupt,
+            FaultCause::Stale,
+            FaultCause::Byzantine,
+        ] {
+            assert_eq!(FaultCause::from_u8(c.as_u8()), Some(c));
+        }
+        assert_eq!(FaultCause::from_u8(9), None);
+    }
+}

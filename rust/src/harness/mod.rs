@@ -13,6 +13,7 @@
 pub mod ablation;
 pub mod analytic;
 pub mod dynamics;
+pub mod faults;
 pub mod fig6;
 pub mod hetero;
 pub mod sync;
@@ -61,7 +62,8 @@ pub const EXPERIMENTS: &[&str] = &[
 ];
 
 /// Extension studies beyond the paper (DESIGN.md §5b).
-pub const EXTENSIONS: &[&str] = &["ablation", "emd", "fedavg", "hetero", "dynamics", "sync"];
+pub const EXTENSIONS: &[&str] =
+    &["ablation", "emd", "fedavg", "hetero", "dynamics", "sync", "faults"];
 
 /// Dispatch one experiment by id.
 pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
@@ -89,6 +91,7 @@ pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
         "hetero" => hetero::hetero(opts),
         "dynamics" => dynamics::dynamics(opts),
         "sync" => sync::sync(opts),
+        "faults" => faults::faults(opts),
         "all" => {
             for e in EXPERIMENTS {
                 eprintln!("\n================ {e} ================");

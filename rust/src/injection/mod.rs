@@ -43,6 +43,15 @@ impl DataInjector {
         &self.cfg
     }
 
+    /// RNG cursor for checkpointing.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.raw_state()
+    }
+
+    pub fn restore_rng(&mut self, s: (u64, u64)) {
+        self.rng = Pcg64::from_raw(s.0, s.1);
+    }
+
     /// Re-route donated samples between the per-device fresh batches.
     ///
     /// `fresh[i]` holds the records device `i` polled this round; donated

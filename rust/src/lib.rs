@@ -66,6 +66,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dynamics;
+pub mod faults;
 pub mod harness;
 pub mod injection;
 pub mod metrics;

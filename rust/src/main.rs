@@ -47,8 +47,27 @@ USAGE:
                                e.g. --sync ksync:0.75 commits each round on the
                                fastest 75% of devices; composes with --hetero
                                and --dynamics)
+              [--faults F]    (mid-round fault injection, name[:params]:
+                               none | crash[:frac[:train|sync]] |
+                               corrupt[:frac[:scale]] | stale[:frac[:lag]] |
+                               byzantine[:frac]; e.g. --faults byzantine:0.25
+                               flips+amplifies 25% of device-rounds; composes
+                               with --hetero/--dynamics/--sync)
+              [--agg A]       (gradient combine rule: mean | trimmed[:beta] |
+                               median | krum[:f]; robust rules defend against
+                               --faults garbage, mean is the seed path)
+              [--checkpoint FILE] [--checkpoint-every N] [--resume]
+                              (serialize full training state to FILE — every N
+                               rounds and at the end; --resume restores FILE
+                               first when it exists, and the resumed run is
+                               bitwise identical to an uninterrupted one)
   repro exp <id|all> [--artifacts DIR] [--devices N] [--rounds R]
               [--model M] [--out-dir DIR] [--echo N] [--seed S]
+  repro bench-check [--current rust/BENCH_hotpaths.json]
+              [--baseline BENCH_baseline.json] [--tolerance 0.25]
+              (CI perf gate: fail when any tracked bench case regresses
+               more than tolerance vs the committed baseline; exits 0
+               with a notice when no baseline exists yet)
   repro info  [--artifacts DIR]
   repro list
 ";
@@ -132,6 +151,94 @@ fn parse_mode(s: &str) -> anyhow::Result<TrainMode> {
     })
 }
 
+/// The CI perf gate: compare a fresh `BENCH_hotpaths.json` against the
+/// committed `BENCH_baseline.json` and fail when any case tracked by the
+/// baseline regressed by more than `tolerance` (relative, on `min_ns` —
+/// the noise-robust statistic). A missing baseline is a notice, not a
+/// failure, so the gate bootstraps itself on the first CI run; a tracked
+/// case missing from the current results *is* a failure (a silently
+/// deleted benchmark would otherwise un-track a hot path).
+fn bench_check(current: &str, baseline: &str, tolerance: f64) -> anyhow::Result<()> {
+    use scadles::util::json::Json;
+
+    anyhow::ensure!(
+        tolerance > 0.0,
+        "--tolerance must be positive (got {tolerance})"
+    );
+    if !std::path::Path::new(baseline).exists() {
+        println!(
+            "bench-check: no baseline at {baseline}; nothing to compare \
+             (seed it by committing a copy of {current})"
+        );
+        return Ok(());
+    }
+    let parse = |path: &str| -> anyhow::Result<HashMap<String, f64>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench results from {path}"))?;
+        let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        let schema = doc.get("schema")?.as_str()?;
+        anyhow::ensure!(
+            schema == "scadles-bench-v1",
+            "{path}: unknown bench schema {schema:?}"
+        );
+        let mut cases = HashMap::new();
+        for case in doc.get("cases")?.as_arr()? {
+            cases.insert(
+                case.get("name")?.as_str()?.to_string(),
+                case.get("min_ns")?.as_f64()?,
+            );
+        }
+        Ok(cases)
+    };
+    let base = parse(baseline)?;
+    let cur = parse(current)?;
+
+    let mut names: Vec<&String> = base.keys().collect();
+    names.sort();
+    let mut failures = Vec::new();
+    println!(
+        "bench-check: {} tracked case(s), tolerance {:.0}%",
+        names.len(),
+        tolerance * 100.0
+    );
+    for name in names {
+        let b = base[name];
+        let Some(&c) = cur.get(name) else {
+            println!("  MISSING  {name}  (tracked in baseline, absent from {current})");
+            failures.push(format!("{name}: missing from current results"));
+            continue;
+        };
+        let ratio = if b > 0.0 { c / b } else { f64::INFINITY };
+        let verdict = if ratio > 1.0 + tolerance {
+            failures.push(format!(
+                "{name}: {b:.0} ns -> {c:.0} ns ({:+.1}%)",
+                (ratio - 1.0) * 100.0
+            ));
+            "REGRESS"
+        } else {
+            "ok"
+        };
+        println!(
+            "  {verdict:>7}  {name}  baseline {b:.0} ns, current {c:.0} ns ({:+.1}%)",
+            (ratio - 1.0) * 100.0
+        );
+    }
+    for name in cur.keys().filter(|n| !base.contains_key(*n)) {
+        println!("  new      {name}  (not yet in baseline)");
+    }
+    if failures.is_empty() {
+        println!("bench-check: PASS");
+        Ok(())
+    } else {
+        bail!(
+            "bench-check: {} regression(s) beyond {:.0}%:\n  {}",
+            failures.len(),
+            tolerance * 100.0,
+            failures.join("\n  ")
+        )
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     // silence xla_extension's TfrtCpuClient chatter unless asked for
     if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
@@ -189,7 +296,7 @@ fn main() -> anyhow::Result<()> {
             harness::run(&id, &opts)
         }
         "train" => {
-            let args = Args::parse(&argv[1..], &["truncate"])?;
+            let args = Args::parse(&argv[1..], &["truncate", "resume"])?;
             let model = args.get_str("model", "resnet_tiny_c10");
             let mut b = ExperimentConfig::builder(&model)
                 .artifacts_dir(args.get_str("artifacts", "artifacts"))
@@ -201,6 +308,8 @@ fn main() -> anyhow::Result<()> {
                 .hetero(args.get_str("hetero", "k80-homogeneous").parse()?)
                 .dynamics(args.get_str("dynamics", "static").parse()?)
                 .sync(args.get_str("sync", "bsp").parse()?)
+                .faults(args.get_str("faults", "none").parse()?)
+                .agg(args.get_str("agg", "mean").parse()?)
                 .seed(args.get("seed", 42u64)?)
                 .echo_every(args.get("echo", 10usize)?)
                 .worker_threads(args.get("workers", 0usize)?);
@@ -222,7 +331,43 @@ fn main() -> anyhow::Result<()> {
             }
             let cfg = b.build()?;
             let mut t = Trainer::from_config(&cfg)?;
-            let out = t.run()?;
+            let ckpt = args.values.get("checkpoint").map(PathBuf::from);
+            let ckpt_every = args.get("checkpoint-every", 0usize)?;
+            if args.has("resume") {
+                let path = ckpt
+                    .as_deref()
+                    .context("--resume requires --checkpoint FILE")?;
+                if path.exists() {
+                    t.restore_checkpoint(path)?;
+                    eprintln!(
+                        "resumed from {} at round {}",
+                        path.display(),
+                        t.rounds_completed()
+                    );
+                } else {
+                    eprintln!(
+                        "checkpoint {} not found; starting from scratch",
+                        path.display()
+                    );
+                }
+            }
+            let out = if let Some(path) = ckpt.as_deref() {
+                while t.rounds_completed() < cfg.rounds {
+                    let log = t.round()?;
+                    if ckpt_every > 0 && (log.round + 1) % ckpt_every == 0 {
+                        t.save_checkpoint(path)?;
+                    }
+                }
+                t.save_checkpoint(path)?;
+                eprintln!(
+                    "checkpoint written to {} at round {}",
+                    path.display(),
+                    t.rounds_completed()
+                );
+                t.finish()
+            } else {
+                t.run()?
+            };
             println!("{}", out.report.to_json().to_string_pretty());
             if let Some(path) = args.values.get("csv") {
                 let mut w = scadles::metrics::CsvWriter::create(
@@ -233,6 +378,7 @@ fn main() -> anyhow::Result<()> {
                         "floats_sent", "compressed", "injection_bytes",
                         "straggler_device", "straggler_cause", "active_devices",
                         "rate_est", "committed_devices", "dropped_devices",
+                        "rejected_devices", "faulted_devices",
                     ],
                 )?;
                 for r in out.logs.rounds() {
@@ -254,12 +400,22 @@ fn main() -> anyhow::Result<()> {
                         format!("{:.2}", r.rate_est),
                         r.committed_devices.to_string(),
                         r.dropped_devices.to_string(),
+                        r.rejected_devices.to_string(),
+                        r.faulted_devices.to_string(),
                     ])?;
                 }
                 w.flush()?;
                 eprintln!("wrote per-round csv to {path}");
             }
             Ok(())
+        }
+        "bench-check" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            bench_check(
+                &args.get_str("current", "rust/BENCH_hotpaths.json"),
+                &args.get_str("baseline", "BENCH_baseline.json"),
+                args.get("tolerance", 0.25f64)?,
+            )
         }
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

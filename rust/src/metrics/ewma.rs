@@ -50,6 +50,19 @@ impl Ewma {
     pub fn is_warm(&self) -> bool {
         self.updates > 0
     }
+
+    /// Raw `(value, weight, updates)` state for checkpointing (`alpha` is
+    /// config, rebuilt by the caller).
+    pub fn raw_state(&self) -> (f64, f64, u64) {
+        (self.value, self.weight, self.updates)
+    }
+
+    /// Restore the tracker to an exact [`Self::raw_state`] cursor.
+    pub fn restore(&mut self, value: f64, weight: f64, updates: u64) {
+        self.value = value;
+        self.weight = weight;
+        self.updates = updates;
+    }
 }
 
 #[cfg(test)]

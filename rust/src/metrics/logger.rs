@@ -45,6 +45,15 @@ pub struct RoundLog {
     /// policy withheld (K-sync laggards past the commit point; their
     /// gradients fold into the error-feedback residual).
     pub dropped_devices: usize,
+    /// Devices whose contribution was *rejected* this round because the
+    /// fault layer crashed them mid-round (their gradient is lost — not
+    /// banked in the residual like a policy drop).
+    pub rejected_devices: usize,
+    /// Devices the fault layer touched this round in any way: crashes
+    /// *plus* the silent garbage (corrupt/stale/byzantine rows) that
+    /// still entered the aggregate. Ground truth for the fault harness;
+    /// always ≥ `rejected_devices`.
+    pub faulted_devices: usize,
 }
 
 /// Accumulates [`RoundLog`]s for one run; the harness renders them into
@@ -99,6 +108,11 @@ impl RunLogger {
 
     pub fn rounds(&self) -> &[RoundLog] {
         &self.rounds
+    }
+
+    /// Replace the accumulated rounds wholesale (checkpoint restore).
+    pub fn restore_rounds(&mut self, rounds: Vec<RoundLog>) {
+        self.rounds = rounds;
     }
 
     pub fn last(&self) -> Option<&RoundLog> {

@@ -6,6 +6,14 @@
 //! phases round to round; the timeline records one row per device per
 //! round so straggler attribution — stream-wait vs compute vs sync — can
 //! be read off the run instead of inferred from totals.
+//!
+//! The fault layer writes its ground truth here too: every row carries
+//! the [`crate::faults::FaultCause`] the injector assigned the device
+//! that round, so a device that committed *garbage* (which the round
+//! accounting otherwise cannot see — the row silently entered the
+//! aggregate) is still attributable after the fact.
+
+use crate::faults::FaultCause;
 
 /// Why a round was as long as it was (its dominant phase).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -65,6 +73,10 @@ pub struct DeviceRoundRow {
     pub straggler: bool,
     /// Why (set on the straggler's row; `None` elsewhere).
     pub cause: StragglerCause,
+    /// What the fault layer did to this device this round (`None` in
+    /// fault-free runs; `Crashed` rows were rejected, garbage causes —
+    /// corrupt/stale/byzantine — mark rows that entered the aggregate).
+    pub fault: FaultCause,
 }
 
 /// All per-device rows of a run, in (round, device) order.
@@ -119,12 +131,45 @@ impl Timeline {
     }
 
     /// Device-rounds where a trained gradient was withheld from the
-    /// aggregate (K-sync laggards: `batch > 0` but not participated).
+    /// aggregate by the *synchronization policy* (K-sync laggards:
+    /// `batch > 0` but not participated). Crash rejections are a
+    /// different ledger ([`Self::rejected_rounds`]) — a crashed device
+    /// also trained without participating, but its gradient was lost,
+    /// not banked.
     pub fn withheld_rounds(&self) -> u64 {
         self.rows
             .iter()
-            .filter(|r| r.batch > 0 && !r.participated)
+            .filter(|r| r.batch > 0 && !r.participated && r.fault != FaultCause::Crashed)
             .count() as u64
+    }
+
+    /// Device-rounds the fault layer crash-rejected.
+    pub fn rejected_rounds(&self) -> u64 {
+        self.rows
+            .iter()
+            .filter(|r| r.fault == FaultCause::Crashed)
+            .count() as u64
+    }
+
+    /// Fault device-rounds by cause: (crashed, corrupt, stale,
+    /// byzantine). All zero on fault-free runs.
+    pub fn fault_counts(&self) -> (u64, u64, u64, u64) {
+        let mut c = (0u64, 0u64, 0u64, 0u64);
+        for r in &self.rows {
+            match r.fault {
+                FaultCause::Crashed => c.0 += 1,
+                FaultCause::Corrupt => c.1 += 1,
+                FaultCause::Stale => c.2 += 1,
+                FaultCause::Byzantine => c.3 += 1,
+                FaultCause::None => {}
+            }
+        }
+        c
+    }
+
+    /// Replace the accumulated rows wholesale (checkpoint restore).
+    pub fn restore_rows(&mut self, rows: Vec<DeviceRoundRow>) {
+        self.rows = rows;
     }
 
     /// Largest staleness any contribution carried (bounded-staleness
@@ -205,6 +250,38 @@ mod tests {
         assert_eq!(t.max_staleness(), 2);
         assert_eq!(Timeline::new().withheld_rounds(), 0);
         assert_eq!(Timeline::new().max_staleness(), 0);
+    }
+
+    #[test]
+    fn fault_columns_keep_their_own_ledger() {
+        let mut t = Timeline::new();
+        // a crashed device trained but must not count as policy-withheld
+        t.push(DeviceRoundRow { batch: 32, fault: FaultCause::Crashed, ..Default::default() });
+        // a real K-sync withhold
+        t.push(DeviceRoundRow { batch: 16, participated: false, ..Default::default() });
+        // garbage rows participate and are attributed
+        t.push(DeviceRoundRow {
+            batch: 8,
+            participated: true,
+            fault: FaultCause::Byzantine,
+            ..Default::default()
+        });
+        t.push(DeviceRoundRow {
+            batch: 8,
+            participated: true,
+            fault: FaultCause::Corrupt,
+            ..Default::default()
+        });
+        t.push(DeviceRoundRow {
+            batch: 8,
+            participated: true,
+            fault: FaultCause::Stale,
+            ..Default::default()
+        });
+        assert_eq!(t.withheld_rounds(), 1);
+        assert_eq!(t.rejected_rounds(), 1);
+        assert_eq!(t.fault_counts(), (1, 1, 1, 1));
+        assert_eq!(Timeline::new().fault_counts(), (0, 0, 0, 0));
     }
 
     #[test]

@@ -38,6 +38,17 @@ impl Pcg64 {
         Self::new(self.next_u64(), stream)
     }
 
+    /// Raw `(state, inc)` cursor for checkpointing.
+    pub fn raw_state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator at an exact `(state, inc)` cursor (checkpoint
+    /// restore; bitwise-resumes the stream where [`Self::raw_state`] cut it).
+    pub fn from_raw(state: u64, inc: u64) -> Self {
+        Self { state, inc }
+    }
+
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;

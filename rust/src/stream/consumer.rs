@@ -61,6 +61,13 @@ impl Consumer {
         self.missed
     }
 
+    /// Restore the consumer cursor (checkpointing).
+    pub fn restore(&mut self, offset: u64, consumed: u64, missed: u64) {
+        self.offset = offset;
+        self.consumed = consumed;
+        self.missed = missed;
+    }
+
     /// Unread records currently buffered (queue size Q_i).
     pub fn backlog(&self) -> usize {
         self.topic.backlog(self.offset)

@@ -30,7 +30,7 @@ pub mod topic;
 
 pub use broker::{Broker, BrokerStats};
 pub use consumer::Consumer;
-pub use partition::Partition;
+pub use partition::{Partition, PartitionState};
 pub use producer::{Producer, ProducerConfig};
 pub use rate::RateLimiter;
 pub use record::Record;

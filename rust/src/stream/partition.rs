@@ -23,6 +23,19 @@ pub struct Partition {
     produced: u64,
 }
 
+/// Full partition state for checkpointing: everything needed to rebuild
+/// the log bitwise (records with their assigned offsets, the retention in
+/// force, and the lifetime counters).
+#[derive(Debug, Clone)]
+pub struct PartitionState {
+    pub records: Vec<Record>,
+    pub retention: Retention,
+    pub next_offset: u64,
+    pub dropped: u64,
+    pub peak_len: usize,
+    pub produced: u64,
+}
+
 impl Partition {
     pub fn new(retention: Retention) -> Self {
         Self {
@@ -142,6 +155,29 @@ impl Partition {
         while self.log.front().is_some_and(|r| r.offset < offset) {
             self.log.pop_front();
         }
+    }
+
+    /// Snapshot the full partition state (checkpointing).
+    pub fn state(&self) -> PartitionState {
+        PartitionState {
+            records: self.log.iter().copied().collect(),
+            retention: self.retention,
+            next_offset: self.next_offset,
+            dropped: self.dropped,
+            peak_len: self.peak_len,
+            produced: self.produced,
+        }
+    }
+
+    /// Restore the partition to an exact [`Self::state`] snapshot.
+    pub fn restore(&mut self, s: PartitionState) {
+        self.log.clear();
+        self.log.extend(s.records);
+        self.retention = s.retention;
+        self.next_offset = s.next_offset;
+        self.dropped = s.dropped;
+        self.peak_len = s.peak_len;
+        self.produced = s.produced;
     }
 }
 

@@ -78,6 +78,20 @@ impl Producer {
         &self.topic
     }
 
+    /// Raw `(rate, carry, clock_us, produced, rng)` state for checkpointing.
+    pub fn raw_state(&self) -> (f64, f64, u64, u64, (u64, u64)) {
+        (self.cfg.rate, self.carry, self.clock_us, self.produced, self.rng.raw_state())
+    }
+
+    /// Restore the producer to an exact [`Self::raw_state`] cursor.
+    pub fn restore(&mut self, rate: f64, carry: f64, clock_us: u64, produced: u64, rng: (u64, u64)) {
+        self.cfg.rate = rate;
+        self.carry = carry;
+        self.clock_us = clock_us;
+        self.produced = produced;
+        self.rng = Pcg64::from_raw(rng.0, rng.1);
+    }
+
     fn make_record(&mut self) -> Record {
         let label = self.cfg.labels[self.rng.below(self.cfg.labels.len().max(1))];
         Record {

@@ -103,6 +103,16 @@ impl Topic {
     pub fn purge_below(&self, offset: u64) {
         self.lock().purge_below(offset)
     }
+
+    /// Snapshot the backing partition (checkpointing).
+    pub fn partition_state(&self) -> super::partition::PartitionState {
+        self.lock().state()
+    }
+
+    /// Restore the backing partition to an exact snapshot.
+    pub fn restore_partition(&self, s: super::partition::PartitionState) {
+        self.lock().restore(s)
+    }
 }
 
 #[cfg(test)]

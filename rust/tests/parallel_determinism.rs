@@ -318,6 +318,7 @@ fn assert_outputs_identical(a: &TrainerOutput, b: &TrainerOutput, ctx: &str) {
         assert_eq!(x.cause, y.cause, "{ctx}: timeline cause");
     }
     assert_eq!(a.dynamics, b.dynamics, "{ctx}: dynamics counters");
+    assert_eq!(a.fault_counts, b.fault_counts, "{ctx}: fault counters");
 }
 
 #[test]
@@ -469,6 +470,128 @@ fn chunked_dense_aggregation_in_the_round_engine_is_width_invariant() {
             &format!("chunked-dense threads={threads}"),
         );
     }
+}
+
+#[test]
+fn checkpoint_kill_and_restore_is_bitwise_identical_to_uninterrupted() {
+    // The checkpoint acceptance regression: a run killed after round 6
+    // and resumed from its checkpoint must finish bitwise identical to
+    // the uninterrupted run — across pool widths and under a policy
+    // that carries cross-round state (ksync's EF-absorbed laggards).
+    // The config layers compression + error feedback so the residuals,
+    // the adaptive gate and the RNG cursors all have to survive the
+    // round trip.
+    let compression = CompressionConfig {
+        ratio: 0.1,
+        delta: 0.5,
+        ewma_alpha: 0.3,
+        error_feedback: true,
+    };
+    for sync_spec in ["bsp", "ksync:0.75"] {
+        let sync: SyncPreset = sync_spec.parse().unwrap();
+        for threads in [1usize, 4, 8] {
+            let cfg = ExperimentConfig::builder("mlp_c10")
+                .devices(8)
+                .rounds(12)
+                .seed(11)
+                .preset(StreamPreset::S1)
+                .buffer_policy(BufferPolicy::Truncation)
+                .compression(compression)
+                .hetero(HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 })
+                .sync(sync)
+                .rate_jitter(0.2)
+                .eval_every(4)
+                .worker_threads(threads)
+                .build()
+                .unwrap();
+            let mk = || {
+                Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10))).unwrap()
+            };
+            let uninterrupted = {
+                let mut t = mk();
+                t.run().unwrap()
+            };
+            let path = std::env::temp_dir().join(format!(
+                "scadles_ckpt_det_{sync_spec}_{threads}_{}.ckpt",
+                std::process::id()
+            ));
+            {
+                // the "killed" run: 6 rounds, checkpoint, drop the trainer
+                let mut t = mk();
+                while t.rounds_completed() < 6 {
+                    t.round().unwrap();
+                }
+                t.save_checkpoint(&path).unwrap();
+            }
+            let resumed = {
+                let mut t = mk();
+                t.restore_checkpoint(&path).unwrap();
+                assert_eq!(t.rounds_completed(), 6, "{sync_spec}: resumed round cursor");
+                t.run().unwrap()
+            };
+            std::fs::remove_file(&path).ok();
+            assert_outputs_identical(
+                &uninterrupted,
+                &resumed,
+                &format!("checkpoint {sync_spec} threads={threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_checkpoints_error_instead_of_panicking() {
+    let cfg = ExperimentConfig::builder("mlp_c10")
+        .devices(4)
+        .rounds(8)
+        .seed(3)
+        .preset(StreamPreset::S1)
+        .eval_every(4)
+        .build()
+        .unwrap();
+    let mk = || Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10))).unwrap();
+    let path = std::env::temp_dir().join(format!(
+        "scadles_ckpt_corrupt_{}.ckpt",
+        std::process::id()
+    ));
+    {
+        let mut t = mk();
+        while t.rounds_completed() < 4 {
+            t.round().unwrap();
+        }
+        t.save_checkpoint(&path).unwrap();
+    }
+    let valid = std::fs::read(&path).unwrap();
+
+    // truncated mid-payload: the header's length check catches it
+    std::fs::write(&path, &valid[..valid.len() - 7]).unwrap();
+    let err = mk().restore_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("truncated checkpoint"), "got: {err}");
+
+    // garbage magic: refused before anything is parsed
+    let mut garbage = valid.clone();
+    garbage[0] ^= 0xFF;
+    std::fs::write(&path, &garbage).unwrap();
+    let err = mk().restore_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("not a ScaDLES checkpoint"), "got: {err}");
+
+    // payload cut short but with a *matching* header length — survives
+    // every header check, so the parse itself runs out of bytes
+    // mid-stream and must surface an Err (never a panic or a silent
+    // partial restore)
+    let mut short = valid[..valid.len() - 64].to_vec();
+    let len = (short.len() - 32) as u64;
+    short[24..32].copy_from_slice(&len.to_le_bytes());
+    std::fs::write(&path, &short).unwrap();
+    assert!(
+        mk().restore_checkpoint(&path).is_err(),
+        "mid-stream truncation must error"
+    );
+
+    // missing file
+    std::fs::remove_file(&path).unwrap();
+    let err = mk().restore_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("reading checkpoint"), "got: {err}");
 }
 
 #[test]

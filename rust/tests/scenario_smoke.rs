@@ -1,14 +1,18 @@
 //! Scenario smoke-matrix (CI-gated): the mock-backend trainer must run
 //! panic-free with finite losses across
 //! {k80-homogeneous, two-tier, constrained-uplink} × {scadles, ddl},
-//! and across the stream-dynamics presets {diurnal, burst, churn,
-//! linkfade, burst+churn} × {scadles, ddl}.
+//! across the stream-dynamics presets {diurnal, burst, churn,
+//! linkfade, burst+churn} × {scadles, ddl}, and across the fault
+//! presets {crash, corrupt, byzantine} × every robust combine rule.
 //!
 //! This is the cheap end-to-end guard on the scenario layers: every
 //! preset must thread through config → plan → workers → clock → metrics
 //! without degenerate numbers, in both training modes.
 
-use scadles::config::{DynamicsPreset, ExperimentConfig, HeteroPreset, StreamPreset, TrainMode};
+use scadles::config::{
+    AggPreset, DynamicsPreset, ExperimentConfig, FaultPreset, HeteroPreset, StreamPreset,
+    TrainMode,
+};
 use scadles::coordinator::{MockBackend, Trainer, TrainerOutput};
 
 fn run(hetero: HeteroPreset, mode: TrainMode) -> TrainerOutput {
@@ -82,6 +86,80 @@ fn heterogeneous_scenarios_never_beat_the_flat_cluster_clock() {
                 "{hetero} × {}: {t} well below flat {flat}",
                 mode.name()
             );
+        }
+    }
+}
+
+#[test]
+fn faults_matrix_trains_with_finite_losses() {
+    // Every fault preset × every combine rule must thread through the
+    // engine panic-free; finite loss is gated everywhere except the
+    // one cell documented to diverge (plain mean under byzantine rows,
+    // which is exactly what the robust rules exist for).
+    let fault_specs = ["crash:0.25", "corrupt:0.25", "byzantine:0.25"];
+    let agg_specs = ["mean", "trimmed:0.25", "median", "krum:1"];
+    for fspec in fault_specs {
+        let faults: FaultPreset = fspec.parse().unwrap();
+        for aspec in agg_specs {
+            let agg: AggPreset = aspec.parse().unwrap();
+            let cfg = ExperimentConfig::builder("mlp_c10")
+                .devices(4)
+                .rounds(8)
+                .preset(StreamPreset::S1)
+                .faults(faults)
+                .agg(agg)
+                .eval_every(4)
+                .build()
+                .unwrap();
+            let out = Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10)))
+                .unwrap()
+                .run()
+                .unwrap();
+            let ctx = format!("{fspec} × {aspec}");
+            assert_eq!(out.logs.rounds().len(), 8, "{ctx}: round count");
+            let loss_may_diverge =
+                matches!(faults, FaultPreset::Byzantine { .. }) && matches!(agg, AggPreset::Mean);
+            for r in out.logs.rounds() {
+                if !loss_may_diverge {
+                    assert!(
+                        r.train_loss.is_finite(),
+                        "{ctx}: loss r{} = {}",
+                        r.round,
+                        r.train_loss
+                    );
+                }
+                assert!(
+                    r.wall_clock_s.is_finite() && r.wall_clock_s > 0.0,
+                    "{ctx}: clock r{} = {}",
+                    r.round,
+                    r.wall_clock_s
+                );
+                assert!(
+                    r.rejected_devices + r.committed_devices + r.dropped_devices <= 4,
+                    "{ctx}: device ledger overflow at r{}",
+                    r.round
+                );
+            }
+            let counters = out.fault_counts.expect("fault injector active");
+            assert!(counters.total() > 0, "{ctx}: preset injected nothing over 32 device-rounds");
+            match faults {
+                FaultPreset::Crash { .. } => assert_eq!(
+                    counters.total(),
+                    counters.crashes,
+                    "{ctx}: crash preset injected non-crash faults"
+                ),
+                FaultPreset::Corrupt { .. } => assert_eq!(
+                    counters.total(),
+                    counters.corrupt_rows,
+                    "{ctx}: corrupt preset injected non-corrupt faults"
+                ),
+                FaultPreset::Byzantine { .. } => assert_eq!(
+                    counters.total(),
+                    counters.byzantine_rows,
+                    "{ctx}: byzantine preset injected non-byzantine faults"
+                ),
+                _ => {}
+            }
         }
     }
 }
