@@ -16,6 +16,7 @@
 //! communication volume in *equivalent f32 floats* so Table V-style
 //! accounting can compare them with Top-k.
 
+use crate::compress::wire::{quantized_value_bits, SCALE_BITS};
 use crate::rng::Pcg64;
 
 /// Result of a lossy gradient encoding.
@@ -23,8 +24,20 @@ use crate::rng::Pcg64;
 pub struct Encoded {
     /// Decoded (lossy) gradient, ready for aggregation.
     pub decoded: Vec<f32>,
-    /// Wire cost in equivalent f32 floats (bits / 32).
+    /// Wire cost in equivalent f32 floats (bits / 32). Kept for the
+    /// historical Table V-style accounting; derived from
+    /// [`Self::encoded_bits`] so the two can never disagree.
     pub float_equiv: f64,
+    /// *Exact* wire cost in bits — the same accounting the `--wire`
+    /// formats use ([`crate::compress::wire`]), so ablation tables and
+    /// wire pricing agree.
+    pub encoded_bits: u64,
+}
+
+impl Encoded {
+    fn from_bits(decoded: Vec<f32>, encoded_bits: u64) -> Self {
+        Self { decoded, float_equiv: encoded_bits as f64 / 32.0, encoded_bits }
+    }
 }
 
 /// QSGD with `levels` quantization levels (levels = 2^bits − 1).
@@ -35,10 +48,8 @@ pub fn qsgd(g: &[f32], levels: u32, rng: &mut Pcg64) -> Encoded {
     assert!(levels >= 1);
     let norm = g.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32;
     if norm == 0.0 {
-        return Encoded {
-            decoded: vec![0.0; g.len()],
-            float_equiv: 1.0, // just the norm scalar
-        };
+        // just the norm scalar
+        return Encoded::from_bits(vec![0.0; g.len()], SCALE_BITS);
     }
     let mut decoded = Vec::with_capacity(g.len());
     for &v in g {
@@ -50,22 +61,17 @@ pub fn qsgd(g: &[f32], levels: u32, rng: &mut Pcg64) -> Encoded {
     }
     // wire format: one f32 norm + per-coordinate sign+level. For levels
     // ≤ 15 that's ≤ 5 bits/coord; QSGD's Elias coding does better on
-    // sparse ξ but we charge the dense bound.
-    let bits_per_coord = (32 - (levels as u32).leading_zeros()) as f64 + 1.0;
-    Encoded {
-        decoded,
-        float_equiv: 1.0 + g.len() as f64 * bits_per_coord / 32.0,
-    }
+    // sparse ξ but we charge the dense bound — exactly the accounting
+    // the q8/q4 wire formats use for their value stream.
+    let level_bits = 32 - levels.leading_zeros();
+    Encoded::from_bits(decoded, quantized_value_bits(g.len(), level_bits))
 }
 
 /// TernGrad: g_i → s·sign(g_i)·b_i with b_i ~ Bernoulli(|g_i|/s), s = max|g|.
 pub fn terngrad(g: &[f32], rng: &mut Pcg64) -> Encoded {
     let s = g.iter().fold(0f32, |m, v| m.max(v.abs()));
     if s == 0.0 {
-        return Encoded {
-            decoded: vec![0.0; g.len()],
-            float_equiv: 1.0,
-        };
+        return Encoded::from_bits(vec![0.0; g.len()], SCALE_BITS);
     }
     let decoded = g
         .iter()
@@ -78,20 +84,15 @@ pub fn terngrad(g: &[f32], rng: &mut Pcg64) -> Encoded {
             }
         })
         .collect();
-    // 2 bits per coordinate (three levels) + the scale scalar
-    Encoded {
-        decoded,
-        float_equiv: 1.0 + g.len() as f64 * 2.0 / 32.0,
-    }
+    // 2 bits per coordinate (three levels: sign + one level bit) + the
+    // scale scalar
+    Encoded::from_bits(decoded, quantized_value_bits(g.len(), 1))
 }
 
 /// AMP-style half-precision round trip (2× compression, deterministic).
 pub fn fp16_roundtrip(g: &[f32]) -> Encoded {
     let decoded = g.iter().map(|&v| f16_to_f32(f32_to_f16(v))).collect();
-    Encoded {
-        decoded,
-        float_equiv: g.len() as f64 / 2.0,
-    }
+    Encoded::from_bits(decoded, g.len() as u64 * 16)
 }
 
 /// Minimal IEEE 754 binary16 conversion (round-to-nearest-even).
@@ -219,6 +220,28 @@ mod tests {
         let mut rng = Pcg64::new(7, 0);
         assert!(qsgd(&z, 4, &mut rng).decoded.iter().all(|&v| v == 0.0));
         assert!(terngrad(&z, &mut rng).decoded.iter().all(|&v| v == 0.0));
+        // degenerate rows still pay for the scale scalar, exactly
+        assert_eq!(qsgd(&z, 4, &mut rng).encoded_bits, 32);
+        assert_eq!(terngrad(&z, &mut rng).encoded_bits, 32);
+    }
+
+    #[test]
+    fn encoded_bits_are_exact_and_agree_with_float_equiv() {
+        let g = grad(100, 11);
+        let mut rng = Pcg64::new(12, 0);
+        // q8-equivalent: 255 levels → 8 level bits + sign
+        let e8 = qsgd(&g, 255, &mut rng);
+        assert_eq!(e8.encoded_bits, 32 + 100 * 9);
+        // q4-equivalent: 15 levels → 4 level bits + sign
+        let e4 = qsgd(&g, 15, &mut rng);
+        assert_eq!(e4.encoded_bits, 32 + 100 * 5);
+        let t = terngrad(&g, &mut rng);
+        assert_eq!(t.encoded_bits, 32 + 100 * 2);
+        let h = fp16_roundtrip(&g);
+        assert_eq!(h.encoded_bits, 100 * 16);
+        for e in [&e8, &e4, &t, &h] {
+            assert_eq!(e.float_equiv, e.encoded_bits as f64 / 32.0);
+        }
     }
 
     #[test]

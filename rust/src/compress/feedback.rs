@@ -87,6 +87,35 @@ impl ErrorFeedback {
         self.residual_norm2 = n2;
     }
 
+    /// Quantized-wire [`Self::absorb_sparse`]: `sent.val` holds the
+    /// *dequantized* survivor values — what actually crossed the wire —
+    /// so the residual at a kept coordinate is `corrected − dequant`
+    /// rather than an exact `+0.0`: the quantization error joins the
+    /// dropped Top-k mass in the residual and is re-injected into the
+    /// next round's corrected gradient. Same zero-copy swap as the
+    /// sparse path; when the wire is lossless (`dequant == corrected`
+    /// at every kept coordinate, e.g. `--wire f32`) the subtraction
+    /// yields the same `+0.0` bits `absorb_sparse` writes.
+    ///
+    /// On return `corrected` holds the *previous* residual — garbage to
+    /// the caller, exactly like [`Self::absorb_sparse`].
+    pub fn absorb_quantized(
+        &mut self,
+        corrected: &mut Vec<f32>,
+        sent: &crate::compress::SparseGrad,
+    ) {
+        debug_assert_eq!(corrected.len(), self.residual.len());
+        std::mem::swap(&mut self.residual, corrected);
+        for (&i, &v) in sent.idx.iter().zip(&sent.val) {
+            self.residual[i as usize] -= v;
+        }
+        let mut n2 = 0f64;
+        for r in &self.residual {
+            n2 += (*r as f64) * (*r as f64);
+        }
+        self.residual_norm2 = n2;
+    }
+
     /// A round where this device's contribution was *withheld* entirely
     /// — a semi-synchronous laggard past the commit point (K-sync). The
     /// wire carried nothing, so the whole gradient joins the residual
@@ -224,6 +253,76 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn quantized_absorb_conserves_mass_exactly() {
+        // the EF invariant under a lossy wire: residual[i] is bitwise
+        // `corrected[i] − dequant[i]` at kept coordinates and bitwise
+        // `corrected[i]` at dropped ones — no mass invents or vanishes
+        use crate::compress::{mask_stats_only, QuantizedGrad, SparseGrad};
+        let d = 600;
+        let mut ef = ErrorFeedback::new(d);
+        let mut sparse = SparseGrad::new();
+        let mut quant = QuantizedGrad::default();
+        let mut qrng = Pcg64::new(99, 7);
+        let mut corrected = vec![0f32; d];
+        for (round, bits) in [(0u64, 8u32), (1, 4), (2, 8), (3, 4)] {
+            let g = grad(d, 500 + round);
+            corrected.copy_from_slice(&g);
+            ef.correct(&mut corrected);
+            let snapshot = corrected.clone();
+            let (_k, t) = threshold_for_ratio(&corrected, 0.1);
+            let (_n2, _k2, nnz) = mask_stats_only(&corrected, t);
+            sparse.fill_from_threshold(&corrected, t, nnz);
+            quant.encode(&sparse, bits, &mut qrng);
+            quant.decode_into(&mut sparse.val);
+            ef.absorb_quantized(&mut corrected, &sparse);
+            let mut kept = vec![false; d];
+            for (&i, &v) in sparse.idx.iter().zip(&sparse.val) {
+                kept[i as usize] = true;
+                let expect = snapshot[i as usize] - v;
+                assert_eq!(
+                    ef.residual[i as usize].to_bits(),
+                    expect.to_bits(),
+                    "round={round} kept coord {i}"
+                );
+            }
+            for i in 0..d {
+                if !kept[i] {
+                    assert_eq!(
+                        ef.residual[i].to_bits(),
+                        snapshot[i].to_bits(),
+                        "round={round} dropped coord {i}"
+                    );
+                }
+            }
+            let expect_n2: f64 =
+                ef.residual.iter().map(|r| (*r as f64) * (*r as f64)).sum();
+            assert_eq!(ef.residual_norm2.to_bits(), expect_n2.to_bits());
+        }
+    }
+
+    #[test]
+    fn quantized_absorb_of_a_lossless_wire_matches_absorb_sparse() {
+        use crate::compress::{mask_stats_only, SparseGrad};
+        let d = 400;
+        let g = grad(d, 77);
+        let (_k, t) = threshold_for_ratio(&g, 0.2);
+        let (_n2, _k2, nnz) = mask_stats_only(&g, t);
+        let mut sparse = SparseGrad::new();
+        sparse.fill_from_threshold(&g, t, nnz);
+        let mut a = ErrorFeedback::new(d);
+        let mut b = ErrorFeedback::new(d);
+        let mut ca = g.clone();
+        let mut cb = g.clone();
+        a.absorb_sparse(&mut ca, &sparse);
+        // identical values on the wire → identical residual bits
+        b.absorb_quantized(&mut cb, &sparse);
+        assert_eq!(a.residual_norm2.to_bits(), b.residual_norm2.to_bits());
+        for i in 0..d {
+            assert_eq!(a.residual[i].to_bits(), b.residual[i].to_bits(), "coord {i}");
         }
     }
 

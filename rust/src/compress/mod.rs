@@ -16,6 +16,8 @@
 //!   accounting (Table V's metrics).
 //! * [`schemes`]  — `None` / `StaticTopk` / `AdaptiveTopk` policy objects
 //!   the coordinator drives.
+//! * [`wire`]     — [`QuantizedGrad`], the q8/q4 stochastic-uniform wire
+//!   format (`--wire`) with exact encoded-bit accounting.
 
 pub mod adaptive;
 pub mod baselines;
@@ -24,6 +26,7 @@ pub mod feedback;
 pub mod schemes;
 pub mod sparse;
 pub mod topk;
+pub mod wire;
 
 pub use adaptive::AdaptiveGate;
 pub use baselines::{fp16_roundtrip, qsgd, terngrad, Encoded};
@@ -32,6 +35,8 @@ pub use feedback::ErrorFeedback;
 pub use schemes::{CompressionDecision, CompressionScheme};
 pub use sparse::SparseGrad;
 pub use topk::{
-    mask_stats_native, mask_stats_only, threshold_for_ratio, threshold_for_ratio_with,
-    topk_threshold, topk_threshold_with, SelectScratch,
+    mask_stats_native, mask_stats_only, threshold_for_ratio, threshold_for_ratio_select_nth_with,
+    threshold_for_ratio_with, topk_threshold, topk_threshold_select_nth_with,
+    topk_threshold_with, SelectScratch,
 };
+pub use wire::{delta_index_bits, quantized_value_bits, varint_bits, QuantizedGrad};

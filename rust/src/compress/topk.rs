@@ -1,21 +1,41 @@
 //! Top-k threshold selection + native mask/stats fallback.
 //!
-//! The magnitude threshold is found with `select_nth_unstable` — O(d)
-//! average, no full sort — in the coordinator; the Pallas kernel (or
+//! The magnitude threshold is found with a histogram/radix select over
+//! the f32 magnitude bit patterns — O(d) worst case, two streaming
+//! passes over `g` plus up to three short passes over one exponent
+//! bucket — in the coordinator; the Pallas kernel (or
 //! [`mask_stats_native`], its bit-exact Rust mirror used by tests and the
 //! kernel-ablation bench) then applies the mask in one streaming pass.
+//! The pre-radix `select_nth_unstable` path survives as
+//! [`topk_threshold_select_nth_with`], the reference both the equality
+//! tests and the tracked `topk/select-scratch-reuse` bench diff against.
+//!
+//! Why the radix answer is *bitwise* the select-nth answer: magnitudes
+//! are sign-cleared f32s, and for non-negative IEEE-754 floats the u32
+//! bit pattern is monotone in `total_cmp` order (+0.0 < subnormals <
+//! normals < +inf < NaN in both). The k-th largest magnitude therefore
+//! has the k-th largest bit pattern, and recovering that exact pattern
+//! byte-by-byte (MSD first) reproduces `select_nth_unstable_by(k-1,
+//! descending total_cmp)` bit for bit — same threshold, same mask.
 
-/// Reusable magnitude buffer for threshold selection.
+/// The sign bit: `v.to_bits() & MAG_MASK == v.abs().to_bits()`.
+const MAG_MASK: u32 = 0x7FFF_FFFF;
+
+/// Reusable buffers for threshold selection.
 ///
-/// `select_nth_unstable` is in-place, so the only allocation in
-/// [`topk_threshold`] is the d-length magnitude copy — 3.2 MB per
-/// device-round at mlp_c10's d = 820 874. Workers own one of these and
-/// route through [`topk_threshold_with`], which refills the same buffer
-/// each round; the compressed steady state allocates nothing for
-/// selection (pinned by `tests/alloc_steady_state.rs`).
+/// The radix path histograms `g` in place (no magnitude copy) and only
+/// materializes the one exponent bucket holding the answer into `keys`;
+/// the reference select-nth path still fills the d-length magnitude
+/// copy `buf` — 3.2 MB per device-round at mlp_c10's d = 820 874.
+/// Workers own one of these and route through
+/// [`threshold_for_ratio_with`], which reuses the same buffers each
+/// round; the compressed steady state allocates nothing for selection
+/// (pinned by `tests/alloc_steady_state.rs` — `with_capacity` pre-sizes
+/// `keys` for the worst-case bucket, all of `g` in one exponent bin).
 #[derive(Debug, Clone, Default)]
 pub struct SelectScratch {
     buf: Vec<f32>,
+    keys: Vec<u32>,
 }
 
 impl SelectScratch {
@@ -25,7 +45,7 @@ impl SelectScratch {
 
     /// Pre-size for a gradient dimension.
     pub fn with_capacity(d: usize) -> Self {
-        Self { buf: Vec::with_capacity(d) }
+        Self { buf: Vec::with_capacity(d), keys: Vec::with_capacity(d) }
     }
 }
 
@@ -35,10 +55,114 @@ pub fn topk_threshold(g: &[f32], k: usize) -> f32 {
     topk_threshold_with(g, k, &mut SelectScratch::new())
 }
 
-/// [`topk_threshold`] over a caller-owned magnitude buffer — identical
-/// result (same data, same deterministic select-nth), no allocation once
-/// the scratch capacity has reached `g.len()`.
+/// [`topk_threshold`] over a caller-owned scratch — identical result,
+/// no allocation once the scratch capacity has reached `g.len()`.
+///
+/// Radix/histogram select over the magnitude bit patterns, MSD first:
+///
+///  1. one pass histograms the top magnitude byte of every element into
+///     four independent sub-histograms (chunked so the increments of a
+///     4-wide block never collide on one counter — the store-to-load
+///     chain the scalar loop would serialize on), walks the merged bins
+///     high-to-low to find the byte holding the k-th largest pattern;
+///  2. one pass collects that bucket's full bit patterns into
+///     `scratch.keys`;
+///  3. up to three short histogram+compact passes over `keys` pin the
+///     remaining bytes (early-out when one candidate is left).
+///
+/// Bitwise identical to the select-nth reference (see module docs).
 pub fn topk_threshold_with(g: &[f32], k: usize, scratch: &mut SelectScratch) -> f32 {
+    let d = g.len();
+    if k == 0 || d == 0 {
+        return f32::INFINITY;
+    }
+    if k >= d {
+        return 0.0;
+    }
+
+    // -- pass 1: top-byte histogram over g (no copy) --------------------
+    let mut sub = [[0usize; 256]; 4];
+    let mut chunks = g.chunks_exact(4);
+    for c in &mut chunks {
+        sub[0][((c[0].to_bits() & MAG_MASK) >> 24) as usize] += 1;
+        sub[1][((c[1].to_bits() & MAG_MASK) >> 24) as usize] += 1;
+        sub[2][((c[2].to_bits() & MAG_MASK) >> 24) as usize] += 1;
+        sub[3][((c[3].to_bits() & MAG_MASK) >> 24) as usize] += 1;
+    }
+    for v in chunks.remainder() {
+        sub[0][((v.to_bits() & MAG_MASK) >> 24) as usize] += 1;
+    }
+    let mut hist = [0usize; 256];
+    for s in &sub {
+        for (h, c) in hist.iter_mut().zip(s) {
+            *h += c;
+        }
+    }
+
+    // walk bins high-to-low: the answer's top byte is the first bin
+    // where the cumulative count from above reaches k. `remaining` ends
+    // as the rank of the answer *within* that bin (1-based, largest
+    // first). Total count is d >= k, so the walk always terminates.
+    let mut remaining = k;
+    let mut byte = 255usize;
+    loop {
+        if hist[byte] >= remaining {
+            break;
+        }
+        remaining -= hist[byte];
+        byte -= 1;
+    }
+
+    // -- pass 2: collect the winning bucket's bit patterns --------------
+    let top = byte as u32;
+    scratch.keys.clear();
+    scratch.keys.extend(
+        g.iter().map(|v| v.to_bits() & MAG_MASK).filter(|&bits| bits >> 24 == top),
+    );
+
+    // -- passes 3..5: pin the remaining bytes over the bucket ------------
+    for shift in [16u32, 8, 0] {
+        if scratch.keys.len() == 1 {
+            break;
+        }
+        let mut h = [0usize; 256];
+        for &bits in scratch.keys.iter() {
+            h[((bits >> shift) & 0xFF) as usize] += 1;
+        }
+        let mut byte = 255usize;
+        loop {
+            if h[byte] >= remaining {
+                break;
+            }
+            remaining -= h[byte];
+            byte -= 1;
+        }
+        let want = byte as u32;
+        let mut w = 0usize;
+        for i in 0..scratch.keys.len() {
+            let bits = scratch.keys[i];
+            if (bits >> shift) & 0xFF == want {
+                scratch.keys[w] = bits;
+                w += 1;
+            }
+        }
+        scratch.keys.truncate(w);
+    }
+    // every byte is pinned (or a single candidate survived): all
+    // remaining keys are the answer's exact bit pattern
+    f32::from_bits(scratch.keys[0])
+}
+
+/// Pre-radix reference: `select_nth_unstable` over a d-length magnitude
+/// copy. Kept as the ground truth the radix path must match bitwise
+/// (pinned in tests and `tests/proptests.rs`) and as the tracked
+/// `topk/select-scratch-reuse` bench case the `topk/select-radix`
+/// speedup is measured against.
+pub fn topk_threshold_select_nth_with(
+    g: &[f32],
+    k: usize,
+    scratch: &mut SelectScratch,
+) -> f32 {
     let d = g.len();
     if k == 0 || d == 0 {
         return f32::INFINITY;
@@ -66,6 +190,17 @@ pub fn threshold_for_ratio_with(
 ) -> (usize, f32) {
     let k = ((g.len() as f64 * ratio).ceil() as usize).clamp(1, g.len().max(1));
     (k, topk_threshold_with(g, k, scratch))
+}
+
+/// [`threshold_for_ratio_with`] through the select-nth reference path —
+/// the baseline side of the radix speedup measurement.
+pub fn threshold_for_ratio_select_nth_with(
+    g: &[f32],
+    ratio: f64,
+    scratch: &mut SelectScratch,
+) -> (usize, f32) {
+    let k = ((g.len() as f64 * ratio).ceil() as usize).clamp(1, g.len().max(1));
+    (k, topk_threshold_select_nth_with(g, k, scratch))
 }
 
 /// Native mirror of the Pallas `topk_mask_stats` kernel: zero sub-threshold
@@ -221,11 +356,110 @@ mod tests {
                 "ratio={ratio}"
             );
         }
-        // warm scratch never reallocates
+        // warm scratch never reallocates (radix keys + reference buf)
+        topk_threshold_select_nth_with(&g, 10, &mut scratch);
         let (cap, ptr) = (scratch.buf.capacity(), scratch.buf.as_ptr());
+        let (kcap, kptr) = (scratch.keys.capacity(), scratch.keys.as_ptr());
         topk_threshold_with(&g, 10, &mut scratch);
+        topk_threshold_select_nth_with(&g, 10, &mut scratch);
         assert_eq!(scratch.buf.capacity(), cap);
         assert_eq!(scratch.buf.as_ptr(), ptr);
+        assert_eq!(scratch.keys.capacity(), kcap);
+        assert_eq!(scratch.keys.as_ptr(), kptr);
+    }
+
+    /// Deterministic mixed-magnitude vector: normals across many
+    /// exponents, duplicate magnitudes, exact ties of opposite sign,
+    /// signed zeros and subnormals.
+    fn adversarial(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::rng::Pcg64::new(seed, 17);
+        (0..d)
+            .map(|i| match i % 11 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::from_bits(1 + (i as u32 % 7)), // subnormals
+                3 => f32::MIN_POSITIVE / 2.0,
+                4 => (rng.normal() as f32).abs(),
+                5 => -((i / 11) as f32 % 13.0),
+                6 => (i / 11) as f32 % 13.0, // |dup| of arm 5
+                _ => rng.normal() as f32 * (10f32).powi((i % 9) as i32 - 4),
+            })
+            .collect()
+    }
+
+    /// Satellite coverage: the radix select reproduces the select-nth
+    /// reference *exactly* — same k, bitwise-same threshold, identical
+    /// survivor mask — over seeds x d x CR, ties and zero/subnormal
+    /// edges included.
+    #[test]
+    fn radix_matches_select_nth_exactly() {
+        for d in [1usize, 100, 820_874] {
+            let seeds: &[u64] = if d > 1000 { &[1] } else { &[1, 2, 3] };
+            for &seed in seeds {
+                let g = adversarial(d, seed);
+                let mut radix = SelectScratch::with_capacity(d);
+                let mut refsc = SelectScratch::with_capacity(d);
+                for ratio in [0.01, 0.1, 1.0] {
+                    let (k_r, t_r) = threshold_for_ratio_with(&g, ratio, &mut radix);
+                    let (k_s, t_s) =
+                        threshold_for_ratio_select_nth_with(&g, ratio, &mut refsc);
+                    assert_eq!(k_r, k_s, "d={d} seed={seed} ratio={ratio}");
+                    assert_eq!(
+                        t_r.to_bits(),
+                        t_s.to_bits(),
+                        "d={d} seed={seed} ratio={ratio}: radix {t_r} != ref {t_s}"
+                    );
+                    let mask_r: Vec<bool> = g.iter().map(|v| v.abs() >= t_r).collect();
+                    let mask_s: Vec<bool> = g.iter().map(|v| v.abs() >= t_s).collect();
+                    assert_eq!(mask_r, mask_s, "d={d} seed={seed} ratio={ratio}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radix_matches_select_nth_on_duplicate_ties_and_zeros() {
+        // every magnitude duplicated, zeros of both signs at the tail
+        let g = [3f32, -3.0, 2.0, 2.0, -2.0, 1.0, -1.0, 0.0, -0.0, 0.0];
+        let mut a = SelectScratch::new();
+        let mut b = SelectScratch::new();
+        for k in 1..=g.len() {
+            assert_eq!(
+                topk_threshold_with(&g, k, &mut a).to_bits(),
+                topk_threshold_select_nth_with(&g, k, &mut b).to_bits(),
+                "k={k}"
+            );
+        }
+        // all-zero input: threshold is +0.0 for every k, mask keeps all
+        let z = [0f32, -0.0, 0.0, -0.0];
+        for k in 1..=z.len() {
+            assert_eq!(
+                topk_threshold_with(&z, k, &mut a).to_bits(),
+                topk_threshold_select_nth_with(&z, k, &mut b).to_bits(),
+                "zeros k={k}"
+            );
+        }
+        // pure subnormal input exercises the 0x00 exponent bucket
+        let s: Vec<f32> = (1u32..=64).map(f32::from_bits).collect();
+        for k in [1usize, 7, 33, 64] {
+            assert_eq!(
+                topk_threshold_with(&s, k, &mut a).to_bits(),
+                topk_threshold_select_nth_with(&s, k, &mut b).to_bits(),
+                "subnormal k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn radix_reference_edges_agree() {
+        let g = [1f32, 2.0, 3.0];
+        let mut s = SelectScratch::new();
+        assert_eq!(topk_threshold_select_nth_with(&g, 0, &mut s), f32::INFINITY);
+        assert_eq!(topk_threshold_select_nth_with(&g, 3, &mut s), 0.0);
+        assert_eq!(topk_threshold_select_nth_with(&[], 1, &mut s), f32::INFINITY);
+        // d=1, k=1 takes the k >= d early-out on both paths
+        assert_eq!(topk_threshold_with(&[5.0f32], 1, &mut s), 0.0);
+        assert_eq!(topk_threshold_select_nth_with(&[5.0f32], 1, &mut s), 0.0);
     }
 
     #[test]

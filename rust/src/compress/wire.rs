@@ -1,0 +1,258 @@
+//! Quantized `SparseGrad` wire format (`--wire {f32,q8,q4}`).
+//!
+//! The sparse fast path (PR 4) cut the simulated wire to the Top-k
+//! survivors, but each survivor still crossed as a full `u32` index +
+//! `f32` value pair. This module is the bits-per-coordinate half of the
+//! bandwidth story (paper §III-C; QSGD, Alistarh et al. 2017): survivor
+//! values are stochastically quantized to 8 or 4 bits against a
+//! per-row scale — the same stochastic-uniform rule as
+//! [`super::qsgd`], so the estimate stays unbiased — and the strictly
+//! ascending survivor indices are delta-encoded as LEB128 varints.
+//!
+//! Nothing is byte-serialized in the simulator: [`QuantizedGrad`]
+//! holds the levels, the decode produces the lossy values the
+//! aggregation actually consumes (so convergence pays the real
+//! quantization error, folded into [`super::ErrorFeedback`] exactly
+//! like dropped Top-k mass), and [`QuantizedGrad::encoded_bits`]
+//! reports the *exact* wire size the network model prices
+//! ([`crate::simulate::NetworkModel::quantized_sync_time`]). The exact
+//! accounting helpers are shared with the QSGD baseline in
+//! [`super::baselines`] so ablation tables and wire pricing agree.
+
+use crate::compress::SparseGrad;
+use crate::rng::Pcg64;
+
+/// Bits of the per-row f32 scale scalar.
+pub const SCALE_BITS: u64 = 32;
+
+/// Exact LEB128 size of one varint: 8 bits per started 7-bit group.
+pub fn varint_bits(v: u64) -> u64 {
+    let significant = 64 - v.max(1).leading_zeros() as u64;
+    significant.div_ceil(7) * 8
+}
+
+/// Exact bit count of the delta-encoded varint index stream: the first
+/// index absolute, every later one as the (strictly positive, indices
+/// ascending) difference to its predecessor.
+pub fn delta_index_bits(idx: &[u32]) -> u64 {
+    let mut bits = 0u64;
+    let mut prev = 0u32;
+    for (j, &i) in idx.iter().enumerate() {
+        let delta = if j == 0 { i as u64 } else { (i - prev) as u64 };
+        bits += varint_bits(delta);
+        prev = i;
+    }
+    bits
+}
+
+/// Exact size in bits of a stochastically quantized value stream: one
+/// f32 scale + (sign + `value_bits` level) per coordinate. Shared with
+/// the QSGD baseline's [`super::Encoded::encoded_bits`].
+pub fn quantized_value_bits(n: usize, value_bits: u32) -> u64 {
+    SCALE_BITS + n as u64 * (1 + value_bits as u64)
+}
+
+/// A sparse row's values quantized for the wire. The indices stay on
+/// the companion [`SparseGrad`]; this holds the signed levels and the
+/// per-row scale needed to decode them.
+#[derive(Debug, Clone, Default)]
+pub struct QuantizedGrad {
+    /// Level bits per value: 8 (255 levels) or 4 (15 levels).
+    pub value_bits: u32,
+    /// Per-row scale: the survivor set's max |value|.
+    pub scale: f32,
+    /// Signed quantization levels, `|q| <= levels(value_bits)`.
+    pub qvals: Vec<i16>,
+}
+
+impl QuantizedGrad {
+    /// Levels representable at `value_bits`: `2^bits − 1`.
+    pub fn levels(value_bits: u32) -> u32 {
+        (1u32 << value_bits) - 1
+    }
+
+    /// Stochastic-uniform encode of `sparse.val` — the [`super::qsgd`]
+    /// rule against the row's max-|v| scale: `ξ = ⌊r⌋ + Bernoulli(r −
+    /// ⌊r⌋)` with `r = |v|/scale · levels`, so `E[decode] = v`
+    /// (unbiased). One RNG draw per survivor, unconditionally, which
+    /// keeps the draw count a pure function of nnz (checkpoint/restore
+    /// replays bitwise). A zero scale (all-zero survivor row) encodes
+    /// to all-zero levels without touching the RNG.
+    pub fn encode(&mut self, sparse: &SparseGrad, value_bits: u32, rng: &mut Pcg64) {
+        debug_assert!(value_bits == 4 || value_bits == 8);
+        self.value_bits = value_bits;
+        self.qvals.clear();
+        self.scale = sparse.val.iter().fold(0f32, |m, v| m.max(v.abs()));
+        if self.scale == 0.0 {
+            self.qvals.resize(sparse.val.len(), 0);
+            return;
+        }
+        let levels = Self::levels(value_bits) as f32;
+        self.qvals.extend(sparse.val.iter().map(|&v| {
+            let ratio = (v.abs() / self.scale) * levels; // in [0, levels]
+            let floor = ratio.floor();
+            let p = ratio - floor; // probability of rounding up
+            let q = floor + if (rng.f64() as f32) < p { 1.0 } else { 0.0 };
+            if v.is_sign_negative() {
+                -(q as i16)
+            } else {
+                q as i16
+            }
+        }));
+    }
+
+    /// Dequantize over `val` in place (`val.len() == qvals.len()`):
+    /// `v = scale · q / levels`. This lossy tensor is what the
+    /// aggregation consumes — the simulator trains on exactly what
+    /// crossed the wire.
+    pub fn decode_into(&self, val: &mut [f32]) {
+        debug_assert_eq!(val.len(), self.qvals.len());
+        let levels = Self::levels(self.value_bits) as f32;
+        for (v, &q) in val.iter_mut().zip(&self.qvals) {
+            *v = self.scale * q as f32 / levels;
+        }
+    }
+
+    /// Exact wire size in bits of this row: scale + sign/level stream +
+    /// delta-varint indices (`idx` is the companion survivor index
+    /// array).
+    pub fn encoded_bits(&self, idx: &[u32]) -> u64 {
+        debug_assert_eq!(idx.len(), self.qvals.len());
+        quantized_value_bits(self.qvals.len(), self.value_bits) + delta_index_bits(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparse_row(vals: &[f32]) -> SparseGrad {
+        let mut s = SparseGrad::new();
+        for (j, &v) in vals.iter().enumerate() {
+            s.idx.push((j * 7 + 3) as u32);
+            s.val.push(v);
+        }
+        s
+    }
+
+    #[test]
+    fn varint_bits_match_leb128_group_counts() {
+        assert_eq!(varint_bits(0), 8);
+        assert_eq!(varint_bits(1), 8);
+        assert_eq!(varint_bits(127), 8);
+        assert_eq!(varint_bits(128), 16);
+        assert_eq!(varint_bits(16_383), 16);
+        assert_eq!(varint_bits(16_384), 24);
+        assert_eq!(varint_bits(u32::MAX as u64), 40);
+    }
+
+    #[test]
+    fn delta_bits_reward_dense_survivor_runs() {
+        // consecutive indices: first absolute + 1-byte deltas
+        let tight: Vec<u32> = (1000..1100).collect();
+        assert_eq!(delta_index_bits(&tight), 16 + 99 * 8);
+        // the same count spread wide costs more
+        let wide: Vec<u32> = (0..100).map(|i| i * 100_000).collect();
+        assert!(delta_index_bits(&wide) > delta_index_bits(&tight));
+        assert_eq!(delta_index_bits(&[]), 0);
+    }
+
+    #[test]
+    fn roundtrip_error_is_bounded_by_one_level() {
+        let mut rng = Pcg64::new(11, 0);
+        for bits in [8u32, 4] {
+            let s = sparse_row(&[0.5, -1.25, 3.0, -0.001, 2.999]);
+            let mut q = QuantizedGrad::default();
+            q.encode(&s, bits, &mut rng);
+            assert_eq!(q.scale, 3.0);
+            let mut out = s.val.clone();
+            q.decode_into(&mut out);
+            let step = q.scale / QuantizedGrad::levels(bits) as f32;
+            for (a, b) in s.val.iter().zip(&out) {
+                assert!((a - b).abs() <= step * 1.0001, "bits={bits}: {a} vs {b}");
+                assert!(
+                    b.abs() == 0.0 || a.is_sign_negative() == b.is_sign_negative(),
+                    "sign flipped: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_magnitude_survivor_is_exact() {
+        // |v| == scale quantizes to the top level deterministically
+        let s = sparse_row(&[2.0, -2.0, 1.0]);
+        for bits in [8u32, 4] {
+            let mut rng = Pcg64::new(3, 0);
+            let mut q = QuantizedGrad::default();
+            q.encode(&s, bits, &mut rng);
+            let levels = QuantizedGrad::levels(bits) as i16;
+            assert_eq!(q.qvals[0], levels);
+            assert_eq!(q.qvals[1], -levels);
+            let mut out = s.val.clone();
+            q.decode_into(&mut out);
+            assert_eq!(out[0], 2.0);
+            assert_eq!(out[1], -2.0);
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_rows() {
+        let mut rng = Pcg64::new(5, 0);
+        let mut q = QuantizedGrad::default();
+        q.encode(&SparseGrad::new(), 8, &mut rng);
+        assert!(q.qvals.is_empty());
+        assert_eq!(q.encoded_bits(&[]), SCALE_BITS);
+        // all-zero survivors: zero scale, no RNG draws, decodes to zeros
+        let z = sparse_row(&[0.0, -0.0, 0.0]);
+        let before = rng.f64();
+        let mut rng2 = Pcg64::new(5, 0);
+        let _ = rng2.f64();
+        q.encode(&z, 4, &mut rng2);
+        let after = rng2.f64();
+        let mut probe = Pcg64::new(5, 0);
+        let _ = probe.f64();
+        assert_eq!(after, probe.f64(), "zero row must not consume draws");
+        let _ = before;
+        let mut out = z.val.clone();
+        q.decode_into(&mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn encoded_bits_are_exact() {
+        let s = sparse_row(&[1.0, -0.5, 0.25, 2.0]);
+        let mut rng = Pcg64::new(9, 0);
+        let mut q = QuantizedGrad::default();
+        q.encode(&s, 8, &mut rng);
+        // idx = [3, 10, 17, 24]: 4 one-byte varints; values: 4·(1+8)
+        assert_eq!(q.encoded_bits(&s.idx), 32 + 4 * 9 + 4 * 8);
+        q.encode(&s, 4, &mut rng);
+        assert_eq!(q.encoded_bits(&s.idx), 32 + 4 * 5 + 4 * 8);
+        // q8 beats the 64-bit f32+u32 pair per survivor by ~3.5x here
+        assert!(q.encoded_bits(&s.idx) < 4 * 64);
+    }
+
+    #[test]
+    fn quantization_is_unbiased() {
+        let s = sparse_row(&[0.3, -0.7, 0.11, 0.9999, -0.0003]);
+        let mut rng = Pcg64::new(21, 0);
+        let trials = 4000;
+        let mut mean = vec![0f64; s.val.len()];
+        let mut q = QuantizedGrad::default();
+        let mut out = vec![0f32; s.val.len()];
+        for _ in 0..trials {
+            q.encode(&s, 4, &mut rng);
+            out.copy_from_slice(&s.val);
+            q.decode_into(&mut out);
+            for (m, &v) in mean.iter_mut().zip(&out) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let scale = s.val.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let step = (scale / QuantizedGrad::levels(4) as f32) as f64;
+        for (m, &v) in mean.iter().zip(&s.val) {
+            assert!((m - v as f64).abs() < step * 0.1, "{m} vs {v}");
+        }
+    }
+}

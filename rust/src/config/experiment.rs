@@ -10,6 +10,7 @@ use super::faults::{AggPreset, FaultPreset};
 use super::hetero::HeteroPreset;
 use super::presets::StreamPreset;
 use super::sync::SyncPreset;
+use super::wire::WirePreset;
 use crate::buffer::BufferPolicy;
 use crate::data::LabelMap;
 use crate::Result;
@@ -145,6 +146,11 @@ pub struct ExperimentConfig {
     /// gradient (`mean` default is bitwise the paper's weighted mean;
     /// `trimmed`/`median`/`krum` are the robust alternatives).
     pub agg: AggPreset,
+    /// Wire format for compressed exchanges (`--wire`): `f32` default is
+    /// bitwise the historical full-precision survivor wire; `q8`/`q4`
+    /// stochastically quantize survivor values and delta-varint the
+    /// indices, priced from the exact encoded bit count.
+    pub wire: WirePreset,
     /// Per-round multiplicative jitter std on device rates (intra-device
     /// heterogeneity, §II-A; 0 = constant rates).
     pub rate_jitter: f64,
@@ -206,6 +212,7 @@ impl ExperimentConfig {
         self.sync.validate()?;
         self.faults.validate()?;
         self.agg.validate()?;
+        self.wire.validate()?;
         if let Some(c) = &self.compression {
             c.validate()?;
         }
@@ -247,6 +254,7 @@ impl ExperimentBuilder {
                 sync: SyncPreset::Bsp,
                 faults: FaultPreset::None,
                 agg: AggPreset::Mean,
+                wire: WirePreset::F32,
                 rate_jitter: 0.0,
                 label_map: LabelMap::Iid,
                 mode: TrainMode::Scadles,
@@ -319,6 +327,11 @@ impl ExperimentBuilder {
     /// Aggregation rule (see [`AggPreset`]).
     pub fn agg(mut self, a: AggPreset) -> Self {
         self.cfg.agg = a;
+        self
+    }
+    /// Wire format for compressed exchanges (see [`WirePreset`]).
+    pub fn wire(mut self, w: WirePreset) -> Self {
+        self.cfg.wire = w;
         self
     }
     pub fn rate_jitter(mut self, j: f64) -> Self {
@@ -519,6 +532,18 @@ mod tests {
         let mut bad = d;
         bad.faults = FaultPreset::Stale { frac_pm: 500, lag: 0 };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn wire_preset_flows_through_builder() {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .wire("q8".parse().unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(cfg.wire, WirePreset::Q8);
+        // default stays the bitwise no-op full-precision wire
+        let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
+        assert!(d.wire.is_f32());
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod faults;
 pub mod hetero;
 pub mod presets;
 pub mod sync;
+pub mod wire;
 
 pub use cluster::{ClusterProfile, DeviceProfile, VirtualCost};
 pub use dynamics::DynamicsPreset;
@@ -17,3 +18,4 @@ pub use faults::{AggPreset, CrashPhase, FaultPreset};
 pub use hetero::HeteroPreset;
 pub use presets::StreamPreset;
 pub use sync::SyncPreset;
+pub use wire::WirePreset;

@@ -1,0 +1,124 @@
+//! Wire-format presets: how a compressed round's survivors cross the
+//! simulated network.
+//!
+//! Top-k decides *which* coordinates are sent; the wire preset decides
+//! *how many bits* each one costs. `f32` (the default) is the
+//! historical full-precision pair — `u32` index + `f32` value, priced
+//! as 8 bytes per survivor — and is bitwise identical to runs before
+//! the preset existed. `q8`/`q4` stochastically quantize survivor
+//! values to 8/4 bits against a per-row scale and delta-varint-encode
+//! the indices ([`crate::compress::QuantizedGrad`]); the sync phase is
+//! then priced from the *exact* encoded bit count
+//! ([`crate::simulate::NetworkModel::quantized_sync_time`]), and the
+//! quantization residual folds into error feedback like dropped Top-k
+//! mass.
+//!
+//! CLI syntax (`repro train --wire ...`): `f32`, `q8` or `q4`;
+//! composable with `--compress`, `--sync`, `--hetero`, `--dynamics`.
+
+use anyhow::bail;
+
+use crate::Result;
+
+/// A named wire format for compressed-round survivor values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WirePreset {
+    /// Full-precision survivors: `u32` index + `f32` value (the
+    /// historical wire; bitwise no-op default).
+    #[default]
+    F32,
+    /// 8-bit stochastic-uniform quantization (255 levels) + delta
+    /// varint indices.
+    Q8,
+    /// 4-bit stochastic-uniform quantization (15 levels) + delta
+    /// varint indices.
+    Q4,
+}
+
+impl WirePreset {
+    /// The CLI spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WirePreset::F32 => "f32",
+            WirePreset::Q8 => "q8",
+            WirePreset::Q4 => "q4",
+        }
+    }
+
+    /// Whether this is the full-precision (bitwise no-op) default.
+    pub fn is_f32(&self) -> bool {
+        matches!(self, WirePreset::F32)
+    }
+
+    /// Quantized level bits per survivor value; `None` for the
+    /// full-precision wire.
+    pub fn value_bits(&self) -> Option<u32> {
+        match self {
+            WirePreset::F32 => None,
+            WirePreset::Q8 => Some(8),
+            WirePreset::Q4 => Some(4),
+        }
+    }
+
+    /// The formats the harness wire comparison sweeps.
+    pub fn sweep() -> [WirePreset; 3] {
+        [WirePreset::F32, WirePreset::Q8, WirePreset::Q4]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for WirePreset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for WirePreset {
+    type Err = anyhow::Error;
+
+    /// Parse `f32`, `q8` or `q4`.
+    fn from_str(s: &str) -> Result<Self> {
+        let preset = match s.to_lowercase().as_str() {
+            "f32" | "full" => WirePreset::F32,
+            "q8" => WirePreset::Q8,
+            "q4" => WirePreset::Q4,
+            other => bail!("unknown wire preset {other:?} (f32|q8|q4)"),
+        };
+        preset.validate()?;
+        Ok(preset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_cli_spellings() {
+        assert_eq!("f32".parse::<WirePreset>().unwrap(), WirePreset::F32);
+        assert_eq!("q8".parse::<WirePreset>().unwrap(), WirePreset::Q8);
+        assert_eq!("Q4".parse::<WirePreset>().unwrap(), WirePreset::Q4);
+        assert_eq!("full".parse::<WirePreset>().unwrap(), WirePreset::F32);
+        assert!("q16".parse::<WirePreset>().is_err());
+        assert!("".parse::<WirePreset>().is_err());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for p in WirePreset::sweep() {
+            let back: WirePreset = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{p}");
+        }
+    }
+
+    #[test]
+    fn default_is_the_full_precision_noop() {
+        assert!(WirePreset::default().is_f32());
+        assert_eq!(WirePreset::default().value_bits(), None);
+        assert_eq!(WirePreset::Q8.value_bits(), Some(8));
+        assert_eq!(WirePreset::Q4.value_bits(), Some(4));
+    }
+}

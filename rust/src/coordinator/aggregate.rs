@@ -20,13 +20,17 @@
 //!   the accumulator can hold, and a sum that starts at `+0.0` never
 //!   becomes `−0.0`). Skipping them therefore leaves every coordinate's
 //!   *sequence of effective adds* — and hence its bits — unchanged.
-//! * [`aggregate_chunked_native`] / the chunked arm of
+//! * [`aggregate_chunked_native`] / the sharded arm of
 //!   [`aggregate_rows_into`] — coordinate-parallel: the dense dimension
 //!   is split into contiguous chunks fanned over scoped threads, and
 //!   each chunk runs the per-device loop in the same device order.
-//!   Per-coordinate accumulation never crosses a chunk boundary, so the
-//!   arithmetic per coordinate is literally the serial loop's; threads
-//!   change scheduling only.
+//!   Dense rows are sliced at the chunk bounds; a sparse row's sorted
+//!   `idx` array is range-partitioned by binary search
+//!   ([`accumulate_sparse_range`]), so each thread scatters exactly the
+//!   survivors owned by its coordinate shard. Per-coordinate
+//!   accumulation never crosses a chunk boundary, so the arithmetic per
+//!   coordinate — the same adds, in the same device order — is
+//!   literally the serial loop's; threads change scheduling only.
 //!
 //! Fixed device order is the whole contract: floats are only combined
 //! per coordinate, in device order, in every variant — which is what
@@ -170,6 +174,22 @@ pub fn accumulate_sparse(out: &mut [f32], row: &SparseGrad, w: f32) {
     }
 }
 
+/// Scatter the survivors of one sparse row that fall inside the
+/// coordinate shard `[lo, hi)` into `piece` (the accumulator slice for
+/// that shard, `piece.len() == hi - lo`). The row's `idx` is ascending
+/// by construction, so the shard's survivor run is found with two
+/// binary searches (`partition_point`) and scattered in the same order
+/// the serial pass would visit it — the sharded aggregation's inner
+/// loop.
+#[inline]
+pub fn accumulate_sparse_range(piece: &mut [f32], row: &SparseGrad, w: f32, lo: u32, hi: u32) {
+    let start = row.idx.partition_point(|&i| i < lo);
+    let len = row.idx[start..].partition_point(|&i| i < hi);
+    for (&i, &v) in row.idx[start..start + len].iter().zip(&row.val[start..start + len]) {
+        piece[(i - lo) as usize] += w * v;
+    }
+}
+
 /// Native weighted aggregation: `g̃ = Σ_i r_i · g_i` over row-major
 /// `[n, d]` gradients. Mirror of the Pallas `wagg` kernel.
 pub fn aggregate_native(grads: &[f32], weights: &[f32], d: usize) -> Vec<f32> {
@@ -200,6 +220,23 @@ pub fn aggregate_sparse_native(rows: &[SparseGrad], weights: &[f32], d: usize) -
     out
 }
 
+/// Coordinate-sharded parallel mirror of [`aggregate_sparse_native`]:
+/// each scoped thread owns a disjoint contiguous coordinate range and
+/// scatters every device's in-range survivors in fixed device order.
+/// Bitwise identical to the serial scatter at any width (see the
+/// module docs).
+pub fn aggregate_sparse_sharded_native(
+    rows: &[SparseGrad],
+    weights: &[f32],
+    d: usize,
+    threads: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(rows.len(), weights.len());
+    let mut out = vec![0f32; d];
+    aggregate_rows_into(&mut out, weights, |i| RowView::Sparse(&rows[i]), threads);
+    out
+}
+
 /// Coordinate-chunked parallel mirror of [`aggregate_native`]: the dense
 /// dimension is split into `threads` contiguous chunks over scoped
 /// threads, each running the device-order loop on its own slice of the
@@ -224,13 +261,15 @@ pub fn aggregate_chunked_native(
 /// Aggregate straight from per-device row views into a caller-owned
 /// accumulator (zeroed first) — the round engine's allocation-free path.
 ///
-/// Dense rounds with `threads > 1` and a large enough dimension fan the
-/// coordinate range over scoped threads (see the module docs for why
-/// that cannot move a bit); sparse rounds run the O(Σ nnz) scatter
-/// serially in device order — at CR=0.1 the whole pass touches ~10% of
-/// the dense volume, below the parallelization payoff. Zero-weight
-/// devices are skipped, so stale views from sat-out devices are never
-/// read.
+/// With `threads > 1` and a large enough dimension the coordinate range
+/// is fanned over scoped threads regardless of view shape: dense rows
+/// are sliced at the shard bounds, sparse rows range-partitioned by
+/// binary search ([`accumulate_sparse_range`]) so each thread scatters
+/// only the survivors its shard owns — still in fixed device order per
+/// coordinate, so no bit can move (module docs). Small dimensions (or
+/// one thread) run the serial loop: the scoped spawn costs more than
+/// the pass. Zero-weight devices are skipped, so stale views from
+/// sat-out devices are never read.
 pub fn aggregate_rows_into<'a, R>(out: &mut [f32], weights: &[f32], rows: R, threads: usize)
 where
     R: Fn(usize) -> RowView<'a> + Sync,
@@ -238,23 +277,23 @@ where
     out.iter_mut().for_each(|v| *v = 0.0);
     let d = out.len();
     let t = threads.max(1);
-    let all_dense = weights
-        .iter()
-        .enumerate()
-        .all(|(i, &w)| w == 0.0 || matches!(rows(i), RowView::Dense(_)));
-    if all_dense && t > 1 && d >= CHUNK_MIN_D {
+    if t > 1 && d >= CHUNK_MIN_D {
         let chunk = d.div_ceil(t);
         std::thread::scope(|scope| {
             for (ci, piece) in out.chunks_mut(chunk).enumerate() {
                 let rows = &rows;
                 scope.spawn(move || {
-                    let off = ci * chunk;
+                    let lo = ci * chunk;
+                    let hi = lo + piece.len();
                     for (i, &w) in weights.iter().enumerate() {
                         if w == 0.0 {
                             continue;
                         }
-                        if let RowView::Dense(r) = rows(i) {
-                            accumulate_dense(piece, &r[off..off + piece.len()], w);
+                        match rows(i) {
+                            RowView::Dense(r) => accumulate_dense(piece, &r[lo..hi], w),
+                            RowView::Sparse(s) => {
+                                accumulate_sparse_range(piece, s, w, lo as u32, hi as u32)
+                            }
                         }
                     }
                 });
@@ -700,6 +739,82 @@ mod tests {
                     assert_eq!(x.to_bits(), y.to_bits(), "d={d} threads={threads}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn sharded_sparse_aggregation_is_bitwise_equal_at_every_width() {
+        // dimensions straddling the serial cutoff and a shard boundary
+        // that splits survivor runs unevenly
+        for d in [64usize, CHUNK_MIN_D, CHUNK_MIN_D + 513] {
+            for (n, cr) in [(1usize, 0.1), (5, 0.01), (8, 0.5)] {
+                let (dense, rows) = masked_matrix(n, d, cr, 91 + n as u64);
+                let mut weights = weights_from_batches(&vec![3; n]);
+                if n > 1 {
+                    weights[1] = 0.0; // sat-out device skipped on every shard
+                }
+                let serial = aggregate_sparse_native(&rows, &weights, d);
+                let dense_ref = aggregate_native(&dense, &weights, d);
+                for threads in [1usize, 2, 3, 8, 64] {
+                    let sharded = aggregate_sparse_sharded_native(&rows, &weights, d, threads);
+                    for (j, (x, y)) in serial.iter().zip(&sharded).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "d={d} n={n} cr={cr} threads={threads} j={j}"
+                        );
+                    }
+                    for (x, y) in dense_ref.iter().zip(&sharded) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "vs dense d={d} threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_mixed_views_are_bitwise_equal_at_every_width() {
+        let d = CHUNK_MIN_D + 257;
+        let (dense, rows) = masked_matrix(4, d, 0.2, 123);
+        let weights = [0.4f32, 0.1, 0.25, 0.25];
+        let mut serial = vec![0f32; d];
+        let view = |i: usize| {
+            if i % 2 == 0 {
+                RowView::Dense(&dense[i * d..(i + 1) * d])
+            } else {
+                RowView::Sparse(&rows[i])
+            }
+        };
+        aggregate_rows_into(&mut serial, &weights, view, 1);
+        for threads in [2usize, 5, 16] {
+            let mut par = vec![9f32; d];
+            aggregate_rows_into(&mut par, &weights, view, threads);
+            for (x, y) in serial.iter().zip(&par) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_sparse_range_partitions_exactly() {
+        let mut s = SparseGrad::new();
+        s.idx = vec![0, 3, 4, 7, 1023, 1024, 4095];
+        s.val = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let d = 4096usize;
+        let full = {
+            let mut out = vec![0f32; d];
+            accumulate_sparse(&mut out, &s, 0.5);
+            out
+        };
+        // any shard split reproduces the full scatter piecewise
+        for chunk in [1usize, 7, 1024, 4096] {
+            let mut out = vec![0f32; d];
+            for (ci, piece) in out.chunks_mut(chunk).enumerate() {
+                let lo = (ci * chunk) as u32;
+                let hi = lo + piece.len() as u32;
+                accumulate_sparse_range(piece, &s, 0.5, lo, hi);
+            }
+            assert_eq!(out, full, "chunk={chunk}");
         }
     }
 

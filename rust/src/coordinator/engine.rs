@@ -31,7 +31,9 @@
 
 use crate::buffer::BufferTracker;
 use crate::compress::{CncCounter, CompressionScheme};
-use crate::config::{ClusterProfile, ExperimentConfig, HeteroPreset, SyncPreset, TrainMode};
+use crate::config::{
+    ClusterProfile, ExperimentConfig, HeteroPreset, SyncPreset, TrainMode, WirePreset,
+};
 use crate::coordinator::aggregate::{
     aggregate_rows_into, aggregator_from_preset, Aggregator, RowView,
 };
@@ -63,6 +65,11 @@ const RATE_EST_ALPHA: f64 = 0.3;
 /// the coordinator "polls" once a second until somebody rejoins.
 const IDLE_ROUND_S: f64 = 1.0;
 
+/// Pcg64 stream id for the per-device quantization draws (`--wire
+/// q8|q4`): distinct from the device/producer streams, so enabling the
+/// quantized wire never perturbs stream or jitter randomness.
+const WIRE_RNG_STREAM: u64 = 0x317E;
+
 /// Full output of a run: the report plus raw logs for figure rendering.
 /// The one run-report type — produced by the engine for every policy,
 /// consumed by `repro train` and all `exp` harnesses alike.
@@ -72,6 +79,10 @@ pub struct TrainerOutput {
     pub cnc: CncCounter,
     /// Streaming rates the devices were sampled with.
     pub rates: Vec<f64>,
+    /// Measured cumulative sync traffic in bytes: exact encoded bits on
+    /// quantized compressed rounds, 8 bytes per survivor on f32
+    /// compressed rounds, 4 bytes per gradient float on dense rounds.
+    pub sync_bytes: u64,
     /// Per-device per-round rows with straggler attribution.
     pub timeline: Timeline,
     /// Stream-dynamics counters (churn edges, rate-regime flips).
@@ -145,6 +156,10 @@ pub struct RoundEngine {
     local: Vec<f32>,
     local_mom: Vec<f32>,
     samples: Vec<usize>,
+    /// Measured cumulative sync traffic in bits (see
+    /// [`TrainerOutput::sync_bytes`]) — what `exp sync` compares across
+    /// `--wire` presets.
+    sync_bits_total: u64,
     /// Whether the backend's wagg path is usable for this device count.
     wagg_artifact_ok: bool,
     /// `SCADLES_KERNEL_AGG` / `SCADLES_KERNEL_TOPK` resolved once at
@@ -181,7 +196,10 @@ impl RoundEngine {
                     cfg.buffer_policy,
                     device_seed(cfg.seed, i),
                 );
-                DeviceWorker::new(dev, cluster.device(i), use_ef, d)
+                DeviceWorker::new(dev, cluster.device(i), use_ef, d).with_wire(
+                    cfg.wire,
+                    Pcg64::new(device_seed(cfg.seed, i), WIRE_RNG_STREAM),
+                )
             })
             .collect();
         let scheme = CompressionScheme::from_config(cfg.compression);
@@ -211,6 +229,10 @@ impl RoundEngine {
         if !cfg.agg.is_mean() {
             label.push('-');
             label.push_str(&cfg.agg.to_string());
+        }
+        if !cfg.wire.is_f32() {
+            label.push('-');
+            label.push_str(cfg.wire.name());
         }
         let logs = RunLogger::new(label).with_echo(cfg.echo_every);
         let threads = resolve_threads(cfg.worker_threads, n);
@@ -245,6 +267,7 @@ impl RoundEngine {
             agg: vec![0.0; d],
             weights: Vec::with_capacity(n),
             staging: Vec::new(),
+            sync_bits_total: 0,
             replicas: if is_local { vec![0.0; n * d] } else { Vec::new() },
             local: if is_local { vec![0.0; d] } else { Vec::new() },
             local_mom: if is_local { vec![0.0; d] } else { Vec::new() },
@@ -301,6 +324,12 @@ impl RoundEngine {
     /// The combine rule's label (`mean`, `trimmed:0.25`, `krum:1`, …).
     pub fn aggregator_label(&self) -> String {
         self.aggregator.label()
+    }
+
+    /// Measured cumulative sync traffic in bytes so far (see
+    /// [`TrainerOutput::sync_bytes`]).
+    pub fn sync_bytes_total(&self) -> u64 {
+        self.sync_bits_total.div_ceil(8)
     }
 
     /// Timing breakdown of the most recent round (per-device phases +
@@ -536,6 +565,9 @@ impl RoundEngine {
         // shards / trained·d) — also what the sync pricing consumes below
         let mut round_kept = 0u64;
         let mut round_dense = trained * d as u64;
+        // exact encoded size of this round's quantized exchange (0 on
+        // the f32 wire and on dense rounds)
+        let mut round_wire_bits = 0u64;
         if let Some(ratio) = self.scheme.ratio() {
             {
                 let backend = self.backend.as_ref();
@@ -575,9 +607,22 @@ impl RoundEngine {
             for_each_worker(&mut self.workers, threads, |_, w| {
                 w.apply_decision(compress);
             });
+            if compress {
+                // measured wire: exact encoded bits on q8/q4, the
+                // 8-byte (u32 idx, f32 val) pair per survivor on f32
+                round_wire_bits = self.workers.iter().map(|w| w.out.wire_bits).sum();
+                self.sync_bits_total += if round_wire_bits > 0 {
+                    round_wire_bits
+                } else {
+                    round_kept * 64
+                };
+            } else {
+                self.sync_bits_total += round_dense * 32;
+            }
         } else {
             floats_sent = trained * d as u64;
             self.cnc.record(false, floats_sent, 0);
+            self.sync_bits_total += floats_sent * 32;
             // no compression scheme: withheld laggards still clear their
             // flags and fold their gradient into the residual (a no-op
             // without error feedback), while crashed shards discard
@@ -732,6 +777,16 @@ impl RoundEngine {
             effective_ring_among(&self.cluster, self.dynamics.frame(), |i| contributes[i]);
         let sync_s = if global_batch == 0 {
             0.0
+        } else if compressed_round && round_wire_bits > 0 {
+            // quantized wire: price from the *exact encoded bit count*
+            // the shards reported, scaled onto the paper model's
+            // parameter count with the same exact integer ratio as the
+            // sparse path (`paper_params · bits / dense` in u128)
+            let bits =
+                scale_nnz_to_paper(self.cluster.paper_params(), round_wire_bits, round_dense);
+            self.cluster
+                .network
+                .quantized_sync_time_slowest(bits, ring_n, ring_bps)
         } else if compressed_round {
             // price the wire from the *real* survivor count: Σ nnz over
             // the shards, scaled exactly (integer math, no f64 fraction
@@ -1029,6 +1084,7 @@ impl RoundEngine {
         // one model per participating device per sync
         let floats_sent = (trained * d) as u64;
         self.cnc.record(false, floats_sent, 0);
+        self.sync_bits_total += floats_sent * 32;
         let log = RoundLog {
             round: r,
             wall_clock_s: self.clock.now(),
@@ -1159,6 +1215,7 @@ impl RoundEngine {
         w.u64(self.cnc.compressed_rounds);
         w.u64(self.cnc.dense_rounds);
         w.u64(self.cnc.floats_sent);
+        w.u64(self.sync_bits_total);
         match self.scheme.gate_state() {
             Some((a, b, c, d, e)) => {
                 w.bool(true);
@@ -1196,6 +1253,9 @@ impl RoundEngine {
             let (r0, r1) = dev.rng_state();
             w.u64(r0);
             w.u64(r1);
+            let (q0, q1) = wk.wire_rng.raw_state();
+            w.u64(q0);
+            w.u64(q1);
             let (p_rate, p_carry, p_clock, p_prod, p_rng) = dev.producer().raw_state();
             w.f64(p_rate);
             w.f64(p_carry);
@@ -1289,6 +1349,7 @@ impl RoundEngine {
         let (ev, ew, eu) = (r.f64()?, r.f64()?, r.u64()?);
         let history = r.u64s()?;
         let (cnc_c, cnc_d, cnc_f) = (r.u64()?, r.u64()?, r.u64()?);
+        let sync_bits = r.u64()?;
         let gate = if r.bool()? {
             Some((r.f64()?, r.f64()?, r.u64()?, r.u64()?, r.u64()?))
         } else {
@@ -1333,6 +1394,7 @@ impl RoundEngine {
             dev.effective_rate = r.f64()?;
             dev.active = r.bool()?;
             dev.restore_rng((r.u64()?, r.u64()?));
+            wk.wire_rng = Pcg64::from_raw(r.u64()?, r.u64()?);
             let (p_rate, p_carry, p_clock, p_prod) = (r.f64()?, r.f64()?, r.u64()?, r.u64()?);
             let p_rng = (r.u64()?, r.u64()?);
             dev.producer_mut().restore(p_rate, p_carry, p_clock, p_prod, p_rng);
@@ -1398,6 +1460,7 @@ impl RoundEngine {
         self.cnc.compressed_rounds = cnc_c;
         self.cnc.dense_rounds = cnc_d;
         self.cnc.floats_sent = cnc_f;
+        self.sync_bits_total = sync_bits;
         if let Some(s) = gate {
             self.scheme.restore_gate(s);
         }
@@ -1430,6 +1493,7 @@ impl RoundEngine {
             logs: self.logs.clone(),
             cnc: self.cnc,
             rates: self.rates(),
+            sync_bytes: self.sync_bytes_total(),
             timeline: self.timeline.clone(),
             dynamics: self.dynamics.counters(),
             fault_counts: self.fault_counters(),
@@ -1527,6 +1591,36 @@ mod tests {
                 (0..64).map(|i| device_seed(seed, i)).collect();
             assert_eq!(seeds.len(), 64, "collision under experiment seed {seed}");
         }
+    }
+
+    #[test]
+    fn quantized_wire_cuts_measured_sync_bytes_and_tags_the_label() {
+        let run = |wire: WirePreset| {
+            let mut cfg = base(SyncPreset::Bsp);
+            // δ=10 keeps the adaptive gate open: every round compresses,
+            // so the three runs price the same number of sparse exchanges
+            cfg.compression = Some(CompressionConfig::new(0.1, 10.0).with_error_feedback());
+            cfg.wire = wire;
+            engine(&cfg).run().unwrap()
+        };
+        let full = run(WirePreset::F32);
+        let q8 = run(WirePreset::Q8);
+        let q4 = run(WirePreset::Q4);
+        assert!(full.cnc.compressed_rounds > 0, "gate never compressed");
+        assert!(full.sync_bytes > 0);
+        // measured wire volume: q4 < q8 < f32 (5 / 9 value bits per
+        // survivor against the 64-bit index+float pair)
+        assert!(q8.sync_bytes < full.sync_bytes, "q8 {} vs f32 {}", q8.sync_bytes, full.sync_bytes);
+        assert!(q4.sync_bytes < q8.sync_bytes, "q4 {} vs q8 {}", q4.sync_bytes, q8.sync_bytes);
+        // the cheaper wire shows up on the virtual clock too
+        assert!(q8.report.wall_clock_s < full.report.wall_clock_s);
+        // run labels advertise the non-default wire
+        assert!(q8.logs.label().ends_with("-q8"), "label {}", q8.logs.label());
+        assert!(q4.logs.label().ends_with("-q4"));
+        assert!(!full.logs.label().contains("f32"));
+        // training still converges through the lossy wire (the loss is
+        // finite and the run completed all rounds)
+        assert!(q4.report.final_train_loss.is_finite());
     }
 
     #[test]

@@ -25,9 +25,12 @@
 //! pool thread.
 
 use crate::compress::{
-    mask_stats_only, threshold_for_ratio_with, ErrorFeedback, SelectScratch, SparseGrad,
+    mask_stats_only, threshold_for_ratio_with, ErrorFeedback, QuantizedGrad, SelectScratch,
+    SparseGrad,
 };
 use crate::config::cluster::DeviceProfile;
+use crate::config::WirePreset;
+use crate::rng::Pcg64;
 use crate::coordinator::aggregate::RowView;
 use crate::coordinator::backend::Backend;
 use crate::coordinator::device::Device;
@@ -53,6 +56,9 @@ pub struct WorkerRound {
     pub knorm2: f64,
     pub nnz: u64,
     pub has_stats: bool,
+    /// Exact encoded wire size of this round's outgoing survivor set in
+    /// bits (0 on dense rounds or with the full-precision `f32` wire).
+    pub wire_bits: u64,
 }
 
 /// One device's shard of the round engine.
@@ -92,6 +98,16 @@ pub struct DeviceWorker {
     /// Whether this round's outgoing row is the sparse view (set by
     /// [`Self::apply_decision`] on a compressed round).
     sent_sparse: bool,
+    /// Wire format for compressed exchanges (`--wire`). [`WirePreset::F32`]
+    /// keeps the survivor values untouched — bit for bit the historical
+    /// path; `q8`/`q4` stochastically quantize them before they go out.
+    wire: WirePreset,
+    /// Per-device stream for the stochastic-rounding draws. Forked from
+    /// the run seed and checkpointed, so restore replays the exact draws.
+    pub wire_rng: Pcg64,
+    /// Reusable quantized view of the survivor set (empty off the q8/q4
+    /// wire) — buffers warm round over round like `sparse`.
+    quant: QuantizedGrad,
     /// Scalar round outputs.
     pub out: WorkerRound,
     /// First error hit by a parallel phase (drained by the coordinator
@@ -111,9 +127,20 @@ impl DeviceWorker {
             sparse: SparseGrad::new(),
             scratch: SelectScratch::new(),
             sent_sparse: false,
+            wire: WirePreset::F32,
+            wire_rng: Pcg64::new(0, 0),
+            quant: QuantizedGrad::default(),
             out: WorkerRound::default(),
             error: None,
         }
+    }
+
+    /// Select the wire format for this shard's compressed exchanges and
+    /// seed its quantization stream (a no-op stream under `f32`).
+    pub fn with_wire(mut self, wire: WirePreset, rng: Pcg64) -> Self {
+        self.wire = wire;
+        self.wire_rng = rng;
+        self
     }
 
     /// The raw (pre-compression) gradient row from this round's local
@@ -297,14 +324,28 @@ impl DeviceWorker {
     /// Compressed round: the sparse survivor set goes out and the
     /// residual absorbs the dropped mass in one swap-and-zero pass
     /// ([`ErrorFeedback::absorb_sparse`] — which leaves `corrected`
-    /// holding stale storage until the next round rebuilds it). Dense
-    /// round: the corrected row goes out whole and the residual clears.
+    /// holding stale storage until the next round rebuilds it). On the
+    /// q8/q4 wire the survivor values are first stochastically quantized
+    /// ([`QuantizedGrad::encode`]) and replaced by their dequantized
+    /// images — aggregation consumes exactly what crossed the wire — and
+    /// the residual absorbs the quantization error together with the
+    /// dropped mass ([`ErrorFeedback::absorb_quantized`]); `wire_bits`
+    /// reports the exact encoded size for pricing. The `f32` wire takes
+    /// the historical path untouched, bit for bit. Dense round: the
+    /// corrected row goes out whole and the residual clears.
     pub fn apply_decision(&mut self, compress: bool) {
         if !self.out.has_stats {
             return;
         }
         if compress {
-            if let Some(ef) = &mut self.feedback {
+            if let Some(bits) = self.wire.value_bits() {
+                self.quant.encode(&self.sparse, bits, &mut self.wire_rng);
+                self.out.wire_bits = self.quant.encoded_bits(&self.sparse.idx);
+                self.quant.decode_into(&mut self.sparse.val);
+                if let Some(ef) = &mut self.feedback {
+                    ef.absorb_quantized(&mut self.corrected, &self.sparse);
+                }
+            } else if let Some(ef) = &mut self.feedback {
                 ef.absorb_sparse(&mut self.corrected, &self.sparse);
             }
             self.sent_sparse = true;
@@ -449,6 +490,75 @@ mod tests {
         let kept = sent.iter().filter(|&&v| v != 0.0).count();
         assert_eq!(kept as u64, w.out.nnz);
         assert!(sent.len() == raw.len());
+    }
+
+    #[test]
+    fn quantized_wire_replaces_survivors_and_banks_the_error() {
+        let be = MockBackend::new(64, 10);
+        let data = Synthetic::standard(10, 42);
+        let params = vec![0.3f32; 64];
+        for wire in [crate::config::WirePreset::Q8, crate::config::WirePreset::Q4] {
+            let mut w = worker(100.0, true, 64).with_wire(wire, Pcg64::new(7, 1));
+            w.device.advance_stream(1.0);
+            w.drain(0.0, 64);
+            w.train(&be, &params, &data);
+            let raw = w.grad().to_vec();
+            w.compress_stats(&be, 0.25, false);
+            w.apply_decision(true);
+            assert!(w.out.wire_bits > 0, "{wire}: wire bits must be priced");
+            // far below the 64-bit f32+u32 wire for the same survivors
+            assert!(w.out.wire_bits < w.out.nnz * 64, "{wire}");
+            // the outgoing values sit on the quantization grid
+            let sent = match w.row() {
+                RowView::Sparse(s) => s.clone(),
+                RowView::Dense(_) => panic!("compressed round must send the sparse view"),
+            };
+            let scale = sent.val.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let levels = crate::compress::QuantizedGrad::levels(wire.value_bits().unwrap());
+            for &v in &sent.val {
+                let q = (v.abs() / scale * levels as f32).round();
+                assert!(
+                    v == 0.0 || (v.abs() - scale * q / levels as f32).abs() < scale * 1e-6,
+                    "{wire}: off-grid value {v}"
+                );
+            }
+            // residual banks raw − sent at kept coords, raw elsewhere:
+            // total mass is conserved through the lossy wire
+            let residual = w.feedback.as_ref().unwrap().residual();
+            let dense_sent = sent.densify(64);
+            for ((r, g), s) in residual.iter().zip(&raw).zip(&dense_sent) {
+                assert_eq!(r.to_bits(), (g - s).to_bits(), "{wire}: mass leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_wire_is_bitwise_identical_to_the_unwired_worker() {
+        let be = MockBackend::new(96, 10);
+        let data = Synthetic::standard(10, 42);
+        let params = vec![0.4f32; 96];
+        let run = |wired: bool| {
+            let mut w = worker(100.0, true, 96);
+            if wired {
+                w = w.with_wire(crate::config::WirePreset::F32, Pcg64::new(1, 2));
+            }
+            w.device.advance_stream(1.0);
+            w.drain(0.0, 64);
+            w.train(&be, &params, &data);
+            w.compress_stats(&be, 0.1, false);
+            w.apply_decision(true);
+            (
+                w.sparse().clone(),
+                w.out.wire_bits,
+                w.feedback.as_ref().unwrap().residual_norm2.to_bits(),
+            )
+        };
+        let (plain, plain_bits, plain_res) = run(false);
+        let (wired, wired_bits, wired_res) = run(true);
+        assert_eq!(plain, wired, "f32 wire must not touch the survivor set");
+        assert_eq!(plain_bits, 0);
+        assert_eq!(wired_bits, 0, "f32 wire prices nothing");
+        assert_eq!(plain_res, wired_res);
     }
 
     #[test]

@@ -62,14 +62,15 @@ pub fn hetero(opts: &HarnessOpts) -> Result<()> {
          ({devices} devices, {rounds} rounds, mock substrate)"
     );
     println!(
-        "{:<24} {:<8} {:>12} {:>8} {:>8} {:>8} {:>8} {:>12}",
-        "scenario", "system", "wall_clock", "speedup", "wait%", "comp%", "sync%", "top straggler"
+        "{:<24} {:<8} {:>12} {:>8} {:>10} {:>8} {:>8} {:>8} {:>12}",
+        "scenario", "system", "wall_clock", "speedup", "sync_MB", "wait%", "comp%", "sync%",
+        "top straggler"
     );
     let mut w = super::csv(
         opts,
         "hetero.csv",
         &[
-            "scenario", "system", "wall_clock_s", "speedup", "best_top5",
+            "scenario", "system", "wall_clock_s", "speedup", "sync_bytes", "best_top5",
             "stream_wait_pct", "compute_pct", "sync_pct", "top_straggler_device",
             "top_straggler_rounds",
         ],
@@ -90,11 +91,12 @@ pub fn hetero(opts: &HarnessOpts) -> Result<()> {
                 .map(|(i, &n)| (i, n))
                 .unwrap_or((0, 0));
             println!(
-                "{:<24} {:<8} {:>11.0}s {:>8} {:>7.0}% {:>7.0}% {:>7.0}% {:>8}",
+                "{:<24} {:<8} {:>11.0}s {:>8} {:>10.1} {:>7.0}% {:>7.0}% {:>7.0}% {:>8}",
                 preset.to_string(),
                 name,
                 out.report.wall_clock_s,
                 format!("{row_speedup:.2}x"),
+                out.sync_bytes as f64 / 1e6,
                 ws,
                 cs,
                 ss,
@@ -106,6 +108,7 @@ pub fn hetero(opts: &HarnessOpts) -> Result<()> {
                     name.into(),
                     format!("{:.3}", out.report.wall_clock_s),
                     format!("{row_speedup:.3}"),
+                    out.sync_bytes.to_string(),
                     format!("{:.4}", out.report.best_test_top5),
                     format!("{ws:.1}"),
                     format!("{cs:.1}"),

@@ -40,6 +40,17 @@
 //! `local:h` (FedAvg-style local SGD with sample-weighted parameter
 //! averaging). See `examples/ksync_two_tier.rs`.
 //!
+//! *What the survivors cost on the wire* is a [`config::WirePreset`]:
+//! `--wire f32` (the default — full-precision survivor pairs, bitwise
+//! the unwired engine), `q8` or `q4` quantize Top-k survivor values
+//! with QSGD's unbiased stochastic-uniform rule against a per-row
+//! scale ([`compress::QuantizedGrad`]) and delta-varint the indices;
+//! error feedback banks the quantization error, sync time and the
+//! run's measured `sync_bytes` are priced from the exact encoded bits
+//! ([`simulate::NetworkModel::quantized_sync_time`]), and per-worker
+//! wire RNGs live on fixed [`rng::Pcg64`] substreams so the codec is
+//! deterministic at any pool width and across checkpoint restores.
+//!
 //! Layers 1–2 (Pallas kernels + JAX models) are AOT-lowered to HLO text at
 //! build time (`make artifacts`) and executed through the PJRT CPU client
 //! by [`runtime`]. Python never runs on the training path.

@@ -56,6 +56,12 @@ USAGE:
               [--agg A]       (gradient combine rule: mean | trimmed[:beta] |
                                median | krum[:f]; robust rules defend against
                                --faults garbage, mean is the seed path)
+              [--wire W]      (wire format for compressed exchanges:
+                               f32 | q8 | q4; q8/q4 stochastically quantize
+                               Top-k survivor values (per-row scale) and
+                               delta-varint the indices — sync is priced from
+                               the exact encoded bits; f32 is the full-
+                               precision seed wire, bit for bit)
               [--checkpoint FILE] [--checkpoint-every N] [--resume]
                               (serialize full training state to FILE — every N
                                rounds and at the end; --resume restores FILE
@@ -310,6 +316,7 @@ fn main() -> anyhow::Result<()> {
                 .sync(args.get_str("sync", "bsp").parse()?)
                 .faults(args.get_str("faults", "none").parse()?)
                 .agg(args.get_str("agg", "mean").parse()?)
+                .wire(args.get_str("wire", "f32").parse()?)
                 .seed(args.get("seed", 42u64)?)
                 .echo_every(args.get("echo", 10usize)?)
                 .worker_threads(args.get("workers", 0usize)?);

@@ -76,6 +76,21 @@ impl NetworkModel {
     pub fn sparse_sync_time_slowest(&self, nnz: u64, n: usize, slowest_bps: f64) -> f64 {
         self.allreduce_time_slowest(nnz * 8, n, slowest_bps)
     }
+
+    /// Quantized sparse exchange (`--wire q8|q4`): priced from the
+    /// *exact encoded bit count* the wire format reports
+    /// ([`crate::compress::QuantizedGrad::encoded_bits`] — per-row
+    /// scale + sign/level stream + delta-varint indices), rounded up to
+    /// whole bytes, instead of the 8-bytes-per-survivor f32 wire.
+    pub fn quantized_sync_time(&self, bits: u64, n: usize) -> f64 {
+        self.quantized_sync_time_slowest(bits, n, self.bandwidth_bps)
+    }
+
+    /// [`Self::quantized_sync_time`] through a heterogeneous/faded
+    /// ring's slowest participating link.
+    pub fn quantized_sync_time_slowest(&self, bits: u64, n: usize, slowest_bps: f64) -> f64 {
+        self.allreduce_time_slowest(bits.div_ceil(8), n, slowest_bps)
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +150,25 @@ mod tests {
         // CR=0.1 with 8-byte sparse elements → 0.2× the dense volume
         let sparse = m.sparse_sync_time(1_000_000, 16);
         assert!(sparse < dense * 0.25, "sparse {sparse} dense {dense}");
+    }
+
+    #[test]
+    fn quantized_pricing_tracks_encoded_bits() {
+        let m = NetworkModel::paper_5gbps();
+        // the same exchange priced from bits equals the byte-count path
+        let a = m.sparse_sync_time(1_000_000, 8);
+        let b = m.quantized_sync_time(1_000_000 * 64, 8);
+        assert_eq!(a.to_bits(), b.to_bits());
+        // q8 at ~17 bits/survivor (9 value + ~8 index) beats the 64-bit
+        // f32 wire for the same survivor count
+        let q8 = m.quantized_sync_time(1_000_000 * 17, 8);
+        assert!(q8 < a * 0.3, "q8 {q8} vs f32 {a}");
+        // bit counts round up to whole bytes; sub-byte tails never price
+        // as zero volume
+        assert!(m.quantized_sync_time(3, 2) > 2.0 * m.latency_s);
+        // slowest-link variant throttles like the sparse path
+        let narrow = m.quantized_sync_time_slowest(1_000_000 * 17, 8, 1e9);
+        assert!(narrow > q8 * 4.0);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! The zero-alloc claim, enforced: once buffers are warm, the
-//! compressed round's hot phases — threshold selection, masking into
-//! the sparse view, error-feedback absorption, weighted aggregation and
-//! the momentum update — perform **no heap allocation at all**.
+//! compressed round's hot phases — radix threshold selection, masking
+//! into the sparse view, the q8 wire encode/decode, error-feedback
+//! absorption (f32 and quantized), weighted aggregation and the
+//! momentum update — perform **no heap allocation at all**.
 //!
 //! A counting `#[global_allocator]` (toggled around the measured
 //! window) wraps `System`; the pipeline below is exactly the per-device
@@ -19,7 +20,8 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use scadles::compress::{
-    mask_stats_only, threshold_for_ratio_with, ErrorFeedback, SelectScratch, SparseGrad,
+    mask_stats_only, threshold_for_ratio_with, ErrorFeedback, QuantizedGrad, SelectScratch,
+    SparseGrad,
 };
 use scadles::coordinator::{aggregate_rows_into, RowView};
 use scadles::rng::Pcg64;
@@ -78,6 +80,15 @@ fn compressed_steady_state_phases_do_not_allocate() {
     let mut sparse: Vec<SparseGrad> = (0..N).map(|_| SparseGrad::with_capacity(D)).collect();
     let mut scratches: Vec<SelectScratch> =
         (0..N).map(|_| SelectScratch::with_capacity(D)).collect();
+    // the q8 wire codec's level buffer, pre-sized like the sparse views
+    let mut quants: Vec<QuantizedGrad> = (0..N)
+        .map(|_| {
+            let mut q = QuantizedGrad::default();
+            q.qvals.reserve(D);
+            q
+        })
+        .collect();
+    let mut wire_rng = Pcg64::new(7, 0x317E);
     let mut agg = vec![0f32; D];
     let mut params = vec![0.1f32; D];
     let mut momentum = vec![0f32; D];
@@ -93,14 +104,23 @@ fn compressed_steady_state_phases_do_not_allocate() {
             ALLOCS.store(0, Ordering::SeqCst);
             COUNTING.store(true, Ordering::SeqCst);
         }
-        // phase 7: residual correction + threshold + mask → sparse view
+        // phase 7: residual correction + threshold + mask → sparse view;
+        // half the devices ship the f32 survivor wire, half the q8 wire
+        // (stochastic encode + in-place dequant + quantized EF absorb) —
+        // both variants must stay allocation-free once warm
         for i in 0..N {
             corrected[i].copy_from_slice(&grads[i]);
             efs[i].correct(&mut corrected[i]);
             let (_k, thresh) = threshold_for_ratio_with(&corrected[i], CR, &mut scratches[i]);
             let (_n2, _k2, nnz) = mask_stats_only(&corrected[i], thresh);
             sparse[i].fill_from_threshold(&corrected[i], thresh, nnz);
-            efs[i].absorb_sparse(&mut corrected[i], &sparse[i]);
+            if i < N / 2 {
+                efs[i].absorb_sparse(&mut corrected[i], &sparse[i]);
+            } else {
+                quants[i].encode(&sparse[i], 8, &mut wire_rng);
+                quants[i].decode_into(&mut sparse[i].val);
+                efs[i].absorb_quantized(&mut corrected[i], &sparse[i]);
+            }
         }
         // phase 8: O(Σ nnz) aggregation into the reused accumulator
         {

@@ -9,7 +9,9 @@
 //! CR=1.0 (whole-row sparse view), DDL baseline, two heterogeneous
 //! cluster profiles, two stream-dynamics scenarios (diurnal+topk,
 //! burst+churn), three synchronization policies (ksync:0.75+two-tier,
-//! stale:2+diurnal, local:4)} x pool widths {1 (sequential), 4, 8}.
+//! stale:2+diurnal, local:4), two quantized wire formats (q8+topk
+//! always-compress, q4+ksync:0.75+two-tier)} x pool widths {1
+//! (sequential), 4, 8}.
 //! The heterogeneous cases pin the scenario layer's per-device-substream
 //! sampling, the dynamics cases pin the time-varying process layer
 //! (effective rates, membership, counters), and the policy cases pin
@@ -23,7 +25,7 @@
 use scadles::buffer::BufferPolicy;
 use scadles::config::{
     CompressionConfig, DynamicsPreset, ExperimentConfig, HeteroPreset, StreamPreset, SyncPreset,
-    TrainMode,
+    TrainMode, WirePreset,
 };
 use scadles::coordinator::{MockBackend, Trainer, TrainerOutput};
 use scadles::metrics::RoundLog;
@@ -37,12 +39,14 @@ struct Case {
     hetero: HeteroPreset,
     dynamics: DynamicsPreset,
     sync: SyncPreset,
+    wire: WirePreset,
 }
 
 fn cases() -> Vec<Case> {
     vec![
     Case {
         name: "plain",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: None,
@@ -52,6 +56,7 @@ fn cases() -> Vec<Case> {
     },
     Case {
         name: "truncation",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Truncation,
         compression: None,
@@ -61,6 +66,7 @@ fn cases() -> Vec<Case> {
     },
     Case {
         name: "topk",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: Some(CompressionConfig {
@@ -75,6 +81,7 @@ fn cases() -> Vec<Case> {
     },
     Case {
         name: "topk+ef",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Truncation,
         compression: Some(CompressionConfig {
@@ -91,6 +98,7 @@ fn cases() -> Vec<Case> {
         // sparse fast path at an aggressive CR: k = ceil(0.01·d) = 1 at
         // d=96, the single-survivor scatter every round
         name: "topk-aggressive",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: Some(CompressionConfig {
@@ -107,6 +115,7 @@ fn cases() -> Vec<Case> {
         // CR=1.0: threshold 0, the sparse view carries the whole row
         // (explicit zeros included) — the dense-equivalence edge
         name: "topk-cr1",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Truncation,
         compression: Some(CompressionConfig {
@@ -121,6 +130,7 @@ fn cases() -> Vec<Case> {
     },
     Case {
         name: "ddl",
+        wire: WirePreset::F32,
         mode: TrainMode::Ddl,
         policy: BufferPolicy::Persistence,
         compression: None,
@@ -130,6 +140,7 @@ fn cases() -> Vec<Case> {
     },
     Case {
         name: "two-tier",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: None,
@@ -139,6 +150,7 @@ fn cases() -> Vec<Case> {
     },
     Case {
         name: "lognormal+topk",
+        wire: WirePreset::F32,
         mode: TrainMode::Ddl,
         policy: BufferPolicy::Truncation,
         compression: Some(CompressionConfig {
@@ -153,6 +165,7 @@ fn cases() -> Vec<Case> {
     },
     Case {
         name: "diurnal+topk",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: Some(CompressionConfig {
@@ -167,6 +180,7 @@ fn cases() -> Vec<Case> {
     },
     Case {
         name: "burst+churn",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Truncation,
         compression: None,
@@ -182,6 +196,7 @@ fn cases() -> Vec<Case> {
         // completion-time ranking, laggard drops and EF absorption must
         // all be pool-width independent
         name: "ksync+two-tier",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: Some(CompressionConfig {
@@ -199,6 +214,7 @@ fn cases() -> Vec<Case> {
         // counters, discounts and forced syncs layered on the diurnal
         // rate cycle
         name: "stale+diurnal",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Truncation,
         compression: None,
@@ -207,9 +223,47 @@ fn cases() -> Vec<Case> {
         sync: SyncPreset::Stale { bound: 2 },
     },
     Case {
+        // the quantized q8 wire on the always-compress sparse path:
+        // encode → decode → EF absorb adds one stochastic-rounding draw
+        // per survivor, and that RNG cursor (like the measured
+        // sync-bytes counter) must be pool-width independent
+        name: "q8+topk",
+        wire: WirePreset::Q8,
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Persistence,
+        compression: Some(CompressionConfig {
+            ratio: 0.1,
+            delta: 10.0, // always compress: the wire codec runs every round
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        }),
+        hetero: HeteroPreset::K80Homogeneous,
+        dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::Bsp,
+    },
+    Case {
+        // the 4-bit wire under a semi-sync commit set over a skewed
+        // cluster: laggard EF absorption runs on *dequantized* values,
+        // layered on ksync's completion ranking
+        name: "q4+ksync:0.75",
+        wire: WirePreset::Q4,
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Truncation,
+        compression: Some(CompressionConfig {
+            ratio: 0.1,
+            delta: 10.0,
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        }),
+        hetero: HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
+        dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::KSync { frac_pm: 750 },
+    },
+    Case {
         // FedAvg-as-a-policy: the local-step round shape through the
         // same engine, streams and report
         name: "local:4",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: None,
@@ -231,6 +285,7 @@ fn run(case: &Case, seed: u64, devices: usize, threads: usize) -> TrainerOutput 
         .hetero(case.hetero)
         .dynamics(case.dynamics.clone())
         .sync(case.sync)
+        .wire(case.wire)
         .rate_jitter(0.2)
         .eval_every(4)
         .worker_threads(threads);
@@ -274,6 +329,7 @@ fn assert_logs_identical(a: &RoundLog, b: &RoundLog, ctx: &str) {
 
 fn assert_outputs_identical(a: &TrainerOutput, b: &TrainerOutput, ctx: &str) {
     assert_eq!(a.rates, b.rates, "{ctx}: sampled rates");
+    assert_eq!(a.sync_bytes, b.sync_bytes, "{ctx}: measured sync bytes");
     let (ra, rb) = (&a.report, &b.report);
     assert!(feq(ra.wall_clock_s, rb.wall_clock_s), "{ctx}: report wall clock");
     assert!(
@@ -385,6 +441,7 @@ fn bsp_policy_reproduces_seed_trainer_bitwise() {
     //    pre-refactor loss/timing trajectory was built from).
     let exercised = Case {
         name: "bsp-vs-ksync1",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Truncation,
         compression: Some(CompressionConfig {
@@ -409,6 +466,7 @@ fn bsp_policy_reproduces_seed_trainer_bitwise() {
     // the analytic per-round pricing identity on the homogeneous default
     let plain = Case {
         name: "bsp-analytic",
+        wire: WirePreset::F32,
         mode: TrainMode::Scadles,
         policy: BufferPolicy::Persistence,
         compression: None,
@@ -480,14 +538,17 @@ fn checkpoint_kill_and_restore_is_bitwise_identical_to_uninterrupted() {
     // that carries cross-round state (ksync's EF-absorbed laggards).
     // The config layers compression + error feedback so the residuals,
     // the adaptive gate and the RNG cursors all have to survive the
-    // round trip.
+    // round trip; the q8 leg additionally pins the per-worker wire-RNG
+    // cursors and the sync-bits counter across the kill/restore.
     let compression = CompressionConfig {
         ratio: 0.1,
         delta: 0.5,
         ewma_alpha: 0.3,
         error_feedback: true,
     };
-    for sync_spec in ["bsp", "ksync:0.75"] {
+    for (sync_spec, wire_spec) in
+        [("bsp", "f32"), ("ksync:0.75", "f32"), ("bsp", "q8"), ("ksync:0.75", "q4")]
+    {
         let sync: SyncPreset = sync_spec.parse().unwrap();
         for threads in [1usize, 4, 8] {
             let cfg = ExperimentConfig::builder("mlp_c10")
@@ -499,6 +560,7 @@ fn checkpoint_kill_and_restore_is_bitwise_identical_to_uninterrupted() {
                 .compression(compression)
                 .hetero(HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 })
                 .sync(sync)
+                .wire(wire_spec.parse().unwrap())
                 .rate_jitter(0.2)
                 .eval_every(4)
                 .worker_threads(threads)
@@ -512,7 +574,7 @@ fn checkpoint_kill_and_restore_is_bitwise_identical_to_uninterrupted() {
                 t.run().unwrap()
             };
             let path = std::env::temp_dir().join(format!(
-                "scadles_ckpt_det_{sync_spec}_{threads}_{}.ckpt",
+                "scadles_ckpt_det_{sync_spec}_{wire_spec}_{threads}_{}.ckpt",
                 std::process::id()
             ));
             {
@@ -533,7 +595,7 @@ fn checkpoint_kill_and_restore_is_bitwise_identical_to_uninterrupted() {
             assert_outputs_identical(
                 &uninterrupted,
                 &resumed,
-                &format!("checkpoint {sync_spec} threads={threads}"),
+                &format!("checkpoint {sync_spec} wire={wire_spec} threads={threads}"),
             );
         }
     }

@@ -190,6 +190,147 @@ fn prop_mask_preserves_energy_split() {
 }
 
 // ---------------------------------------------------------------------------
+// quantized wire invariants (--wire q8/q4)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quantized_roundtrip_bounded_and_sign_preserving() {
+    use scadles::compress::{QuantizedGrad, SparseGrad};
+    property("q8/q4 round-trip error ≤ one level, signs survive", 150, |rng| {
+        let nnz = rng.below(400);
+        let bits = if rng.below(2) == 0 { 8u32 } else { 4 };
+        let mut s = SparseGrad::new();
+        let mut next = 0u32;
+        for _ in 0..nnz {
+            next += 1 + rng.below(1000) as u32; // strictly ascending indices
+            s.idx.push(next);
+            // mix magnitudes across orders, with exact zeros sprinkled in
+            let v = if rng.below(8) == 0 {
+                0.0
+            } else {
+                (rng.normal() as f32) * 10f32.powi(rng.below(7) as i32 - 3)
+            };
+            s.val.push(v);
+        }
+        let mut q = QuantizedGrad::default();
+        q.encode(&s, bits, rng);
+        let scale = s.val.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert_eq!(q.scale, scale, "scale is the survivor max-|v|");
+        let levels = QuantizedGrad::levels(bits) as i16;
+        assert!(q.qvals.iter().all(|&l| l.abs() <= levels), "levels in range");
+        let mut out = s.val.clone();
+        q.decode_into(&mut out);
+        let step = if scale > 0.0 { scale / levels as f32 } else { 0.0 };
+        for (v, d) in s.val.iter().zip(&out) {
+            assert!(
+                (v - d).abs() <= step * 1.0001,
+                "|{v} − {d}| > one quantization step {step}"
+            );
+            assert!(
+                *d == 0.0 || v.is_sign_negative() == d.is_sign_negative(),
+                "sign flipped: {v} → {d}"
+            );
+            assert!(d.abs() <= scale * 1.0001, "decode exceeds the row scale");
+        }
+        // exact bit accounting: scale + (1+bits)/value + delta varints
+        let expect = 32
+            + nnz as u64 * (1 + bits as u64)
+            + scadles::compress::delta_index_bits(&s.idx);
+        assert_eq!(q.encoded_bits(&s.idx), expect);
+        // and the quantized wire never costs more than the f32+u32 pair wire
+        if nnz > 1 {
+            assert!(q.encoded_bits(&s.idx) <= 32 + nnz as u64 * 64);
+        }
+    });
+}
+
+#[test]
+fn prop_quantized_ef_conserves_mass_bitwise() {
+    use scadles::compress::{
+        mask_stats_only, threshold_for_ratio, ErrorFeedback, QuantizedGrad, SparseGrad,
+    };
+    property("residual + dequantized sent == corrected, bitwise", 60, |rng| {
+        let d = 1 + rng.below(1500);
+        let cr = [0.01, 0.1, 0.5, 1.0][rng.below(4)];
+        let bits = if rng.below(2) == 0 { 8u32 } else { 4 };
+        let mut ef = ErrorFeedback::new(d);
+        let mut sparse = SparseGrad::new();
+        let mut quant = QuantizedGrad::default();
+        let mut corrected = vec![0f32; d];
+        for _round in 0..3 {
+            for v in corrected.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+            ef.correct(&mut corrected);
+            let snapshot = corrected.clone();
+            let (_k, t) = threshold_for_ratio(&corrected, cr);
+            let (_n2, _k2, nnz) = mask_stats_only(&corrected, t);
+            sparse.fill_from_threshold(&corrected, t, nnz);
+            quant.encode(&sparse, bits, rng);
+            quant.decode_into(&mut sparse.val);
+            ef.absorb_quantized(&mut corrected, &sparse);
+            // kept coordinates: residual is bitwise corrected − dequant;
+            // dropped ones keep the corrected bits untouched
+            let mut kept = vec![false; d];
+            for (&i, &v) in sparse.idx.iter().zip(&sparse.val) {
+                kept[i as usize] = true;
+                assert_eq!(
+                    ef.residual()[i as usize].to_bits(),
+                    (snapshot[i as usize] - v).to_bits(),
+                    "kept coord {i}"
+                );
+            }
+            for i in 0..d {
+                if !kept[i] {
+                    assert_eq!(
+                        ef.residual()[i].to_bits(),
+                        snapshot[i].to_bits(),
+                        "dropped coord {i}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_radix_select_matches_select_nth_bitwise() {
+    use scadles::compress::{
+        threshold_for_ratio_select_nth_with, threshold_for_ratio_with, SelectScratch,
+    };
+    property("radix threshold == select_nth threshold, ties included", 80, |rng| {
+        let d = 1 + rng.below(4000);
+        let cr = [0.01, 0.1, 0.5, 1.0][rng.below(4)];
+        let g: Vec<f32> = (0..d)
+            .map(|_| {
+                match rng.below(10) {
+                    // exact zeros of both signs and duplicated magnitudes
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => 0.25, // deliberate tie mass
+                    3 => -0.25,
+                    4 => f32::MIN_POSITIVE / 2.0, // subnormal
+                    _ => (rng.normal() as f32) * 10f32.powi(rng.below(9) as i32 - 4),
+                }
+            })
+            .collect();
+        let mut radix = SelectScratch::with_capacity(d);
+        let mut nth = SelectScratch::with_capacity(d);
+        let (k_r, t_r) = threshold_for_ratio_with(&g, cr, &mut radix);
+        let (k_n, t_n) = threshold_for_ratio_select_nth_with(&g, cr, &mut nth);
+        assert_eq!(k_r, k_n, "k diverged at d={d} cr={cr}");
+        assert_eq!(
+            t_r.to_bits(),
+            t_n.to_bits(),
+            "threshold bits diverged at d={d} cr={cr}: {t_r} vs {t_n}"
+        );
+        // identical thresholds ⇒ identical masks; spot-check the count
+        let kept = g.iter().filter(|v| v.abs() >= t_r).count();
+        assert!(kept >= k_r, "kept {kept} < k {k_r}");
+    });
+}
+
+// ---------------------------------------------------------------------------
 // stream substrate invariants
 // ---------------------------------------------------------------------------
 
