@@ -14,6 +14,8 @@
 //!   * sync-policy dispatch        (bsp through the SyncPolicy trait vs the
 //!     plain sequential round — the refactor's overhead budget is "noise" —
 //!     plus a ksync:0.75 round for the non-trivial-policy cost)
+//!   * observability               (NoopRecorder round — the tracing-off
+//!     overhead tripwire — vs a span-capture round, the cost of --trace)
 //!   * train-step dispatch         (PJRT end-to-end per bucket)
 //!   * stream substrate            (produce/poll throughput)
 //!   * synthetic batch generation
@@ -250,6 +252,52 @@ fn main() {
          the bsp round (read against the noise floor above; the ranking is \
          O(n log n) over 8 devices)",
         ksync_ns / bsp_ns
+    );
+
+    // --- observability: recorder overhead -----------------------------------
+    // With tracing off the engine holds a NoopRecorder behind the
+    // `dyn Recorder`: the whole obs layer costs one virtual `enabled()`
+    // check per round and zero allocations (the alloc test pins the
+    // latter). `trace-off-overhead` re-measures the bsp round with that
+    // recorder explicitly in play — identical config to
+    // `round-engine/policy-overhead`, so the ratio is the noise floor
+    // and the tracked absolute ns/op is the regression tripwire. The
+    // capture case turns span recording on (~30 events/round into a
+    // pre-warmed Vec) for the honest cost of `--trace`.
+    b.header("observability (8 devices, d=820874, CR=0.1 + EF)");
+    let mk_obs = |capture: bool| {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(1_000_000) // round() is driven manually by the bench
+            .preset(StreamPreset::S1)
+            .mode(TrainMode::Scadles)
+            .buffer_policy(BufferPolicy::Truncation)
+            .compression(CompressionConfig::new(0.1, 10.0).with_error_feedback())
+            .eval_every(usize::MAX / 2)
+            .worker_threads(1)
+            .trace_capture(capture)
+            .build()
+            .unwrap();
+        Trainer::with_backend(&cfg, Box::new(MockBackend::new(d, 10))).unwrap()
+    };
+    let mut off_trainer = mk_obs(false);
+    let off_ns = b
+        .case("round-engine/trace-off-overhead", || off_trainer.round().unwrap())
+        .ns_per_iter();
+    println!(
+        "round-engine/trace-off-overhead: NoopRecorder round at {:.2}x the bsp \
+         dispatch case (identical engine — the delta is one virtual enabled() \
+         check and must be noise)",
+        off_ns / bsp_ns
+    );
+    let mut on_trainer = mk_obs(true);
+    let on_ns = b
+        .case("round-engine/trace-capture", || on_trainer.round().unwrap())
+        .ns_per_iter();
+    println!(
+        "round-engine/trace-capture: span capture costs {:.2}x the tracing-off \
+         round (coordinator-thread event pushes only)",
+        on_ns / off_ns
     );
 
     // --- heterogeneous-cluster rounds ---------------------------------------

@@ -102,6 +102,19 @@ impl BufferTracker {
             rounds: self.history.len(),
         }
     }
+
+    /// Export the occupancy summary as observability gauges. Values are
+    /// exactly [`Self::report`]'s fields (pinned by
+    /// `gauges_match_the_report`), so the Prometheus snapshot and the
+    /// run report can never disagree about the same percentile.
+    pub fn record_gauges(&self, rec: &mut dyn crate::obs::Recorder) {
+        use crate::obs::Gauge;
+        let r = self.report();
+        rec.set_gauge(Gauge::BufferFinalSamples, r.final_samples as f64);
+        rec.set_gauge(Gauge::BufferPeakSamples, r.peak_samples as f64);
+        rec.set_gauge(Gauge::BufferP50Samples, r.p50_samples as f64);
+        rec.set_gauge(Gauge::BufferP90Samples, r.p90_samples as f64);
+    }
 }
 
 /// Convert buffered samples to "GB" at the paper's 3 KB/image.
@@ -210,6 +223,26 @@ mod tests {
         let s = t.scratch.borrow();
         assert_eq!(s.capacity(), cap);
         assert_eq!(s.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn gauges_match_the_report() {
+        use crate::obs::{Gauge, Recorder, TraceRecorder};
+        let mut t = BufferTracker::new();
+        for v in [10u64, 80, 40, 20, 60] {
+            t.record(v);
+        }
+        let mut rec = TraceRecorder::new(false);
+        t.record_gauges(&mut rec);
+        let r = t.report();
+        assert_eq!(rec.registry().gauge(Gauge::BufferFinalSamples), r.final_samples as f64);
+        assert_eq!(rec.registry().gauge(Gauge::BufferPeakSamples), r.peak_samples as f64);
+        assert_eq!(rec.registry().gauge(Gauge::BufferP50Samples), r.p50_samples as f64);
+        assert_eq!(rec.registry().gauge(Gauge::BufferP90Samples), r.p90_samples as f64);
+        // the no-op recorder accepts the same call (and ignores it)
+        let mut noop = crate::obs::NoopRecorder;
+        t.record_gauges(&mut noop);
+        let _ = noop.enabled();
     }
 
     #[test]

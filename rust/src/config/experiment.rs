@@ -13,6 +13,7 @@ use super::sync::SyncPreset;
 use super::wire::WirePreset;
 use crate::buffer::BufferPolicy;
 use crate::data::LabelMap;
+use crate::obs::TraceFormat;
 use crate::Result;
 
 /// Which trainer coordinates the run.
@@ -184,6 +185,18 @@ pub struct ExperimentConfig {
     /// capped at the device count). Any value produces bitwise-identical
     /// runs — parallelism changes scheduling, never reduction order.
     pub worker_threads: usize,
+    /// Phase-span trace output (`--trace FILE[,fmt]`). `None` installs
+    /// the zero-cost no-op recorder; `Some` records per-device virtual-
+    /// time spans and writes them here at run end ([`crate::obs`]).
+    pub trace_path: Option<String>,
+    /// On-disk format for `trace_path` (`chrome` default, or `jsonl`).
+    pub trace_format: TraceFormat,
+    /// Prometheus-text snapshot of the counter/gauge registry written
+    /// at run end (`--metrics FILE`).
+    pub metrics_path: Option<String>,
+    /// Record spans in memory without any file output — the library/
+    /// test hook behind the traced determinism suite.
+    pub trace_capture: bool,
 }
 
 impl ExperimentConfig {
@@ -280,6 +293,10 @@ impl ExperimentBuilder {
                 target_top5: 0.9,
                 echo_every: 0,
                 worker_threads: 0,
+                trace_path: None,
+                trace_format: TraceFormat::Chrome,
+                metrics_path: None,
+                trace_capture: false,
             },
         }
     }
@@ -398,6 +415,27 @@ impl ExperimentBuilder {
     /// Worker-pool width (0 = auto, 1 = sequential engine).
     pub fn worker_threads(mut self, t: usize) -> Self {
         self.cfg.worker_threads = t;
+        self
+    }
+    /// Write a phase-span trace here at run end (see [`crate::obs`]).
+    pub fn trace_path(mut self, path: impl Into<String>) -> Self {
+        self.cfg.trace_path = Some(path.into());
+        self
+    }
+    /// Trace file format (`chrome` default, `jsonl` for machine diffs).
+    pub fn trace_format(mut self, fmt: TraceFormat) -> Self {
+        self.cfg.trace_format = fmt;
+        self
+    }
+    /// Write a Prometheus-text metrics snapshot here at run end.
+    pub fn metrics_path(mut self, path: impl Into<String>) -> Self {
+        self.cfg.metrics_path = Some(path.into());
+        self
+    }
+    /// Record spans in memory only (no file output) — for tests and
+    /// library consumers that read the event stream directly.
+    pub fn trace_capture(mut self, on: bool) -> Self {
+        self.cfg.trace_capture = on;
         self
     }
 
@@ -544,6 +582,25 @@ mod tests {
         // default stays the bitwise no-op full-precision wire
         let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
         assert!(d.wire.is_f32());
+    }
+
+    #[test]
+    fn obs_settings_flow_through_builder() {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .trace_path("out/trace.json")
+            .trace_format(TraceFormat::Jsonl)
+            .metrics_path("out/metrics.prom")
+            .trace_capture(true)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.trace_path.as_deref(), Some("out/trace.json"));
+        assert_eq!(cfg.trace_format, TraceFormat::Jsonl);
+        assert_eq!(cfg.metrics_path.as_deref(), Some("out/metrics.prom"));
+        assert!(cfg.trace_capture);
+        // defaults keep observability fully off
+        let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
+        assert!(d.trace_path.is_none() && d.metrics_path.is_none() && !d.trace_capture);
+        assert_eq!(d.trace_format, TraceFormat::Chrome);
     }
 
     #[test]

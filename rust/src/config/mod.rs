@@ -14,6 +14,7 @@ pub mod wire;
 pub use cluster::{ClusterProfile, DeviceProfile, VirtualCost};
 pub use dynamics::DynamicsPreset;
 pub use experiment::{CompressionConfig, ExperimentConfig, InjectionConfig, TrainMode};
+pub use crate::obs::TraceFormat;
 pub use faults::{AggPreset, CrashPhase, FaultPreset};
 pub use hetero::HeteroPreset;
 pub use presets::StreamPreset;

@@ -52,6 +52,9 @@ use crate::injection::DataInjector;
 use crate::metrics::{
     DeviceRoundRow, Ewma, RoundLog, RunLogger, RunReport, StragglerCause, Timeline,
 };
+use crate::obs::{
+    self, Counter, Gauge, NoopRecorder, Phase, Recorder, TraceFormat, TraceRecorder, Track,
+};
 use crate::rng::Pcg64;
 use crate::stream::{Broker, Record};
 use crate::Result;
@@ -168,6 +171,13 @@ pub struct RoundEngine {
     kernel_topk: bool,
     /// Resolved worker-pool width (1 = sequential engine).
     threads: usize,
+    /// Observability sink ([`crate::obs`]): the zero-cost
+    /// [`NoopRecorder`] unless `--trace`/`--metrics`/`trace_capture`
+    /// asked for the tracing recorder. Only the coordinator thread
+    /// records, in fixed device order, from already-priced virtual
+    /// times — so the event stream is bitwise identical at any
+    /// worker-pool width.
+    rec: Box<dyn Recorder>,
 }
 
 impl RoundEngine {
@@ -276,6 +286,12 @@ impl RoundEngine {
             kernel_agg: std::env::var_os("SCADLES_KERNEL_AGG").is_some(),
             kernel_topk: std::env::var_os("SCADLES_KERNEL_TOPK").is_some(),
             threads,
+            rec: if cfg.trace_path.is_some() || cfg.metrics_path.is_some() || cfg.trace_capture
+            {
+                Box::new(TraceRecorder::new(cfg.trace_path.is_some() || cfg.trace_capture))
+            } else {
+                Box::new(NoopRecorder)
+            },
         })
     }
 
@@ -413,6 +429,11 @@ impl RoundEngine {
         let r = self.round;
         let d = self.backend.param_count();
         let threads = self.threads;
+        // virtual round start (the clock only advances in phase 10) and
+        // the host wall timer (diagnostic sidecar, off the determinism
+        // contract; not even sampled when tracing is off)
+        let vt0 = self.clock.now();
+        let host_t = self.rec.enabled().then(std::time::Instant::now);
 
         // -- 0–1b. prime, jitter, dynamics frame --------------------------
         self.begin_round();
@@ -559,6 +580,7 @@ impl RoundEngine {
         //       (Table V's CNC), decision applied back to every shard;
         //       withheld laggards skip the stats (they send nothing) and
         //       fold their raw gradient into the error-feedback residual
+        let sync_bits_before = self.sync_bits_total;
         let floats_sent;
         let mut compressed_round = false;
         // real survivor accounting for the round (Σ nnz over committed
@@ -820,6 +842,31 @@ impl RoundEngine {
         self.advance_streams(timing.compute_s + timing.sync_s + timing.injection_s);
         let (straggler_cause, straggler_device) =
             self.push_timeline_rows(r, &timing, &batches, &rates, &active);
+
+        // -- 10b. observability: spans + counter deltas, emitted on the
+        //         coordinator thread in fixed device order from the
+        //         already-priced virtual times — pure arithmetic, so the
+        //         event stream is pool-width independent
+        if self.rec.enabled() {
+            let eval_ran = r % self.cfg.eval_every == 0 || r + 1 == self.cfg.rounds;
+            self.record_round_trace(r as u32, vt0, &timing, advance, eval_ran, true);
+            self.rec.add(Counter::Rounds, 1);
+            self.rec
+                .add(Counter::SyncBits, self.sync_bits_total - sync_bits_before);
+            self.rec.add(Counter::FloatsSent, floats_sent);
+            self.rec.add(Counter::TrainedSamples, global_batch as u64);
+            self.rec
+                .add(Counter::DroppedDeviceRounds, dropped_devices as u64);
+            self.rec
+                .add(Counter::InjectionBytes, inj_stats.bytes_moved as u64);
+            let kind = if compressed_round {
+                Counter::CompressedRounds
+            } else {
+                Counter::DenseRounds
+            };
+            self.rec.add(kind, 1);
+            self.rec.set_gauge(Gauge::RateEst, rate_est);
+        }
         self.last_timing = Some(timing);
 
         // -- 11. buffer accounting -----------------------------------------
@@ -876,6 +923,9 @@ impl RoundEngine {
         };
         self.logs.push(log);
         self.round += 1;
+        if let Some(t) = host_t {
+            self.rec.host_round_ns(r as u32, t.elapsed().as_nanos() as u64);
+        }
         Ok(log)
     }
 
@@ -894,6 +944,8 @@ impl RoundEngine {
         let d = self.backend.param_count();
         let n = self.workers.len();
         let h = self.policy.local_steps();
+        let vt0 = self.clock.now();
+        let host_t = self.rec.enabled().then(std::time::Instant::now);
 
         self.begin_round();
 
@@ -1069,6 +1121,10 @@ impl RoundEngine {
         let batches = self.samples.clone();
         let (straggler_cause, straggler_device) =
             self.push_timeline_rows(r, &timing, &batches, &rates, &active);
+        if self.rec.enabled() {
+            let eval_ran = r % self.cfg.eval_every == 0 || r + 1 == self.cfg.rounds;
+            self.record_round_trace(r as u32, vt0, &timing, advance, eval_ran, false);
+        }
         self.last_timing = Some(timing);
 
         let buffered = self.total_backlog();
@@ -1085,6 +1141,14 @@ impl RoundEngine {
         let floats_sent = (trained * d) as u64;
         self.cnc.record(false, floats_sent, 0);
         self.sync_bits_total += floats_sent * 32;
+        if self.rec.enabled() {
+            self.rec.add(Counter::Rounds, 1);
+            self.rec.add(Counter::SyncBits, floats_sent * 32);
+            self.rec.add(Counter::FloatsSent, floats_sent);
+            self.rec.add(Counter::TrainedSamples, global_batch as u64);
+            self.rec.add(Counter::DenseRounds, 1);
+            self.rec.set_gauge(Gauge::RateEst, rate_est);
+        }
         let log = RoundLog {
             round: r,
             wall_clock_s: self.clock.now(),
@@ -1112,6 +1176,9 @@ impl RoundEngine {
         };
         self.logs.push(log);
         self.round += 1;
+        if let Some(t) = host_t {
+            self.rec.host_round_ns(r as u32, t.elapsed().as_nanos() as u64);
+        }
         Ok(log)
     }
 
@@ -1314,6 +1381,23 @@ impl RoundEngine {
             }
             None => w.bool(false),
         }
+        // observability: the trace sequence cursor + counter registry,
+        // so a killed-and-resumed traced run continues the event stream
+        // exactly where the uninterrupted run would be (absent entirely
+        // for untraced runs)
+        match self.rec.as_trace() {
+            Some(tr) => {
+                w.bool(true);
+                w.u64(tr.seq());
+                for c in Counter::ALL {
+                    w.u64(tr.registry().counter(c));
+                }
+                for g in Gauge::ALL {
+                    w.f64(tr.registry().gauge(g));
+                }
+            }
+            None => w.bool(false),
+        }
         checkpoint::save(path, self.fingerprint(), &w.into_bytes())
     }
 
@@ -1446,6 +1530,24 @@ impl RoundEngine {
             fault_state.is_some() == self.faults.is_some(),
             "checkpoint fault layout does not match this engine"
         );
+        let obs_state = if r.bool()? {
+            let seq = r.u64()?;
+            let counters = Counter::ALL
+                .iter()
+                .map(|_| r.u64())
+                .collect::<Result<Vec<_>>>()?;
+            let gauges = Gauge::ALL
+                .iter()
+                .map(|_| r.f64())
+                .collect::<Result<Vec<_>>>()?;
+            Some((seq, counters, gauges))
+        } else {
+            None
+        };
+        ensure!(
+            obs_state.is_some() == self.rec.as_trace().is_some(),
+            "checkpoint observability layout does not match this engine"
+        );
         ensure!(r.remaining() == 0, "corrupt checkpoint: {} trailing bytes", r.remaining());
 
         // coordinator-side state scatters only after the whole payload
@@ -1477,6 +1579,15 @@ impl RoundEngine {
         if let (Some(f), Some(s)) = (&mut self.faults, fault_state) {
             f.restore(s);
         }
+        if let (Some(tr), Some((seq, counters, gauges))) = (self.rec.as_trace_mut(), obs_state) {
+            tr.restore_seq(seq);
+            for (c, v) in Counter::ALL.iter().zip(counters) {
+                tr.registry_mut().set_counter(*c, v);
+            }
+            for (g, v) in Gauge::ALL.iter().zip(gauges) {
+                tr.registry_mut().set_gauge(*g, v);
+            }
+        }
         Ok(())
     }
 
@@ -1498,6 +1609,129 @@ impl RoundEngine {
             dynamics: self.dynamics.counters(),
             fault_counts: self.fault_counters(),
         }
+    }
+
+    /// Emit one round's span set. Coordinator thread only, fixed device
+    /// order, pure f64 arithmetic on the already-priced virtual times —
+    /// the three properties that make the event stream bitwise
+    /// identical at any worker-pool width.
+    ///
+    /// Track layout: the coordinator track carries the round span plus
+    /// frame/plan/gate/aggregate/update/price/eval instants; each
+    /// device track carries its drain → train (→ compress/encode) →
+    /// sync phases. Every track's timestamps are non-decreasing (a
+    /// laggard's own finish can exceed the barrier, so its sync span
+    /// starts at the later of the two).
+    fn record_round_trace(
+        &mut self,
+        r: u32,
+        vt0: f64,
+        timing: &RoundTiming,
+        advance: f64,
+        eval_ran: bool,
+        gradient: bool,
+    ) {
+        let vt1 = vt0 + advance;
+        let bar = timing.wait_s + timing.compute_s;
+        self.rec.span(Track::Coordinator, Phase::Round, r, vt0, advance);
+        self.rec.instant(Track::Coordinator, Phase::Frame, r, vt0);
+        self.rec.instant(Track::Coordinator, Phase::Plan, r, vt0);
+        if gradient {
+            self.rec.instant(Track::Coordinator, Phase::Gate, r, vt0 + bar);
+        }
+        self.rec
+            .instant(Track::Coordinator, Phase::Aggregate, r, vt0 + bar + timing.sync_s);
+        self.rec
+            .instant(Track::Coordinator, Phase::Update, r, vt0 + bar + timing.sync_s);
+        self.rec.instant(Track::Coordinator, Phase::Price, r, vt1);
+        if eval_ran {
+            self.rec.instant(Track::Coordinator, Phase::Eval, r, vt1);
+        }
+        for p in &timing.per_device {
+            let i = p.device;
+            let track = Track::Device(i as u32);
+            if gradient {
+                let (batch, has_stats, wire_bits) = {
+                    let out = &self.workers[i].out;
+                    (out.batch, out.has_stats, out.wire_bits)
+                };
+                if batch > 0 || p.wait_s > 0.0 {
+                    self.rec.span(track, Phase::Drain, r, vt0, p.wait_s);
+                }
+                if batch > 0 {
+                    self.rec
+                        .span(track, Phase::Train, r, vt0 + p.wait_s, p.compute_s);
+                    let t_end = vt0 + p.wait_s + p.compute_s;
+                    if has_stats {
+                        self.rec.instant(track, Phase::Compress, r, t_end);
+                    }
+                    if wire_bits > 0 {
+                        self.rec.instant(track, Phase::Encode, r, t_end);
+                    }
+                }
+            } else if p.compute_s > 0.0 {
+                self.rec.span(track, Phase::Train, r, vt0, p.compute_s);
+            }
+            if self.part.contributes[i] && timing.sync_s > 0.0 {
+                let own_end = vt0 + p.wait_s + p.compute_s;
+                let start = own_end.max(vt0 + bar);
+                self.rec.span(track, Phase::Sync, r, start, timing.sync_s);
+            }
+        }
+    }
+
+    /// Fold the end-of-run registry values into the recorder: buffer
+    /// occupancy (final/peak/p50/p90, pinned equal to
+    /// [`crate::buffer::BufferReport`]), error-feedback residual mass,
+    /// the virtual clock, and absolute fault/dynamics totals.
+    fn finalize_registry(&mut self) {
+        if !self.rec.enabled() {
+            return;
+        }
+        self.tracker.record_gauges(self.rec.as_mut());
+        let ef_mass: f64 = self
+            .workers
+            .iter()
+            .filter_map(|w| w.feedback.as_ref())
+            .map(|ef| ef.residual_norm2)
+            .sum();
+        self.rec.set_gauge(Gauge::EfResidualNorm2, ef_mass);
+        self.rec.set_gauge(Gauge::VirtualTimeS, self.clock.now());
+        self.dynamics.counters().record(self.rec.as_mut());
+        if let Some(fc) = self.fault_counters() {
+            fc.record(self.rec.as_mut());
+        }
+    }
+
+    /// Finalize the registry and write whatever observability outputs
+    /// the config asked for: the trace file (`--trace FILE[,fmt]`,
+    /// Chrome trace-event JSON or JSONL) and the Prometheus-text
+    /// metrics snapshot (`--metrics FILE`). Call once, after the run;
+    /// a no-op when tracing and metrics are both off.
+    pub fn export_obs(&mut self) -> Result<()> {
+        self.finalize_registry();
+        let Some(tr) = self.rec.as_trace() else { return Ok(()) };
+        if let Some(path) = &self.cfg.trace_path {
+            let text = match self.cfg.trace_format {
+                TraceFormat::Chrome => obs::chrome_trace_string(tr.events()),
+                TraceFormat::Jsonl => obs::jsonl_string(tr),
+            };
+            obs::export::write_text(std::path::Path::new(path), &text)?;
+        }
+        if let Some(path) = &self.cfg.metrics_path {
+            obs::export::write_text(
+                std::path::Path::new(path),
+                &obs::prometheus_string(tr.registry()),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// The tracing recorder, when tracing or metrics collection is on
+    /// (`trace_path` / `metrics_path` / `trace_capture`). Tests use
+    /// this to compare in-memory event streams across pool widths.
+    pub fn trace(&self) -> Option<&TraceRecorder> {
+        self.rec.as_trace()
     }
 }
 

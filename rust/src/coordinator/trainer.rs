@@ -139,6 +139,18 @@ impl Trainer {
         self.engine.finish()
     }
 
+    /// Finalize the observability registry and write any configured
+    /// trace/metrics files (see [`RoundEngine::export_obs`]). No-op
+    /// when tracing and metrics are both off.
+    pub fn export_obs(&mut self) -> Result<()> {
+        self.engine.export_obs()
+    }
+
+    /// The tracing recorder, when tracing/metrics collection is on.
+    pub fn trace(&self) -> Option<&crate::obs::TraceRecorder> {
+        self.engine.trace()
+    }
+
     /// Broker handle (stream stats / tests).
     pub fn broker(&self) -> &Broker {
         self.engine.broker()
@@ -622,6 +634,36 @@ mod tests {
             seq.logs.rounds().last().unwrap().train_loss,
             par.logs.rounds().last().unwrap().train_loss
         );
+    }
+
+    #[test]
+    fn trace_capture_records_spans_and_mirrors_the_run_totals() {
+        use crate::obs::{Counter, Gauge, Phase};
+        let mut cfg = base(TrainMode::Scadles);
+        cfg.rounds = 5;
+        cfg.trace_capture = true;
+        let mut t = trainer(&cfg);
+        let out = t.run().unwrap();
+        t.export_obs().unwrap(); // no paths set: finalizes gauges only
+        let tr = t.trace().expect("tracing recorder installed");
+        assert!(!tr.events().is_empty());
+        let rounds = tr
+            .events()
+            .iter()
+            .filter(|e| e.phase == Phase::Round)
+            .count();
+        assert_eq!(rounds, 5);
+        let reg = tr.registry();
+        assert_eq!(reg.counter(Counter::Rounds), 5);
+        assert_eq!(reg.counter(Counter::SyncBits).div_ceil(8), out.sync_bytes);
+        assert_eq!(reg.gauge(Gauge::VirtualTimeS), out.report.wall_clock_s);
+        assert_eq!(
+            reg.gauge(Gauge::BufferP90Samples),
+            out.report.buffer.p90_samples as f64
+        );
+        // and with everything off, the engine carries the no-op recorder
+        let plain = trainer(&base(TrainMode::Scadles));
+        assert!(plain.trace().is_none());
     }
 
     #[test]

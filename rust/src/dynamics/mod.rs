@@ -94,6 +94,18 @@ pub struct DynamicsCounters {
     pub inactive_device_rounds: u64,
 }
 
+impl DynamicsCounters {
+    /// Mirror the authoritative tallies into the observability
+    /// registry (absolute totals, so repeated calls are idempotent).
+    pub fn record(&self, rec: &mut dyn crate::obs::Recorder) {
+        use crate::obs::Counter;
+        rec.set_counter(Counter::Departures, self.departures);
+        rec.set_counter(Counter::Rejoins, self.rejoins);
+        rec.set_counter(Counter::RegimeFlips, self.regime_flips);
+        rec.set_counter(Counter::InactiveDeviceRounds, self.inactive_device_rounds);
+    }
+}
+
 /// One multiplicative stage of the composition.
 struct Stage {
     rate: Box<dyn RateProcess>,

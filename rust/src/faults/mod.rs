@@ -98,6 +98,16 @@ impl FaultCounters {
     pub fn total(&self) -> u64 {
         self.crashes + self.corrupt_rows + self.stale_replays + self.byzantine_rows
     }
+
+    /// Mirror the authoritative tallies into the observability
+    /// registry (absolute totals, so repeated calls are idempotent).
+    pub fn record(&self, rec: &mut dyn crate::obs::Recorder) {
+        use crate::obs::Counter;
+        rec.set_counter(Counter::Crashes, self.crashes);
+        rec.set_counter(Counter::CorruptRows, self.corrupt_rows);
+        rec.set_counter(Counter::StaleReplays, self.stale_replays);
+        rec.set_counter(Counter::ByzantineRows, self.byzantine_rows);
+    }
 }
 
 /// Full injector state for checkpointing.

@@ -26,7 +26,7 @@ pub fn ablation(opts: &HarnessOpts) -> Result<()> {
     println!("Ablation — compression schemes on {model} ({devices} devices, {rounds} rounds)");
     println!("{:<28} {:>6} {:>14} {:>10}", "scheme", "CNC", "floats sent", "top5");
 
-    let mk = |comp: Option<CompressionConfig>| -> Result<_> {
+    let mk = |label: &str, comp: Option<CompressionConfig>| -> Result<_> {
         let mut b = ExperimentConfig::builder(&model)
             .artifacts_dir(opts.artifacts_dir.clone())
             .seed(opts.seed)
@@ -39,7 +39,10 @@ pub fn ablation(opts: &HarnessOpts) -> Result<()> {
         if let Some(c) = comp {
             b = b.compression(c);
         }
-        Trainer::from_config(&b.build()?)?.run()
+        let mut cfg = b.build()?;
+        opts.apply_obs(&mut cfg, &format!("ablation-{label}"));
+        let mut t = Trainer::from_config(&cfg)?;
+        super::run_to_output(&mut t)
     };
 
     let cases: Vec<(&str, Option<CompressionConfig>)> = vec![
@@ -51,7 +54,7 @@ pub fn ablation(opts: &HarnessOpts) -> Result<()> {
     ];
     let mut w = super::csv(opts, "ablation.csv", &["scheme", "cnc", "floats", "top5"])?;
     for (name, comp) in cases {
-        let out = mk(comp)?;
+        let out = mk(name, comp)?;
         println!(
             "{:<28} {:>6.2} {:>14.3e} {:>9.1}%",
             name,
@@ -148,13 +151,21 @@ pub fn fedavg(opts: &HarnessOpts) -> Result<()> {
             .echo_every(opts.echo_every)
             .build()
     };
-    let scadles = Trainer::from_config(&base(SyncPreset::Bsp)?)?.run()?;
+    let run = |mut cfg: ExperimentConfig, label: &str| -> Result<_> {
+        opts.apply_obs(&mut cfg, label);
+        let mut t = Trainer::from_config(&cfg)?;
+        super::run_to_output(&mut t)
+    };
+    let scadles = run(base(SyncPreset::Bsp)?, "fedavg-scadles")?;
     println!("{:<22} {:>9.1}% {:>14.3e} {:>10} {:>11.0}s",
              "scadles", 100.0 * scadles.report.best_test_top5,
              scadles.report.total_floats_sent as f64, rounds,
              scadles.report.wall_clock_s);
     for local_steps in [2u32, 4] {
-        let out = Trainer::from_config(&base(SyncPreset::Local { steps: local_steps })?)?.run()?;
+        let out = run(
+            base(SyncPreset::Local { steps: local_steps })?,
+            &format!("fedavg-k{local_steps}"),
+        )?;
         println!("{:<22} {:>9.1}% {:>14.3e} {:>10} {:>11.0}s",
                  format!("fedavg k={local_steps}"),
                  100.0 * out.report.best_test_top5,

@@ -34,7 +34,7 @@ fn run_one(
     rounds: usize,
     devices: usize,
 ) -> Result<TrainerOutput> {
-    let cfg = ExperimentConfig::builder("mlp_c10")
+    let mut cfg = ExperimentConfig::builder("mlp_c10")
         .devices(devices)
         .rounds(rounds)
         .seed(opts.seed)
@@ -46,7 +46,9 @@ fn run_one(
         .eval_every(rounds.max(2) / 2)
         .echo_every(opts.echo_every)
         .build()?;
-    let out = Trainer::with_backend(&cfg, Box::new(MockBackend::new(MOCK_D, 10)))?.run()?;
+    opts.apply_obs(&mut cfg, &format!("{faults}-{agg}-{sync}"));
+    let mut t = Trainer::with_backend(&cfg, Box::new(MockBackend::new(MOCK_D, 10)))?;
+    let out = super::run_to_output(&mut t)?;
     anyhow::ensure!(
         out.report.wall_clock_s.is_finite() && out.report.wall_clock_s > 0.0,
         "{agg} wall clock degenerate under {faults}"

@@ -26,7 +26,7 @@ fn run_one(
     rounds: usize,
     devices: usize,
 ) -> Result<TrainerOutput> {
-    let cfg = ExperimentConfig::builder("mlp_c10")
+    let mut cfg = ExperimentConfig::builder("mlp_c10")
         .devices(devices)
         .rounds(rounds)
         .seed(opts.seed)
@@ -36,7 +36,9 @@ fn run_one(
         .eval_every(rounds.max(2) / 2)
         .echo_every(opts.echo_every)
         .build()?;
-    let out = Trainer::with_backend(&cfg, Box::new(MockBackend::new(MOCK_D, 10)))?.run()?;
+    opts.apply_obs(&mut cfg, &format!("{preset}-{}", mode.name()));
+    let mut t = Trainer::with_backend(&cfg, Box::new(MockBackend::new(MOCK_D, 10)))?;
+    let out = super::run_to_output(&mut t)?;
     anyhow::ensure!(
         out.report.final_train_loss.is_finite(),
         "{} loss diverged under {}",

@@ -38,6 +38,13 @@ pub struct HarnessOpts {
     /// Progress echo period for training runs.
     pub echo_every: usize,
     pub seed: u64,
+    /// Trace output base path (`--trace FILE[,fmt]`); sweeps insert a
+    /// per-run label before the extension so runs don't clobber.
+    pub trace: Option<PathBuf>,
+    pub trace_format: crate::config::TraceFormat,
+    /// Prometheus metrics snapshot base path (`--metrics FILE`),
+    /// label-suffixed per run like `trace`.
+    pub metrics: Option<PathBuf>,
 }
 
 impl Default for HarnessOpts {
@@ -50,8 +57,54 @@ impl Default for HarnessOpts {
             out_dir: None,
             echo_every: 0,
             seed: 42,
+            trace: None,
+            trace_format: crate::config::TraceFormat::default(),
+            metrics: None,
         }
     }
+}
+
+impl HarnessOpts {
+    /// Apply the observability flags to a built config, inserting a
+    /// sanitized per-run `label` before the base path's extension
+    /// (`traces/run.json` + `s1-scadles` → `traces/run.s1-scadles.json`).
+    pub fn apply_obs(&self, cfg: &mut crate::config::ExperimentConfig, label: &str) {
+        if let Some(base) = &self.trace {
+            cfg.trace_path = Some(labeled_path(base, label));
+            cfg.trace_format = self.trace_format;
+        }
+        if let Some(base) = &self.metrics {
+            cfg.metrics_path = Some(labeled_path(base, label));
+        }
+    }
+}
+
+/// `base` with `.label` inserted before the extension; label characters
+/// outside `[A-Za-z0-9_.-]` become `-` so sweep labels like
+/// `ksync:0.75+two-tier` stay filesystem-safe.
+fn labeled_path(base: &std::path::Path, label: &str) -> String {
+    let safe: String = label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || "_.-".contains(c) { c } else { '-' })
+        .collect();
+    let ext = base.extension().and_then(|e| e.to_str()).unwrap_or("");
+    if ext.is_empty() {
+        format!("{}.{safe}", base.display())
+    } else {
+        format!("{}.{safe}.{ext}", base.with_extension("").display())
+    }
+}
+
+/// Run a trainer to completion and flush its observability outputs
+/// (trace/metrics files, when the config carries paths). Every harness
+/// training run funnels through here so `--trace`/`--metrics` cover
+/// the whole `repro exp` surface.
+pub(crate) fn run_to_output(
+    t: &mut crate::coordinator::Trainer,
+) -> Result<crate::coordinator::TrainerOutput> {
+    let out = t.run()?;
+    t.export_obs()?;
+    Ok(out)
 }
 
 /// All experiment ids, in paper order.

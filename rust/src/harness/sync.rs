@@ -34,7 +34,7 @@ fn run_one(
     rounds: usize,
     devices: usize,
 ) -> Result<TrainerOutput> {
-    let cfg = ExperimentConfig::builder("mlp_c10")
+    let mut cfg = ExperimentConfig::builder("mlp_c10")
         .devices(devices)
         .rounds(rounds)
         .seed(opts.seed)
@@ -45,7 +45,9 @@ fn run_one(
         .eval_every(rounds.max(2) / 2)
         .echo_every(opts.echo_every)
         .build()?;
-    let out = Trainer::with_backend(&cfg, Box::new(MockBackend::new(MOCK_D, 10)))?.run()?;
+    opts.apply_obs(&mut cfg, &format!("{sync}-{hetero}"));
+    let mut t = Trainer::with_backend(&cfg, Box::new(MockBackend::new(MOCK_D, 10)))?;
+    let out = super::run_to_output(&mut t)?;
     anyhow::ensure!(
         out.report.wall_clock_s.is_finite() && out.report.wall_clock_s > 0.0,
         "{sync} wall clock degenerate under {hetero}"
@@ -156,7 +158,7 @@ fn run_wire(
     rounds: usize,
     devices: usize,
 ) -> Result<TrainerOutput> {
-    let cfg = ExperimentConfig::builder("mlp_c10")
+    let mut cfg = ExperimentConfig::builder("mlp_c10")
         .devices(devices)
         .rounds(rounds)
         .seed(opts.seed)
@@ -169,7 +171,9 @@ fn run_wire(
         .eval_every(rounds.max(2) / 2)
         .echo_every(opts.echo_every)
         .build()?;
-    Trainer::with_backend(&cfg, Box::new(MockBackend::new(MOCK_D, 10)))?.run()
+    opts.apply_obs(&mut cfg, &format!("wire-{wire}"));
+    let mut t = Trainer::with_backend(&cfg, Box::new(MockBackend::new(MOCK_D, 10)))?;
+    super::run_to_output(&mut t)
 }
 
 /// The `--wire {f32,q8,q4}` comparison under Top-k CR=0.1: measured

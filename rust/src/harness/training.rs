@@ -37,9 +37,10 @@ fn base_builder(opts: &HarnessOpts, model: &str) -> crate::config::experiment::E
         .echo_every(opts.echo_every)
 }
 
-fn run_cfg(cfg: &ExperimentConfig) -> Result<TrainerOutput> {
-    let mut t = Trainer::from_config(cfg)?;
-    t.run()
+fn run_cfg(opts: &HarnessOpts, mut cfg: ExperimentConfig, label: &str) -> Result<TrainerOutput> {
+    opts.apply_obs(&mut cfg, label);
+    let mut t = Trainer::from_config(&cfg)?;
+    super::run_to_output(&mut t)
 }
 
 /// Fig. 2a: IID vs non-IID convergence (paper Table III pairings).
@@ -71,7 +72,7 @@ pub fn fig2a(opts: &HarnessOpts) -> Result<()> {
                 .mode(TrainMode::Scadles)
                 .eval_every(5)
                 .build()?;
-            let out = run_cfg(&cfg)?;
+            let out = run_cfg(opts, cfg, &format!("fig2a-{model}-{setting}"))?;
             println!("{:<18} {:<8} {:>8} {:>9.1}%", model, setting, rounds,
                      100.0 * out.report.best_test_top5);
             if let Some(w) = w.as_mut() {
@@ -90,6 +91,7 @@ pub fn fig2a(opts: &HarnessOpts) -> Result<()> {
 /// Run the ScaDLES-vs-DDL pair on one preset (shared by fig7/fig8/table6).
 fn scadles_vs_ddl(
     opts: &HarnessOpts,
+    label: &str,
     model: &str,
     preset: StreamPreset,
     rounds: usize,
@@ -105,7 +107,7 @@ fn scadles_vs_ddl(
             .mode(TrainMode::Scadles)
             .eval_every(2)
             .target_top5(0.98);
-        run_cfg(&scadles_extras(b).build()?)?
+        run_cfg(opts, scadles_extras(b).build()?, &format!("{label}-scadles"))?
     };
     let ddl = {
         let cfg = base_builder(opts, model)
@@ -117,7 +119,7 @@ fn scadles_vs_ddl(
             .eval_every(2)
             .target_top5(0.98)
             .build()?;
-        run_cfg(&cfg)?
+        run_cfg(opts, cfg, &format!("{label}-ddl"))?
     };
     Ok((scadles, ddl))
 }
@@ -134,7 +136,8 @@ pub fn fig7(opts: &HarnessOpts) -> Result<()> {
     let mut w = super::csv(opts, "fig7.csv",
         &["preset", "system", "round", "wall_clock_s", "test_top5", "global_batch"])?;
     for preset in StreamPreset::all() {
-        let (s, d) = scadles_vs_ddl(opts, &model, preset, rounds, devices, |b| b)?;
+        let label = format!("fig7-{}", preset.name());
+        let (s, d) = scadles_vs_ddl(opts, &label, &model, preset, rounds, devices, |b| b)?;
         for (name, out) in [("scadles", &s), ("ddl", &d)] {
             println!(
                 "{:<6} {:<9} {:>9.1}% {:>11} {:>11.0}s {:>9}",
@@ -175,7 +178,8 @@ pub fn fig8(opts: &HarnessOpts) -> Result<()> {
     let mut w = super::csv(opts, "fig8.csv",
         &["preset", "system", "round", "buffered_samples"])?;
     for preset in StreamPreset::all() {
-        let (s, d) = scadles_vs_ddl(opts, &model, preset, rounds, devices, |b| b)?;
+        let label = format!("fig8-{}", preset.name());
+        let (s, d) = scadles_vs_ddl(opts, &label, &model, preset, rounds, devices, |b| b)?;
         let ratio = d.report.buffer.final_samples as f64
             / s.report.buffer.final_samples.max(1) as f64;
         for (name, out) in [("scadles", &s), ("ddl", &d)] {
@@ -215,7 +219,10 @@ pub fn fig9(opts: &HarnessOpts) -> Result<()> {
             .mode(TrainMode::Scadles)
             .eval_every(3)
             .build()?;
-        rows.push(("none".into(), run_cfg(&base)?));
+        rows.push((
+            "none".into(),
+            run_cfg(opts, base, &format!("fig9-{}-none", preset.name()))?,
+        ));
         for inj in InjectionConfig::paper_sweep() {
             let cfg = base_builder(opts, &model)
                 .devices(devices)
@@ -226,7 +233,8 @@ pub fn fig9(opts: &HarnessOpts) -> Result<()> {
                 .injection(inj)
                 .eval_every(3)
                 .build()?;
-            rows.push((format!("({},{})", inj.alpha, inj.beta), run_cfg(&cfg)?));
+            let label = format!("fig9-{}-a{}b{}", preset.name(), inj.alpha, inj.beta);
+            rows.push((format!("({},{})", inj.alpha, inj.beta), run_cfg(opts, cfg, &label)?));
         }
         for (label, out) in &rows {
             println!("{:<6} {:<12} {:>9.1}% {:>11.1}%",
@@ -270,7 +278,11 @@ pub fn fig10(opts: &HarnessOpts) -> Result<()> {
                 .mode(TrainMode::Scadles)
                 .injection(inj)
                 .build()?;
-            let out = run_cfg(&cfg)?;
+            let out = run_cfg(
+                opts,
+                cfg,
+                &format!("fig10-{}-a{}b{}", preset.name(), inj.alpha, inj.beta),
+            )?;
             let kbs: Vec<f64> = out
                 .logs
                 .rounds()
@@ -316,7 +328,8 @@ pub fn table4(opts: &HarnessOpts) -> Result<()> {
                     .mode(TrainMode::Scadles)
                     .buffer_policy(policy)
                     .build()?;
-                outs.push(run_cfg(&cfg)?);
+                let label = format!("table4-{}-{model}-{policy:?}", preset.name());
+                outs.push(run_cfg(opts, cfg, &label)?);
             }
             let (p, t) = (
                 outs[0].report.buffer.final_samples,
@@ -353,7 +366,7 @@ pub fn table5(opts: &HarnessOpts) -> Result<()> {
         .preset(StreamPreset::S1Prime)
         .mode(TrainMode::Scadles)
         .build()?;
-    let dense = run_cfg(&dense_cfg)?;
+    let dense = run_cfg(opts, dense_cfg, "table5-dense")?;
     let d_actual = dense.report.total_floats_sent / (rounds as u64 * devices as u64).max(1);
     println!("{:<6} {:<6} {:>6.2} {:>9.1}% {:>12.2e} {:>14.2e}",
              "none", "-", 0.0, 100.0 * dense.report.best_test_top5,
@@ -368,7 +381,7 @@ pub fn table5(opts: &HarnessOpts) -> Result<()> {
                 .mode(TrainMode::Scadles)
                 .compression(CompressionConfig::new(cr, delta))
                 .build()?;
-            let out = run_cfg(&cfg)?;
+            let out = run_cfg(opts, cfg, &format!("table5-cr{cr}-d{delta}"))?;
             let floats = out.report.total_floats_sent;
             let paper_scale = out.cnc.floats_sent_at_scale(d_actual, d_paper);
             println!("{:<6} {:<6} {:>6.2} {:>9.1}% {:>12.2e} {:>14.2e}",
@@ -404,7 +417,8 @@ pub fn table6(opts: &HarnessOpts) -> Result<()> {
         &["model", "preset", "acc_drop_pp", "buffer_red_gb", "speedup"])?;
     for model in &models {
         for preset in StreamPreset::all() {
-            let (s, d) = scadles_vs_ddl(opts, model, preset, rounds, devices, |b| {
+            let label = format!("table6-{model}-{}", preset.name());
+            let (s, d) = scadles_vs_ddl(opts, &label, model, preset, rounds, devices, |b| {
                 b.buffer_policy(BufferPolicy::Truncation)
                     .compression(CompressionConfig::paper_final())
             })?;

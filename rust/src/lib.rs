@@ -51,6 +51,17 @@
 //! wire RNGs live on fixed [`rng::Pcg64`] substreams so the codec is
 //! deterministic at any pool width and across checkpoint restores.
 //!
+//! Looking *inside* a round is the [`obs`] layer: `--trace FILE[,fmt]`
+//! records per-device, per-phase **spans** on the simulator's virtual
+//! clock (drain → train → compress/encode → sync, plus a coordinator
+//! track) into Chrome trace-event JSON (open in Perfetto) or JSONL,
+//! and `--metrics FILE` snapshots a typed counter/gauge registry
+//! (sync bits, floats sent, fault/dynamics tallies, buffer occupancy
+//! percentiles, EF residual mass) as Prometheus text. The virtual-time
+//! event stream is bitwise deterministic at any worker-pool width and
+//! across checkpoint kill/resume; with tracing off the no-op recorder
+//! adds zero steady-state allocations. See `examples/traced_run.rs`.
+//!
 //! Layers 1–2 (Pallas kernels + JAX models) are AOT-lowered to HLO text at
 //! build time (`make artifacts`) and executed through the PJRT CPU client
 //! by [`runtime`]. Python never runs on the training path.
@@ -81,6 +92,7 @@ pub mod faults;
 pub mod harness;
 pub mod injection;
 pub mod metrics;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod simulate;

@@ -67,8 +67,21 @@ USAGE:
                                rounds and at the end; --resume restores FILE
                                first when it exists, and the resumed run is
                                bitwise identical to an uninterrupted one)
+              [--trace FILE[,fmt]]
+                              (write a deterministic phase-level trace of the
+                               run: fmt chrome (default; open in Perfetto or
+                               chrome://tracing) or jsonl; timestamps are the
+                               engine's virtual clock, so the event stream is
+                               bitwise identical at any --workers width)
+              [--metrics FILE]
+                              (write a Prometheus text-format snapshot of the
+                               run's counters/gauges at exit)
   repro exp <id|all> [--artifacts DIR] [--devices N] [--rounds R]
               [--model M] [--out-dir DIR] [--echo N] [--seed S]
+              [--trace FILE[,fmt]] [--metrics FILE]
+                              (per-run observability for every training run in
+                               the sweep; a sanitized run label is inserted
+                               before the extension so runs don't clobber)
   repro bench-check [--current rust/BENCH_hotpaths.json]
               [--baseline BENCH_baseline.json] [--tolerance 0.25]
               (CI perf gate: fail when any tracked bench case regresses
@@ -157,6 +170,14 @@ fn parse_mode(s: &str) -> anyhow::Result<TrainMode> {
     })
 }
 
+/// Split a `--trace FILE[,fmt]` spec into its path and format parts.
+fn parse_trace(spec: &str) -> anyhow::Result<(String, scadles::config::TraceFormat)> {
+    match spec.rsplit_once(',') {
+        Some((path, fmt)) => Ok((path.to_string(), scadles::config::TraceFormat::parse(fmt)?)),
+        None => Ok((spec.to_string(), scadles::config::TraceFormat::default())),
+    }
+}
+
 /// The CI perf gate: compare a fresh `BENCH_hotpaths.json` against the
 /// committed `BENCH_baseline.json` and fail when any case tracked by the
 /// baseline regressed by more than `tolerance` (relative, on `min_ns` —
@@ -184,7 +205,7 @@ fn bench_check(current: &str, baseline: &str, tolerance: f64) -> anyhow::Result<
         let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
         let schema = doc.get("schema")?.as_str()?;
         anyhow::ensure!(
-            schema == "scadles-bench-v1",
+            schema == scadles::obs::SNAPSHOT_SCHEMA,
             "{path}: unknown bench schema {schema:?}"
         );
         let mut cases = HashMap::new();
@@ -290,6 +311,13 @@ fn main() -> anyhow::Result<()> {
                 .first()
                 .context("usage: repro exp <id> (see `repro list`)")?
                 .clone();
+            let (trace, trace_format) = match args.values.get("trace") {
+                None => (None, scadles::config::TraceFormat::default()),
+                Some(spec) => {
+                    let (path, fmt) = parse_trace(spec)?;
+                    (Some(PathBuf::from(path)), fmt)
+                }
+            };
             let opts = HarnessOpts {
                 artifacts_dir: PathBuf::from(args.get_str("artifacts", "artifacts")),
                 devices: args.get("devices", 0usize)?,
@@ -298,6 +326,9 @@ fn main() -> anyhow::Result<()> {
                 out_dir: args.values.get("out-dir").map(PathBuf::from),
                 echo_every: args.get("echo", 0usize)?,
                 seed: args.get("seed", 42u64)?,
+                trace,
+                trace_format,
+                metrics: args.values.get("metrics").map(PathBuf::from),
             };
             harness::run(&id, &opts)
         }
@@ -335,6 +366,13 @@ fn main() -> anyhow::Result<()> {
             let beta = args.get("beta", 0.0f64)?;
             if alpha > 0.0 && beta > 0.0 {
                 b = b.injection(InjectionConfig::new(alpha, beta));
+            }
+            if let Some(spec) = args.values.get("trace") {
+                let (path, fmt) = parse_trace(spec)?;
+                b = b.trace_path(path).trace_format(fmt);
+            }
+            if let Some(path) = args.values.get("metrics") {
+                b = b.metrics_path(path.as_str());
             }
             let cfg = b.build()?;
             let mut t = Trainer::from_config(&cfg)?;
@@ -375,18 +413,12 @@ fn main() -> anyhow::Result<()> {
             } else {
                 t.run()?
             };
+            t.export_obs()?;
             println!("{}", out.report.to_json().to_string_pretty());
             if let Some(path) = args.values.get("csv") {
                 let mut w = scadles::metrics::CsvWriter::create(
                     path,
-                    &[
-                        "round", "wall_clock_s", "global_batch", "train_loss",
-                        "test_top1", "test_top5", "lr", "buffered_samples",
-                        "floats_sent", "compressed", "injection_bytes",
-                        "straggler_device", "straggler_cause", "active_devices",
-                        "rate_est", "committed_devices", "dropped_devices",
-                        "rejected_devices", "faulted_devices",
-                    ],
+                    &scadles::metrics::TRAIN_CSV_HEADER,
                 )?;
                 for r in out.logs.rounds() {
                     w.row(&[

@@ -7,6 +7,32 @@ use anyhow::Context;
 
 use crate::Result;
 
+/// The canonical `repro train --csv` per-round header — the one
+/// definition the CLI writes and downstream notebooks parse. The exact
+/// joined string is pinned by `train_csv_header_is_golden`, so a column
+/// rename/reorder is always a deliberate, test-visible change.
+pub const TRAIN_CSV_HEADER: [&str; 19] = [
+    "round",
+    "wall_clock_s",
+    "global_batch",
+    "train_loss",
+    "test_top1",
+    "test_top5",
+    "lr",
+    "buffered_samples",
+    "floats_sent",
+    "compressed",
+    "injection_bytes",
+    "straggler_device",
+    "straggler_cause",
+    "active_devices",
+    "rate_est",
+    "committed_devices",
+    "dropped_devices",
+    "rejected_devices",
+    "faulted_devices",
+];
+
 /// Streaming CSV writer with a fixed header.
 pub struct CsvWriter {
     out: Box<dyn Write + Send>,
@@ -99,5 +125,16 @@ mod tests {
         let sink = Sink::default();
         let mut w = CsvWriter::from_writer(Box::new(sink), &["a", "b"]).unwrap();
         assert!(w.row(&["1".into()]).is_err());
+    }
+
+    #[test]
+    fn train_csv_header_is_golden() {
+        assert_eq!(
+            TRAIN_CSV_HEADER.join(","),
+            "round,wall_clock_s,global_batch,train_loss,test_top1,test_top5,lr,\
+             buffered_samples,floats_sent,compressed,injection_bytes,\
+             straggler_device,straggler_cause,active_devices,rate_est,\
+             committed_devices,dropped_devices,rejected_devices,faulted_devices"
+        );
     }
 }

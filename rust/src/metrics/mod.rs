@@ -6,7 +6,7 @@ pub mod logger;
 pub mod summary;
 pub mod timeline;
 
-pub use csv::CsvWriter;
+pub use csv::{CsvWriter, TRAIN_CSV_HEADER};
 pub use ewma::Ewma;
 pub use logger::{RoundLog, RunLogger};
 pub use summary::RunReport;

@@ -1,0 +1,298 @@
+//! Exporters: Chrome trace-event JSON, JSONL, Prometheus text, and the
+//! shared counter-snapshot JSON writer.
+//!
+//! Everything here serializes through [`crate::util::json::Json`]
+//! (BTreeMap-backed objects → sorted keys, integers printed without
+//! exponents), so two identical event streams always serialize to
+//! identical bytes — the property the traced determinism tests pin.
+//!
+//! The Chrome exporter emits **virtual time only**: `ts`/`dur` are
+//! virtual microseconds from the simulator clock, so the file is a
+//! pure function of config and seed. Host wall-clock durations appear
+//! only in the JSONL exporter, as clearly-marked `"kind":"host"`
+//! sidecar lines outside the determinism contract.
+
+use std::collections::BTreeSet;
+
+use crate::util::json::Json;
+use crate::Result;
+
+use super::recorder::Track;
+use super::registry::{Counter, Gauge, MetricsRegistry};
+use super::trace::{EventKind, SpanEvent, TraceRecorder};
+
+/// Shared schema tag for every counter-snapshot JSON file the repo
+/// writes: `BENCH_hotpaths.json` (via `util::bench`), the metrics
+/// exporter's counter cases, and anything `repro bench-check` parses.
+pub const SNAPSHOT_SCHEMA: &str = "scadles-bench-v1";
+
+/// The one counter-snapshot JSON writer: a tagged envelope around a
+/// list of case objects. `util::bench::Bench::to_json` and
+/// [`registry_cases`] both feed this, so the bench gate and the
+/// metrics exporter share one schema and one serializer.
+pub fn snapshot_json(cases: Vec<Json>) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(SNAPSHOT_SCHEMA)),
+        ("cases", Json::Arr(cases)),
+    ])
+}
+
+/// Registry counters + gauges as snapshot cases (`{name, value}`).
+pub fn registry_cases(reg: &MetricsRegistry) -> Vec<Json> {
+    let mut cases = Vec::with_capacity(Counter::ALL.len() + Gauge::ALL.len());
+    for c in Counter::ALL {
+        cases.push(Json::obj(vec![
+            ("name", Json::str(c.name())),
+            ("value", Json::num(reg.counter(c) as f64)),
+        ]));
+    }
+    for g in Gauge::ALL {
+        cases.push(Json::obj(vec![
+            ("name", Json::str(g.name())),
+            ("value", Json::num(reg.gauge(g))),
+        ]));
+    }
+    cases
+}
+
+fn track_name(t: Track) -> String {
+    match t {
+        Track::Coordinator => "coordinator".to_string(),
+        Track::Device(d) => format!("device {d}"),
+    }
+}
+
+/// Chrome trace-event JSON (the array form) from a virtual-time event
+/// stream: one metadata `thread_name` event per track, then every
+/// span (`ph:"X"`) and instant (`ph:"i"`) in emission order. `ts` and
+/// `dur` are virtual microseconds; `pid` is always 1; `tid` 0 is the
+/// coordinator and `tid d+1` is device `d`. Loads directly in
+/// Perfetto (ui.perfetto.dev) or chrome://tracing.
+pub fn chrome_trace_events(events: &[SpanEvent]) -> Json {
+    let mut tids: BTreeSet<u32> = BTreeSet::new();
+    for e in events {
+        tids.insert(e.track.tid());
+    }
+    let mut arr = Vec::with_capacity(events.len() + tids.len());
+    for tid in &tids {
+        let name = if *tid == 0 {
+            track_name(Track::Coordinator)
+        } else {
+            track_name(Track::Device(tid - 1))
+        };
+        arr.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(*tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+    for e in events {
+        let args = Json::obj(vec![
+            ("round", Json::num(e.round as f64)),
+            ("seq", Json::num(e.seq as f64)),
+        ]);
+        let mut fields = vec![
+            ("name", Json::str(e.phase.name())),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(e.track.tid() as f64)),
+            ("ts", Json::num(e.vt_us)),
+            ("args", args),
+        ];
+        match e.kind {
+            EventKind::Span => {
+                fields.push(("ph", Json::str("X")));
+                fields.push(("dur", Json::num(e.dur_us)));
+            }
+            EventKind::Instant => {
+                fields.push(("ph", Json::str("i")));
+                fields.push(("s", Json::str("t")));
+            }
+        }
+        arr.push(Json::obj(fields));
+    }
+    Json::Arr(arr)
+}
+
+/// [`chrome_trace_events`], serialized. Deterministic bytes for a
+/// deterministic event stream.
+pub fn chrome_trace_string(events: &[SpanEvent]) -> String {
+    let mut s = chrome_trace_events(events).to_string();
+    s.push('\n');
+    s
+}
+
+/// JSONL export: one compact JSON object per line. Span/instant lines
+/// carry virtual time; `"kind":"host"` lines carry the per-round host
+/// wall-clock sidecar (diagnostic only, excluded from determinism);
+/// the final line is the counter snapshot in the shared
+/// [`snapshot_json`] envelope.
+pub fn jsonl_string(tr: &TraceRecorder) -> String {
+    let mut out = String::new();
+    for e in tr.events() {
+        let kind = match e.kind {
+            EventKind::Span => "span",
+            EventKind::Instant => "instant",
+        };
+        let line = Json::obj(vec![
+            ("kind", Json::str(kind)),
+            ("seq", Json::num(e.seq as f64)),
+            ("round", Json::num(e.round as f64)),
+            ("track", Json::str(track_name(e.track))),
+            ("phase", Json::str(e.phase.name())),
+            ("vt_us", Json::num(e.vt_us)),
+            ("dur_us", Json::num(e.dur_us)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    for (round, ns) in tr.host_rounds() {
+        let line = Json::obj(vec![
+            ("kind", Json::str("host")),
+            ("round", Json::num(*round as f64)),
+            ("host_ns", Json::num(*ns as f64)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    let mut snap = snapshot_json(registry_cases(tr.registry()));
+    if let Json::Obj(m) = &mut snap {
+        m.insert("kind".to_string(), Json::str("counters"));
+    }
+    out.push_str(&snap.to_string());
+    out.push('\n');
+    out
+}
+
+/// Prometheus text-exposition snapshot of the registry: every counter
+/// and gauge, fixed order, `# TYPE` lines included.
+pub fn prometheus_string(reg: &MetricsRegistry) -> String {
+    let mut out = String::new();
+    for c in Counter::ALL {
+        out.push_str(&format!("# TYPE {} counter\n", c.name()));
+        out.push_str(&format!("{} {}\n", c.name(), reg.counter(c)));
+    }
+    for g in Gauge::ALL {
+        out.push_str(&format!("# TYPE {} gauge\n", g.name()));
+        out.push_str(&format!("{} {}\n", g.name(), reg.gauge(g)));
+    }
+    out
+}
+
+/// Write an exported string to `path`, creating parent directories.
+pub fn write_text(path: &std::path::Path, text: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{Phase, Recorder};
+
+    fn sample_recorder() -> TraceRecorder {
+        let mut t = TraceRecorder::new(true);
+        t.instant(Track::Coordinator, Phase::Plan, 0, 0.0);
+        t.span(Track::Device(0), Phase::Drain, 0, 0.0, 0.5);
+        t.span(Track::Device(0), Phase::Train, 0, 0.5, 1.5);
+        t.span(Track::Device(1), Phase::Train, 0, 0.25, 1.0);
+        t.span(Track::Coordinator, Phase::Round, 0, 0.0, 3.0);
+        t.host_round_ns(0, 12_345);
+        t.add(Counter::Rounds, 1);
+        t.set_gauge(Gauge::RateEst, 64.5);
+        t
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_required_keys() {
+        let tr = sample_recorder();
+        let text = chrome_trace_string(tr.events());
+        let j = Json::parse(text.trim_end()).unwrap();
+        let arr = j.as_arr().unwrap();
+        // 3 tracks (coordinator + 2 devices) of metadata + 5 events
+        assert_eq!(arr.len(), 8);
+        for ev in arr {
+            assert!(ev.get("ph").is_ok());
+            assert!(ev.get("pid").is_ok());
+            let ph = ev.get("ph").unwrap().as_str().unwrap();
+            if ph != "M" {
+                assert!(ev.get("ts").is_ok());
+                assert!(ev.get("tid").is_ok());
+                assert!(ev.get("args").unwrap().get("seq").is_ok());
+            }
+            if ph == "X" {
+                assert!(ev.get("dur").is_ok());
+            }
+        }
+        // identical stream → identical bytes
+        assert_eq!(text, chrome_trace_string(sample_recorder().events()));
+    }
+
+    #[test]
+    fn chrome_ts_is_monotone_per_track() {
+        let tr = sample_recorder();
+        let j = chrome_trace_events(tr.events());
+        let mut last: std::collections::BTreeMap<u64, f64> = Default::default();
+        for ev in j.as_arr().unwrap() {
+            if ev.get("ph").unwrap().as_str().unwrap() == "M" {
+                continue;
+            }
+            let tid = ev.get("tid").unwrap().as_u64().unwrap();
+            let ts = ev.get("ts").unwrap().as_f64().unwrap();
+            if let Some(prev) = last.get(&tid) {
+                assert!(ts >= *prev, "tid {tid}: ts went backwards");
+            }
+            last.insert(tid, ts);
+        }
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_host_is_separate() {
+        let tr = sample_recorder();
+        let text = jsonl_string(&tr);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5 + 1 + 1); // events + host + counters
+        for line in &lines {
+            Json::parse(line).unwrap();
+        }
+        let host = Json::parse(lines[5]).unwrap();
+        assert_eq!(host.get("kind").unwrap().as_str().unwrap(), "host");
+        assert_eq!(host.get("host_ns").unwrap().as_u64().unwrap(), 12_345);
+        let snap = Json::parse(lines[6]).unwrap();
+        assert_eq!(
+            snap.get("schema").unwrap().as_str().unwrap(),
+            SNAPSHOT_SCHEMA
+        );
+        assert_eq!(
+            snap.get("cases").unwrap().as_arr().unwrap().len(),
+            Counter::ALL.len() + Gauge::ALL.len()
+        );
+    }
+
+    #[test]
+    fn prometheus_snapshot_lists_every_metric_once() {
+        let tr = sample_recorder();
+        let text = prometheus_string(tr.registry());
+        assert!(text.contains("# TYPE scadles_rounds_total counter\nscadles_rounds_total 1\n"));
+        assert!(text
+            .contains("# TYPE scadles_rate_est_samples_per_s gauge\nscadles_rate_est_samples_per_s 64.5\n"));
+        let metric_lines = text.lines().filter(|l| !l.starts_with('#')).count();
+        assert_eq!(metric_lines, Counter::ALL.len() + Gauge::ALL.len());
+    }
+
+    #[test]
+    fn snapshot_envelope_matches_the_bench_schema() {
+        let j = snapshot_json(vec![Json::obj(vec![
+            ("name", Json::str("agg/wagg-native")),
+            ("min_ns", Json::num(1.0)),
+        ])]);
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "scadles-bench-v1");
+        assert_eq!(j.get("cases").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

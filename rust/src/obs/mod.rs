@@ -1,0 +1,47 @@
+//! Deterministic tracing & metrics: phase-level spans, a typed
+//! counter/gauge registry, and Perfetto/JSONL/Prometheus exporters.
+//!
+//! Every claim the repo reproduces — stragglers caused by low-volume
+//! streams, buffer growth under high-rate streams, sync bytes saved by
+//! compression — used to be argued from a flat per-round CSV. This
+//! module lets you look *inside* a round: the engine emits per-device
+//! **spans** for each phase of the round sequence (dynamics frame →
+//! plan → drain → train → compress → encode → aggregate → update →
+//! price) plus a coordinator track, and folds the ad-hoc counters
+//! scattered across `RoundLog`/`Timeline`/fault/dynamics state into one
+//! [`MetricsRegistry`].
+//!
+//! **Two timebases, one determinism rule.** Every span carries virtual
+//! time from the simulator clock — a pure function of the config and
+//! seed, so the virtual-time event stream is bitwise identical at any
+//! worker-pool width and across checkpoint kill/resume (event sequence
+//! numbers are checkpointed). Host wall-clock durations are recorded
+//! *per round* as diagnostic sidecar data only: they never enter the
+//! Chrome trace, so the exported trace stays deterministic.
+//!
+//! **Zero cost when off.** The engine talks to a [`Recorder`]; the
+//! default [`NoopRecorder`] has empty method bodies — no allocation,
+//! no branching beyond one `enabled()` check per phase — enforced by
+//! `tests/alloc_steady_state.rs` and the `round-engine/trace-off-overhead`
+//! bench gate.
+//!
+//! **Exporters** ([`export`]): Chrome trace-event JSON (open in
+//! Perfetto or `chrome://tracing`; one track per device plus a
+//! coordinator track, microsecond virtual timebase), JSONL structured
+//! events for machine diffing, and a Prometheus text snapshot of the
+//! registry written at run end. Wired through `--trace FILE[,fmt]` and
+//! `--metrics FILE` on `repro train` and every `repro exp *` harness.
+//! See `examples/traced_run.rs`.
+
+pub mod export;
+pub mod recorder;
+pub mod registry;
+pub mod trace;
+
+pub use export::{
+    chrome_trace_events, chrome_trace_string, jsonl_string, prometheus_string, registry_cases,
+    snapshot_json, SNAPSHOT_SCHEMA,
+};
+pub use recorder::{NoopRecorder, Phase, Recorder, Track};
+pub use registry::{Counter, Gauge, MetricsRegistry};
+pub use trace::{EventKind, SpanEvent, TraceFormat, TraceRecorder};

@@ -1,0 +1,158 @@
+//! The [`Recorder`] trait: the one seam between the round engine and
+//! the observability layer.
+//!
+//! The engine calls these hooks from the **coordinator thread only**,
+//! in fixed device order, with values that are already pure functions
+//! of the config and seed (virtual times, planned batches, priced
+//! phase durations). Worker-pool threads never touch the recorder, so
+//! pool width cannot reorder or change the event stream — the same
+//! contract that keeps training bitwise deterministic keeps traces
+//! bitwise deterministic.
+//!
+//! [`NoopRecorder`] is the default: every method body is empty, so
+//! with tracing off the round loop pays one virtual call per hook and
+//! performs **zero heap allocations** (enforced by
+//! `tests/alloc_steady_state.rs` and the
+//! `round-engine/trace-off-overhead` bench ceiling).
+
+use super::registry::{Counter, Gauge};
+use super::trace::TraceRecorder;
+
+/// Span taxonomy, mirroring the engine's round phase sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Coordinator: the whole round (span `[round start, round end]`).
+    Round,
+    /// Coordinator: dynamics frame sampled (rates/links/membership).
+    Frame,
+    /// Coordinator: stream-proportional batch plan built.
+    Plan,
+    /// Device: barrier wait + stream drain/poll.
+    Drain,
+    /// Device: local forward/backward.
+    Train,
+    /// Device: residual correction + Top-k mask statistics.
+    Compress,
+    /// Device: quantized wire encode (q8/q4 only).
+    Encode,
+    /// Coordinator: the global compression gate's decision.
+    Gate,
+    /// Device: the collective gradient exchange.
+    Sync,
+    /// Coordinator: weighted aggregation of the survivor rows.
+    Aggregate,
+    /// Coordinator: the optimizer step.
+    Update,
+    /// Coordinator: virtual-clock pricing of the round.
+    Price,
+    /// Coordinator: held-out evaluation ran this round.
+    Eval,
+}
+
+impl Phase {
+    pub const fn name(self) -> &'static str {
+        match self {
+            Phase::Round => "round",
+            Phase::Frame => "frame",
+            Phase::Plan => "plan",
+            Phase::Drain => "drain",
+            Phase::Train => "train",
+            Phase::Compress => "compress",
+            Phase::Encode => "encode",
+            Phase::Gate => "gate",
+            Phase::Sync => "sync",
+            Phase::Aggregate => "aggregate",
+            Phase::Update => "update",
+            Phase::Price => "price",
+            Phase::Eval => "eval",
+        }
+    }
+}
+
+/// Which trace track an event lands on: one per device plus the
+/// coordinator. Chrome `tid` 0 is the coordinator; device `d` maps to
+/// `tid d+1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Track {
+    Coordinator,
+    Device(u32),
+}
+
+impl Track {
+    pub const fn tid(self) -> u32 {
+        match self {
+            Track::Coordinator => 0,
+            Track::Device(d) => d + 1,
+        }
+    }
+}
+
+/// Observability sink the engine records into. All hooks default to
+/// no-ops so [`NoopRecorder`] is literally `impl Recorder for
+/// NoopRecorder {}`.
+pub trait Recorder: std::fmt::Debug + Send {
+    /// `false` lets hot paths skip marshalling span arguments entirely.
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    /// A complete span on `track`: `[vt_start_s, vt_start_s + dur_s]`
+    /// in virtual seconds.
+    fn span(&mut self, _track: Track, _phase: Phase, _round: u32, _vt_start_s: f64, _dur_s: f64) {}
+
+    /// An instant event on `track` at `vt_s` virtual seconds.
+    fn instant(&mut self, _track: Track, _phase: Phase, _round: u32, _vt_s: f64) {}
+
+    /// Host wall-clock nanoseconds one round took. Diagnostic sidecar
+    /// only — never part of the virtual-time event stream, so it is
+    /// explicitly excluded from the determinism contract.
+    fn host_round_ns(&mut self, _round: u32, _ns: u64) {}
+
+    /// Increment a registry counter.
+    fn add(&mut self, _c: Counter, _delta: u64) {}
+
+    /// Pin a registry counter to an absolute total.
+    fn set_counter(&mut self, _c: Counter, _value: u64) {}
+
+    /// Set a registry gauge.
+    fn set_gauge(&mut self, _g: Gauge, _value: f64) {}
+
+    /// Downcast to the concrete tracing recorder, if this is one.
+    fn as_trace(&self) -> Option<&TraceRecorder> {
+        None
+    }
+
+    fn as_trace_mut(&mut self) -> Option<&mut TraceRecorder> {
+        None
+    }
+}
+
+/// The zero-cost default: every hook is the trait's empty body.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_recorder_is_disabled_and_inert() {
+        let mut r = NoopRecorder;
+        assert!(!r.enabled());
+        r.span(Track::Device(0), Phase::Train, 0, 0.0, 1.0);
+        r.instant(Track::Coordinator, Phase::Plan, 0, 0.0);
+        r.add(Counter::SyncBits, 10);
+        r.set_gauge(Gauge::RateEst, 1.0);
+        assert!(r.as_trace().is_none());
+        assert!(r.as_trace_mut().is_none());
+    }
+
+    #[test]
+    fn track_tids_reserve_zero_for_the_coordinator() {
+        assert_eq!(Track::Coordinator.tid(), 0);
+        assert_eq!(Track::Device(0).tid(), 1);
+        assert_eq!(Track::Device(7).tid(), 8);
+    }
+}

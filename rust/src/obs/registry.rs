@@ -1,0 +1,227 @@
+//! Typed counter/gauge registry: every quantity the engine used to
+//! track ad hoc (`sync_bits_total`, floats sent, fault and dynamics
+//! tallies, buffer occupancy percentiles, error-feedback residual
+//! mass) behind two fixed enums and two fixed arrays.
+//!
+//! The registry is allocation-free by construction — counters and
+//! gauges live in `[u64; N]` / `[f64; N]` arrays indexed by the enum
+//! discriminant — so updating it on the round path costs one array
+//! write. Exporters iterate [`Counter::ALL`] / [`Gauge::ALL`] so the
+//! Prometheus snapshot and the JSON counter cases always cover every
+//! metric in a fixed, reviewable order.
+
+/// Monotone counters (Prometheus `counter` type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Exact bits that crossed the wire in gradient exchanges.
+    SyncBits = 0,
+    /// Float values sent to aggregation (dense d or Top-k nnz per row).
+    FloatsSent = 1,
+    /// Samples trained on across all devices.
+    TrainedSamples = 2,
+    /// Device-rounds whose trained gradient the sync policy withheld
+    /// past the commit point (rides the error-feedback residual).
+    DroppedDeviceRounds = 3,
+    /// Rounds the global gate decided to compress.
+    CompressedRounds = 4,
+    /// Rounds that went out dense.
+    DenseRounds = 5,
+    /// Bytes moved by the randomized data-injection step.
+    InjectionBytes = 6,
+    /// Rounds completed.
+    Rounds = 7,
+    /// Fault layer: device crashes injected.
+    Crashes = 8,
+    /// Fault layer: corrupted gradient rows injected.
+    CorruptRows = 9,
+    /// Fault layer: stale gradient replays injected.
+    StaleReplays = 10,
+    /// Fault layer: byzantine rows injected.
+    ByzantineRows = 11,
+    /// Dynamics: devices departing the membership.
+    Departures = 12,
+    /// Dynamics: devices rejoining the membership.
+    Rejoins = 13,
+    /// Dynamics: rate-regime flips.
+    RegimeFlips = 14,
+    /// Dynamics: device-rounds spent inactive.
+    InactiveDeviceRounds = 15,
+}
+
+impl Counter {
+    /// Every counter, in export order.
+    pub const ALL: [Counter; 16] = [
+        Counter::SyncBits,
+        Counter::FloatsSent,
+        Counter::TrainedSamples,
+        Counter::DroppedDeviceRounds,
+        Counter::CompressedRounds,
+        Counter::DenseRounds,
+        Counter::InjectionBytes,
+        Counter::Rounds,
+        Counter::Crashes,
+        Counter::CorruptRows,
+        Counter::StaleReplays,
+        Counter::ByzantineRows,
+        Counter::Departures,
+        Counter::Rejoins,
+        Counter::RegimeFlips,
+        Counter::InactiveDeviceRounds,
+    ];
+
+    /// Prometheus metric name (already suffixed `_total`).
+    pub const fn name(self) -> &'static str {
+        match self {
+            Counter::SyncBits => "scadles_sync_bits_total",
+            Counter::FloatsSent => "scadles_floats_sent_total",
+            Counter::TrainedSamples => "scadles_trained_samples_total",
+            Counter::DroppedDeviceRounds => "scadles_dropped_device_rounds_total",
+            Counter::CompressedRounds => "scadles_compressed_rounds_total",
+            Counter::DenseRounds => "scadles_dense_rounds_total",
+            Counter::InjectionBytes => "scadles_injection_bytes_total",
+            Counter::Rounds => "scadles_rounds_total",
+            Counter::Crashes => "scadles_fault_crashes_total",
+            Counter::CorruptRows => "scadles_fault_corrupt_rows_total",
+            Counter::StaleReplays => "scadles_fault_stale_replays_total",
+            Counter::ByzantineRows => "scadles_fault_byzantine_rows_total",
+            Counter::Departures => "scadles_dynamics_departures_total",
+            Counter::Rejoins => "scadles_dynamics_rejoins_total",
+            Counter::RegimeFlips => "scadles_dynamics_regime_flips_total",
+            Counter::InactiveDeviceRounds => "scadles_dynamics_inactive_device_rounds_total",
+        }
+    }
+}
+
+/// Point-in-time gauges (Prometheus `gauge` type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Samples buffered across all devices at run end.
+    BufferFinalSamples = 0,
+    /// Peak buffered samples over the run.
+    BufferPeakSamples = 1,
+    /// Median of the per-round buffered-sample history.
+    BufferP50Samples = 2,
+    /// 90th percentile of the per-round buffered-sample history.
+    BufferP90Samples = 3,
+    /// Sum of `|residual|²` across device error-feedback states.
+    EfResidualNorm2 = 4,
+    /// The coordinator's EWMA stream-rate estimate (samples/s).
+    RateEst = 5,
+    /// Virtual clock at run end (seconds).
+    VirtualTimeS = 6,
+}
+
+impl Gauge {
+    /// Every gauge, in export order.
+    pub const ALL: [Gauge; 7] = [
+        Gauge::BufferFinalSamples,
+        Gauge::BufferPeakSamples,
+        Gauge::BufferP50Samples,
+        Gauge::BufferP90Samples,
+        Gauge::EfResidualNorm2,
+        Gauge::RateEst,
+        Gauge::VirtualTimeS,
+    ];
+
+    /// Prometheus metric name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Gauge::BufferFinalSamples => "scadles_buffer_final_samples",
+            Gauge::BufferPeakSamples => "scadles_buffer_peak_samples",
+            Gauge::BufferP50Samples => "scadles_buffer_p50_samples",
+            Gauge::BufferP90Samples => "scadles_buffer_p90_samples",
+            Gauge::EfResidualNorm2 => "scadles_ef_residual_norm2",
+            Gauge::RateEst => "scadles_rate_est_samples_per_s",
+            Gauge::VirtualTimeS => "scadles_virtual_time_s",
+        }
+    }
+}
+
+/// Fixed-size counter/gauge store. All operations are O(1) array
+/// writes; the struct never allocates after construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsRegistry {
+    counters: [u64; Counter::ALL.len()],
+    gauges: [f64; Gauge::ALL.len()],
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self {
+            counters: [0; Counter::ALL.len()],
+            gauges: [0.0; Gauge::ALL.len()],
+        }
+    }
+
+    /// Increment a counter.
+    pub fn add(&mut self, c: Counter, delta: u64) {
+        self.counters[c as usize] += delta;
+    }
+
+    /// Pin a counter to an absolute total (used when a subsystem keeps
+    /// its own authoritative tally — fault/dynamics counters — and the
+    /// registry mirrors it at export time).
+    pub fn set_counter(&mut self, c: Counter, value: u64) {
+        self.counters[c as usize] = value;
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn set_gauge(&mut self, g: Gauge, value: f64) {
+        self.gauges[g as usize] = value;
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.gauges[g as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discriminants_index_the_arrays() {
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i, "{c:?}");
+        }
+        for (i, g) in Gauge::ALL.iter().enumerate() {
+            assert_eq!(*g as usize, i, "{g:?}");
+        }
+    }
+
+    #[test]
+    fn add_set_and_read_back() {
+        let mut r = MetricsRegistry::new();
+        r.add(Counter::SyncBits, 64);
+        r.add(Counter::SyncBits, 8);
+        assert_eq!(r.counter(Counter::SyncBits), 72);
+        r.set_counter(Counter::Crashes, 3);
+        assert_eq!(r.counter(Counter::Crashes), 3);
+        r.set_gauge(Gauge::BufferP50Samples, 512.0);
+        assert_eq!(r.gauge(Gauge::BufferP50Samples), 512.0);
+        assert_eq!(r.counter(Counter::Rounds), 0);
+    }
+
+    #[test]
+    fn names_are_unique_and_prometheus_shaped() {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in Counter::ALL {
+            assert!(c.name().starts_with("scadles_"));
+            assert!(c.name().ends_with("_total"), "{}", c.name());
+            assert!(seen.insert(c.name()));
+        }
+        for g in Gauge::ALL {
+            assert!(g.name().starts_with("scadles_"));
+            assert!(seen.insert(g.name()));
+        }
+    }
+}

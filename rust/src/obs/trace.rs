@@ -1,0 +1,246 @@
+//! The concrete tracing recorder: an in-memory, sequence-numbered
+//! event stream plus the metrics registry.
+//!
+//! Events are appended only from the coordinator thread in
+//! deterministic order (see [`super::Recorder`]), each stamped with a
+//! monotone sequence number. The sequence counter is checkpointed by
+//! the engine, so a killed-and-resumed traced run continues the exact
+//! stream the uninterrupted run would have produced — concatenating
+//! the pre-kill and post-resume event vectors reproduces the full
+//! run's stream bit for bit.
+//!
+//! Host wall-clock durations are kept in a separate per-round sidecar
+//! ([`TraceRecorder::host_rounds`]) so the virtual-time stream stays a
+//! pure function of config and seed.
+
+use crate::Result;
+
+use super::recorder::{Phase, Recorder, Track};
+use super::registry::{Counter, Gauge, MetricsRegistry};
+
+/// On-disk trace format selected by `--trace FILE[,fmt]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceFormat {
+    /// Chrome trace-event JSON — open in Perfetto or chrome://tracing.
+    #[default]
+    Chrome,
+    /// One JSON object per line: spans, instants, host sidecar,
+    /// counter snapshot. For machine diffing.
+    Jsonl,
+}
+
+impl TraceFormat {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "chrome" | "perfetto" => Ok(TraceFormat::Chrome),
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            other => Err(anyhow::anyhow!(
+                "unknown trace format {other:?} (choices: chrome, jsonl)"
+            )),
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            TraceFormat::Chrome => "chrome",
+            TraceFormat::Jsonl => "jsonl",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Span,
+    Instant,
+}
+
+/// One trace event. Times are virtual microseconds (the Chrome `ts`
+/// unit); `dur_us` is zero for instants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    pub seq: u64,
+    pub round: u32,
+    pub track: Track,
+    pub phase: Phase,
+    pub kind: EventKind,
+    pub vt_us: f64,
+    pub dur_us: f64,
+}
+
+/// In-memory trace + metrics store behind the [`Recorder`] trait.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    /// Span/instant collection on (`--trace`); a `--metrics`-only run
+    /// keeps just the registry.
+    spans_on: bool,
+    seq: u64,
+    events: Vec<SpanEvent>,
+    host_rounds: Vec<(u32, u64)>,
+    registry: MetricsRegistry,
+}
+
+impl TraceRecorder {
+    pub fn new(spans_on: bool) -> Self {
+        Self {
+            spans_on,
+            seq: 0,
+            events: Vec::new(),
+            host_rounds: Vec::new(),
+            registry: MetricsRegistry::new(),
+        }
+    }
+
+    pub fn spans_on(&self) -> bool {
+        self.spans_on
+    }
+
+    /// The virtual-time event stream, in emission (= sequence) order.
+    pub fn events(&self) -> &[SpanEvent] {
+        &self.events
+    }
+
+    /// Diagnostic host wall-clock sidecar: `(round, nanoseconds)`.
+    pub fn host_rounds(&self) -> &[(u32, u64)] {
+        &self.host_rounds
+    }
+
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    pub fn registry_mut(&mut self) -> &mut MetricsRegistry {
+        &mut self.registry
+    }
+
+    /// Next sequence number to be issued (checkpointed by the engine).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Restore the sequence counter from a checkpoint so the resumed
+    /// stream continues where the killed run stopped.
+    pub fn restore_seq(&mut self, seq: u64) {
+        self.seq = seq;
+    }
+
+    fn push(&mut self, e: SpanEvent) {
+        self.events.push(e);
+    }
+}
+
+impl Recorder for TraceRecorder {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn span(&mut self, track: Track, phase: Phase, round: u32, vt_start_s: f64, dur_s: f64) {
+        if !self.spans_on {
+            return;
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.push(SpanEvent {
+            seq,
+            round,
+            track,
+            phase,
+            kind: EventKind::Span,
+            vt_us: vt_start_s * 1e6,
+            dur_us: dur_s * 1e6,
+        });
+    }
+
+    fn instant(&mut self, track: Track, phase: Phase, round: u32, vt_s: f64) {
+        if !self.spans_on {
+            return;
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.push(SpanEvent {
+            seq,
+            round,
+            track,
+            phase,
+            kind: EventKind::Instant,
+            vt_us: vt_s * 1e6,
+            dur_us: 0.0,
+        });
+    }
+
+    fn host_round_ns(&mut self, round: u32, ns: u64) {
+        if self.spans_on {
+            self.host_rounds.push((round, ns));
+        }
+    }
+
+    fn add(&mut self, c: Counter, delta: u64) {
+        self.registry.add(c, delta);
+    }
+
+    fn set_counter(&mut self, c: Counter, value: u64) {
+        self.registry.set_counter(c, value);
+    }
+
+    fn set_gauge(&mut self, g: Gauge, value: f64) {
+        self.registry.set_gauge(g, value);
+    }
+
+    fn as_trace(&self) -> Option<&TraceRecorder> {
+        Some(self)
+    }
+
+    fn as_trace_mut(&mut self) -> Option<&mut TraceRecorder> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_carry_monotone_seq_and_microsecond_times() {
+        let mut t = TraceRecorder::new(true);
+        t.span(Track::Device(1), Phase::Train, 3, 1.5, 0.25);
+        t.instant(Track::Coordinator, Phase::Gate, 3, 1.75);
+        t.host_round_ns(3, 999);
+        let ev = t.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].seq, 0);
+        assert_eq!(ev[1].seq, 1);
+        assert_eq!(ev[0].vt_us, 1.5e6);
+        assert_eq!(ev[0].dur_us, 0.25e6);
+        assert_eq!(ev[1].kind, EventKind::Instant);
+        assert_eq!(t.seq(), 2);
+        assert_eq!(t.host_rounds(), &[(3, 999)]);
+    }
+
+    #[test]
+    fn metrics_only_mode_drops_spans_but_keeps_counters() {
+        let mut t = TraceRecorder::new(false);
+        t.span(Track::Device(0), Phase::Train, 0, 0.0, 1.0);
+        t.host_round_ns(0, 1);
+        t.add(Counter::Rounds, 1);
+        assert!(t.events().is_empty());
+        assert!(t.host_rounds().is_empty());
+        assert_eq!(t.seq(), 0);
+        assert_eq!(t.registry().counter(Counter::Rounds), 1);
+    }
+
+    #[test]
+    fn restore_seq_continues_the_stream() {
+        let mut t = TraceRecorder::new(true);
+        t.restore_seq(42);
+        t.instant(Track::Coordinator, Phase::Plan, 6, 0.0);
+        assert_eq!(t.events()[0].seq, 42);
+        assert_eq!(t.seq(), 43);
+    }
+
+    #[test]
+    fn format_parse_round_trips() {
+        assert_eq!(TraceFormat::parse("chrome").unwrap(), TraceFormat::Chrome);
+        assert_eq!(TraceFormat::parse("jsonl").unwrap(), TraceFormat::Jsonl);
+        assert!(TraceFormat::parse("xml").is_err());
+        assert_eq!(TraceFormat::default().name(), "chrome");
+    }
+}

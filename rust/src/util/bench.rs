@@ -125,7 +125,8 @@ impl Bench {
         &self.results
     }
 
-    /// Serialize every measured case as machine-readable JSON:
+    /// Serialize every measured case as machine-readable JSON in the
+    /// shared [`crate::obs::export::SNAPSHOT_SCHEMA`] envelope:
     ///
     /// ```json
     /// { "schema": "scadles-bench-v1",
@@ -134,30 +135,25 @@ impl Bench {
     /// ```
     ///
     /// CI writes this to `BENCH_hotpaths.json` and uploads it as an
-    /// artifact — the perf trajectory future PRs diff against.
+    /// artifact — the perf trajectory future PRs diff against. The
+    /// envelope is the same one the metrics exporter's counter
+    /// snapshot uses, so `repro bench-check` can parse either.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        use std::collections::BTreeMap;
         let cases: Vec<Json> = self
             .results
             .iter()
             .map(|s| {
-                let mut m = BTreeMap::new();
-                m.insert("name".to_string(), Json::Str(s.name.clone()));
-                m.insert("ns_per_iter".to_string(), Json::Num(s.ns_per_iter()));
-                m.insert("min_ns".to_string(), Json::Num(s.min.as_nanos() as f64));
-                m.insert("std_ns".to_string(), Json::Num(s.std.as_nanos() as f64));
-                m.insert("iters".to_string(), Json::Num(s.iters as f64));
-                Json::Obj(m)
+                Json::obj(vec![
+                    ("name", Json::str(s.name.clone())),
+                    ("ns_per_iter", Json::num(s.ns_per_iter())),
+                    ("min_ns", Json::num(s.min.as_nanos() as f64)),
+                    ("std_ns", Json::num(s.std.as_nanos() as f64)),
+                    ("iters", Json::num(s.iters as f64)),
+                ])
             })
             .collect();
-        let mut root = BTreeMap::new();
-        root.insert(
-            "schema".to_string(),
-            Json::Str("scadles-bench-v1".to_string()),
-        );
-        root.insert("cases".to_string(), Json::Arr(cases));
-        Json::Obj(root)
+        crate::obs::export::snapshot_json(cases)
     }
 
     /// Write [`Self::to_json`] to `path` (pretty-printed, trailing
@@ -189,7 +185,10 @@ mod tests {
         b.case("fast/one", || (0..500u64).map(std::hint::black_box).sum::<u64>());
         b.case("fast/two", || (0..1000u64).map(std::hint::black_box).sum::<u64>());
         let parsed = Json::parse(&b.to_json().to_string_pretty()).unwrap();
-        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "scadles-bench-v1");
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str().unwrap(),
+            crate::obs::export::SNAPSHOT_SCHEMA
+        );
         let cases = parsed.get("cases").unwrap().as_arr().unwrap();
         assert_eq!(cases.len(), 2);
         assert_eq!(cases[0].get("name").unwrap().as_str().unwrap(), "fast/one");

@@ -2,7 +2,9 @@
 //! compressed round's hot phases — radix threshold selection, masking
 //! into the sparse view, the q8 wire encode/decode, error-feedback
 //! absorption (f32 and quantized), weighted aggregation and the
-//! momentum update — perform **no heap allocation at all**.
+//! momentum update, plus the tracing-off observability hooks
+//! ([`NoopRecorder`] behind the engine's `dyn Recorder`) — perform
+//! **no heap allocation at all**.
 //!
 //! A counting `#[global_allocator]` (toggled around the measured
 //! window) wraps `System`; the pipeline below is exactly the per-device
@@ -24,6 +26,7 @@ use scadles::compress::{
     SparseGrad,
 };
 use scadles::coordinator::{aggregate_rows_into, RowView};
+use scadles::obs::{Counter, Gauge, NoopRecorder, Phase, Recorder, Track};
 use scadles::rng::Pcg64;
 
 static COUNTING: AtomicBool = AtomicBool::new(false);
@@ -93,6 +96,10 @@ fn compressed_steady_state_phases_do_not_allocate() {
     let mut params = vec![0.1f32; D];
     let mut momentum = vec![0f32; D];
     let weights = [0.25f32; N];
+    // tracing-off observability, exactly as the engine holds it: the
+    // no-op recorder behind the trait object must cost zero heap —
+    // every call below compiles to nothing
+    let mut rec: Box<dyn Recorder> = Box::new(NoopRecorder);
 
     let mut pipeline = |count_window: bool| {
         // phase 6 stand-in: fresh gradients (outside the claim — the
@@ -132,6 +139,17 @@ fn compressed_steady_state_phases_do_not_allocate() {
             *m = 0.9 * *m + g;
             *p -= 0.05 * *m;
         }
+        // the engine's per-round recorder traffic with tracing off:
+        // gated behind `enabled()` on the hot path, and a no-op even
+        // when called — neither side may allocate
+        if rec.enabled() {
+            rec.span(Track::Coordinator, Phase::Round, 0, 0.0, 1.0);
+        }
+        rec.span(Track::Device(0), Phase::Train, 0, 0.0, 1.0);
+        rec.instant(Track::Coordinator, Phase::Plan, 0, 0.0);
+        rec.add(Counter::Rounds, 1);
+        rec.set_gauge(Gauge::RateEst, 64.0);
+        rec.host_round_ns(0, 1);
         if count_window {
             COUNTING.store(false, Ordering::SeqCst);
             ALLOCS.load(Ordering::SeqCst)

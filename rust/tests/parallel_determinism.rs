@@ -299,6 +299,34 @@ fn run(case: &Case, seed: u64, devices: usize, threads: usize) -> TrainerOutput 
         .unwrap()
 }
 
+/// Like [`run`], but with in-memory span capture on; returns the run
+/// output and the serialized Chrome trace (virtual-time event stream).
+fn run_traced(case: &Case, seed: u64, devices: usize, threads: usize) -> (TrainerOutput, String) {
+    let mut b = ExperimentConfig::builder("mlp_c10")
+        .devices(devices)
+        .rounds(12)
+        .seed(seed)
+        .preset(StreamPreset::S1)
+        .mode(case.mode)
+        .buffer_policy(case.policy)
+        .hetero(case.hetero)
+        .dynamics(case.dynamics.clone())
+        .sync(case.sync)
+        .wire(case.wire)
+        .rate_jitter(0.2)
+        .eval_every(4)
+        .worker_threads(threads)
+        .trace_capture(true);
+    if let Some(c) = case.compression {
+        b = b.compression(c);
+    }
+    let cfg = b.build().unwrap();
+    let mut t = Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10))).unwrap();
+    let out = t.run().unwrap();
+    let trace = scadles::obs::chrome_trace_string(t.trace().unwrap().events());
+    (out, trace)
+}
+
 /// Bitwise f64 equality that treats NaN == NaN (unevaluated rounds log
 /// NaN test accuracy).
 fn feq(a: f64, b: f64) -> bool {
@@ -598,6 +626,129 @@ fn checkpoint_kill_and_restore_is_bitwise_identical_to_uninterrupted() {
                 &format!("checkpoint {sync_spec} wire={wire_spec} threads={threads}"),
             );
         }
+    }
+}
+
+#[test]
+fn traced_event_streams_are_bitwise_identical_across_pool_widths() {
+    // The tracing determinism contract: every span/instant timestamp is
+    // virtual time, every recorder call runs on the coordinator thread
+    // in fixed device order — so the serialized Chrome trace must be
+    // byte-identical at every pool width. Three engine shapes: the seed
+    // BSP path, a semi-sync commit set over a skewed cluster, and the
+    // quantized wire on the always-compress sparse path.
+    let all = cases();
+    let traced: Vec<&Case> = all
+        .iter()
+        .filter(|c| matches!(c.name, "plain" | "ksync+two-tier" | "q8+topk"))
+        .collect();
+    assert_eq!(traced.len(), 3, "traced case selection drifted");
+    for case in traced {
+        let (_, sequential) = run_traced(case, 11, 8, 1);
+        assert!(
+            sequential.contains("\"ph\":\"X\"") && sequential.contains("\"ph\":\"i\""),
+            "{}: trace has no spans/instants",
+            case.name
+        );
+        for threads in [4usize, 8] {
+            let (_, parallel) = run_traced(case, 11, 8, threads);
+            assert_eq!(
+                sequential, parallel,
+                "{}: traced virtual-time stream differs at pool width {threads}",
+                case.name
+            );
+        }
+    }
+}
+
+#[test]
+fn traced_kill_and_resume_reproduces_the_virtual_time_event_stream() {
+    // Trace sequence numbers and the counter registry ride the
+    // checkpoint: a run killed after round 6 and resumed must emit
+    // exactly the remaining tail of the uninterrupted run's event
+    // stream, so pre-kill + post-resume concatenate to the full trace.
+    let case = Case {
+        name: "traced-ckpt",
+        wire: WirePreset::Q8,
+        mode: TrainMode::Scadles,
+        policy: BufferPolicy::Truncation,
+        compression: Some(CompressionConfig {
+            ratio: 0.1,
+            delta: 0.5,
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        }),
+        hetero: HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 },
+        dynamics: DynamicsPreset::Static,
+        sync: SyncPreset::KSync { frac_pm: 750 },
+    };
+    for threads in [1usize, 4] {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(12)
+            .seed(11)
+            .preset(StreamPreset::S1)
+            .buffer_policy(case.policy)
+            .compression(case.compression.unwrap())
+            .hetero(case.hetero)
+            .sync(case.sync)
+            .wire(case.wire)
+            .rate_jitter(0.2)
+            .eval_every(4)
+            .worker_threads(threads)
+            .trace_capture(true)
+            .build()
+            .unwrap();
+        let mk = || Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10))).unwrap();
+        let (full_events, full_counters) = {
+            let mut t = mk();
+            t.run().unwrap();
+            let tr = t.trace().unwrap();
+            (
+                tr.events().to_vec(),
+                scadles::obs::prometheus_string(tr.registry()),
+            )
+        };
+        let path = std::env::temp_dir().join(format!(
+            "scadles_ckpt_trace_{threads}_{}.ckpt",
+            std::process::id()
+        ));
+        let prefix = {
+            let mut t = mk();
+            while t.rounds_completed() < 6 {
+                t.round().unwrap();
+            }
+            t.save_checkpoint(&path).unwrap();
+            t.trace().unwrap().events().to_vec()
+        };
+        let (tail, resumed_counters) = {
+            let mut t = mk();
+            t.restore_checkpoint(&path).unwrap();
+            t.run().unwrap();
+            let tr = t.trace().unwrap();
+            (
+                tr.events().to_vec(),
+                scadles::obs::prometheus_string(tr.registry()),
+            )
+        };
+        std::fs::remove_file(&path).ok();
+        let mut stitched = prefix;
+        stitched.extend(tail);
+        assert_eq!(
+            stitched.len(),
+            full_events.len(),
+            "threads={threads}: stitched event count"
+        );
+        assert_eq!(
+            scadles::obs::chrome_trace_string(&stitched),
+            scadles::obs::chrome_trace_string(&full_events),
+            "threads={threads}: kill+resume virtual-time stream diverged"
+        );
+        // the registry rides along too: final snapshots are identical
+        assert_eq!(
+            resumed_counters, full_counters,
+            "threads={threads}: kill+resume counter snapshot diverged"
+        );
     }
 }
 
