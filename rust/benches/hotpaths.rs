@@ -300,6 +300,34 @@ fn main() {
         on_ns / off_ns
     );
 
+    // --- resilient coordinator runtime --------------------------------------
+    // One state-machine step over the lossy in-proc wire: heartbeat
+    // window, pre-round snapshot, engine round, frame delivery and
+    // witness attestation. The mock gradient is small (d=4096) so the
+    // measured cost is dominated by the control plane itself — ticks,
+    // polls, retry backoff and the checkpoint-bytes snapshot — which is
+    // exactly the per-round overhead `--net` adds on top of training.
+    b.header("coordinator runtime (8 devices, lossy:0.1:0.5:3, d=4096)");
+    let mut rt_bench = {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(1_000_000) // step() is driven manually by the bench
+            .preset(StreamPreset::S1)
+            .mode(TrainMode::Scadles)
+            .buffer_policy(BufferPolicy::Truncation)
+            .net("lossy:0.1:0.5:3".parse().unwrap())
+            .eval_every(usize::MAX / 2)
+            .worker_threads(1)
+            .build()
+            .unwrap();
+        scadles::coordinator::CoordinatorRuntime::new(
+            &cfg,
+            Box::new(MockBackend::new(4096, 10)),
+        )
+        .unwrap()
+    };
+    b.case("runtime/state-step", || rt_bench.step().unwrap());
+
     // --- heterogeneous-cluster rounds ---------------------------------------
     // Same engine under a two-tier profile split (half the devices 4x
     // slower on half-rate links): measures the scenario layer's overhead

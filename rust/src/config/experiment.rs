@@ -8,6 +8,7 @@ use super::cluster::ClusterProfile;
 use super::dynamics::DynamicsPreset;
 use super::faults::{AggPreset, FaultPreset};
 use super::hetero::HeteroPreset;
+use super::net::NetPreset;
 use super::presets::StreamPreset;
 use super::sync::SyncPreset;
 use super::wire::WirePreset;
@@ -152,6 +153,21 @@ pub struct ExperimentConfig {
     /// stochastically quantize survivor values and delta-varint the
     /// indices, priced from the exact encoded bit count.
     pub wire: WirePreset,
+    /// Transport-fault scenario for the coordinator runtime (`--net`):
+    /// deterministic per-device drop/delay/duplicate/partition processes
+    /// applied to control-plane messages (`none` default is an exact
+    /// no-op — no transport wrapper, zero RNG draws, bitwise the
+    /// lossless runtime).
+    pub net: NetPreset,
+    /// Witness-set size for the quorum commit (`--witnesses`): each
+    /// round W committed devices are deterministically sampled to
+    /// attest the aggregate digest. 0 (default) = every committed
+    /// device is a witness (the Psyche convention).
+    pub witnesses: usize,
+    /// Witness acks required to commit a round (`--quorum`). 0
+    /// (default) = all sampled witnesses must ack; a failed quorum
+    /// replays the round from its pre-round snapshot.
+    pub quorum: usize,
     /// Per-round multiplicative jitter std on device rates (intra-device
     /// heterogeneity, §II-A; 0 = constant rates).
     pub rate_jitter: f64,
@@ -226,6 +242,17 @@ impl ExperimentConfig {
         self.faults.validate()?;
         self.agg.validate()?;
         self.wire.validate()?;
+        self.net.validate()?;
+        ensure!(
+            self.witnesses <= self.devices,
+            "witness set cannot exceed the device count"
+        );
+        let witness_pool = if self.witnesses == 0 { self.devices } else { self.witnesses };
+        ensure!(
+            self.quorum <= witness_pool,
+            "quorum {} cannot exceed the witness set ({witness_pool})",
+            self.quorum
+        );
         if let Some(c) = &self.compression {
             c.validate()?;
         }
@@ -268,6 +295,9 @@ impl ExperimentBuilder {
                 faults: FaultPreset::None,
                 agg: AggPreset::Mean,
                 wire: WirePreset::F32,
+                net: NetPreset::None,
+                witnesses: 0,
+                quorum: 0,
                 rate_jitter: 0.0,
                 label_map: LabelMap::Iid,
                 mode: TrainMode::Scadles,
@@ -349,6 +379,21 @@ impl ExperimentBuilder {
     /// Wire format for compressed exchanges (see [`WirePreset`]).
     pub fn wire(mut self, w: WirePreset) -> Self {
         self.cfg.wire = w;
+        self
+    }
+    /// Transport-fault scenario (see [`NetPreset`]).
+    pub fn net(mut self, n: NetPreset) -> Self {
+        self.cfg.net = n;
+        self
+    }
+    /// Witness-set size for the quorum commit (0 = all committed).
+    pub fn witnesses(mut self, w: usize) -> Self {
+        self.cfg.witnesses = w;
+        self
+    }
+    /// Witness acks required to commit a round (0 = all witnesses).
+    pub fn quorum(mut self, q: usize) -> Self {
+        self.cfg.quorum = q;
         self
     }
     pub fn rate_jitter(mut self, j: f64) -> Self {
@@ -570,6 +615,40 @@ mod tests {
         let mut bad = d;
         bad.faults = FaultPreset::Stale { frac_pm: 500, lag: 0 };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn net_and_quorum_flow_through_builder_and_validate() {
+        use crate::config::NetPreset;
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .net("lossy:0.1:0.5:3".parse().unwrap())
+            .witnesses(4)
+            .quorum(3)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.net, NetPreset::lossy(0.1, 0.5, 3));
+        assert_eq!((cfg.witnesses, cfg.quorum), (4, 3));
+        // defaults stay the lossless, all-witness no-op
+        let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
+        assert!(d.net.is_none());
+        assert_eq!((d.witnesses, d.quorum), (0, 0));
+        // quorum larger than the witness set is rejected at build time
+        assert!(ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .witnesses(4)
+            .quorum(5)
+            .build()
+            .is_err());
+        // witness set larger than the fleet is rejected
+        assert!(ExperimentConfig::builder("mlp_c10")
+            .devices(4)
+            .witnesses(8)
+            .build()
+            .is_err());
+        // witnesses 0 means "all committed": quorum bounded by devices
+        assert!(ExperimentConfig::builder("mlp_c10").devices(4).quorum(4).build().is_ok());
+        assert!(ExperimentConfig::builder("mlp_c10").devices(4).quorum(5).build().is_err());
     }
 
     #[test]

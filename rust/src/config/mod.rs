@@ -7,6 +7,7 @@ pub mod dynamics;
 pub mod experiment;
 pub mod faults;
 pub mod hetero;
+pub mod net;
 pub mod presets;
 pub mod sync;
 pub mod wire;
@@ -17,6 +18,7 @@ pub use experiment::{CompressionConfig, ExperimentConfig, InjectionConfig, Train
 pub use crate::obs::TraceFormat;
 pub use faults::{AggPreset, CrashPhase, FaultPreset};
 pub use hetero::HeteroPreset;
+pub use net::NetPreset;
 pub use presets::StreamPreset;
 pub use sync::SyncPreset;
 pub use wire::WirePreset;

@@ -1,0 +1,286 @@
+//! Network-fault presets for the coordinator transport.
+//!
+//! The fault layer (`--faults`) corrupts *gradients*; a [`NetPreset`]
+//! corrupts their *delivery*. The coordinator runtime wraps its
+//! transport in a deterministic `FaultyTransport` that drops, delays,
+//! duplicates or partitions messages from per-device Pcg64 substreams
+//! pure in `(seed, device, round)` — so a lossy run's retries and
+//! replays are exactly reproducible, and `none` (the default) builds
+//! no wrapper at all: zero RNG draws, bitwise the lossless runtime.
+//!
+//! * `none` — lossless transport (the default; exact no-op).
+//! * `lossy[:drop[:delay[:max]]]` — each send is dropped with
+//!   probability `drop`, and each surviving send is delayed by
+//!   `1..=max` extra ticks with probability `delay`.
+//! * `dup[:frac]` — each delivered send is duplicated with probability
+//!   `frac` (receivers must deduplicate; the runtime's collectors are
+//!   idempotent).
+//! * `partition[:frac]` — each round each device is unreachable for
+//!   the *whole round* with probability `frac`: every message to or
+//!   from it is dropped, so it misses its heartbeat deadline and is
+//!   evicted from the barrier.
+//!
+//! CLI syntax (`repro train --net ...`): composable with `--faults`,
+//! `--sync` and the witness/quorum knobs.
+
+use anyhow::{bail, ensure};
+
+use crate::Result;
+
+/// A named transport-fault process for the coordinator runtime.
+///
+/// Probabilities are stored in per-mille so the preset stays
+/// `Eq`/hashable (same convention as [`super::FaultPreset`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum NetPreset {
+    /// Lossless transport (exact no-op).
+    #[default]
+    None,
+    /// Independent per-send drops + delays.
+    Lossy { drop_pm: u32, delay_pm: u32, max_delay: u32 },
+    /// Independent per-send duplicates.
+    Duplicate { frac_pm: u32 },
+    /// Whole-round per-device unreachability.
+    Partition { frac_pm: u32 },
+}
+
+impl NetPreset {
+    /// Build a lossy preset from probabilities in `[0, 1]` (at least
+    /// one of them positive) and a max extra delay in ticks.
+    pub fn lossy(drop: f64, delay: f64, max_delay: u32) -> Self {
+        NetPreset::Lossy { drop_pm: to_pm(drop), delay_pm: to_pm(delay), max_delay }
+    }
+
+    /// Build a duplicate preset from a probability in `(0, 1]`.
+    pub fn dup(frac: f64) -> Self {
+        NetPreset::Duplicate { frac_pm: to_pm(frac) }
+    }
+
+    /// Build a partition preset from a probability in `(0, 1]`.
+    pub fn partition(frac: f64) -> Self {
+        NetPreset::Partition { frac_pm: to_pm(frac) }
+    }
+
+    /// Per-send drop probability as a float (0 unless `lossy`).
+    pub fn drop_frac(&self) -> f64 {
+        match *self {
+            NetPreset::Lossy { drop_pm, .. } => drop_pm as f64 / 1000.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Per-send delay probability as a float (0 unless `lossy`).
+    pub fn delay_frac(&self) -> f64 {
+        match *self {
+            NetPreset::Lossy { delay_pm, .. } => delay_pm as f64 / 1000.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Max extra delivery delay in ticks (0 unless `lossy`).
+    pub fn max_delay(&self) -> u32 {
+        match *self {
+            NetPreset::Lossy { max_delay, .. } => max_delay,
+            _ => 0,
+        }
+    }
+
+    /// Per-send duplicate probability as a float (0 unless `dup`).
+    pub fn dup_frac(&self) -> f64 {
+        match *self {
+            NetPreset::Duplicate { frac_pm } => frac_pm as f64 / 1000.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Per-round per-device partition probability (0 unless `partition`).
+    pub fn partition_frac(&self) -> f64 {
+        match *self {
+            NetPreset::Partition { frac_pm } => frac_pm as f64 / 1000.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Preset family name (the CLI spelling, without parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetPreset::None => "none",
+            NetPreset::Lossy { .. } => "lossy",
+            NetPreset::Duplicate { .. } => "dup",
+            NetPreset::Partition { .. } => "partition",
+        }
+    }
+
+    /// Whether this is the lossless default (the exact no-op path).
+    pub fn is_none(&self) -> bool {
+        matches!(self, NetPreset::None)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let frac_ok = |frac_pm: u32| -> Result<()> {
+            ensure!(
+                frac_pm >= 1 && frac_pm <= 1000,
+                "net fraction must be in (0, 1]"
+            );
+            Ok(())
+        };
+        match *self {
+            NetPreset::None => {}
+            NetPreset::Lossy { drop_pm, delay_pm, max_delay } => {
+                ensure!(
+                    drop_pm >= 1 || delay_pm >= 1,
+                    "lossy needs a positive drop or delay probability"
+                );
+                ensure!(drop_pm < 1000, "lossy drop must be in [0, 1) — 1 drops everything");
+                ensure!(delay_pm <= 1000, "lossy delay must be in [0, 1]");
+                if delay_pm >= 1 {
+                    ensure!(max_delay >= 1, "lossy max delay must be ≥ 1 tick");
+                }
+            }
+            NetPreset::Duplicate { frac_pm } => frac_ok(frac_pm)?,
+            NetPreset::Partition { frac_pm } => {
+                frac_ok(frac_pm)?;
+                ensure!(frac_pm < 1000, "partitioning every device every round deadlocks");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn to_pm(x: f64) -> u32 {
+    (x * 1000.0).round() as u32
+}
+
+impl std::fmt::Display for NetPreset {
+    /// The parseable spelling: `name[:param...]` — `to_string().parse()`
+    /// restores the preset.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            NetPreset::None => f.write_str(self.name()),
+            NetPreset::Lossy { max_delay, .. } => write!(
+                f,
+                "{}:{}:{}:{max_delay}",
+                self.name(),
+                self.drop_frac(),
+                self.delay_frac()
+            ),
+            NetPreset::Duplicate { .. } => write!(f, "{}:{}", self.name(), self.dup_frac()),
+            NetPreset::Partition { .. } => {
+                write!(f, "{}:{}", self.name(), self.partition_frac())
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for NetPreset {
+    type Err = anyhow::Error;
+
+    /// Parse `name[:drop[:delay[:max]]]` — e.g. `none`, `lossy:0.1`,
+    /// `lossy:0.1:0.5:3`, `dup:0.2`, `partition:0.1`. Omitted
+    /// parameters take the sweep defaults.
+    fn from_str(s: &str) -> Result<Self> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or_default();
+        let args: Vec<&str> = parts.collect();
+        ensure!(args.len() <= 3, "too many ':' parameters in net preset {s:?}");
+        let float = |idx: usize, default: f64| -> Result<f64> {
+            match args.get(idx) {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --net parameter {a:?}: {e}")),
+            }
+        };
+        let int = |idx: usize, default: u32| -> Result<u32> {
+            match args.get(idx) {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --net parameter {a:?}: {e}")),
+            }
+        };
+        let preset = match name.to_lowercase().as_str() {
+            "none" => {
+                ensure!(args.is_empty(), "none takes no parameters");
+                NetPreset::None
+            }
+            "lossy" => NetPreset::lossy(float(0, 0.1)?, float(1, 0.5)?, int(2, 3)?),
+            "dup" | "duplicate" => {
+                ensure!(args.len() <= 1, "dup takes one parameter");
+                NetPreset::dup(float(0, 0.2)?)
+            }
+            "partition" | "part" => {
+                ensure!(args.len() <= 1, "partition takes one parameter");
+                NetPreset::partition(float(0, 0.1)?)
+            }
+            other => bail!(
+                "unknown net preset {other:?} \
+                 (none|lossy[:drop[:delay[:max]]]|dup[:frac]|partition[:frac])"
+            ),
+        };
+        preset.validate()?;
+        Ok(preset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_net_spellings() {
+        assert_eq!("none".parse::<NetPreset>().unwrap(), NetPreset::None);
+        assert_eq!(
+            "lossy:0.1".parse::<NetPreset>().unwrap(),
+            NetPreset::Lossy { drop_pm: 100, delay_pm: 500, max_delay: 3 }
+        );
+        assert_eq!(
+            "lossy:0.1:0.25:5".parse::<NetPreset>().unwrap(),
+            NetPreset::Lossy { drop_pm: 100, delay_pm: 250, max_delay: 5 }
+        );
+        assert_eq!(
+            "dup:0.2".parse::<NetPreset>().unwrap(),
+            NetPreset::Duplicate { frac_pm: 200 }
+        );
+        assert_eq!(
+            "partition:0.1".parse::<NetPreset>().unwrap(),
+            NetPreset::Partition { frac_pm: 100 }
+        );
+        // defaults fill in
+        assert_eq!("lossy".parse::<NetPreset>().unwrap(), NetPreset::lossy(0.1, 0.5, 3));
+        assert_eq!("dup".parse::<NetPreset>().unwrap(), NetPreset::dup(0.2));
+        assert_eq!("part".parse::<NetPreset>().unwrap(), NetPreset::partition(0.1));
+        // rejections
+        assert!("none:1".parse::<NetPreset>().is_err());
+        assert!("lossy:0:0".parse::<NetPreset>().is_err());
+        assert!("lossy:1.0".parse::<NetPreset>().is_err());
+        assert!("lossy:0.1:0.5:0".parse::<NetPreset>().is_err());
+        assert!("dup:0".parse::<NetPreset>().is_err());
+        assert!("dup:0.2:3".parse::<NetPreset>().is_err());
+        assert!("partition:1.0".parse::<NetPreset>().is_err());
+        assert!("carrier-pigeon".parse::<NetPreset>().is_err());
+        assert!("lossy:0.1:0.5:3:9".parse::<NetPreset>().is_err());
+    }
+
+    #[test]
+    fn net_display_round_trips() {
+        for p in [
+            NetPreset::None,
+            NetPreset::lossy(0.1, 0.5, 3),
+            NetPreset::lossy(0.3, 0.0, 1),
+            NetPreset::dup(0.2),
+            NetPreset::partition(0.125),
+        ] {
+            let back: NetPreset = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{p}");
+        }
+        assert_eq!(NetPreset::lossy(0.1, 0.5, 3).to_string(), "lossy:0.1:0.5:3");
+        assert_eq!(NetPreset::partition(0.1).to_string(), "partition:0.1");
+    }
+
+    #[test]
+    fn default_is_the_no_op() {
+        assert!(NetPreset::default().is_none());
+        assert!(NetPreset::default().validate().is_ok());
+    }
+}

@@ -277,6 +277,10 @@ pub fn write_round_log(w: &mut ByteWriter, l: &RoundLog) {
     w.usize(l.dropped_devices);
     w.usize(l.rejected_devices);
     w.usize(l.faulted_devices);
+    w.u64(l.heartbeat_misses);
+    w.u64(l.retransmits);
+    w.u64(l.round_replays);
+    w.u64(l.witness_acks);
 }
 
 pub fn read_round_log(r: &mut ByteReader) -> Result<RoundLog> {
@@ -302,6 +306,10 @@ pub fn read_round_log(r: &mut ByteReader) -> Result<RoundLog> {
         dropped_devices: r.usize()?,
         rejected_devices: r.usize()?,
         faulted_devices: r.usize()?,
+        heartbeat_misses: r.u64()?,
+        retransmits: r.u64()?,
+        round_replays: r.u64()?,
+        witness_acks: r.u64()?,
     })
 }
 
@@ -510,6 +518,10 @@ mod tests {
             committed_devices: 4,
             rejected_devices: 1,
             faulted_devices: 2,
+            heartbeat_misses: 3,
+            retransmits: 11,
+            round_replays: 1,
+            witness_acks: 5,
             ..Default::default()
         };
         let row = DeviceRoundRow {

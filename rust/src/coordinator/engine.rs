@@ -92,6 +92,19 @@ pub struct TrainerOutput {
     pub dynamics: DynamicsCounters,
     /// Injector ground truth (`None` when the run was fault-free).
     pub fault_counts: Option<FaultCounters>,
+    /// Coordinator-runtime control-plane totals (all zero when the run
+    /// was driven by the bare engine or with `--net none`).
+    pub resilience: ResilienceTotals,
+}
+
+/// Run totals of the coordinator runtime's control plane, summed from
+/// the per-round log columns.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResilienceTotals {
+    pub heartbeat_misses: u64,
+    pub retransmits: u64,
+    pub round_replays: u64,
+    pub witness_acks: u64,
 }
 
 /// The L3 round engine: owns the device shards, model state, policies
@@ -129,6 +142,12 @@ pub struct RoundEngine {
     policy: Box<dyn SyncPolicy>,
     /// This round's membership decision (buffers reused).
     part: Participation,
+    /// One-shot barrier evictions the coordinator runtime posts before
+    /// a round (devices whose heartbeats missed their deadline): applied
+    /// on top of the policy's decision at the next gradient round, then
+    /// cleared. Empty on every engine-driven run — the fault-free path
+    /// is untouched.
+    evictions: Vec<bool>,
     /// Mid-round fault injection (`None` for the fault-free preset: the
     /// engine then carries no fault state and runs the pre-fault path
     /// bitwise).
@@ -270,6 +289,7 @@ impl RoundEngine {
             round: 0,
             policy,
             part: Participation::default(),
+            evictions: Vec::new(),
             faults: FaultInjector::from_preset(&cfg.faults, n, d, cfg.seed),
             aggregator: aggregator_from_preset(&cfg.agg),
             agg_is_mean: cfg.agg.is_mean(),
@@ -457,6 +477,21 @@ impl RoundEngine {
         //        barrier — decided from the plan's virtual finish
         //        estimates in fixed device order (pool-width independent)
         self.policy.decide(&plan, &active, &mut self.part);
+
+        // -- 2b'. runtime evictions: devices whose heartbeats missed
+        //         their deadline leave the barrier on top of the
+        //         policy's decision — they still train, and their
+        //         gradient folds into the error-feedback residual
+        //         through the same withhold path as a K-sync laggard
+        if !self.evictions.is_empty() {
+            for i in 0..self.workers.len().min(self.evictions.len()) {
+                if self.evictions[i] {
+                    self.part.contributes[i] = false;
+                    self.part.in_barrier[i] = false;
+                }
+            }
+            self.evictions.clear();
+        }
 
         // -- 2c. fault draws: one Bernoulli per device per round from
         //        its own substream, whatever happens downstream — so
@@ -920,6 +955,10 @@ impl RoundEngine {
             faulted_devices: self.faults.as_ref().map_or(0, |f| {
                 f.causes().iter().filter(|&&c| c != FaultCause::None).count()
             }),
+            heartbeat_misses: 0,
+            retransmits: 0,
+            round_replays: 0,
+            witness_acks: 0,
         };
         self.logs.push(log);
         self.round += 1;
@@ -1173,6 +1212,10 @@ impl RoundEngine {
             faulted_devices: self.faults.as_ref().map_or(0, |f| {
                 f.causes().iter().filter(|&&c| c != FaultCause::None).count()
             }),
+            heartbeat_misses: 0,
+            retransmits: 0,
+            round_replays: 0,
+            witness_acks: 0,
         };
         self.logs.push(log);
         self.round += 1;
@@ -1269,6 +1312,15 @@ impl RoundEngine {
     /// rebuilt every round): worker scratch rows, `last_timing`, the
     /// `Participation` buffers, and the aggregation accumulators.
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        checkpoint::save(path, self.fingerprint(), &self.checkpoint_bytes())
+    }
+
+    /// The checkpoint payload as in-memory bytes — the exact body
+    /// [`Self::save_checkpoint`] writes under the file header. The
+    /// coordinator runtime snapshots a round onto these bytes before
+    /// running it, so a failed witness quorum can replay the round from
+    /// the pre-round state without touching the filesystem.
+    pub fn checkpoint_bytes(&self) -> Vec<u8> {
         let mut w = checkpoint::ByteWriter::new();
         w.usize(self.round);
         w.f64(self.clock.now());
@@ -1398,7 +1450,7 @@ impl RoundEngine {
             }
             None => w.bool(false),
         }
-        checkpoint::save(path, self.fingerprint(), &w.into_bytes())
+        w.into_bytes()
     }
 
     /// Restore a [`Self::save_checkpoint`] file into this engine. The
@@ -1411,9 +1463,16 @@ impl RoundEngine {
     /// corrupted interior byte) can leave the engine partially
     /// restored — on any `Err` the engine must be rebuilt, not reused.
     pub fn restore_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
-        use anyhow::ensure;
         let payload = checkpoint::load(path, self.fingerprint())?;
-        let mut r = checkpoint::ByteReader::new(&payload);
+        self.restore_bytes(&payload)
+    }
+
+    /// Restore from a [`Self::checkpoint_bytes`] payload. Same contract
+    /// as [`Self::restore_checkpoint`]: the engine must match the
+    /// payload's layout, and on `Err` it may be partially restored.
+    pub fn restore_bytes(&mut self, payload: &[u8]) -> Result<()> {
+        use anyhow::ensure;
+        let mut r = checkpoint::ByteReader::new(payload);
         let round = r.usize()?;
         let now = r.f64()?;
         let params = r.f32s()?;
@@ -1599,6 +1658,16 @@ impl RoundEngine {
             self.tracker.report(),
             self.cfg.target_top5,
         );
+        let resilience = self.logs.rounds().iter().fold(
+            ResilienceTotals::default(),
+            |mut t, l| {
+                t.heartbeat_misses += l.heartbeat_misses;
+                t.retransmits += l.retransmits;
+                t.round_replays += l.round_replays;
+                t.witness_acks += l.witness_acks;
+                t
+            },
+        );
         TrainerOutput {
             report,
             logs: self.logs.clone(),
@@ -1608,6 +1677,7 @@ impl RoundEngine {
             timeline: self.timeline.clone(),
             dynamics: self.dynamics.counters(),
             fault_counts: self.fault_counters(),
+            resilience,
         }
     }
 
@@ -1732,6 +1802,64 @@ impl RoundEngine {
     /// this to compare in-memory event streams across pool widths.
     pub fn trace(&self) -> Option<&TraceRecorder> {
         self.rec.as_trace()
+    }
+
+    // ---- coordinator-runtime hooks -----------------------------------
+
+    /// Post a one-shot barrier-eviction mask for the next gradient
+    /// round: `mask[i] == true` drops device `i` from the barrier and
+    /// the commit set on top of the policy's own decision (its trained
+    /// gradient folds into the error-feedback residual through the
+    /// K-sync withhold path). Applied once, then cleared. The
+    /// coordinator runtime posts the devices whose heartbeats missed
+    /// their deadline; nothing else ever calls this.
+    pub fn set_barrier_evictions(&mut self, mask: &[bool]) {
+        self.evictions.clear();
+        self.evictions.extend_from_slice(mask);
+    }
+
+    /// Preview which devices the crash-fault process will take down in
+    /// the *next* round, without advancing any fault stream (`None`
+    /// unless the run has a crash preset). The runtime uses this to
+    /// silence a crashing device's heartbeats — a crashed device cannot
+    /// announce liveness.
+    pub fn peek_crashes(&self) -> Option<Vec<bool>> {
+        self.faults
+            .as_ref()
+            .filter(|f| f.is_crash())
+            .map(|f| f.peek_round())
+    }
+
+    /// Stamp the most recent round's log with the runtime's
+    /// control-plane tallies and mirror them into the metrics registry.
+    /// Called by the coordinator runtime once per committed round.
+    pub fn annotate_resilience(
+        &mut self,
+        heartbeat_misses: u64,
+        retransmits: u64,
+        round_replays: u64,
+        witness_acks: u64,
+        quorum: usize,
+    ) {
+        if let Some(l) = self.logs.last_mut() {
+            l.heartbeat_misses = heartbeat_misses;
+            l.retransmits = retransmits;
+            l.round_replays = round_replays;
+            l.witness_acks = witness_acks;
+        }
+        if self.rec.enabled() {
+            self.rec.add(Counter::HeartbeatMisses, heartbeat_misses);
+            self.rec.add(Counter::Retransmits, retransmits);
+            self.rec.add(Counter::RoundReplays, round_replays);
+            self.rec.add(Counter::WitnessAcks, witness_acks);
+            self.rec.set_gauge(Gauge::WitnessQuorum, quorum as f64);
+        }
+    }
+
+    /// Observability sink for the coordinator runtime's control-plane
+    /// spans (rendezvous/heartbeat/commit/replay).
+    pub(crate) fn rec_mut(&mut self) -> &mut dyn Recorder {
+        self.rec.as_mut()
     }
 }
 

@@ -82,6 +82,16 @@
 //! determinism holds at every pool width, and the `static` preset
 //! reproduces the frozen-profile engine bitwise.
 //!
+//! **Resilient runtime:** [`runtime::CoordinatorRuntime`] wraps the
+//! engine in a rendezvous / heartbeat / witness-quorum state machine
+//! over a (optionally fault-injected) [`crate::transport::Transport`]
+//! (`--net`). Devices that miss the heartbeat deadline are evicted from
+//! the round's barrier (their gradients fold into the error-feedback
+//! residual via the K-sync withhold path); a failed witness quorum
+//! replays the round from an in-memory pre-round snapshot. Transport
+//! loss moves only control-plane counters — the trained model stays
+//! bitwise identical to the lossless run.
+//!
 //! [`backend::Backend`] abstracts the execution substrate: the real PJRT
 //! [`crate::runtime::ModelRuntime`] or a deterministic quadratic
 //! [`backend::MockBackend`] used by unit/property tests.
@@ -95,6 +105,7 @@ pub mod engine;
 pub mod lr;
 pub mod plan;
 pub mod policy;
+pub mod runtime;
 pub mod trainer;
 pub mod worker;
 
@@ -111,5 +122,6 @@ pub use engine::{RoundEngine, TrainerOutput};
 pub use lr::scaled_lr;
 pub use plan::{DevicePlan, RoundPlan};
 pub use policy::{Bsp, BoundedStaleness, KSync, LocalSgd, Participation, SyncPolicy};
+pub use runtime::{CoordinatorRuntime, RuntimeOpts, RuntimeState};
 pub use trainer::Trainer;
 pub use worker::{completion_order_into, DeviceWorker, WorkerRound};

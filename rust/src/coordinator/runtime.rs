@@ -1,0 +1,747 @@
+//! The resilient coordinator runtime: a rendezvous/heartbeat/commit
+//! state machine wrapped around the round engine.
+//!
+//! [`RoundEngine`] owns the *training* arithmetic; this module owns the
+//! *control plane* that decides when a round may run and when its
+//! result counts. The machine has three states:
+//!
+//! ```text
+//!   STANDBY ──rendezvous (Join/Welcome)──▶ ROUND ──all rounds──▶ FINISHED
+//!                                           │  ▲
+//!                              heartbeat    │  │  witness quorum ok
+//!                              window,      │  │  → commit
+//!                              snapshot,    │  │
+//!                              train round  │  │  quorum failed
+//!                                           ▼  │  → restore + replay
+//!                                          (same round)
+//! ```
+//!
+//! Every control message moves through a [`Transport`] — in simulation
+//! an [`InProcTransport`] optionally wrapped by the deterministic
+//! [`FaultyTransport`] (`--net`). The runtime plays both halves of the
+//! conversation: it drives the coordinator side *and* models each
+//! device as a reactive automaton (heartbeat every tick, attest every
+//! witness request), so a whole lossy cluster lives in one process and
+//! one thread.
+//!
+//! **Determinism contract.** Everything here runs on the coordinator
+//! thread. Transport-fault draws are pure in `(seed, device, round)`;
+//! heartbeats are resent every tick of the deadline window, so under
+//! any sane loss rate the set of evicted devices is stable for a fixed
+//! seed; frame delivery and witness attestation retry under bounded
+//! exponential backoff, and when the quorum still fails the round is
+//! replayed from a pre-round snapshot — [`RoundEngine::restore_bytes`]
+//! restores every RNG cursor, so the replayed round recomputes the
+//! *identical* bits while the transport streams keep advancing to give
+//! the retry fresh luck. Net effect: a lossy run's model is bitwise
+//! identical to the lossless run at any worker-pool width; loss moves
+//! only the control-plane counters (`heartbeat_misses`, `retransmits`,
+//! `round_replays`, `witness_acks`).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::backend::Backend;
+use crate::coordinator::engine::{RoundEngine, TrainerOutput};
+use crate::metrics::RoundLog;
+use crate::obs::{Phase, Track};
+use crate::rng::Pcg64;
+use crate::transport::{
+    params_digest, Envelope, FaultyTransport, InProcTransport, Msg, Transport, COORDINATOR,
+};
+use crate::Result;
+
+/// Pcg64 stream ids owned by the runtime control plane (disjoint from
+/// every other substream family — see [`crate::transport::NET_STREAM_BASE`]).
+const WITNESS_STREAM: u64 = 0x3173_E550;
+const BACKOFF_STREAM: u64 = 0xBAC0_FF00;
+
+/// Where the coordinator state machine is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeState {
+    /// Built, waiting for every device to rendezvous.
+    Standby,
+    /// Rounds are running (heartbeat → train → commit, per round).
+    Round,
+    /// All rounds committed; `Finish` broadcast.
+    Finished,
+}
+
+/// Control-plane tuning knobs. The defaults are what every harness and
+/// test uses; only the fault-injection tests touch `force_replay_round`.
+#[derive(Debug, Clone, Copy)]
+pub struct RuntimeOpts {
+    /// Heartbeat window length in transport ticks. Devices resend every
+    /// tick, so a device is evicted only after `heartbeat_deadline`
+    /// consecutive losses (at drop 0.3 and a 16-tick window that is
+    /// under ~1e-8 per device-round even counting delays that land past
+    /// the window — eviction under the lossy presets means the device
+    /// was *actually* silent, i.e. crashed or partitioned). The window
+    /// exits early once every live device is heard, so the deadline is
+    /// only paid when someone is genuinely gone.
+    pub heartbeat_deadline: usize,
+    /// Delivery attempts per frame/witness phase before the round is
+    /// declared uncommittable and replayed.
+    pub max_retries: usize,
+    /// Backoff wait before retry `a` is `backoff_base << a` ticks plus
+    /// 0–1 tick of deterministic jitter.
+    pub backoff_base: usize,
+    /// Replays allowed per round before the run errors out.
+    pub max_replays: usize,
+    /// Test hook: artificially fail the first commit attempt of this
+    /// round, forcing exactly one snapshot replay.
+    pub force_replay_round: Option<usize>,
+}
+
+impl Default for RuntimeOpts {
+    fn default() -> Self {
+        Self {
+            heartbeat_deadline: 16,
+            max_retries: 8,
+            backoff_base: 1,
+            max_replays: 4,
+            force_replay_round: None,
+        }
+    }
+}
+
+/// Per-round control-plane tallies (what `annotate_resilience` stamps
+/// onto the round's log entry).
+#[derive(Debug, Clone, Copy, Default)]
+struct RoundTallies {
+    heartbeat_misses: u64,
+    retransmits: u64,
+    round_replays: u64,
+    witness_acks: u64,
+}
+
+/// The coordinator runtime: [`RoundEngine`] plus the rendezvous /
+/// heartbeat / witness-quorum state machine driving it.
+pub struct CoordinatorRuntime {
+    engine: RoundEngine,
+    /// `None` under `--net none`: rounds run with zero control-plane
+    /// overhead and the machine still transitions (the bitwise no-op).
+    net: Option<FaultyTransport<InProcTransport>>,
+    opts: RuntimeOpts,
+    state: RuntimeState,
+    /// Deterministic backoff jitter (advances only on retry waits).
+    backoff_rng: Pcg64,
+    devices: usize,
+    witnesses: usize,
+    quorum: usize,
+    seed: u64,
+    /// Poll scratch, reused across ticks.
+    inbox: Vec<Envelope>,
+}
+
+impl CoordinatorRuntime {
+    /// Build engine + transport from the config (`cfg.net` selects the
+    /// fault preset; `NetPreset::None` builds no wrapper at all).
+    pub fn new(cfg: &ExperimentConfig, backend: Box<dyn Backend>) -> Result<Self> {
+        Self::with_opts(cfg, backend, RuntimeOpts::default())
+    }
+
+    /// Build with the real PJRT backend (the runtime twin of
+    /// [`crate::coordinator::Trainer::from_config`]).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        let rt = std::sync::Arc::new(crate::runtime::Runtime::load(&cfg.artifacts_dir)?);
+        let model = rt.model(&cfg.model)?;
+        Self::new(cfg, Box::new(model))
+    }
+
+    pub fn with_opts(
+        cfg: &ExperimentConfig,
+        backend: Box<dyn Backend>,
+        opts: RuntimeOpts,
+    ) -> Result<Self> {
+        let engine = RoundEngine::new(cfg, backend)?;
+        let net = FaultyTransport::from_preset(InProcTransport::new(), &cfg.net, cfg.devices, cfg.seed);
+        Ok(Self {
+            engine,
+            net,
+            opts,
+            state: RuntimeState::Standby,
+            backoff_rng: Pcg64::new(cfg.seed, BACKOFF_STREAM),
+            devices: cfg.devices,
+            witnesses: cfg.witnesses,
+            quorum: cfg.quorum,
+            seed: cfg.seed,
+            inbox: Vec::new(),
+        })
+    }
+
+    pub fn state(&self) -> RuntimeState {
+        self.state
+    }
+
+    pub fn engine(&self) -> &RoundEngine {
+        &self.engine
+    }
+
+    /// Ground-truth transport-fault totals (`None` under `--net none`).
+    pub fn net_counters(&self) -> Option<crate::transport::NetCounters> {
+        self.net.as_ref().map(|n| n.counters())
+    }
+
+    /// Restore the engine from a checkpoint file (config-fingerprinted,
+    /// so a `--net`/witness/quorum mismatch fails cleanly).
+    pub fn restore_checkpoint(&mut self, path: &Path) -> Result<()> {
+        self.engine.restore_checkpoint(path)
+    }
+
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        self.engine.save_checkpoint(path)
+    }
+
+    /// One state-machine step: rendezvous on the first call, then one
+    /// full round (heartbeat window → snapshot → train → frame delivery
+    /// → witness quorum, replaying on a failed quorum) per call. This is
+    /// the unit the `runtime/state-step` bench prices.
+    pub fn step(&mut self) -> Result<RoundLog> {
+        if self.state == RuntimeState::Standby {
+            self.rendezvous()?;
+            self.state = RuntimeState::Round;
+        }
+        ensure!(
+            self.state == RuntimeState::Round,
+            "step() called on a finished runtime"
+        );
+        let r = self.engine.rounds_completed();
+        let log = self.committed_round(r)?;
+        if self.engine.rounds_completed() >= self.engine.config().rounds {
+            self.broadcast(Msg::Finish);
+            self.state = RuntimeState::Finished;
+        }
+        Ok(log)
+    }
+
+    /// Run rendezvous plus every remaining round, then assemble the
+    /// report — the resilient twin of [`RoundEngine::run`].
+    pub fn run(&mut self) -> Result<TrainerOutput> {
+        while self.state != RuntimeState::Finished {
+            self.step()?;
+        }
+        Ok(self.engine.finish())
+    }
+
+    /// Finalize the observability registry / write trace files.
+    pub fn export_obs(&mut self) -> Result<()> {
+        self.engine.export_obs()
+    }
+
+    // ---- rendezvous ----------------------------------------------------
+
+    /// Join/Welcome until every device is enrolled. Devices resend Join
+    /// every tick (same reliability argument as heartbeats), so under
+    /// finite loss this converges; a full window with absentees is a
+    /// hard error — the cluster never formed.
+    fn rendezvous(&mut self) -> Result<()> {
+        let Some(net) = self.net.as_mut() else {
+            return Ok(()); // --net none: the cluster is axiomatic
+        };
+        let mut joined = vec![false; self.devices];
+        let window = self.opts.heartbeat_deadline * (self.opts.max_retries + 1);
+        for _ in 0..window {
+            for d in 0..self.devices {
+                if !joined[d] {
+                    net.send(Envelope::new(d as u32, COORDINATOR, Msg::Join), 0)?;
+                }
+            }
+            self.inbox.clear();
+            net.poll(&mut self.inbox)?;
+            for env in &self.inbox {
+                if env.to == COORDINATOR {
+                    if let Msg::Join = env.msg {
+                        if let Some(j) = joined.get_mut(env.from as usize) {
+                            *j = true;
+                        }
+                    }
+                }
+            }
+            if joined.iter().all(|&j| j) {
+                let (devices, rounds) =
+                    (self.devices as u32, self.engine.config().rounds as u32);
+                for d in 0..self.devices {
+                    net.send(
+                        Envelope::new(COORDINATOR, d as u32, Msg::Welcome { devices, rounds }),
+                        0,
+                    )?;
+                }
+                let now = self.engine.clock_now();
+                if self.engine.trace().is_some() {
+                    self.engine
+                        .rec_mut()
+                        .instant(Track::Coordinator, Phase::Rendezvous, 0, now);
+                }
+                return Ok(());
+            }
+        }
+        let missing: Vec<usize> =
+            (0..self.devices).filter(|&d| !joined[d]).collect();
+        bail!("rendezvous failed: devices {missing:?} never joined within {window} ticks");
+    }
+
+    // ---- one committed round -------------------------------------------
+
+    /// Drive round `r` to a committed state: heartbeat window, snapshot,
+    /// train, frame delivery, witness quorum — replaying from the
+    /// snapshot (bounded) whenever the quorum fails.
+    fn committed_round(&mut self, r: usize) -> Result<RoundLog> {
+        let force_replay = self.opts.force_replay_round == Some(r);
+        if self.net.is_none() && !force_replay {
+            // --net none: the control plane costs nothing and changes
+            // nothing — the round is the engine's round, bit for bit.
+            return self.engine.round();
+        }
+
+        let mut tallies = RoundTallies::default();
+        let crashed = self
+            .engine
+            .peek_crashes()
+            .unwrap_or_else(|| vec![false; self.devices]);
+
+        // Heartbeat window: who is alive this round?
+        let alive = if self.net.is_some() {
+            let heard = self.heartbeat_window(r, &crashed)?;
+            tallies.heartbeat_misses = heard.iter().filter(|&&h| !h).count() as u64;
+            let evict: Vec<bool> = (0..self.devices)
+                .map(|d| !heard[d] && !crashed[d])
+                .collect();
+            if evict.iter().any(|&e| e) {
+                self.engine.set_barrier_evictions(&evict);
+            }
+            let now = self.engine.clock_now();
+            if self.engine.trace().is_some() {
+                self.engine
+                    .rec_mut()
+                    .instant(Track::Coordinator, Phase::Heartbeat, r as u32, now);
+            }
+            heard
+        } else {
+            (0..self.devices).map(|d| !crashed[d]).collect()
+        };
+        let evict_mask: Vec<bool> =
+            (0..self.devices).map(|d| !alive[d] && !crashed[d]).collect();
+
+        // The replay anchor: full engine state *before* the round body.
+        let snapshot = self.engine.checkpoint_bytes();
+
+        let mut log;
+        loop {
+            log = self.engine.round()?;
+            let forced_failure = force_replay && tallies.round_replays == 0;
+            let committed = !forced_failure && self.commit_phase(r, &alive, &mut tallies)?;
+            if committed || (self.net.is_none() && !forced_failure) {
+                break;
+            }
+            tallies.round_replays += 1;
+            ensure!(
+                tallies.round_replays <= self.opts.max_replays as u64,
+                "round {r}: witness quorum failed after {} replays",
+                self.opts.max_replays
+            );
+            self.engine.restore_bytes(&snapshot)?;
+            // evictions are one-shot engine state — re-post for the rerun
+            if evict_mask.iter().any(|&e| e) {
+                self.engine.set_barrier_evictions(&evict_mask);
+            }
+            let now = self.engine.clock_now();
+            if self.engine.trace().is_some() {
+                self.engine
+                    .rec_mut()
+                    .instant(Track::Coordinator, Phase::Replay, r as u32, now);
+            }
+        }
+
+        // Commit: broadcast, stamp the log, mirror into the registry.
+        self.broadcast(Msg::Commit { round: r as u32 });
+        let quorum = self.quorum_needed(alive.iter().filter(|&&a| a).count());
+        self.engine.annotate_resilience(
+            tallies.heartbeat_misses,
+            tallies.retransmits,
+            tallies.round_replays,
+            tallies.witness_acks,
+            quorum,
+        );
+        log.heartbeat_misses = tallies.heartbeat_misses;
+        log.retransmits = tallies.retransmits;
+        log.round_replays = tallies.round_replays;
+        log.witness_acks = tallies.witness_acks;
+        let now = self.engine.clock_now();
+        if self.engine.trace().is_some() {
+            self.engine
+                .rec_mut()
+                .instant(Track::Coordinator, Phase::Commit, r as u32, now);
+        }
+        Ok(log)
+    }
+
+    /// The liveness window at the top of round `r`: every non-crashed
+    /// device heartbeats every tick until heard; whoever the coordinator
+    /// never hears is evicted from the round's barrier.
+    fn heartbeat_window(&mut self, r: usize, crashed: &[bool]) -> Result<Vec<bool>> {
+        let net = self.net.as_mut().expect("heartbeat needs a transport");
+        net.begin_round(r);
+        let mut heard = vec![false; self.devices];
+        for _ in 0..self.opts.heartbeat_deadline {
+            for d in 0..self.devices {
+                if !crashed[d] && !heard[d] {
+                    net.send(
+                        Envelope::new(d as u32, COORDINATOR, Msg::Heartbeat { round: r as u32 }),
+                        0,
+                    )?;
+                }
+            }
+            self.inbox.clear();
+            net.poll(&mut self.inbox)?;
+            for env in &self.inbox {
+                if env.to == COORDINATOR {
+                    if let Msg::Heartbeat { round } = env.msg {
+                        if round == r as u32 {
+                            if let Some(h) = heard.get_mut(env.from as usize) {
+                                *h = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if (0..self.devices).all(|d| crashed[d] || heard[d]) {
+                break;
+            }
+        }
+        Ok(heard)
+    }
+
+    /// Frame delivery then witness attestation for round `r`. Returns
+    /// whether the quorum committed; `false` demands a snapshot replay.
+    fn commit_phase(
+        &mut self,
+        r: usize,
+        alive: &[bool],
+        tallies: &mut RoundTallies,
+    ) -> Result<bool> {
+        if self.net.is_none() {
+            return Ok(true);
+        }
+        let live: Vec<usize> = (0..self.devices).filter(|&d| alive[d]).collect();
+        if live.is_empty() {
+            // an empty round (everyone crashed/evicted) has nothing to
+            // attest — the engine already ran its idle tick
+            return Ok(true);
+        }
+
+        // 1. Frame delivery: each live device's gradient frame must be
+        //    acknowledged on the wire (the tensor math already happened
+        //    inside the engine; this is its delivery receipt).
+        let frames_ok = self.delivery_loop(r, &live, tallies, DeliveryKind::Frame)?;
+        if !frames_ok {
+            return Ok(false);
+        }
+
+        // 2. Witness sampling: pure in (seed, round) — W distinct live
+        //    devices (all of them under `--witnesses 0`).
+        let mixed = self.seed ^ (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let w = if self.witnesses == 0 {
+            live.len()
+        } else {
+            self.witnesses.min(live.len())
+        };
+        let mut panel: Vec<usize> = if w == live.len() {
+            live.clone()
+        } else {
+            let mut rng = Pcg64::new(mixed, WITNESS_STREAM);
+            rng.choose(live.len(), w).into_iter().map(|i| live[i]).collect()
+        };
+        panel.sort_unstable();
+
+        // 3. Attestation: quorum of digest acks or the round replays.
+        let digest = params_digest(self.engine.params());
+        let needed = self.quorum_needed(live.len());
+        let acks = self.witness_loop(r, &panel, digest, needed, tallies)?;
+        tallies.witness_acks = acks;
+        Ok(acks >= needed as u64)
+    }
+
+    /// Acks required given this round's live-device count.
+    fn quorum_needed(&self, live: usize) -> usize {
+        let w = if self.witnesses == 0 { live } else { self.witnesses.min(live) };
+        if self.quorum == 0 {
+            w
+        } else {
+            self.quorum.min(w)
+        }
+    }
+
+    /// Bounded-backoff delivery of one control message per live device;
+    /// `true` once every device's copy arrived.
+    fn delivery_loop(
+        &mut self,
+        r: usize,
+        live: &[usize],
+        tallies: &mut RoundTallies,
+        kind: DeliveryKind,
+    ) -> Result<bool> {
+        let net = self.net.as_mut().expect("delivery needs a transport");
+        let mut done = vec![false; self.devices];
+        for attempt in 0..=self.opts.max_retries {
+            for &d in live {
+                if !done[d] {
+                    let msg = match kind {
+                        DeliveryKind::Frame => Msg::Frame { round: r as u32 },
+                    };
+                    net.send(Envelope::new(d as u32, COORDINATOR, msg), 0)?;
+                    if attempt > 0 {
+                        tallies.retransmits += 1;
+                    }
+                }
+            }
+            let wait = (self.opts.backoff_base << attempt) + self.backoff_rng.below(2);
+            for _ in 0..wait.max(1) {
+                self.inbox.clear();
+                net.poll(&mut self.inbox)?;
+                for env in &self.inbox {
+                    if env.to == COORDINATOR {
+                        if let Msg::Frame { round } = env.msg {
+                            if round == r as u32 {
+                                if let Some(f) = done.get_mut(env.from as usize) {
+                                    *f = true;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if live.iter().all(|&d| done[d]) {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Witness attestation under bounded backoff: WitnessReq out to each
+    /// unacked panel member, device automata reply WitnessAck through
+    /// the same lossy wire, early-exit once the quorum is met. Returns
+    /// the ack count (which may exceed `needed` — late acks still count).
+    fn witness_loop(
+        &mut self,
+        r: usize,
+        panel: &[usize],
+        digest: u64,
+        needed: usize,
+        tallies: &mut RoundTallies,
+    ) -> Result<u64> {
+        let net = self.net.as_mut().expect("witness needs a transport");
+        let mut acked = vec![false; self.devices];
+        let mut acks = 0u64;
+        for attempt in 0..=self.opts.max_retries {
+            for &d in panel {
+                if !acked[d] {
+                    net.send(
+                        Envelope::new(
+                            COORDINATOR,
+                            d as u32,
+                            Msg::WitnessReq { round: r as u32, digest },
+                        ),
+                        0,
+                    )?;
+                    if attempt > 0 {
+                        tallies.retransmits += 1;
+                    }
+                }
+            }
+            let wait = (self.opts.backoff_base << attempt) + self.backoff_rng.below(2);
+            for _ in 0..wait.max(1) {
+                self.inbox.clear();
+                net.poll(&mut self.inbox)?;
+                for i in 0..self.inbox.len() {
+                    let env = self.inbox[i];
+                    if env.to == COORDINATOR {
+                        if let Msg::WitnessAck { round, digest: dg } = env.msg {
+                            if round == r as u32 && dg == digest {
+                                if let Some(a) = acked.get_mut(env.from as usize) {
+                                    if !*a {
+                                        *a = true;
+                                        acks += 1;
+                                    }
+                                }
+                            }
+                        }
+                    } else if let Msg::WitnessReq { round, digest: dg } = env.msg {
+                        // the device automaton: attest what it was asked
+                        net.send(
+                            Envelope::new(
+                                env.to,
+                                COORDINATOR,
+                                Msg::WitnessAck { round, digest: dg },
+                            ),
+                            0,
+                        )?;
+                    }
+                }
+            }
+            if acks >= needed as u64 {
+                break;
+            }
+        }
+        Ok(acks)
+    }
+
+    /// Best-effort broadcast (no retry — Commit/Finish are advisory in
+    /// the simulation; the TCP path retries at the CLI layer).
+    fn broadcast(&mut self, msg: Msg) {
+        if let Some(net) = self.net.as_mut() {
+            for d in 0..self.devices {
+                let _ = net.send(Envelope::new(COORDINATOR, d as u32, msg), 0);
+            }
+        }
+    }
+}
+
+/// Which control message a [`CoordinatorRuntime::delivery_loop`] pass is
+/// delivering (today only gradient frames; the enum keeps the loop's
+/// match exhaustive when new receipts appear).
+#[derive(Debug, Clone, Copy)]
+enum DeliveryKind {
+    Frame,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{StreamPreset, TrainMode};
+    use crate::coordinator::backend::MockBackend;
+    use crate::coordinator::Trainer;
+
+    fn base() -> crate::config::experiment::ExperimentBuilder {
+        ExperimentConfig::builder("mlp_c10")
+            .devices(4)
+            .rounds(12)
+            .preset(StreamPreset::S1)
+            .mode(TrainMode::Scadles)
+            .eval_every(5)
+    }
+
+    fn runtime(cfg: &ExperimentConfig) -> CoordinatorRuntime {
+        CoordinatorRuntime::new(cfg, Box::new(MockBackend::new(64, 10))).unwrap()
+    }
+
+    #[test]
+    fn state_machine_walks_standby_round_finished() {
+        let cfg = base().build().unwrap();
+        let mut rt = runtime(&cfg);
+        assert_eq!(rt.state(), RuntimeState::Standby);
+        rt.step().unwrap();
+        assert_eq!(rt.state(), RuntimeState::Round);
+        let out = rt.run().unwrap();
+        assert_eq!(rt.state(), RuntimeState::Finished);
+        assert_eq!(out.logs.rounds().len(), 12);
+        assert!(rt.step().is_err(), "stepping a finished runtime must error");
+    }
+
+    #[test]
+    fn net_none_is_bitwise_the_bare_engine() {
+        let cfg = base().build().unwrap();
+        let via_runtime = runtime(&cfg).run().unwrap();
+        let bare = Trainer::with_backend(&cfg, Box::new(MockBackend::new(64, 10)))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(
+            via_runtime.report.final_train_loss.to_bits(),
+            bare.report.final_train_loss.to_bits()
+        );
+        assert_eq!(
+            via_runtime.report.wall_clock_s.to_bits(),
+            bare.report.wall_clock_s.to_bits()
+        );
+        assert_eq!(via_runtime.resilience, Default::default());
+    }
+
+    #[test]
+    fn lossy_transport_does_not_move_a_training_bit() {
+        // the keystone, inline: drop 10% + delays, every round still
+        // commits, and the model lands on the lossless bits exactly
+        let lossless = runtime(&base().build().unwrap()).run().unwrap();
+        let cfg = base().net("lossy:0.1:0.5:3".parse().unwrap()).build().unwrap();
+        let mut rt = runtime(&cfg);
+        let lossy = rt.run().unwrap();
+        assert_eq!(rt.state(), RuntimeState::Finished);
+        assert_eq!(
+            lossy.report.final_train_loss.to_bits(),
+            lossless.report.final_train_loss.to_bits()
+        );
+        assert_eq!(lossy.report.total_floats_sent, lossless.report.total_floats_sent);
+        // every round attested with a full quorum (witnesses=0 → all)
+        for l in lossy.logs.rounds() {
+            assert_eq!(l.witness_acks, 4, "round {}", l.round);
+            assert_eq!(l.round_replays, 0, "round {}", l.round);
+        }
+        let net = rt.net.as_ref().unwrap().counters();
+        assert!(net.dropped > 0 && net.delayed > 0, "{net:?}");
+    }
+
+    #[test]
+    fn forced_quorum_failure_replays_once_and_converges_identically() {
+        let cfg = base().net("lossy:0.1:0.5:3".parse().unwrap()).build().unwrap();
+        let clean = runtime(&cfg).run().unwrap();
+        let mut rt = CoordinatorRuntime::with_opts(
+            &cfg,
+            Box::new(MockBackend::new(64, 10)),
+            RuntimeOpts { force_replay_round: Some(3), ..Default::default() },
+        )
+        .unwrap();
+        let forced = rt.run().unwrap();
+        assert_eq!(forced.resilience.round_replays, 1);
+        assert_eq!(forced.logs.rounds()[3].round_replays, 1);
+        assert_eq!(
+            forced.report.final_train_loss.to_bits(),
+            clean.report.final_train_loss.to_bits(),
+            "a snapshot replay must be bitwise invisible to training"
+        );
+    }
+
+    #[test]
+    fn crashed_devices_go_silent_and_count_as_heartbeat_misses() {
+        let cfg = base()
+            .rounds(20)
+            .net("lossy:0.1:0.5:3".parse().unwrap())
+            .faults("crash:0.3".parse().unwrap())
+            .build()
+            .unwrap();
+        let out = runtime(&cfg).run().unwrap();
+        let crashes: u64 = out
+            .logs
+            .rounds()
+            .iter()
+            .map(|l| l.rejected_devices as u64)
+            .sum();
+        assert!(out.resilience.heartbeat_misses > 0, "{:?}", out.resilience);
+        assert!(
+            out.resilience.heartbeat_misses >= crashes,
+            "misses {} < crashes {crashes}",
+            out.resilience.heartbeat_misses
+        );
+        assert!(out.report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn sampled_witness_panels_and_majority_quorum_commit() {
+        let cfg = base()
+            .net("lossy:0.1:0.5:3".parse().unwrap())
+            .witnesses(3)
+            .quorum(2)
+            .build()
+            .unwrap();
+        let out = runtime(&cfg).run().unwrap();
+        for l in out.logs.rounds() {
+            assert!(
+                (2..=3).contains(&(l.witness_acks as usize)),
+                "round {}: {} acks",
+                l.round,
+                l.witness_acks
+            );
+        }
+    }
+}

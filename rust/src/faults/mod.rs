@@ -197,6 +197,20 @@ impl FaultInjector {
         self.hit[i]
     }
 
+    /// Preview the *next* round's Bernoulli outcomes without advancing
+    /// any stream: clones each device rng and draws the one uniform the
+    /// real [`Self::draw_round`] will draw. Pure in the injector state —
+    /// the coordinator runtime uses it to know which devices will crash
+    /// (and therefore go silent on the heartbeat wire) before the round
+    /// body rolls the authoritative draws.
+    pub fn peek_round(&self) -> Vec<bool> {
+        let frac = self.preset.frac();
+        self.rngs
+            .iter()
+            .map(|rng| rng.clone().f64() < frac)
+            .collect()
+    }
+
     /// Record that device `i`'s crash actually took effect (the engine
     /// calls this only for devices that had work to lose).
     pub fn mark_crashed(&mut self, i: usize) {
@@ -426,6 +440,19 @@ mod tests {
         twin.draw_round();
         f.draw_round();
         assert_eq!(f.hit(1), twin.hit(1));
+    }
+
+    #[test]
+    fn peek_round_previews_without_advancing() {
+        let mut f = injector("crash:0.4", 6, 4, 21);
+        for _ in 0..20 {
+            let preview = f.peek_round();
+            let again = f.peek_round(); // peeking twice changes nothing
+            assert_eq!(preview, again);
+            f.draw_round();
+            let actual: Vec<bool> = (0..6).map(|i| f.hit(i)).collect();
+            assert_eq!(preview, actual);
+        }
     }
 
     #[test]

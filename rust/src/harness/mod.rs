@@ -16,6 +16,7 @@ pub mod dynamics;
 pub mod faults;
 pub mod fig6;
 pub mod hetero;
+pub mod resilience;
 pub mod sync;
 pub mod training;
 
@@ -116,7 +117,7 @@ pub const EXPERIMENTS: &[&str] = &[
 
 /// Extension studies beyond the paper (DESIGN.md §5b).
 pub const EXTENSIONS: &[&str] =
-    &["ablation", "emd", "fedavg", "hetero", "dynamics", "sync", "faults"];
+    &["ablation", "emd", "fedavg", "hetero", "dynamics", "sync", "faults", "resilience"];
 
 /// Dispatch one experiment by id.
 pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
@@ -145,6 +146,7 @@ pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
         "dynamics" => dynamics::dynamics(opts),
         "sync" => sync::sync(opts),
         "faults" => faults::faults(opts),
+        "resilience" => resilience::resilience(opts),
         "all" => {
             for e in EXPERIMENTS {
                 eprintln!("\n================ {e} ================");

@@ -62,6 +62,19 @@
 //! across checkpoint kill/resume; with tracing off the no-op recorder
 //! adds zero steady-state allocations. See `examples/traced_run.rs`.
 //!
+//! *Whether a round's result counts* is the resilient coordinator
+//! runtime ([`coordinator::CoordinatorRuntime`]): a rendezvous /
+//! heartbeat / witness-quorum state machine whose control messages move
+//! over a [`transport`] — an in-proc virtual-time queue, optionally
+//! wrapped by deterministic transport-fault injection (`--net
+//! lossy:…|dup:…|partition:…`, pure in `(seed, device, round)`), or a
+//! minimal TCP transport behind `repro serve` / `repro join` for a
+//! multi-process localhost demo. Missed-heartbeat devices are evicted
+//! from the round's barrier; a failed witness quorum replays the round
+//! from an in-memory snapshot; and a lossy run's trained model stays
+//! bitwise identical to the lossless run at any worker-pool width. See
+//! `examples/quorum_lossy.rs`.
+//!
 //! Layers 1–2 (Pallas kernels + JAX models) are AOT-lowered to HLO text at
 //! build time (`make artifacts`) and executed through the PJRT CPU client
 //! by [`runtime`]. Python never runs on the training path.
@@ -97,6 +110,7 @@ pub mod rng;
 pub mod runtime;
 pub mod simulate;
 pub mod stream;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result type (anyhow for ergonomic error context).

@@ -3,6 +3,9 @@
 //! Subcommands:
 //! * `train` — run one configurable training job (ScaDLES or DDL).
 //! * `exp <id>` — regenerate a paper table/figure (DESIGN.md §4).
+//! * `serve` / `join` — the multi-process localhost demo: a TCP
+//!   coordinator hub plus worker processes speaking the runtime's
+//!   rendezvous/heartbeat/witness protocol.
 //! * `info` — inspect the compiled artifact manifest.
 //! * `list` — list experiment ids.
 //!
@@ -17,7 +20,7 @@ use scadles::buffer::BufferPolicy;
 use scadles::config::{
     CompressionConfig, ExperimentConfig, InjectionConfig, StreamPreset, TrainMode,
 };
-use scadles::coordinator::Trainer;
+use scadles::coordinator::{CoordinatorRuntime, RuntimeState, Trainer};
 use scadles::data::LabelMap;
 use scadles::harness::{self, HarnessOpts};
 use scadles::runtime::Runtime;
@@ -62,6 +65,19 @@ USAGE:
                                delta-varint the indices — sync is priced from
                                the exact encoded bits; f32 is the full-
                                precision seed wire, bit for bit)
+              [--net P]       (deterministic transport faults for the resilient
+                               coordinator runtime, name[:params]:
+                               none | lossy[:drop[:delay[:max]]] |
+                               dup[:frac] | partition[:frac]; any non-none
+                               preset routes the run through the rendezvous/
+                               heartbeat/witness-quorum state machine — the
+                               trained model stays bitwise identical to the
+                               lossless run)
+              [--witnesses W] (witness-set size per round commit; 0 = every
+                               committed device witnesses)
+              [--quorum Q]    (witness acks required to commit; 0 = all
+                               sampled witnesses; a failed quorum replays the
+                               round from its pre-round snapshot)
               [--checkpoint FILE] [--checkpoint-every N] [--resume]
                               (serialize full training state to FILE — every N
                                rounds and at the end; --resume restores FILE
@@ -87,6 +103,15 @@ USAGE:
               (CI perf gate: fail when any tracked bench case regresses
                more than tolerance vs the committed baseline; exits 0
                with a notice when no baseline exists yet)
+  repro serve [--port P] [--devices N] [--rounds R] [--net P] [--quorum Q]
+              [--seed S]
+              (bind a TCP coordinator hub on 127.0.0.1, wait for N workers
+               to rendezvous, then drive R rounds of the heartbeat/witness
+               protocol over the wire — optionally through the --net fault
+               wrapper — while training the simulated cluster locally)
+  repro join  --device D [--port P]
+              (one worker process: rendezvous with the hub, heartbeat every
+               round, attest witness requests, exit on FIN)
   repro info  [--artifacts DIR]
   repro list
 ";
@@ -266,6 +291,247 @@ fn bench_check(current: &str, baseline: &str, tolerance: f64) -> anyhow::Result<
     }
 }
 
+/// `repro serve`: bind the TCP coordinator hub, rendezvous with the
+/// workers, then drive the heartbeat/witness protocol over the wire for
+/// every round while the simulated cluster trains locally. The `--net`
+/// fault wrapper composes over TCP exactly as it does in-proc, so the
+/// localhost demo exercises the same retry machinery CI gates in
+/// simulation.
+fn serve(args: &Args) -> anyhow::Result<()> {
+    use scadles::config::NetPreset;
+    use scadles::coordinator::MockBackend;
+    use scadles::transport::{FaultyTransport, TcpTransport};
+    use std::time::Duration;
+
+    let port = args.get("port", 7070u16)?;
+    let devices = args.get("devices", 3usize)?;
+    let rounds = args.get("rounds", 5usize)?;
+    let seed = args.get("seed", 42u64)?;
+    let quorum = args.get("quorum", 0usize)?;
+    let net: NetPreset = args.get_str("net", "none").parse()?;
+
+    let mut hub = TcpTransport::bind(port, devices)?;
+    println!(
+        "serve: listening on 127.0.0.1:{} for {devices} worker(s)",
+        hub.port()?
+    );
+    let joined = hub.accept_joins(Duration::from_secs(60))?;
+    println!("serve: rendezvous complete, devices {joined:?}");
+
+    let cfg = ExperimentConfig::builder("mlp_c10")
+        .devices(devices)
+        .rounds(rounds)
+        .preset(StreamPreset::S1)
+        .mode(TrainMode::Scadles)
+        .seed(seed)
+        .build()?;
+    // the TCP demo exercises the control plane; the training arithmetic
+    // is the simulated cluster's (no artifacts needed)
+    let mut trainer = Trainer::with_backend(&cfg, Box::new(MockBackend::new(64, 10)))?;
+
+    if net.is_none() {
+        serve_rounds(&mut trainer, hub, |_, _| {}, devices, rounds, quorum)
+    } else {
+        let wrapped = FaultyTransport::from_preset(hub, &net, devices, seed)
+            .expect("non-none preset always wraps");
+        serve_rounds(
+            &mut trainer,
+            wrapped,
+            |t: &mut FaultyTransport<TcpTransport>, r| t.begin_round(r),
+            devices,
+            rounds,
+            quorum,
+        )
+    }
+}
+
+/// The coordinator side of one `repro serve` run, generic over the
+/// transport (bare TCP or the `--net` fault wrapper).
+fn serve_rounds<T: scadles::transport::Transport>(
+    trainer: &mut Trainer,
+    mut net: T,
+    mut begin_round: impl FnMut(&mut T, usize),
+    devices: usize,
+    rounds: usize,
+    quorum: usize,
+) -> anyhow::Result<()> {
+    use scadles::transport::{params_digest, Envelope, Msg, COORDINATOR};
+    use std::time::Duration;
+
+    const TICK: Duration = Duration::from_millis(5);
+    const WINDOW: usize = 600; // ~3 s of ticks per phase
+    let needed = if quorum == 0 { devices } else { quorum.min(devices) };
+    let mut misses = 0u64;
+    let mut inbox = Vec::new();
+    for r in 0..rounds {
+        begin_round(&mut net, r);
+        // liveness window: resend ROUND until every worker heartbeats
+        let mut heard = vec![false; devices];
+        for tick in 0..WINDOW {
+            if tick % 10 == 0 {
+                for d in 0..devices {
+                    if !heard[d] {
+                        net.send(
+                            Envelope::new(
+                                COORDINATOR,
+                                d as u32,
+                                Msg::RoundStart { round: r as u32 },
+                            ),
+                            0,
+                        )?;
+                    }
+                }
+            }
+            std::thread::sleep(TICK);
+            inbox.clear();
+            net.poll(&mut inbox)?;
+            for env in &inbox {
+                if env.to == COORDINATOR {
+                    if let Msg::Heartbeat { round } = env.msg {
+                        if round == r as u32 {
+                            if let Some(h) = heard.get_mut(env.from as usize) {
+                                *h = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if heard.iter().all(|&h| h) {
+                break;
+            }
+        }
+        misses += heard.iter().filter(|&&h| !h).count() as u64;
+
+        let log = trainer.round()?;
+        let digest = params_digest(trainer.params());
+
+        // witness quorum over the wire
+        let mut acked = vec![false; devices];
+        let mut acks = 0usize;
+        for tick in 0..WINDOW {
+            if tick % 10 == 0 {
+                for d in 0..devices {
+                    if !acked[d] {
+                        net.send(
+                            Envelope::new(
+                                COORDINATOR,
+                                d as u32,
+                                Msg::WitnessReq { round: r as u32, digest },
+                            ),
+                            0,
+                        )?;
+                    }
+                }
+            }
+            std::thread::sleep(TICK);
+            inbox.clear();
+            net.poll(&mut inbox)?;
+            for env in &inbox {
+                if env.to == COORDINATOR {
+                    if let Msg::WitnessAck { round, digest: dg } = env.msg {
+                        if round == r as u32 && dg == digest {
+                            if let Some(a) = acked.get_mut(env.from as usize) {
+                                if !*a {
+                                    *a = true;
+                                    acks += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if acks >= needed {
+                break;
+            }
+        }
+        anyhow::ensure!(
+            acks >= needed,
+            "round {r}: witness quorum failed ({acks}/{needed} acks)"
+        );
+        for d in 0..devices {
+            net.send(
+                Envelope::new(COORDINATOR, d as u32, Msg::Commit { round: r as u32 }),
+                0,
+            )?;
+        }
+        println!(
+            "serve: round {r} committed (loss {:.4}, {acks}/{needed} witness acks)",
+            log.train_loss
+        );
+    }
+    // FIN a few times so a lossy wrapper can't eat the goodbye
+    for _ in 0..8 {
+        for d in 0..devices {
+            net.send(Envelope::new(COORDINATOR, d as u32, Msg::Finish), 0)?;
+        }
+        std::thread::sleep(TICK);
+        inbox.clear();
+        net.poll(&mut inbox)?;
+    }
+    let out = trainer.finish();
+    anyhow::ensure!(
+        out.report.final_train_loss.is_finite(),
+        "non-finite final loss"
+    );
+    println!(
+        "serve: {rounds} rounds committed, final_train_loss={:.6}, heartbeat_misses={misses}",
+        out.report.final_train_loss
+    );
+    Ok(())
+}
+
+/// `repro join`: one worker process — rendezvous, then react to the
+/// coordinator (heartbeat + frame on ROUND, attest on WREQ) until FIN.
+fn join(args: &Args) -> anyhow::Result<()> {
+    use scadles::transport::{Envelope, Msg, TcpClient, Transport, COORDINATOR};
+    use std::time::{Duration, Instant};
+
+    let port = args.get("port", 7070u16)?;
+    let device: u32 = args
+        .values
+        .get("device")
+        .context("repro join requires --device D")?
+        .parse()
+        .map_err(|e| anyhow!("invalid --device: {e}"))?;
+    let mut c = TcpClient::connect(port, device, Duration::from_secs(60))?;
+    println!("worker {device}: joined coordinator on 127.0.0.1:{port}");
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let mut rounds_seen = 0u32;
+    let mut inbox = Vec::new();
+    loop {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "worker {device}: coordinator went quiet"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+        inbox.clear();
+        c.poll(&mut inbox)?;
+        for env in &inbox {
+            match env.msg {
+                Msg::RoundStart { round } => {
+                    c.send(
+                        Envelope::new(device, COORDINATOR, Msg::Heartbeat { round }),
+                        0,
+                    )?;
+                    c.send(Envelope::new(device, COORDINATOR, Msg::Frame { round }), 0)?;
+                    rounds_seen = rounds_seen.max(round + 1);
+                }
+                Msg::WitnessReq { round, digest } => {
+                    c.send(
+                        Envelope::new(device, COORDINATOR, Msg::WitnessAck { round, digest }),
+                        0,
+                    )?;
+                }
+                Msg::Finish => {
+                    println!("worker {device}: finished after {rounds_seen} round(s)");
+                    return Ok(());
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     // silence xla_extension's TfrtCpuClient chatter unless asked for
     if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
@@ -348,6 +614,9 @@ fn main() -> anyhow::Result<()> {
                 .faults(args.get_str("faults", "none").parse()?)
                 .agg(args.get_str("agg", "mean").parse()?)
                 .wire(args.get_str("wire", "f32").parse()?)
+                .net(args.get_str("net", "none").parse()?)
+                .witnesses(args.get("witnesses", 0usize)?)
+                .quorum(args.get("quorum", 0usize)?)
                 .seed(args.get("seed", 42u64)?)
                 .echo_every(args.get("echo", 10usize)?)
                 .worker_threads(args.get("workers", 0usize)?);
@@ -375,45 +644,98 @@ fn main() -> anyhow::Result<()> {
                 b = b.metrics_path(path.as_str());
             }
             let cfg = b.build()?;
-            let mut t = Trainer::from_config(&cfg)?;
             let ckpt = args.values.get("checkpoint").map(PathBuf::from);
             let ckpt_every = args.get("checkpoint-every", 0usize)?;
-            if args.has("resume") {
-                let path = ckpt
-                    .as_deref()
-                    .context("--resume requires --checkpoint FILE")?;
-                if path.exists() {
-                    t.restore_checkpoint(path)?;
+            let out = if cfg.net.is_none() {
+                // lossless wire: the engine runs bare (bitwise the seed path)
+                let mut t = Trainer::from_config(&cfg)?;
+                if args.has("resume") {
+                    let path = ckpt
+                        .as_deref()
+                        .context("--resume requires --checkpoint FILE")?;
+                    if path.exists() {
+                        t.restore_checkpoint(path)?;
+                        eprintln!(
+                            "resumed from {} at round {}",
+                            path.display(),
+                            t.rounds_completed()
+                        );
+                    } else {
+                        eprintln!(
+                            "checkpoint {} not found; starting from scratch",
+                            path.display()
+                        );
+                    }
+                }
+                let out = if let Some(path) = ckpt.as_deref() {
+                    while t.rounds_completed() < cfg.rounds {
+                        let log = t.round()?;
+                        if ckpt_every > 0 && (log.round + 1) % ckpt_every == 0 {
+                            t.save_checkpoint(path)?;
+                        }
+                    }
+                    t.save_checkpoint(path)?;
                     eprintln!(
-                        "resumed from {} at round {}",
+                        "checkpoint written to {} at round {}",
                         path.display(),
                         t.rounds_completed()
                     );
+                    t.finish()
                 } else {
-                    eprintln!(
-                        "checkpoint {} not found; starting from scratch",
-                        path.display()
-                    );
-                }
-            }
-            let out = if let Some(path) = ckpt.as_deref() {
-                while t.rounds_completed() < cfg.rounds {
-                    let log = t.round()?;
-                    if ckpt_every > 0 && (log.round + 1) % ckpt_every == 0 {
-                        t.save_checkpoint(path)?;
+                    t.run()?
+                };
+                t.export_obs()?;
+                out
+            } else {
+                // faulted wire: route the run through the resilient
+                // coordinator runtime (rendezvous → heartbeats →
+                // witness-quorum commit, replay on a failed quorum)
+                let mut rt = CoordinatorRuntime::from_config(&cfg)?;
+                if args.has("resume") {
+                    let path = ckpt
+                        .as_deref()
+                        .context("--resume requires --checkpoint FILE")?;
+                    if path.exists() {
+                        rt.restore_checkpoint(path)?;
+                        eprintln!(
+                            "resumed from {} at round {}",
+                            path.display(),
+                            rt.engine().rounds_completed()
+                        );
+                    } else {
+                        eprintln!(
+                            "checkpoint {} not found; starting from scratch",
+                            path.display()
+                        );
                     }
                 }
-                t.save_checkpoint(path)?;
+                let out = if let Some(path) = ckpt.as_deref() {
+                    while rt.state() != RuntimeState::Finished {
+                        let log = rt.step()?;
+                        if ckpt_every > 0 && (log.round + 1) % ckpt_every == 0 {
+                            rt.save_checkpoint(path)?;
+                        }
+                    }
+                    rt.save_checkpoint(path)?;
+                    eprintln!(
+                        "checkpoint written to {} at round {}",
+                        path.display(),
+                        rt.engine().rounds_completed()
+                    );
+                    rt.engine().finish()
+                } else {
+                    rt.run()?
+                };
+                rt.export_obs()?;
                 eprintln!(
-                    "checkpoint written to {} at round {}",
-                    path.display(),
-                    t.rounds_completed()
+                    "runtime: {} heartbeat miss(es), {} retransmit(s), {} replay(s), {} witness ack(s)",
+                    out.resilience.heartbeat_misses,
+                    out.resilience.retransmits,
+                    out.resilience.round_replays,
+                    out.resilience.witness_acks,
                 );
-                t.finish()
-            } else {
-                t.run()?
+                out
             };
-            t.export_obs()?;
             println!("{}", out.report.to_json().to_string_pretty());
             if let Some(path) = args.values.get("csv") {
                 let mut w = scadles::metrics::CsvWriter::create(
@@ -441,12 +763,24 @@ fn main() -> anyhow::Result<()> {
                         r.dropped_devices.to_string(),
                         r.rejected_devices.to_string(),
                         r.faulted_devices.to_string(),
+                        r.heartbeat_misses.to_string(),
+                        r.retransmits.to_string(),
+                        r.round_replays.to_string(),
+                        r.witness_acks.to_string(),
                     ])?;
                 }
                 w.flush()?;
                 eprintln!("wrote per-round csv to {path}");
             }
             Ok(())
+        }
+        "serve" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            serve(&args)
+        }
+        "join" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            join(&args)
         }
         "bench-check" => {
             let args = Args::parse(&argv[1..], &[])?;

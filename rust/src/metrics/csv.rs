@@ -11,7 +11,7 @@ use crate::Result;
 /// definition the CLI writes and downstream notebooks parse. The exact
 /// joined string is pinned by `train_csv_header_is_golden`, so a column
 /// rename/reorder is always a deliberate, test-visible change.
-pub const TRAIN_CSV_HEADER: [&str; 19] = [
+pub const TRAIN_CSV_HEADER: [&str; 23] = [
     "round",
     "wall_clock_s",
     "global_batch",
@@ -31,6 +31,10 @@ pub const TRAIN_CSV_HEADER: [&str; 19] = [
     "dropped_devices",
     "rejected_devices",
     "faulted_devices",
+    "heartbeat_misses",
+    "retransmits",
+    "round_replays",
+    "witness_acks",
 ];
 
 /// Streaming CSV writer with a fixed header.
@@ -134,7 +138,8 @@ mod tests {
             "round,wall_clock_s,global_batch,train_loss,test_top1,test_top5,lr,\
              buffered_samples,floats_sent,compressed,injection_bytes,\
              straggler_device,straggler_cause,active_devices,rate_est,\
-             committed_devices,dropped_devices,rejected_devices,faulted_devices"
+             committed_devices,dropped_devices,rejected_devices,faulted_devices,\
+             heartbeat_misses,retransmits,round_replays,witness_acks"
         );
     }
 }

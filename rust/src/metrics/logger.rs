@@ -54,6 +54,16 @@ pub struct RoundLog {
     /// still entered the aggregate. Ground truth for the fault harness;
     /// always ≥ `rejected_devices`.
     pub faulted_devices: usize,
+    /// Runtime: heartbeats that never arrived within this round's
+    /// deadline (0 when the coordinator runtime is not engaged).
+    pub heartbeat_misses: u64,
+    /// Runtime: control-plane sends repeated after a lost attempt.
+    pub retransmits: u64,
+    /// Runtime: times this round was replayed from its pre-round
+    /// snapshot after a failed witness quorum (0 = committed first try).
+    pub round_replays: u64,
+    /// Runtime: witness attestations accepted for this round's commit.
+    pub witness_acks: u64,
 }
 
 /// Accumulates [`RoundLog`]s for one run; the harness renders them into
@@ -117,6 +127,12 @@ impl RunLogger {
 
     pub fn last(&self) -> Option<&RoundLog> {
         self.rounds.last()
+    }
+
+    /// Mutable access to the most recent round (the coordinator runtime
+    /// stamps its control-plane tallies onto the round after the fact).
+    pub fn last_mut(&mut self) -> Option<&mut RoundLog> {
+        self.rounds.last_mut()
     }
 
     /// First round (and its virtual time) at which the smoothed test top-5

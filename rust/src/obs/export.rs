@@ -282,6 +282,17 @@ mod tests {
         assert!(text.contains("# TYPE scadles_rounds_total counter\nscadles_rounds_total 1\n"));
         assert!(text
             .contains("# TYPE scadles_rate_est_samples_per_s gauge\nscadles_rate_est_samples_per_s 64.5\n"));
+        // the coordinator runtime's control-plane ledger is scraped
+        // under the same scadles_ namespace
+        for name in [
+            "scadles_heartbeat_misses_total",
+            "scadles_retransmits_total",
+            "scadles_round_replays_total",
+            "scadles_witness_acks_total",
+            "scadles_witness_quorum",
+        ] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
         let metric_lines = text.lines().filter(|l| !l.starts_with('#')).count();
         assert_eq!(metric_lines, Counter::ALL.len() + Gauge::ALL.len());
     }

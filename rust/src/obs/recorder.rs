@@ -47,6 +47,14 @@ pub enum Phase {
     Price,
     /// Coordinator: held-out evaluation ran this round.
     Eval,
+    /// Runtime: the one-time join/welcome exchange before round 0.
+    Rendezvous,
+    /// Runtime: the liveness-collection window at the top of a round.
+    Heartbeat,
+    /// Runtime: witness attestation through quorum commit.
+    Commit,
+    /// Runtime: a round replayed from its pre-round snapshot.
+    Replay,
 }
 
 impl Phase {
@@ -65,6 +73,10 @@ impl Phase {
             Phase::Update => "update",
             Phase::Price => "price",
             Phase::Eval => "eval",
+            Phase::Rendezvous => "rendezvous",
+            Phase::Heartbeat => "heartbeat",
+            Phase::Commit => "commit",
+            Phase::Replay => "replay",
         }
     }
 }

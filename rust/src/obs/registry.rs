@@ -46,11 +46,22 @@ pub enum Counter {
     RegimeFlips = 14,
     /// Dynamics: device-rounds spent inactive.
     InactiveDeviceRounds = 15,
+    /// Runtime: device heartbeats that never reached the coordinator
+    /// within the round's deadline (lost on the wire or the device
+    /// crashed and went silent).
+    HeartbeatMisses = 16,
+    /// Runtime: control-plane sends repeated after a lost attempt.
+    Retransmits = 17,
+    /// Runtime: rounds replayed from the pre-round snapshot after a
+    /// failed witness quorum.
+    RoundReplays = 18,
+    /// Runtime: witness attestations accepted across all commits.
+    WitnessAcks = 19,
 }
 
 impl Counter {
     /// Every counter, in export order.
-    pub const ALL: [Counter; 16] = [
+    pub const ALL: [Counter; 20] = [
         Counter::SyncBits,
         Counter::FloatsSent,
         Counter::TrainedSamples,
@@ -67,6 +78,10 @@ impl Counter {
         Counter::Rejoins,
         Counter::RegimeFlips,
         Counter::InactiveDeviceRounds,
+        Counter::HeartbeatMisses,
+        Counter::Retransmits,
+        Counter::RoundReplays,
+        Counter::WitnessAcks,
     ];
 
     /// Prometheus metric name (already suffixed `_total`).
@@ -88,6 +103,10 @@ impl Counter {
             Counter::Rejoins => "scadles_dynamics_rejoins_total",
             Counter::RegimeFlips => "scadles_dynamics_regime_flips_total",
             Counter::InactiveDeviceRounds => "scadles_dynamics_inactive_device_rounds_total",
+            Counter::HeartbeatMisses => "scadles_heartbeat_misses_total",
+            Counter::Retransmits => "scadles_retransmits_total",
+            Counter::RoundReplays => "scadles_round_replays_total",
+            Counter::WitnessAcks => "scadles_witness_acks_total",
         }
     }
 }
@@ -109,11 +128,14 @@ pub enum Gauge {
     RateEst = 5,
     /// Virtual clock at run end (seconds).
     VirtualTimeS = 6,
+    /// Runtime: the witness-quorum threshold in force (acks required to
+    /// commit a round; 0 when the runtime is not engaged).
+    WitnessQuorum = 7,
 }
 
 impl Gauge {
     /// Every gauge, in export order.
-    pub const ALL: [Gauge; 7] = [
+    pub const ALL: [Gauge; 8] = [
         Gauge::BufferFinalSamples,
         Gauge::BufferPeakSamples,
         Gauge::BufferP50Samples,
@@ -121,6 +143,7 @@ impl Gauge {
         Gauge::EfResidualNorm2,
         Gauge::RateEst,
         Gauge::VirtualTimeS,
+        Gauge::WitnessQuorum,
     ];
 
     /// Prometheus metric name.
@@ -133,6 +156,7 @@ impl Gauge {
             Gauge::EfResidualNorm2 => "scadles_ef_residual_norm2",
             Gauge::RateEst => "scadles_rate_est_samples_per_s",
             Gauge::VirtualTimeS => "scadles_virtual_time_s",
+            Gauge::WitnessQuorum => "scadles_witness_quorum",
         }
     }
 }
@@ -222,6 +246,16 @@ mod tests {
         for g in Gauge::ALL {
             assert!(g.name().starts_with("scadles_"));
             assert!(seen.insert(g.name()));
+        }
+        // the resilience metrics are part of the stable export surface
+        for name in [
+            "scadles_heartbeat_misses_total",
+            "scadles_retransmits_total",
+            "scadles_round_replays_total",
+            "scadles_witness_acks_total",
+            "scadles_witness_quorum",
+        ] {
+            assert!(seen.contains(name), "missing {name}");
         }
     }
 }

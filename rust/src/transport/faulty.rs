@@ -1,0 +1,259 @@
+//! Deterministic transport-fault injection: the `--net` presets.
+//!
+//! [`FaultyTransport`] wraps any [`Transport`] and applies one
+//! [`NetPreset`]'s drop/delay/duplicate/partition process to every
+//! send. Each device endpoint owns a Pcg64 substream re-derived at
+//! [`FaultyTransport::begin_round`] from `(seed, device, round)` — so
+//! a round's fault pattern is pure in those three values, independent
+//! of pool width and of everything that happened in other rounds.
+//! Within a round the streams keep advancing: a replayed commit phase
+//! draws *fresh* outcomes, which is exactly why a bounded retry can
+//! succeed where the first attempt failed.
+//!
+//! `NetPreset::None` never constructs a wrapper at all
+//! ([`FaultyTransport::from_preset`] returns `None`): zero RNG draws,
+//! zero overhead, bitwise the bare transport.
+
+use crate::config::NetPreset;
+use crate::rng::Pcg64;
+use crate::Result;
+
+use super::{Envelope, Transport};
+
+/// Base Pcg64 stream id for transport faults; device `i` draws from
+/// `NET_STREAM_BASE + i`. Disjoint from every other substream family
+/// (rates 0x5CAD, hetero 0x4E7E_xxxx, devices 0xDE1C_Exxx, dynamics
+/// 0xD1AA_xxxx, faults 0xFA17_xxxx, wire 0x317E).
+pub const NET_STREAM_BASE: u64 = 0x4EE7_0000;
+
+/// Ground-truth totals of what the wrapper did to the traffic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetCounters {
+    /// Sends dropped (including everything to/from a partitioned device).
+    pub dropped: u64,
+    /// Sends delivered late.
+    pub delayed: u64,
+    /// Extra copies injected.
+    pub duplicated: u64,
+    /// Device-rounds spent unreachable.
+    pub partitioned_device_rounds: u64,
+}
+
+/// A [`Transport`] wrapper that applies a [`NetPreset`]'s fault process.
+#[derive(Debug)]
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    preset: NetPreset,
+    seed: u64,
+    /// Per-device fault substreams, re-derived each round.
+    rngs: Vec<Pcg64>,
+    /// This round's unreachable devices (partition preset only).
+    partitioned: Vec<bool>,
+    counters: NetCounters,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    /// Wrap `inner` under `preset`. `NetPreset::None` returns `None` —
+    /// the caller keeps the bare transport and the no-op stays exact.
+    pub fn from_preset(inner: T, preset: &NetPreset, devices: usize, seed: u64) -> Option<Self> {
+        if preset.is_none() {
+            return None;
+        }
+        let mut t = Self {
+            inner,
+            preset: *preset,
+            seed,
+            rngs: Vec::with_capacity(devices),
+            partitioned: vec![false; devices],
+            counters: NetCounters::default(),
+        };
+        t.derive_streams(0, devices);
+        Some(t)
+    }
+
+    fn derive_streams(&mut self, round: usize, devices: usize) {
+        // splitmix-style odd-constant mix keeps (seed, round) pairs
+        // pairwise distinct without coupling adjacent rounds
+        let mixed = self.seed ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.rngs.clear();
+        self.rngs
+            .extend((0..devices).map(|i| Pcg64::new(mixed, NET_STREAM_BASE + i as u64)));
+    }
+
+    /// Re-derive every device substream for `round` and draw this
+    /// round's partition outcomes (one draw per device, device order,
+    /// partition preset only). Call once per round — replays within
+    /// the round keep drawing from the same streams.
+    pub fn begin_round(&mut self, round: usize) {
+        let devices = self.partitioned.len();
+        self.derive_streams(round, devices);
+        let frac = self.preset.partition_frac();
+        if frac > 0.0 {
+            for i in 0..devices {
+                self.partitioned[i] = self.rngs[i].f64() < frac;
+                if self.partitioned[i] {
+                    self.counters.partitioned_device_rounds += 1;
+                }
+            }
+        }
+    }
+
+    /// Whether `device` is unreachable this round.
+    pub fn is_partitioned(&self, device: usize) -> bool {
+        self.partitioned.get(device).copied().unwrap_or(false)
+    }
+
+    pub fn counters(&self) -> NetCounters {
+        self.counters
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn send(&mut self, env: Envelope, extra_ticks: u32) -> Result<()> {
+        let dev = env.device() as usize;
+        if self.partitioned.get(dev).copied().unwrap_or(false) {
+            self.counters.dropped += 1;
+            return Ok(());
+        }
+        let Some(rng) = self.rngs.get_mut(dev) else {
+            // a message between unknown endpoints passes through clean
+            return self.inner.send(env, extra_ticks);
+        };
+        let mut extra = extra_ticks;
+        let drop_frac = self.preset.drop_frac();
+        if drop_frac > 0.0 && rng.f64() < drop_frac {
+            self.counters.dropped += 1;
+            return Ok(());
+        }
+        let delay_frac = self.preset.delay_frac();
+        if delay_frac > 0.0 && rng.f64() < delay_frac {
+            extra += 1 + rng.below(self.preset.max_delay() as usize) as u32;
+            self.counters.delayed += 1;
+        }
+        let dup_frac = self.preset.dup_frac();
+        let dup = dup_frac > 0.0 && rng.f64() < dup_frac;
+        self.inner.send(env, extra)?;
+        if dup {
+            self.counters.duplicated += 1;
+            self.inner.send(env, extra)?;
+        }
+        Ok(())
+    }
+
+    fn poll(&mut self, out: &mut Vec<Envelope>) -> Result<()> {
+        self.inner.poll(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{InProcTransport, Msg, COORDINATOR};
+
+    fn hb(from: u32, round: u32) -> Envelope {
+        Envelope::new(from, COORDINATOR, Msg::Heartbeat { round })
+    }
+
+    fn drain_all<T: Transport>(t: &mut T, ticks: usize) -> Vec<Envelope> {
+        let mut out = Vec::new();
+        for _ in 0..ticks {
+            t.poll(&mut out).unwrap();
+        }
+        out
+    }
+
+    #[test]
+    fn none_preset_builds_no_wrapper() {
+        assert!(FaultyTransport::from_preset(
+            InProcTransport::new(),
+            &NetPreset::None,
+            4,
+            42
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn fault_pattern_is_pure_in_seed_device_round() {
+        let run = |seed: u64| -> (Vec<Envelope>, NetCounters) {
+            let mut t = FaultyTransport::from_preset(
+                InProcTransport::new(),
+                &NetPreset::lossy(0.5, 0.5, 3),
+                4,
+                seed,
+            )
+            .unwrap();
+            let mut arrived = Vec::new();
+            for round in 0..3 {
+                t.begin_round(round);
+                for d in 0..4 {
+                    for _ in 0..4 {
+                        t.send(hb(d, round as u32), 0).unwrap();
+                    }
+                }
+                arrived.extend(drain_all(&mut t, 8));
+            }
+            (arrived, t.counters())
+        };
+        let (a1, c1) = run(7);
+        let (a2, c2) = run(7);
+        assert_eq!(a1, a2);
+        assert_eq!(c1, c2);
+        // a lossy preset at 0.5 over 48 sends drops and delays some
+        assert!(c1.dropped > 0 && c1.delayed > 0, "{c1:?}");
+        assert!(a1.len() < 48);
+        // a different seed sees a different pattern
+        let (a3, _) = run(8);
+        assert_ne!(a1, a3);
+    }
+
+    #[test]
+    fn partitioned_devices_are_unreachable_all_round() {
+        // partition:0.999 → with 8 devices some round partitions one
+        let mut t = FaultyTransport::from_preset(
+            InProcTransport::new(),
+            &NetPreset::partition(0.999),
+            8,
+            1,
+        )
+        .unwrap();
+        t.begin_round(0);
+        let parted: Vec<usize> = (0..8).filter(|&d| t.is_partitioned(d)).collect();
+        assert!(!parted.is_empty());
+        for d in 0..8u32 {
+            t.send(hb(d, 0), 0).unwrap();
+        }
+        let arrived = drain_all(&mut t, 4);
+        for env in &arrived {
+            assert!(!parted.contains(&(env.from as usize)));
+        }
+        assert_eq!(
+            t.counters().partitioned_device_rounds,
+            parted.len() as u64
+        );
+    }
+
+    #[test]
+    fn duplicates_inject_extra_copies() {
+        let mut t = FaultyTransport::from_preset(
+            InProcTransport::new(),
+            &NetPreset::dup(1.0),
+            2,
+            42,
+        )
+        .unwrap();
+        t.begin_round(0);
+        t.send(hb(0, 0), 0).unwrap();
+        let arrived = drain_all(&mut t, 2);
+        assert_eq!(arrived.len(), 2);
+        assert_eq!(t.counters().duplicated, 1);
+    }
+}

@@ -1,0 +1,228 @@
+//! Message transport for the coordinator runtime.
+//!
+//! The [`Transport`] trait is the one seam between the coordinator's
+//! control plane (rendezvous, heartbeats, witness-quorum commit) and
+//! how its messages actually move. Three implementations:
+//!
+//! * [`InProcTransport`] — a virtual-time queue with a one-tick base
+//!   latency; every simulated run and test uses it.
+//! * [`FaultyTransport`] — a deterministic wrapper that drops, delays,
+//!   duplicates or partitions messages from per-device Pcg64 substreams
+//!   pure in `(seed, device, round)` ([`crate::config::NetPreset`]).
+//! * [`TcpTransport`] / [`TcpClient`] — a minimal newline-delimited TCP
+//!   transport behind `repro serve` / `repro join` for the multi-process
+//!   localhost demo.
+//!
+//! Time is *ticks*: each [`Transport::poll`] advances one tick and
+//! drains everything due, in `(due tick, send order)` order — so
+//! delivery order is a pure function of the send sequence and the fault
+//! draws, never of host scheduling. The coordinator canonicalizes
+//! arrivals by device id before acting on them, which is what keeps a
+//! lossy run's *training* arithmetic bitwise identical to the lossless
+//! run: transport faults change retry patterns and control-plane
+//! counters, not reduction order.
+
+mod faulty;
+mod inproc;
+mod tcp;
+
+pub use faulty::{FaultyTransport, NetCounters, NET_STREAM_BASE};
+pub use inproc::InProcTransport;
+pub use tcp::{TcpClient, TcpTransport};
+
+use anyhow::bail;
+
+use crate::Result;
+
+/// The coordinator's address (devices are `0..n`).
+pub const COORDINATOR: u32 = u32::MAX;
+
+/// Control-plane message taxonomy (the XAIN coordinator shapes:
+/// rendezvous, round heartbeats, witness attestation, commit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Msg {
+    /// Device → coordinator: rendezvous request.
+    Join,
+    /// Coordinator → device: rendezvous accepted.
+    Welcome { devices: u32, rounds: u32 },
+    /// Coordinator → device: a round opened.
+    RoundStart { round: u32 },
+    /// Device → coordinator: liveness for `round` (resent every tick
+    /// until heard or the deadline evicts the device).
+    Heartbeat { round: u32 },
+    /// Device → coordinator: the gradient frame for `round` arrived
+    /// (the payload itself lives in the engine; this is its delivery).
+    Frame { round: u32 },
+    /// Coordinator → witness: attest this round's aggregate digest.
+    WitnessReq { round: u32, digest: u64 },
+    /// Witness → coordinator: digest attestation.
+    WitnessAck { round: u32, digest: u64 },
+    /// Coordinator → device: the round committed.
+    Commit { round: u32 },
+    /// Coordinator → device: the run is over.
+    Finish,
+}
+
+/// One addressed message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Envelope {
+    pub from: u32,
+    pub to: u32,
+    pub msg: Msg,
+}
+
+impl Envelope {
+    pub fn new(from: u32, to: u32, msg: Msg) -> Self {
+        Self { from, to, msg }
+    }
+
+    /// The device endpoint of this message (the non-coordinator side) —
+    /// the substream every fault draw for it comes from.
+    pub fn device(&self) -> u32 {
+        if self.from == COORDINATOR {
+            self.to
+        } else {
+            self.from
+        }
+    }
+}
+
+/// A message transport. Implementations must deliver in deterministic
+/// `(due tick, send order)` order; droppiness belongs in
+/// [`FaultyTransport`], not in the base transports.
+pub trait Transport {
+    fn name(&self) -> &'static str;
+
+    /// Queue `env` for delivery after the base latency plus
+    /// `extra_ticks` (a fault wrapper's delay; 0 for a direct send).
+    fn send(&mut self, env: Envelope, extra_ticks: u32) -> Result<()>;
+
+    /// Advance one tick and append everything that arrives to `out`.
+    fn poll(&mut self, out: &mut Vec<Envelope>) -> Result<()>;
+}
+
+// ---- line codec (the TCP wire format; tested here, used by tcp.rs) ---
+
+/// `"<from> <to> <TAG> [args...]"` — one envelope per line.
+pub fn encode_line(env: &Envelope) -> String {
+    let head = format!("{} {}", env.from, env.to);
+    match env.msg {
+        Msg::Join => format!("{head} JOIN"),
+        Msg::Welcome { devices, rounds } => format!("{head} WELCOME {devices} {rounds}"),
+        Msg::RoundStart { round } => format!("{head} ROUND {round}"),
+        Msg::Heartbeat { round } => format!("{head} HB {round}"),
+        Msg::Frame { round } => format!("{head} FRAME {round}"),
+        Msg::WitnessReq { round, digest } => format!("{head} WREQ {round} {digest}"),
+        Msg::WitnessAck { round, digest } => format!("{head} WACK {round} {digest}"),
+        Msg::Commit { round } => format!("{head} COMMIT {round}"),
+        Msg::Finish => format!("{head} FIN"),
+    }
+}
+
+/// Parse one [`encode_line`] line back; every malformed field is a
+/// descriptive error, never a panic.
+pub fn decode_line(line: &str) -> Result<Envelope> {
+    let mut parts = line.split_ascii_whitespace();
+    let mut field = |what: &str| -> Result<&str> {
+        match parts.next() {
+            Some(p) => Ok(p),
+            None => bail!("truncated transport line {line:?}: missing {what}"),
+        }
+    };
+    let addr = |p: &str| -> Result<u32> {
+        p.parse()
+            .map_err(|e| anyhow::anyhow!("bad address {p:?} in transport line {line:?}: {e}"))
+    };
+    let num = |p: &str| -> Result<u32> {
+        p.parse()
+            .map_err(|e| anyhow::anyhow!("bad number {p:?} in transport line {line:?}: {e}"))
+    };
+    let from = addr(field("from")?)?;
+    let to = addr(field("to")?)?;
+    let tag = field("tag")?;
+    let msg = match tag {
+        "JOIN" => Msg::Join,
+        "WELCOME" => Msg::Welcome { devices: num(field("devices")?)?, rounds: num(field("rounds")?)? },
+        "ROUND" => Msg::RoundStart { round: num(field("round")?)? },
+        "HB" => Msg::Heartbeat { round: num(field("round")?)? },
+        "FRAME" => Msg::Frame { round: num(field("round")?)? },
+        "WREQ" => Msg::WitnessReq {
+            round: num(field("round")?)?,
+            digest: field("digest")?.parse()?,
+        },
+        "WACK" => Msg::WitnessAck {
+            round: num(field("round")?)?,
+            digest: field("digest")?.parse()?,
+        },
+        "COMMIT" => Msg::Commit { round: num(field("round")?)? },
+        "FIN" => Msg::Finish,
+        other => bail!("unknown transport tag {other:?} in line {line:?}"),
+    };
+    Ok(Envelope { from, to, msg })
+}
+
+/// FNV-1a over a parameter vector's IEEE-754 bit patterns: the digest
+/// witnesses attest. Bitwise-sensitive by construction — two runs that
+/// agree on the digest agree on every parameter bit.
+pub fn params_digest(params: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for p in params {
+        for b in p.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_round_trip_every_message() {
+        let msgs = [
+            Msg::Join,
+            Msg::Welcome { devices: 4, rounds: 12 },
+            Msg::RoundStart { round: 3 },
+            Msg::Heartbeat { round: 3 },
+            Msg::Frame { round: 3 },
+            Msg::WitnessReq { round: 3, digest: u64::MAX },
+            Msg::WitnessAck { round: 3, digest: 0xDEAD_BEEF },
+            Msg::Commit { round: 3 },
+            Msg::Finish,
+        ];
+        for (i, msg) in msgs.into_iter().enumerate() {
+            let env = Envelope::new(i as u32, COORDINATOR, msg);
+            let back = decode_line(&encode_line(&env)).unwrap();
+            assert_eq!(back, env, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_lines_error_instead_of_panicking() {
+        assert!(decode_line("").is_err());
+        assert!(decode_line("0").is_err());
+        assert!(decode_line("0 1 NOPE").is_err());
+        assert!(decode_line("0 1 HB").is_err());
+        assert!(decode_line("0 1 HB x").is_err());
+        assert!(decode_line("a 1 HB 3").is_err());
+        assert!(decode_line("0 1 WREQ 3").is_err());
+    }
+
+    #[test]
+    fn envelope_device_is_the_non_coordinator_side() {
+        let up = Envelope::new(2, COORDINATOR, Msg::Join);
+        let down = Envelope::new(COORDINATOR, 2, Msg::Finish);
+        assert_eq!(up.device(), 2);
+        assert_eq!(down.device(), 2);
+    }
+
+    #[test]
+    fn params_digest_is_bit_sensitive() {
+        let a = params_digest(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, params_digest(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, params_digest(&[1.0, 2.0, 3.0000002]));
+        assert_ne!(params_digest(&[0.0]), params_digest(&[-0.0]));
+    }
+}

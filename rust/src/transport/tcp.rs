@@ -1,0 +1,299 @@
+//! Minimal TCP transport for the multi-process localhost demo
+//! (`repro serve` / `repro join`).
+//!
+//! One newline-delimited [`super::encode_line`] envelope per line.
+//! [`TcpTransport`] is the coordinator-side hub: it accepts one
+//! connection per device at rendezvous, then routes sends by device id
+//! and drains whatever bytes have arrived on each poll (non-blocking,
+//! device order). [`TcpClient`] is the worker side: one stream to the
+//! coordinator. Both implement [`Transport`], so the `--net` wrapper
+//! composes over TCP exactly as it does in-proc — drops and delays are
+//! injected deterministically *before* the socket ever sees the bytes.
+//!
+//! A peer that vanishes (reset, closed socket) is dropped from the
+//! roster rather than crashing the run: its messages stop arriving,
+//! which is precisely the failure mode the heartbeat deadline and the
+//! witness quorum exist to absorb.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context};
+
+use crate::Result;
+
+use super::{decode_line, encode_line, Envelope, Msg, Transport, COORDINATOR};
+
+fn read_available(
+    stream: &mut TcpStream,
+    buf: &mut String,
+    out: &mut Vec<Envelope>,
+) -> Result<bool> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(false), // peer closed
+            Ok(n) => buf.push_str(&String::from_utf8_lossy(&chunk[..n])),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return Ok(false),
+        }
+    }
+    while let Some(nl) = buf.find('\n') {
+        let line: String = buf.drain(..=nl).collect();
+        let line = line.trim();
+        if !line.is_empty() {
+            out.push(decode_line(line)?);
+        }
+    }
+    Ok(true)
+}
+
+/// Coordinator-side TCP hub: one connected stream per device.
+#[derive(Debug)]
+pub struct TcpTransport {
+    listener: TcpListener,
+    /// `streams[d]` is device `d`'s connection (`None` once it vanished).
+    streams: Vec<Option<TcpStream>>,
+    bufs: Vec<String>,
+    tick: u64,
+    seq: u64,
+    /// `(due tick, send seq, envelope)` — flushed to sockets on poll.
+    outbox: Vec<(u64, u64, Envelope)>,
+}
+
+impl TcpTransport {
+    /// Bind the coordinator hub on `127.0.0.1:port` for `devices`
+    /// workers.
+    pub fn bind(port: u16, devices: usize) -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding coordinator on 127.0.0.1:{port}"))?;
+        Ok(Self {
+            listener,
+            streams: (0..devices).map(|_| None).collect(),
+            bufs: vec![String::new(); devices],
+            tick: 0,
+            seq: 0,
+            outbox: Vec::new(),
+        })
+    }
+
+    /// The port actually bound (useful with port 0 in tests).
+    pub fn port(&self) -> Result<u16> {
+        Ok(self.listener.local_addr()?.port())
+    }
+
+    /// Rendezvous: accept connections until every device has sent its
+    /// `JOIN`, or `deadline` expires. Returns the joined device ids.
+    pub fn accept_joins(&mut self, deadline: Duration) -> Result<Vec<u32>> {
+        let t0 = Instant::now();
+        self.listener.set_nonblocking(true)?;
+        let mut joined = Vec::new();
+        while joined.len() < self.streams.len() {
+            if t0.elapsed() > deadline {
+                bail!(
+                    "rendezvous timed out: {}/{} devices joined within {deadline:?}",
+                    joined.len(),
+                    self.streams.len()
+                );
+            }
+            match self.listener.accept() {
+                Ok((mut stream, _)) => {
+                    // the first line must be the device's JOIN
+                    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+                    let mut buf = String::new();
+                    let mut first = Vec::new();
+                    while first.is_empty() {
+                        if !read_available(&mut stream, &mut buf, &mut first)? {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                    }
+                    let env = first.remove(0);
+                    let d = match env.msg {
+                        Msg::Join => env.from as usize,
+                        other => bail!("expected JOIN at rendezvous, got {other:?}"),
+                    };
+                    if d >= self.streams.len() {
+                        bail!("device id {d} out of range (fleet of {})", self.streams.len());
+                    }
+                    stream.set_nonblocking(true)?;
+                    stream.set_nodelay(true)?;
+                    self.streams[d] = Some(stream);
+                    self.bufs[d] = buf;
+                    joined.push(d as u32);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        joined.sort_unstable();
+        Ok(joined)
+    }
+
+    /// Devices still connected.
+    pub fn connected(&self) -> usize {
+        self.streams.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn send(&mut self, env: Envelope, extra_ticks: u32) -> Result<()> {
+        self.outbox.push((self.tick + 1 + extra_ticks as u64, self.seq, env));
+        self.seq += 1;
+        Ok(())
+    }
+
+    fn poll(&mut self, out: &mut Vec<Envelope>) -> Result<()> {
+        self.tick += 1;
+        self.outbox.sort_unstable_by_key(|&(due, seq, _)| (due, seq));
+        let due = self.outbox.partition_point(|&(due, _, _)| due <= self.tick);
+        for (_, _, env) in self.outbox.drain(..due) {
+            let d = env.to as usize;
+            let Some(Some(stream)) = self.streams.get_mut(d) else { continue };
+            let line = format!("{}\n", encode_line(&env));
+            if stream.write_all(line.as_bytes()).is_err() {
+                self.streams[d] = None; // peer vanished: unreachable, not fatal
+            }
+        }
+        for d in 0..self.streams.len() {
+            if let Some(stream) = self.streams[d].as_mut() {
+                if !read_available(stream, &mut self.bufs[d], out)? {
+                    self.streams[d] = None;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Worker-side TCP transport: one stream to the coordinator.
+#[derive(Debug)]
+pub struct TcpClient {
+    device: u32,
+    stream: TcpStream,
+    buf: String,
+}
+
+impl TcpClient {
+    /// Connect to the coordinator and send the rendezvous `JOIN`.
+    pub fn connect(port: u16, device: u32, deadline: Duration) -> Result<Self> {
+        let t0 = Instant::now();
+        let stream = loop {
+            match TcpStream::connect(("127.0.0.1", port)) {
+                Ok(s) => break s,
+                Err(e) if t0.elapsed() < deadline => {
+                    let _ = e; // coordinator may not be listening yet
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("connecting to coordinator on port {port}"));
+                }
+            }
+        };
+        stream.set_nodelay(true)?;
+        stream.set_nonblocking(true)?;
+        let mut c = Self { device, stream, buf: String::new() };
+        c.send(Envelope::new(device, COORDINATOR, Msg::Join), 0)?;
+        // the join must leave immediately — there is no outbox here
+        Ok(c)
+    }
+
+    pub fn device(&self) -> u32 {
+        self.device
+    }
+
+    /// Block (politely) until at least one envelope arrives or the
+    /// deadline passes; drains everything available.
+    pub fn recv_timeout(&mut self, deadline: Duration) -> Result<Vec<Envelope>> {
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        while out.is_empty() {
+            self.poll(&mut out)?;
+            if out.is_empty() {
+                if t0.elapsed() > deadline {
+                    bail!("device {}: no message within {deadline:?}", self.device);
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Transport for TcpClient {
+    fn name(&self) -> &'static str {
+        "tcp-client"
+    }
+
+    fn send(&mut self, env: Envelope, _extra_ticks: u32) -> Result<()> {
+        let line = format!("{}\n", encode_line(&env));
+        self.stream
+            .write_all(line.as_bytes())
+            .with_context(|| format!("device {}: coordinator went away", self.device))?;
+        Ok(())
+    }
+
+    fn poll(&mut self, out: &mut Vec<Envelope>) -> Result<()> {
+        if !read_available(&mut self.stream, &mut self.buf, out)? {
+            bail!("device {}: coordinator closed the connection", self.device);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn localhost_rendezvous_heartbeat_round_trip() {
+        let mut hub = TcpTransport::bind(0, 2).unwrap();
+        let port = hub.port().unwrap();
+        let workers: Vec<std::thread::JoinHandle<Result<()>>> = (0..2u32)
+            .map(|d| {
+                std::thread::spawn(move || {
+                    let mut c = TcpClient::connect(port, d, Duration::from_secs(5))?;
+                    c.send(
+                        Envelope::new(d, COORDINATOR, Msg::Heartbeat { round: 0 }),
+                        0,
+                    )?;
+                    let got = c.recv_timeout(Duration::from_secs(5))?;
+                    anyhow::ensure!(
+                        got.iter().any(|e| e.msg == Msg::Finish),
+                        "expected FINISH, got {got:?}"
+                    );
+                    Ok(())
+                })
+            })
+            .collect();
+        let joined = hub.accept_joins(Duration::from_secs(5)).unwrap();
+        assert_eq!(joined, vec![0, 1]);
+        // collect both heartbeats
+        let mut got = Vec::new();
+        let t0 = Instant::now();
+        while got.len() < 2 && t0.elapsed() < Duration::from_secs(5) {
+            hub.poll(&mut got).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut from: Vec<u32> = got.iter().map(|e| e.from).collect();
+        from.sort_unstable();
+        assert_eq!(from, vec![0, 1]);
+        for d in 0..2u32 {
+            hub.send(Envelope::new(COORDINATOR, d, Msg::Finish), 0).unwrap();
+        }
+        let mut sink = Vec::new();
+        hub.poll(&mut sink).unwrap(); // flush the outbox
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+    }
+}

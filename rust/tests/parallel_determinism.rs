@@ -21,6 +21,11 @@
 //! worker-owned `SparseGrad` views) and every dense case the
 //! coordinate-chunked parallel aggregation, so this matrix is also the
 //! determinism contract for both.
+//!
+//! The final section pins the resilient coordinator runtime: a lossy
+//! transport must not move a training bit at any pool width, evictions
+//! and snapshot replays must be deterministic, and the checkpoint
+//! fingerprint must cover the control-plane config.
 
 use scadles::buffer::BufferPolicy;
 use scadles::config::{
@@ -805,6 +810,211 @@ fn corrupt_and_truncated_checkpoints_error_instead_of_panicking() {
     std::fs::remove_file(&path).unwrap();
     let err = mk().restore_checkpoint(&path).unwrap_err().to_string();
     assert!(err.contains("reading checkpoint"), "got: {err}");
+}
+
+// ===========================================================================
+// Resilient coordinator runtime (rendezvous / heartbeat / witness-quorum)
+// ===========================================================================
+
+use scadles::config::NetPreset;
+use scadles::coordinator::{CoordinatorRuntime, RuntimeOpts, RuntimeState};
+
+/// Drive a full run through the coordinator runtime's state machine and
+/// return the output plus the final parameter vector's bit patterns.
+/// The config layers compression + EF + a skewed cluster + a semi-sync
+/// policy, so a control-plane slip that leaked into training would have
+/// plenty of state to corrupt.
+fn run_runtime(net: NetPreset, opts: RuntimeOpts, threads: usize) -> (TrainerOutput, Vec<u32>) {
+    let cfg = ExperimentConfig::builder("mlp_c10")
+        .devices(8)
+        .rounds(12)
+        .seed(11)
+        .preset(StreamPreset::S1)
+        .buffer_policy(BufferPolicy::Truncation)
+        .compression(CompressionConfig {
+            ratio: 0.1,
+            delta: 0.5,
+            ewma_alpha: 0.3,
+            error_feedback: true,
+        })
+        .hetero(HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 })
+        .sync(SyncPreset::KSync { frac_pm: 750 })
+        .net(net)
+        .rate_jitter(0.2)
+        .eval_every(4)
+        .worker_threads(threads)
+        .build()
+        .unwrap();
+    let mut rt =
+        CoordinatorRuntime::with_opts(&cfg, Box::new(MockBackend::new(96, 10)), opts).unwrap();
+    let out = rt.run().unwrap();
+    assert_eq!(rt.state(), RuntimeState::Finished, "net={net:?} threads={threads}");
+    let bits = rt.engine().params().iter().map(|p| p.to_bits()).collect();
+    (out, bits)
+}
+
+#[test]
+fn lossy_runtime_model_is_bitwise_the_lossless_model_at_every_pool_width() {
+    // The runtime's keystone: 10% drops + delays on every control
+    // message change the retry patterns and the control-plane ledger —
+    // and not one bit of the trained model — at pool widths 1, 4, 8.
+    let (ref_out, ref_bits) = run_runtime(NetPreset::None, RuntimeOpts::default(), 1);
+    assert_eq!(ref_out.resilience, Default::default(), "--net none must tally nothing");
+    let mut lossy_ledger = None;
+    for threads in [1usize, 4, 8] {
+        let (out, bits) = run_runtime(NetPreset::None, RuntimeOpts::default(), threads);
+        assert_eq!(bits, ref_bits, "lossless params drifted at width {threads}");
+        assert_outputs_identical(&ref_out, &out, &format!("runtime lossless threads={threads}"));
+
+        let (out, bits) =
+            run_runtime(NetPreset::lossy(0.1, 0.5, 3), RuntimeOpts::default(), threads);
+        assert_eq!(bits, ref_bits, "lossy params differ from lossless at width {threads}");
+        assert_outputs_identical(&ref_out, &out, &format!("runtime lossy threads={threads}"));
+        assert!(out.resilience.witness_acks > 0, "no round ever attested");
+        assert_eq!(out.resilience.round_replays, 0, "plain loss must never force a replay");
+        // the control-plane ledger itself is pool-width invariant too:
+        // transport draws are pure in (seed, device, round)
+        match lossy_ledger {
+            None => lossy_ledger = Some(out.resilience),
+            Some(l) => assert_eq!(out.resilience, l, "ledger drifted at width {threads}"),
+        }
+    }
+}
+
+#[test]
+fn partitioned_devices_are_evicted_and_their_gradients_withheld() {
+    // A partitioned device misses every heartbeat of its round and is
+    // evicted from the barrier: its (already-trained) gradient folds
+    // into the error-feedback residual through the same withhold path
+    // as a K-sync laggard. That *does* move the model — eviction is a
+    // membership change, not transport noise — so the claim here is
+    // the eviction ledger plus pool-width invariance, not lossless
+    // equivalence.
+    let mk = |threads: usize| {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(12)
+            .seed(11)
+            .preset(StreamPreset::S1)
+            .compression(CompressionConfig {
+                ratio: 0.1,
+                delta: 0.5,
+                ewma_alpha: 0.3,
+                error_feedback: true,
+            })
+            .net(NetPreset::partition(0.2))
+            .eval_every(4)
+            .worker_threads(threads)
+            .build()
+            .unwrap();
+        let mut rt = CoordinatorRuntime::new(&cfg, Box::new(MockBackend::new(96, 10))).unwrap();
+        let out = rt.run().unwrap();
+        let partitioned = rt.net_counters().unwrap().partitioned_device_rounds;
+        let bits: Vec<u32> = rt.engine().params().iter().map(|p| p.to_bits()).collect();
+        (out, partitioned, bits)
+    };
+    let (out, partitioned, bits) = mk(1);
+    assert!(partitioned > 0, "partition:0.2 never fired over 96 device-rounds");
+    assert_eq!(
+        out.resilience.heartbeat_misses, partitioned,
+        "every partitioned device-round is exactly one heartbeat miss"
+    );
+    // under BSP the only drop source is the runtime's eviction mask
+    let dropped: usize = out.logs.rounds().iter().map(|l| l.dropped_devices).sum();
+    assert_eq!(dropped as u64, partitioned, "every miss evicts exactly its device");
+    assert!(
+        out.timeline.withheld_rounds() > 0,
+        "evicted gradients must ride the withhold path"
+    );
+    assert!(out.report.final_train_loss.is_finite());
+    for threads in [4usize, 8] {
+        let (wout, wpart, wbits) = mk(threads);
+        assert_eq!(wbits, bits, "eviction schedule drifted at width {threads}");
+        assert_eq!(wpart, partitioned, "partition draws drifted at width {threads}");
+        assert_outputs_identical(&out, &wout, &format!("partition threads={threads}"));
+    }
+}
+
+#[test]
+fn forced_quorum_failure_replays_exactly_once_and_is_bitwise_invisible() {
+    // The replay path end to end: fail round 5's first commit attempt,
+    // watch exactly one snapshot replay, and demand the final model is
+    // still bit-for-bit the unforced run's — at every pool width.
+    let lossy = NetPreset::lossy(0.1, 0.5, 3);
+    for threads in [1usize, 4, 8] {
+        let (clean, clean_bits) = run_runtime(lossy, RuntimeOpts::default(), threads);
+        let (forced, forced_bits) = run_runtime(
+            lossy,
+            RuntimeOpts { force_replay_round: Some(5), ..Default::default() },
+            threads,
+        );
+        assert_eq!(forced.resilience.round_replays, 1, "threads={threads}");
+        assert_eq!(forced.logs.rounds()[5].round_replays, 1, "threads={threads}");
+        assert_eq!(
+            forced_bits, clean_bits,
+            "replay moved a training bit (threads={threads})"
+        );
+        assert_outputs_identical(&clean, &forced, &format!("forced-replay threads={threads}"));
+    }
+}
+
+#[test]
+fn checkpoint_fingerprint_pins_net_witness_and_quorum_config() {
+    // A checkpoint written under one control-plane config must refuse
+    // to restore under any other: `--net`, `--witnesses` and `--quorum`
+    // are all part of the fingerprinted ExperimentConfig.
+    let cfg = |net: &str, witnesses: usize, quorum: usize| {
+        ExperimentConfig::builder("mlp_c10")
+            .devices(4)
+            .rounds(8)
+            .seed(3)
+            .preset(StreamPreset::S1)
+            .net(net.parse().unwrap())
+            .witnesses(witnesses)
+            .quorum(quorum)
+            .eval_every(4)
+            .build()
+            .unwrap()
+    };
+    let mk = |c: &ExperimentConfig| {
+        CoordinatorRuntime::new(c, Box::new(MockBackend::new(96, 10))).unwrap()
+    };
+    let path = std::env::temp_dir().join(format!(
+        "scadles_ckpt_net_fp_{}.ckpt",
+        std::process::id()
+    ));
+    {
+        let mut rt = mk(&cfg("lossy:0.1:0.5:3", 3, 2));
+        while rt.engine().rounds_completed() < 4 {
+            rt.step().unwrap();
+        }
+        rt.save_checkpoint(&path).unwrap();
+    }
+    // the exact config restores and finishes
+    {
+        let mut rt = mk(&cfg("lossy:0.1:0.5:3", 3, 2));
+        rt.restore_checkpoint(&path).unwrap();
+        assert_eq!(rt.engine().rounds_completed(), 4, "resumed round cursor");
+        let out = rt.run().unwrap();
+        assert_eq!(out.logs.rounds().len(), 8);
+    }
+    // any control-plane drift is refused before a byte is parsed
+    for (net, w, q) in [
+        ("lossy:0.3:0.5:3", 3, 2), // different loss rate
+        ("none", 3, 2),            // lossless vs lossy
+        ("lossy:0.1:0.5:3", 4, 2), // witness-set size
+        ("lossy:0.1:0.5:3", 3, 3), // quorum threshold
+    ] {
+        let err = mk(&cfg(net, w, q))
+            .restore_checkpoint(&path)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("different experiment config"),
+            "net={net} witnesses={w} quorum={q}: {err}"
+        );
+    }
+    std::fs::remove_file(&path).unwrap();
 }
 
 #[test]
