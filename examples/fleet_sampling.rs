@@ -1,0 +1,114 @@
+//! Fleet scale-out end to end: the cohort engine sweeping four orders
+//! of magnitude of fleet size at near-constant round cost, plus the
+//! two identities the design is anchored on — `--sample 1.0` engages
+//! the whole sampler machinery yet reproduces the unsampled trainer
+//! bitwise, and hierarchical gateway aggregation folds to the same
+//! bits as the flat reduction.
+//!
+//! ```sh
+//! cargo run --release --offline --example fleet_sampling
+//! ```
+//!
+//! Runs on the deterministic mock substrate (no artifacts needed). The
+//! same machinery is behind `repro train --sample K --tiers gateways:G`
+//! and the `repro exp scale` sweep.
+
+use scadles::config::{ExperimentConfig, SamplePreset, StreamPreset, TierPreset};
+use scadles::coordinator::fleet::peak_rss_bytes;
+use scadles::coordinator::{FleetEngine, FleetSampler, MockBackend, RoundEngine, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the participant draw: pure in (seed, round) -------------------
+    // No history feeds it: a sampler asked for round 5 first and a
+    // sampler asked for rounds 0..5 first return the same round-5 set.
+    let mut a = FleetSampler::new(SamplePreset::Count(4), 1000, 42);
+    let mut b = FleetSampler::new(SamplePreset::Count(4), 1000, 42);
+    let out_of_order = b.draw(5);
+    for r in 0..5 {
+        a.draw(r);
+    }
+    assert_eq!(a.draw(5), out_of_order);
+    println!("round-5 draw of 4-of-1000, seed 42: {out_of_order:?} (history-free)\n");
+
+    // --- 2. --sample 1.0 is the unsampled trainer, bitwise ------------------
+    let cfg = |sample: SamplePreset| {
+        ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(8)
+            .preset(StreamPreset::S1)
+            .sample(sample)
+            .eval_every(4)
+            .build()
+            .unwrap()
+    };
+    let run = |sample: SamplePreset| -> anyhow::Result<Vec<u32>> {
+        let mut t = Trainer::with_backend(&cfg(sample), Box::new(MockBackend::new(2048, 10)))?;
+        t.run()?;
+        Ok(t.params().iter().map(|p| p.to_bits()).collect())
+    };
+    let unsampled = run(SamplePreset::Full)?;
+    let identity = run(SamplePreset::frac(1.0))?;
+    assert_eq!(unsampled, identity);
+    println!("--sample 1.0 (full sampler machinery) == default trainer, bitwise ✓");
+
+    // --- 3. gateways fold to the flat reduction's bits ----------------------
+    // Gateway blocks are contiguous in device order, so the two-tier
+    // fold IS the flat fold; only sync pricing differs.
+    let one_round = |tiers: TierPreset| -> anyhow::Result<Vec<u32>> {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(4)
+            .preset(StreamPreset::S1)
+            .tiers(tiers)
+            .build()
+            .unwrap();
+        let mut e = RoundEngine::new(&cfg, Box::new(MockBackend::new(2048, 10)))?;
+        e.round()?;
+        Ok(e.params().iter().map(|p| p.to_bits()).collect())
+    };
+    assert_eq!(
+        one_round(TierPreset::Flat)?,
+        one_round(TierPreset::gateways_preset(4))?
+    );
+    println!("--tiers gateways:4 fold == flat fold, bitwise ✓\n");
+
+    // --- 4. the sweep: O(sampled) rounds at any fleet size ------------------
+    // 256 participants, 32 gateways, d=4096 — per-round cost is
+    // O(k·d + cohorts), so rounds/sec stays near-flat from 1e3 to 1e6
+    // devices while resident state grows only with the O(m) scalar
+    // cohort store.
+    println!("fleet sweep (k=256, G=32, d=4096, 3 rounds each):");
+    println!(
+        "{:>10} {:>8} {:>14} {:>12} {:>14}",
+        "devices", "cohorts", "rounds/sec", "peak rss MB", "backlog est"
+    );
+    for m in [1_000usize, 10_000, 100_000, 1_000_000] {
+        let mut e = FleetEngine::new(
+            m,
+            4096,
+            SamplePreset::Count(256.min(m)),
+            TierPreset::gateways_preset(32.min(m)),
+            42,
+        );
+        let t0 = std::time::Instant::now();
+        let mut last = e.round();
+        for _ in 1..3 {
+            last = e.round();
+        }
+        let rps = 3.0 / t0.elapsed().as_secs_f64().max(1e-9);
+        println!(
+            "{:>10} {:>8} {:>14.1} {:>12.1} {:>14.0}",
+            m,
+            e.store().cohort_count(),
+            rps,
+            peak_rss_bytes() as f64 / (1024.0 * 1024.0),
+            last.backlog_est,
+        );
+    }
+    println!(
+        "\nnon-sampled devices never run: their rates and backlogs advance\n\
+         analytically per cohort (closed-form diurnal integral), so a round\n\
+         touches k devices + C cohorts + G gateways no matter how big m is."
+    );
+    Ok(())
+}

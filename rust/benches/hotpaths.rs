@@ -389,6 +389,49 @@ fn main() {
         bench_engine("diurnal:0.5:120+burst:4:0.25:20:60+churn:0.25:120:0.5"),
     );
 
+    // --- fleet cohort engine -------------------------------------------------
+    // The O(sampled) scaling claim, measured: one cohort-engine round at
+    // m ∈ {1e3..1e6} with k=256 sampled participants and 32 gateways.
+    // Round cost is O(k·d + cohorts) — the trajectory across the four
+    // sizes should be near-flat, because only the O(C) lazy cohort
+    // advance and the O(G) tier pricing see the fleet size at all. The
+    // 1e5 case is the ceiling-gated one in BENCH_baseline.json;
+    // `fleet/sample-draw` isolates the Floyd draw itself (k=256 of 1e6,
+    // pure in (seed, round)) — the only per-round cost that is not
+    // already per-participant.
+    b.header("fleet cohort engine (k=256, G=32, d=4096)");
+    use scadles::config::{SamplePreset, TierPreset};
+    use scadles::coordinator::{FleetEngine, FleetSampler};
+    let fleet_d = 4096;
+    let mut fleet_ns = Vec::new();
+    for (m, case) in [
+        (1_000usize, "fleet/cohort-round-1e3"),
+        (10_000, "fleet/cohort-round-1e4"),
+        (100_000, "fleet/cohort-round-1e5"),
+        (1_000_000, "fleet/cohort-round-1e6"),
+    ] {
+        let mut e = FleetEngine::new(
+            m,
+            fleet_d,
+            SamplePreset::Count(256),
+            TierPreset::gateways_preset(32),
+            11,
+        );
+        let ns = b.case(case, || e.round().sampled).ns_per_iter();
+        fleet_ns.push((m, ns));
+    }
+    println!(
+        "fleet: round at m=1e6 costs {:.2}x the m=1e3 round (O(sampled) target: \
+         near-flat; only the O(cohorts) advance and O(G) pricing scale at all)",
+        fleet_ns[3].1 / fleet_ns[0].1
+    );
+    let mut draw_sampler = FleetSampler::new(SamplePreset::Count(256), 1_000_000, 11);
+    let mut draw_round = 0usize;
+    b.case("fleet/sample-draw", || {
+        draw_round += 1;
+        draw_sampler.draw(draw_round).len()
+    });
+
     // --- stream substrate --------------------------------------------------
     b.header("stream substrate");
     let topic = Topic::new("bench", Retention::Truncate { keep: 100_000 });

@@ -7,6 +7,7 @@ use anyhow::ensure;
 use super::cluster::ClusterProfile;
 use super::dynamics::DynamicsPreset;
 use super::faults::{AggPreset, FaultPreset};
+use super::fleet::{SamplePreset, TierPreset};
 use super::hetero::HeteroPreset;
 use super::net::NetPreset;
 use super::presets::StreamPreset;
@@ -168,6 +169,16 @@ pub struct ExperimentConfig {
     /// (default) = all sampled witnesses must ack; a failed quorum
     /// replays the round from its pre-round snapshot.
     pub quorum: usize,
+    /// Per-round participant sampling (`--sample`): each round trains a
+    /// subset drawn pure in (seed, round) from a dedicated Pcg64 stream
+    /// (`full` default builds no sampler — bitwise the unsampled
+    /// engine; `1.0` engages the sampler and must match it bitwise).
+    pub sample: SamplePreset,
+    /// Hierarchical aggregation (`--tiers gateways:G`): devices fold
+    /// into per-gateway partials, gateways reduce into the cloud root,
+    /// each tier priced by its own link (`flat` default is the seed's
+    /// single-ring pricing, bitwise).
+    pub tiers: TierPreset,
     /// Per-round multiplicative jitter std on device rates (intra-device
     /// heterogeneity, §II-A; 0 = constant rates).
     pub rate_jitter: f64,
@@ -243,6 +254,15 @@ impl ExperimentConfig {
         self.agg.validate()?;
         self.wire.validate()?;
         self.net.validate()?;
+        self.sample.validate(self.devices)?;
+        self.tiers.validate(self.devices)?;
+        if !self.tiers.is_flat() {
+            ensure!(
+                self.agg.is_mean(),
+                "hierarchical --tiers requires --agg mean (robust rules don't decompose \
+                 across gateways)"
+            );
+        }
         ensure!(
             self.witnesses <= self.devices,
             "witness set cannot exceed the device count"
@@ -298,6 +318,8 @@ impl ExperimentBuilder {
                 net: NetPreset::None,
                 witnesses: 0,
                 quorum: 0,
+                sample: SamplePreset::Full,
+                tiers: TierPreset::Flat,
                 rate_jitter: 0.0,
                 label_map: LabelMap::Iid,
                 mode: TrainMode::Scadles,
@@ -394,6 +416,16 @@ impl ExperimentBuilder {
     /// Witness acks required to commit a round (0 = all witnesses).
     pub fn quorum(mut self, q: usize) -> Self {
         self.cfg.quorum = q;
+        self
+    }
+    /// Per-round participant sampling (see [`SamplePreset`]).
+    pub fn sample(mut self, s: SamplePreset) -> Self {
+        self.cfg.sample = s;
+        self
+    }
+    /// Hierarchical gateway aggregation (see [`TierPreset`]).
+    pub fn tiers(mut self, t: TierPreset) -> Self {
+        self.cfg.tiers = t;
         self
     }
     pub fn rate_jitter(mut self, j: f64) -> Self {
@@ -649,6 +681,35 @@ mod tests {
         // witnesses 0 means "all committed": quorum bounded by devices
         assert!(ExperimentConfig::builder("mlp_c10").devices(4).quorum(4).build().is_ok());
         assert!(ExperimentConfig::builder("mlp_c10").devices(4).quorum(5).build().is_err());
+    }
+
+    #[test]
+    fn sample_and_tiers_flow_through_builder_and_validate() {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .sample("4".parse().unwrap())
+            .tiers("gateways:2".parse().unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(cfg.sample, SamplePreset::Count(4));
+        assert_eq!(cfg.tiers, TierPreset::gateways_preset(2));
+        // defaults stay the bitwise no-op pair
+        let d = ExperimentConfig::builder("mlp_c10").build().unwrap();
+        assert!(d.sample.is_full());
+        assert!(d.tiers.is_flat());
+        // more gateways than devices is rejected at build time
+        assert!(ExperimentConfig::builder("mlp_c10")
+            .devices(4)
+            .tiers("gateways:8".parse().unwrap())
+            .build()
+            .is_err());
+        // robust aggregators don't decompose across gateways
+        assert!(ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .tiers("gateways:2".parse().unwrap())
+            .agg("median".parse().unwrap())
+            .build()
+            .is_err());
     }
 
     #[test]

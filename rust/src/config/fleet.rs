@@ -1,0 +1,333 @@
+//! Fleet-scale presets: per-round participant sampling and hierarchical
+//! gateway aggregation.
+//!
+//! At edge-fleet scale the coordinator cannot train every device every
+//! round (ROADMAP item 1). Federated practice samples a participant
+//! subset per round (XAIN's `RandomController`), and heterogeneous edge
+//! deployments aggregate device → gateway → cloud so no single
+//! all-reduce ring spans the whole fleet (Hu et al., Deep-Edge):
+//!
+//! * [`SamplePreset`] — `--sample k|frac`: each round trains a subset
+//!   drawn pure in `(seed, round)` from a dedicated Pcg64 stream
+//!   ([`crate::coordinator::fleet::FleetSampler`]). `full` (the
+//!   default) builds no sampler at all — zero RNG draws, bitwise the
+//!   unsampled engine. `1.0` *engages* the sampler and draws the full
+//!   set, which must also be bitwise identical (the regression anchor
+//!   in `tests/parallel_determinism`).
+//! * [`TierPreset`] — `--tiers gateways:G`: devices aggregate into
+//!   per-gateway partials, gateways reduce into the cloud root. The
+//!   gateway of device `i` is the contiguous block `i·G/m`, so the
+//!   flat left-fold over device order *is* the block-partitioned
+//!   hierarchical fold — aggregation stays bitwise identical and only
+//!   the sync *pricing* changes (each tier priced by its own link).
+//!
+//! Both defaults are exact no-ops, the same contract every scenario
+//! layer (`--hetero`/`--dynamics`/`--sync`/`--faults`/`--net`) keeps.
+
+use anyhow::{bail, ensure};
+
+use crate::Result;
+
+/// Per-round participant-sampling preset (`--sample`).
+///
+/// Fractions are stored in parts-per-million so the preset stays
+/// `Eq`/hashable and keeps 1-device resolution at m = 1,000,000.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SamplePreset {
+    /// Every device participates every round; no sampler is built
+    /// (exact no-op — the pre-sampling engine, bit for bit).
+    #[default]
+    Full,
+    /// Exactly `k` devices per round (capped at the fleet size).
+    Count(usize),
+    /// A fixed fraction of the fleet per round, in parts-per-million.
+    Frac { ppm: u32 },
+}
+
+impl SamplePreset {
+    /// Build a fractional preset from a float in `(0, 1]`.
+    pub fn frac(f: f64) -> Self {
+        SamplePreset::Frac { ppm: (f * 1e6).round() as u32 }
+    }
+
+    /// Whether this is the no-sampler default. `Frac {ppm: 1_000_000}`
+    /// is deliberately *not* full: it engages the sampler and draws
+    /// every device — the bitwise identity the anchor test pins.
+    pub fn is_full(&self) -> bool {
+        matches!(self, SamplePreset::Full)
+    }
+
+    /// Participants drawn per round for a fleet of `devices`.
+    pub fn k(&self, devices: usize) -> usize {
+        match *self {
+            SamplePreset::Full => devices,
+            SamplePreset::Count(k) => k.min(devices),
+            SamplePreset::Frac { ppm } => {
+                let k = (devices as u128 * ppm as u128).div_ceil(1_000_000) as usize;
+                k.clamp(1, devices)
+            }
+        }
+    }
+
+    pub fn validate(&self, devices: usize) -> Result<()> {
+        match *self {
+            SamplePreset::Full => {}
+            SamplePreset::Count(k) => {
+                ensure!(k >= 1, "--sample count must be ≥ 1");
+                ensure!(devices >= 1, "--sample needs at least one device");
+            }
+            SamplePreset::Frac { ppm } => {
+                ensure!(
+                    (1..=1_000_000).contains(&ppm),
+                    "--sample fraction must be in (0, 1]"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for SamplePreset {
+    /// The parseable spelling: `full`, a bare integer count, or a
+    /// fraction with a decimal point (`{:?}` keeps the point on whole
+    /// values, so `1.0` round-trips to `Frac`, not `Count(1)`).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            SamplePreset::Full => f.write_str("full"),
+            SamplePreset::Count(k) => write!(f, "{k}"),
+            SamplePreset::Frac { ppm } => write!(f, "{:?}", ppm as f64 / 1e6),
+        }
+    }
+}
+
+impl std::str::FromStr for SamplePreset {
+    type Err = anyhow::Error;
+
+    /// Parse `full`, an integer count (`256`), or a fraction with a
+    /// decimal point or exponent (`0.1`, `1.0`, `1e-6` — tiny
+    /// fractions Display in exponent form).
+    fn from_str(s: &str) -> Result<Self> {
+        let preset = match s.to_lowercase().as_str() {
+            "full" => SamplePreset::Full,
+            t if t.contains('.') || t.contains('e') => {
+                let f: f64 = t
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("invalid --sample fraction {t:?}: {e}"))?;
+                ensure!(
+                    f > 0.0 && f <= 1.0,
+                    "--sample fraction must be in (0, 1], got {f}"
+                );
+                SamplePreset::frac(f)
+            }
+            t => {
+                let k: usize = t.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "invalid --sample {t:?} (full | count k | fraction in (0, 1])"
+                    )
+                })?;
+                ensure!(k >= 1, "--sample count must be ≥ 1");
+                SamplePreset::Count(k)
+            }
+        };
+        Ok(preset)
+    }
+}
+
+/// Hierarchical-aggregation preset (`--tiers`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TierPreset {
+    /// Single flat all-reduce ring over the committing devices (the
+    /// seed pricing, exact no-op).
+    #[default]
+    Flat,
+    /// `G` gateways: devices fold into per-gateway partials (tier 1,
+    /// priced on the slowest member's device link), gateways reduce
+    /// into the cloud root (tier 2, priced on the gateway backhaul).
+    Gateways { gateways: usize },
+}
+
+impl TierPreset {
+    pub fn gateways_preset(g: usize) -> Self {
+        TierPreset::Gateways { gateways: g }
+    }
+
+    /// Whether this is the flat default (the exact no-op path).
+    pub fn is_flat(&self) -> bool {
+        matches!(self, TierPreset::Flat)
+    }
+
+    /// Gateway count (0 when flat).
+    pub fn gateways(&self) -> usize {
+        match *self {
+            TierPreset::Flat => 0,
+            TierPreset::Gateways { gateways } => gateways,
+        }
+    }
+
+    /// Gateway of device `i` in a fleet of `devices`: contiguous blocks
+    /// `i·G/m`, monotone non-decreasing in `i`. Contiguity is the
+    /// bitwise-equality contract: folding block 0, then block 1, …
+    /// into the shared root accumulator replays the flat device-order
+    /// fold exactly (`tests/fleet_scale`).
+    pub fn gateway_of(&self, i: usize, devices: usize) -> usize {
+        match *self {
+            TierPreset::Flat => 0,
+            TierPreset::Gateways { gateways } => {
+                debug_assert!(i < devices);
+                (i as u128 * gateways as u128 / devices.max(1) as u128) as usize
+            }
+        }
+    }
+
+    pub fn validate(&self, devices: usize) -> Result<()> {
+        if let TierPreset::Gateways { gateways } = *self {
+            ensure!(gateways >= 1, "--tiers needs at least one gateway");
+            ensure!(
+                gateways <= devices,
+                "--tiers gateways:{gateways} exceeds the {devices}-device fleet"
+            );
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for TierPreset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            TierPreset::Flat => f.write_str("flat"),
+            TierPreset::Gateways { gateways } => write!(f, "gateways:{gateways}"),
+        }
+    }
+}
+
+impl std::str::FromStr for TierPreset {
+    type Err = anyhow::Error;
+
+    /// Parse `flat` (or `none`) and `gateways:G` (or `gw:G`).
+    fn from_str(s: &str) -> Result<Self> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or_default();
+        let args: Vec<&str> = parts.collect();
+        let preset = match name.to_lowercase().as_str() {
+            "flat" | "none" => {
+                ensure!(args.is_empty(), "flat takes no parameters");
+                TierPreset::Flat
+            }
+            "gateways" | "gw" => {
+                ensure!(args.len() <= 1, "gateways takes one parameter");
+                let g: usize = match args.first() {
+                    None => 8,
+                    Some(a) => a
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("invalid --tiers gateway count {a:?}: {e}"))?,
+                };
+                ensure!(g >= 1, "--tiers needs at least one gateway");
+                TierPreset::Gateways { gateways: g }
+            }
+            other => bail!("unknown tier preset {other:?} (flat|gateways:G)"),
+        };
+        Ok(preset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sample_spellings() {
+        assert_eq!("full".parse::<SamplePreset>().unwrap(), SamplePreset::Full);
+        assert_eq!("256".parse::<SamplePreset>().unwrap(), SamplePreset::Count(256));
+        assert_eq!(
+            "0.25".parse::<SamplePreset>().unwrap(),
+            SamplePreset::Frac { ppm: 250_000 }
+        );
+        // 1.0 engages the sampler (the anchor identity), it is NOT Full
+        assert_eq!(
+            "1.0".parse::<SamplePreset>().unwrap(),
+            SamplePreset::Frac { ppm: 1_000_000 }
+        );
+        assert!("0".parse::<SamplePreset>().is_err());
+        assert!("0.0".parse::<SamplePreset>().is_err());
+        assert!("1.5".parse::<SamplePreset>().is_err());
+        assert!("-3".parse::<SamplePreset>().is_err());
+        assert!("half".parse::<SamplePreset>().is_err());
+    }
+
+    #[test]
+    fn sample_display_round_trips() {
+        for p in [
+            SamplePreset::Full,
+            SamplePreset::Count(1),
+            SamplePreset::Count(100_000),
+            SamplePreset::frac(0.25),
+            SamplePreset::frac(1.0),
+            SamplePreset::Frac { ppm: 1 },
+        ] {
+            let back: SamplePreset = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{p}");
+        }
+    }
+
+    #[test]
+    fn sample_k_resolution() {
+        assert_eq!(SamplePreset::Full.k(1_000_000), 1_000_000);
+        assert_eq!(SamplePreset::Count(256).k(1_000_000), 256);
+        assert_eq!(SamplePreset::Count(20).k(8), 8); // capped at fleet
+        assert_eq!(SamplePreset::frac(0.1).k(1000), 100);
+        assert_eq!(SamplePreset::frac(1.0).k(8), 8);
+        // 1 ppm of a 1e6 fleet is one device; never rounds to zero
+        assert_eq!(SamplePreset::Frac { ppm: 1 }.k(1_000_000), 1);
+        assert_eq!(SamplePreset::Frac { ppm: 1 }.k(10), 1);
+    }
+
+    #[test]
+    fn parses_tier_spellings() {
+        assert_eq!("flat".parse::<TierPreset>().unwrap(), TierPreset::Flat);
+        assert_eq!("none".parse::<TierPreset>().unwrap(), TierPreset::Flat);
+        assert_eq!(
+            "gateways:4".parse::<TierPreset>().unwrap(),
+            TierPreset::Gateways { gateways: 4 }
+        );
+        assert_eq!(
+            "gw:32".parse::<TierPreset>().unwrap(),
+            TierPreset::Gateways { gateways: 32 }
+        );
+        assert_eq!(
+            "gateways".parse::<TierPreset>().unwrap(),
+            TierPreset::Gateways { gateways: 8 }
+        );
+        assert!("gateways:0".parse::<TierPreset>().is_err());
+        assert!("flat:3".parse::<TierPreset>().is_err());
+        assert!("mesh".parse::<TierPreset>().is_err());
+        let back: TierPreset = TierPreset::gateways_preset(16).to_string().parse().unwrap();
+        assert_eq!(back, TierPreset::gateways_preset(16));
+    }
+
+    #[test]
+    fn gateway_blocks_are_contiguous_and_balanced() {
+        let t = TierPreset::gateways_preset(4);
+        let m = 10;
+        let gws: Vec<usize> = (0..m).map(|i| t.gateway_of(i, m)).collect();
+        // monotone non-decreasing (contiguity — the bitwise contract)
+        assert!(gws.windows(2).all(|w| w[0] <= w[1]), "{gws:?}");
+        // every gateway non-empty, sizes within one of each other
+        let mut counts = [0usize; 4];
+        for g in gws {
+            counts[g] += 1;
+        }
+        assert!(counts.iter().all(|&c| c >= 2 && c <= 3), "{counts:?}");
+        // degenerate fleets
+        assert_eq!(TierPreset::Flat.gateway_of(7, 10), 0);
+        assert_eq!(TierPreset::gateways_preset(1).gateway_of(9, 10), 0);
+    }
+
+    #[test]
+    fn defaults_are_no_ops() {
+        assert!(SamplePreset::default().is_full());
+        assert!(TierPreset::default().is_flat());
+        assert!(SamplePreset::default().validate(8).is_ok());
+        assert!(TierPreset::default().validate(8).is_ok());
+        assert!(TierPreset::gateways_preset(9).validate(8).is_err());
+    }
+}

@@ -6,6 +6,7 @@ pub mod cluster;
 pub mod dynamics;
 pub mod experiment;
 pub mod faults;
+pub mod fleet;
 pub mod hetero;
 pub mod net;
 pub mod presets;
@@ -17,6 +18,7 @@ pub use dynamics::DynamicsPreset;
 pub use experiment::{CompressionConfig, ExperimentConfig, InjectionConfig, TrainMode};
 pub use crate::obs::TraceFormat;
 pub use faults::{AggPreset, CrashPhase, FaultPreset};
+pub use fleet::{SamplePreset, TierPreset};
 pub use hetero::HeteroPreset;
 pub use net::NetPreset;
 pub use presets::StreamPreset;

@@ -41,6 +41,7 @@ use crate::coordinator::backend::Backend;
 use crate::coordinator::checkpoint;
 use crate::coordinator::clock::{DevicePhase, RoundTiming, VirtualClock};
 use crate::coordinator::device::Device;
+use crate::coordinator::fleet::{FleetSampler, GATEWAY_UPLINK_X};
 use crate::coordinator::lr::{baseline_lr, scaled_lr};
 use crate::coordinator::plan::RoundPlan;
 use crate::coordinator::policy::{self, Participation, SyncPolicy};
@@ -197,6 +198,16 @@ pub struct RoundEngine {
     /// times — so the event stream is bitwise identical at any
     /// worker-pool width.
     rec: Box<dyn Recorder>,
+    /// Per-round participant sampler (`--sample`): `None` for the full
+    /// default — that path carries no sampler state and runs the
+    /// pre-sampling engine bitwise. The sampled set is pure in
+    /// (seed, round), drawn on the coordinator thread before workers
+    /// fan out, so every pool width sees the same mask.
+    sampler: Option<FleetSampler>,
+    /// This round's participation mask (reused; empty when unsampled).
+    sampled: Vec<bool>,
+    /// Gateway count for hierarchical sync pricing (0 = flat).
+    gateways: usize,
 }
 
 impl RoundEngine {
@@ -263,6 +274,12 @@ impl RoundEngine {
             label.push('-');
             label.push_str(cfg.wire.name());
         }
+        if !cfg.sample.is_full() {
+            label.push_str(&format!("-sample:{}", cfg.sample));
+        }
+        if !cfg.tiers.is_flat() {
+            label.push_str(&format!("-gw:{}", cfg.tiers.gateways()));
+        }
         let logs = RunLogger::new(label).with_echo(cfg.echo_every);
         let threads = resolve_threads(cfg.worker_threads, n);
         let is_local = policy.is_local();
@@ -312,6 +329,13 @@ impl RoundEngine {
             } else {
                 Box::new(NoopRecorder)
             },
+            sampler: if cfg.sample.is_full() {
+                None
+            } else {
+                Some(FleetSampler::new(cfg.sample, n, cfg.seed))
+            },
+            sampled: Vec::new(),
+            gateways: cfg.tiers.gateways(),
         })
     }
 
@@ -429,6 +453,21 @@ impl RoundEngine {
         let frame = self.dynamics.frame();
         for (w, f) in self.workers.iter_mut().zip(frame) {
             w.device.apply_dynamics(f.rate_factor, f.active);
+        }
+        // participant sampling (`--sample`): non-sampled devices sit the
+        // round out exactly like churned-out devices — streams keep
+        // flowing, no train/plan/commit. The mask is drawn pure in
+        // (seed, round) on the coordinator thread, so every pool width
+        // sees the same participant set. With k = m the mask is
+        // all-true and this is bitwise the unsampled engine.
+        if let Some(s) = &mut self.sampler {
+            let round = self.round;
+            s.draw_mask(round, &mut self.sampled);
+            for (w, &included) in self.workers.iter_mut().zip(&self.sampled) {
+                if !included {
+                    w.device.active = false;
+                }
+            }
         }
     }
 
@@ -832,30 +871,63 @@ impl RoundEngine {
         let contributes = &self.part.contributes;
         let (ring_n, ring_bottleneck, ring_bps) =
             effective_ring_among(&self.cluster, self.dynamics.frame(), |i| contributes[i]);
+        // one pricing rule for any ring (NetworkModel is Copy, so the
+        // closure owns its inputs and the tiered loop below can reuse it
+        // per gateway): quantized wire prices exact encoded bits, the
+        // f32 sparse wire prices real survivor counts, dense rounds
+        // price a full model — all scaled onto the paper model's
+        // parameter count with the exact u128 integer ratio
+        let net = self.cluster.network;
+        let paper = self.cluster.paper_params();
+        let price_ring = move |n: usize, bps: f64| -> f64 {
+            if compressed_round && round_wire_bits > 0 {
+                let bits = scale_nnz_to_paper(paper, round_wire_bits, round_dense);
+                net.quantized_sync_time_slowest(bits, n, bps)
+            } else if compressed_round {
+                let nnz = scale_nnz_to_paper(paper, round_kept, round_dense);
+                net.sparse_sync_time_slowest(nnz, n, bps)
+            } else {
+                net.allreduce_time_slowest(paper * 4, n, bps)
+            }
+        };
+        let mut tier_device_bits = 0u64;
+        let mut tier_gateway_bits = 0u64;
         let sync_s = if global_batch == 0 {
             0.0
-        } else if compressed_round && round_wire_bits > 0 {
-            // quantized wire: price from the *exact encoded bit count*
-            // the shards reported, scaled onto the paper model's
-            // parameter count with the same exact integer ratio as the
-            // sparse path (`paper_params · bits / dense` in u128)
-            let bits =
-                scale_nnz_to_paper(self.cluster.paper_params(), round_wire_bits, round_dense);
-            self.cluster
-                .network
-                .quantized_sync_time_slowest(bits, ring_n, ring_bps)
-        } else if compressed_round {
-            // price the wire from the *real* survivor count: Σ nnz over
-            // the shards, scaled exactly (integer math, no f64 fraction
-            // round-trip) onto the paper model's parameter count
-            let nnz = scale_nnz_to_paper(self.cluster.paper_params(), round_kept, round_dense);
-            self.cluster
-                .network
-                .sparse_sync_time_slowest(nnz, ring_n, ring_bps)
+        } else if self.gateways == 0 {
+            price_ring(ring_n, ring_bps)
         } else {
-            self.cluster
-                .network
-                .allreduce_time_slowest(self.cluster.paper_params() * 4, ring_n, ring_bps)
+            // hierarchical pricing (`--tiers gateways:G`): tier 1 folds
+            // each gateway's contiguous device block in parallel on the
+            // members' own (slow) uplinks — the slowest gateway bounds
+            // the tier — then tier 2 reduces the G dense partials into
+            // the cloud root over provisioned backhaul. The *aggregate*
+            // is untouched: contiguous blocks mean the flat sequential
+            // fold already IS the hierarchical fold, bit for bit.
+            let m = self.cfg.devices;
+            let tiers = self.cfg.tiers;
+            let mut tier1 = 0.0f64;
+            let mut g_active = 0usize;
+            for g in 0..self.gateways {
+                let (n_g, _, bps_g) =
+                    effective_ring_among(&self.cluster, self.dynamics.frame(), |i| {
+                        contributes[i] && tiers.gateway_of(i, m) == g
+                    });
+                if n_g == 0 {
+                    continue;
+                }
+                tier1 = tier1.max(price_ring(n_g, bps_g));
+                g_active += 1;
+            }
+            tier_device_bits = self.sync_bits_total - sync_bits_before;
+            tier_gateway_bits = g_active as u64 * d as u64 * 32;
+            self.sync_bits_total += tier_gateway_bits;
+            let tier2 = net.allreduce_time_slowest(
+                paper * 4,
+                g_active,
+                net.bandwidth_bps * GATEWAY_UPLINK_X,
+            );
+            tier1 + tier2
         };
         let timing = RoundTiming {
             wait_s: barrier_wait,
@@ -901,6 +973,14 @@ impl RoundEngine {
             };
             self.rec.add(kind, 1);
             self.rec.set_gauge(Gauge::RateEst, rate_est);
+            if self.gateways > 0 {
+                self.rec.add(Counter::TierDeviceSyncBits, tier_device_bits);
+                self.rec.add(Counter::TierGatewaySyncBits, tier_gateway_bits);
+            }
+            if self.sampler.is_some() {
+                let drawn = self.sampled.iter().filter(|&&s| s).count();
+                self.rec.set_gauge(Gauge::SampledDevices, drawn as f64);
+            }
         }
         self.last_timing = Some(timing);
 
@@ -1187,6 +1267,10 @@ impl RoundEngine {
             self.rec.add(Counter::TrainedSamples, global_batch as u64);
             self.rec.add(Counter::DenseRounds, 1);
             self.rec.set_gauge(Gauge::RateEst, rate_est);
+            if self.sampler.is_some() {
+                let drawn = self.sampled.iter().filter(|&&s| s).count();
+                self.rec.set_gauge(Gauge::SampledDevices, drawn as f64);
+            }
         }
         let log = RoundLog {
             round: r,
@@ -1242,6 +1326,13 @@ impl RoundEngine {
     ) -> (StragglerCause, usize) {
         let (straggler_cause, straggler_device) = timing.straggler();
         for p in &timing.per_device {
+            // fleet-scale logging guard: under `--sample`, per-device
+            // rows exist only for this round's participants — O(k) rows
+            // per round, not O(m). Fleet-level aggregates (RoundLog,
+            // BufferTracker, counters) keep full-fleet totals.
+            if self.sampler.is_some() && !self.sampled.get(p.device).copied().unwrap_or(false) {
+                continue;
+            }
             let fault = self
                 .faults
                 .as_ref()
@@ -1450,6 +1541,19 @@ impl RoundEngine {
             }
             None => w.bool(false),
         }
+        // participant-sampler cursor (`--sample`): the raw RNG state
+        // after the most recent draw, so a resumed run attests the
+        // sampler's position (draws themselves are pure in (seed,
+        // round), so resuming replays the same sets regardless)
+        match &self.sampler {
+            Some(s) => {
+                w.bool(true);
+                let (state, inc) = s.cursor();
+                w.u64(state);
+                w.u64(inc);
+            }
+            None => w.bool(false),
+        }
         w.into_bytes()
     }
 
@@ -1607,6 +1711,15 @@ impl RoundEngine {
             obs_state.is_some() == self.rec.as_trace().is_some(),
             "checkpoint observability layout does not match this engine"
         );
+        let sampler_cursor = if r.bool()? {
+            Some((r.u64()?, r.u64()?))
+        } else {
+            None
+        };
+        ensure!(
+            sampler_cursor.is_some() == self.sampler.is_some(),
+            "checkpoint sampler layout does not match this engine"
+        );
         ensure!(r.remaining() == 0, "corrupt checkpoint: {} trailing bytes", r.remaining());
 
         // coordinator-side state scatters only after the whole payload
@@ -1646,6 +1759,9 @@ impl RoundEngine {
             for (g, v) in Gauge::ALL.iter().zip(gauges) {
                 tr.registry_mut().set_gauge(*g, v);
             }
+        }
+        if let (Some(s), Some(cursor)) = (&mut self.sampler, sampler_cursor) {
+            s.restore_cursor(cursor);
         }
         Ok(())
     }

@@ -1,0 +1,790 @@
+//! Fleet-scale cohort engine: O(k·d + fleet-bookkeeping) rounds over
+//! millions of devices.
+//!
+//! The per-device [`RoundEngine`](super::engine::RoundEngine) does O(m)
+//! work and O(m) allocation per round with one `DeviceWorker` struct
+//! per device — fine at m = 8, impossible at m = 1,000,000 (ROADMAP
+//! item 1). This module holds the three pieces that break that wall:
+//!
+//! * [`FleetSampler`] — per-round participant sampling (`--sample`).
+//!   The sampled set is a **pure function of (seed, round)**: every
+//!   draw builds a fresh Pcg64 on the dedicated [`SAMPLE_RNG_STREAM`]
+//!   keyed by the round, so the set is identical at any worker-pool
+//!   width and invariant to when (or whether) earlier rounds drew.
+//!   Floyd's algorithm keeps a draw O(k), not O(m).
+//! * [`CohortStore`] — struct-of-arrays device state where devices
+//!   sharing a (hetero tier × dynamics regime) are contiguous.
+//!   Non-sampled devices cost **O(1) amortized**: their stream backlog
+//!   advances lazily via the closed-form integral of the regime's rate
+//!   sinusoid ([`regime_integral`]) evaluated from the last-touched
+//!   time, never a per-device per-round loop.
+//! * [`FleetEngine`] — the bounded-memory round loop behind
+//!   `repro exp scale`: resident state is O(m) scalars + O(d) model,
+//!   transient state is O(k·d) for the sampled cohort, and per-round
+//!   work is O(k·d + C) where C ≤ 16 cohorts. Aggregation is the same
+//!   sequential weighted left-fold in ascending device order the
+//!   `RoundEngine` uses, so hierarchical gateway pricing (contiguous
+//!   blocks) is bitwise-identical to flat by construction.
+//!
+//! The full `RoundEngine` keeps owning small-m scenario composition
+//! (`--sync/--faults/--net/--wire`); `FleetEngine` owns the m ≥ 1e3
+//! scale sweep. Both share the sampler, the tier pricing constant, and
+//! the obs registry.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::config::{SamplePreset, TierPreset};
+use crate::obs::{Counter, Gauge, MetricsRegistry};
+use crate::rng::Pcg64;
+use crate::simulate::network::NetworkModel;
+
+/// Dedicated Pcg64 stream for participant sampling. Disjoint from the
+/// engine's other substreams (rates `0x5CAD`, wire `0x317E`, devices
+/// `0xDE1C_E000+i`, faults `0xFA17_0000+i`) so engaging the sampler
+/// perturbs no other random sequence.
+pub const SAMPLE_RNG_STREAM: u64 = 0x5A3B_1E00;
+
+/// Gateway backhaul bandwidth as a multiple of the backbone link: the
+/// device→gateway tier rides each device's own (slow) uplink, while
+/// gateway→cloud rides provisioned backhaul (Hu et al.'s edge-system
+/// assumption). Used by both engines' tier pricing.
+pub const GATEWAY_UPLINK_X: f64 = 4.0;
+
+const GOLDEN_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Floyd's uniform k-of-m sample (O(k) RNG draws, O(k) memory),
+/// returned **sorted ascending** so downstream folds run in device
+/// order — the order the bitwise-determinism contract fixes.
+pub fn sample_k_of_m(rng: &mut Pcg64, k: usize, m: usize) -> Vec<usize> {
+    if k >= m {
+        return (0..m).collect();
+    }
+    let mut chosen: HashSet<usize> = HashSet::with_capacity(k);
+    for j in (m - k)..m {
+        let t = rng.below(j + 1);
+        if !chosen.insert(t) {
+            chosen.insert(j);
+        }
+    }
+    let mut ids: Vec<usize> = chosen.into_iter().collect();
+    ids.sort_unstable();
+    ids
+}
+
+/// Per-round participant sampler: `draw(round)` is a pure function of
+/// `(seed, round)` — a fresh generator per draw, keyed by the round on
+/// the dedicated stream. The post-draw raw RNG state is kept as a
+/// cursor so checkpoints can attest the sampler's position.
+#[derive(Debug, Clone)]
+pub struct FleetSampler {
+    preset: SamplePreset,
+    devices: usize,
+    seed: u64,
+    cursor: (u64, u64),
+}
+
+impl FleetSampler {
+    pub fn new(preset: SamplePreset, devices: usize, seed: u64) -> Self {
+        Self {
+            preset,
+            devices,
+            seed,
+            cursor: Pcg64::new(seed, SAMPLE_RNG_STREAM).raw_state(),
+        }
+    }
+
+    /// Participants drawn per round.
+    pub fn k(&self) -> usize {
+        self.preset.k(self.devices)
+    }
+
+    /// Draw round `round`'s participant set, sorted ascending. Pure in
+    /// `(seed, round)`: re-drawing any round, in any order, at any
+    /// pool width, yields the same set.
+    pub fn draw(&mut self, round: usize) -> Vec<usize> {
+        let mut rng = Pcg64::new(
+            self.seed ^ (round as u64).wrapping_mul(GOLDEN_GAMMA),
+            SAMPLE_RNG_STREAM,
+        );
+        let ids = sample_k_of_m(&mut rng, self.k(), self.devices);
+        self.cursor = rng.raw_state();
+        ids
+    }
+
+    /// Draw into a reusable mask (`mask[i]` ⇔ device i participates).
+    /// Returns the participant count.
+    pub fn draw_mask(&mut self, round: usize, mask: &mut Vec<bool>) -> usize {
+        mask.clear();
+        mask.resize(self.devices, false);
+        let ids = self.draw(round);
+        let k = ids.len();
+        for i in ids {
+            mask[i] = true;
+        }
+        k
+    }
+
+    /// Raw RNG state after the most recent draw (checkpoint payload).
+    pub fn cursor(&self) -> (u64, u64) {
+        self.cursor
+    }
+
+    /// Restore a checkpointed cursor.
+    pub fn restore_cursor(&mut self, cursor: (u64, u64)) {
+        self.cursor = cursor;
+    }
+}
+
+/// Heterogeneity tiers in the cohort store (server-class edge rack →
+/// battery-powered sensor), each with its own compute, link, and
+/// stream-rate base. 4 tiers × 4 regimes = at most 16 cohorts.
+const TIERS: usize = 4;
+const REGIMES: usize = 4;
+const TIER_COMPUTE_SPS: [f64; TIERS] = [2000.0, 1000.0, 500.0, 250.0];
+const TIER_LINK_BPS: [f64; TIERS] = [1e9, 300e6, 100e6, 25e6];
+const TIER_RATE_SPS: [f64; TIERS] = [64.0, 32.0, 16.0, 8.0];
+
+/// Diurnal rate modulation shared by every regime: amplitude of the
+/// sinusoid around the base rate and its period in virtual seconds.
+const REGIME_AMPLITUDE: f64 = 0.5;
+const REGIME_PERIOD_S: f64 = 600.0;
+
+/// Exact integral of the regime's rate factor over `[t0, t1]`:
+/// `f(t) = 1 + A·sin(2π(t/P + φ_r))` with phase `φ_r = r/R`, so
+/// `∫ f dt = (t1−t0) − A·P/2π · [cos(2π(t1/P+φ)) − cos(2π(t0/P+φ))]`.
+/// This closed form is what makes lazy advancement **exact**: touching
+/// a device after any gap reproduces the backlog a per-round loop
+/// would have accumulated, in O(1).
+pub fn regime_integral(regime: usize, t0: f64, t1: f64) -> f64 {
+    let phase = regime as f64 / REGIMES as f64;
+    let tau = std::f64::consts::TAU;
+    let angle = |t: f64| tau * (t / REGIME_PERIOD_S + phase);
+    (t1 - t0)
+        - REGIME_AMPLITUDE * REGIME_PERIOD_S / tau * (angle(t1).cos() - angle(t0).cos())
+}
+
+/// One contiguous cohort: the device range `[start, start+len)` shares
+/// a (tier, regime) pair. `sum_rate`/`backlog_est` are the cohort-level
+/// aggregates the engine advances in O(1) per cohort per round.
+#[derive(Debug, Clone)]
+pub struct Cohort {
+    pub tier: usize,
+    pub regime: usize,
+    pub start: usize,
+    pub len: usize,
+    /// Σ of member base rates (samples/s at factor 1).
+    pub sum_rate: f64,
+    /// Estimated buffered samples across the cohort (advanced
+    /// analytically; `consume` debits it as sampled members train).
+    pub backlog_est: f64,
+}
+
+/// Struct-of-arrays device state: parallel `Vec`s over the fleet, with
+/// cohort-contiguous layout (ascending device id walks tier 0 regime
+/// 0, tier 0 regime 1, … tier 3 regime 3). Resident cost is a handful
+/// of f64s per device — ~48 MB at m = 1e6 — with **no** per-device
+/// structs, gradients, or buffers.
+#[derive(Debug, Clone)]
+pub struct CohortStore {
+    pub rate_sps: Vec<f64>,
+    pub link_bps: Vec<f64>,
+    pub compute_sps: Vec<f64>,
+    backlog: Vec<f64>,
+    last_advance: Vec<f64>,
+    cohort_of: Vec<u16>,
+    cohorts: Vec<Cohort>,
+    /// Per-device buffer capacity in samples (backlog clamps here —
+    /// the paper's bounded edge buffer).
+    capacity: f64,
+}
+
+impl CohortStore {
+    /// Build the fleet: devices are assigned to the ≤ 16 (tier ×
+    /// regime) cohorts in contiguous equal blocks, each device's
+    /// scalars jittered around its tier base from its own Pcg64
+    /// substream (pure in `(seed, i)`).
+    pub fn new(m: usize, seed: u64) -> Self {
+        assert!(m >= 1, "fleet needs at least one device");
+        let mut store = Self {
+            rate_sps: Vec::with_capacity(m),
+            link_bps: Vec::with_capacity(m),
+            compute_sps: Vec::with_capacity(m),
+            backlog: vec![0.0; m],
+            last_advance: vec![0.0; m],
+            cohort_of: vec![0; m],
+            cohorts: Vec::new(),
+            capacity: 4096.0,
+        };
+        let groups = TIERS * REGIMES;
+        for c in 0..groups {
+            let start = c * m / groups;
+            let end = (c + 1) * m / groups;
+            if start == end {
+                continue;
+            }
+            let (tier, regime) = (c / REGIMES, c % REGIMES);
+            let mut sum_rate = 0.0;
+            for i in start..end {
+                let mut rng = Pcg64::new(seed ^ (i as u64), 0xC0_4027 + tier as u64);
+                let jitter = (0.1 * rng.normal()).exp();
+                let rate = TIER_RATE_SPS[tier] * jitter;
+                store.rate_sps.push(rate);
+                store.link_bps.push(TIER_LINK_BPS[tier] * (0.05 * rng.normal()).exp());
+                store.compute_sps.push(TIER_COMPUTE_SPS[tier] * (0.1 * rng.normal()).exp());
+                store.cohort_of[i] = store.cohorts.len() as u16;
+                sum_rate += rate;
+            }
+            store.cohorts.push(Cohort {
+                tier,
+                regime,
+                start,
+                len: end - start,
+                sum_rate,
+                backlog_est: 0.0,
+            });
+        }
+        store
+    }
+
+    pub fn len(&self) -> usize {
+        self.backlog.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backlog.is_empty()
+    }
+
+    pub fn cohort_count(&self) -> usize {
+        self.cohorts.len()
+    }
+
+    pub fn cohorts(&self) -> &[Cohort] {
+        &self.cohorts
+    }
+
+    pub fn cohort_of(&self, i: usize) -> &Cohort {
+        &self.cohorts[self.cohort_of[i] as usize]
+    }
+
+    /// Lazily advance device `i`'s backlog to virtual time `now` and
+    /// return it. O(1): one closed-form [`regime_integral`] over the
+    /// gap since the device was last touched, clamped at capacity —
+    /// exactly what a per-round accrual loop would have produced (up
+    /// to the clamp, which a capacity-bounded buffer saturates
+    /// identically).
+    pub fn touch(&mut self, i: usize, now: f64) -> f64 {
+        let t0 = self.last_advance[i];
+        if now > t0 {
+            let regime = self.cohorts[self.cohort_of[i] as usize].regime;
+            let accrued = self.rate_sps[i] * regime_integral(regime, t0, now);
+            self.backlog[i] = (self.backlog[i] + accrued).min(self.capacity);
+            self.last_advance[i] = now;
+        }
+        self.backlog[i]
+    }
+
+    /// Debit `n` trained samples from device `i` (and its cohort's
+    /// aggregate estimate).
+    pub fn consume(&mut self, i: usize, n: f64) {
+        self.backlog[i] = (self.backlog[i] - n).max(0.0);
+        let c = &mut self.cohorts[self.cohort_of[i] as usize];
+        c.backlog_est = (c.backlog_est - n).max(0.0);
+    }
+
+    /// Advance every cohort's aggregate backlog estimate over
+    /// `[t0, t1]` — O(cohorts), not O(m). This is the whole-fleet
+    /// bookkeeping a round pays for its non-sampled majority.
+    pub fn advance_estimates(&mut self, t0: f64, t1: f64) {
+        if t1 <= t0 {
+            return;
+        }
+        for c in &mut self.cohorts {
+            let accrued = c.sum_rate * regime_integral(c.regime, t0, t1);
+            c.backlog_est = (c.backlog_est + accrued).min(c.len as f64 * self.capacity);
+        }
+    }
+
+    /// Estimated buffered samples across the whole fleet.
+    pub fn total_backlog_est(&self) -> f64 {
+        self.cohorts.iter().map(|c| c.backlog_est).sum()
+    }
+}
+
+/// One committed round of the fleet engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetRoundLog {
+    pub round: usize,
+    /// Participants drawn this round.
+    pub sampled: usize,
+    /// Participants that had a non-empty batch and committed.
+    pub committed: usize,
+    pub global_batch: usize,
+    pub sync_s: f64,
+    /// Virtual clock after the round.
+    pub wall_clock_s: f64,
+    /// Whole-fleet backlog estimate after the round.
+    pub backlog_est: f64,
+}
+
+/// Bounded-memory fleet round loop: the engine behind `repro exp
+/// scale`. Holds O(m) scalars (the [`CohortStore`]), an O(d) model,
+/// and an error-feedback bank keyed by ever-sampled device — never
+/// O(m·d). Each round: draw k participants, lazily materialize their
+/// backlogs, train pseudo-gradients, fold them sequentially in
+/// ascending device order (the determinism contract's fixed order),
+/// price sync flat or per tier, and advance the fleet's cohort
+/// estimates in O(cohorts).
+pub struct FleetEngine {
+    m: usize,
+    d: usize,
+    seed: u64,
+    sampler: FleetSampler,
+    tiers: TierPreset,
+    store: CohortStore,
+    params: Vec<f32>,
+    grad: Vec<f32>,
+    /// Error-feedback residual bank, lazily keyed by sampled device —
+    /// memory is O(ever-sampled · d), bounded by the sampling budget.
+    ef: HashMap<usize, Vec<f32>>,
+    network: NetworkModel,
+    registry: MetricsRegistry,
+    now: f64,
+    round: usize,
+    sync_bits: u64,
+    b_max: usize,
+    lr: f32,
+}
+
+impl FleetEngine {
+    pub fn new(m: usize, d: usize, sample: SamplePreset, tiers: TierPreset, seed: u64) -> Self {
+        let mut registry = MetricsRegistry::new();
+        let store = CohortStore::new(m, seed);
+        registry.set_gauge(Gauge::CohortCount, store.cohort_count() as f64);
+        Self {
+            m,
+            d,
+            seed,
+            sampler: FleetSampler::new(sample, m, seed),
+            tiers,
+            store,
+            params: vec![0.0; d],
+            grad: vec![0.0; d],
+            ef: HashMap::new(),
+            network: NetworkModel::paper_5gbps(),
+            registry,
+            now: 0.0,
+            round: 0,
+            sync_bits: 0,
+            b_max: 1024,
+            lr: 0.05,
+        }
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    pub fn store(&self) -> &CohortStore {
+        &self.store
+    }
+
+    pub fn sync_bits_total(&self) -> u64 {
+        self.sync_bits
+    }
+
+    /// Deterministic pseudo-gradient for `(device, round)`: stands in
+    /// for backprop so the scale sweep measures coordination cost, not
+    /// model math. Pure in `(seed, device, round)`.
+    fn pseudo_grad(&self, device: usize, round: usize, out: &mut [f32]) {
+        let mut rng = Pcg64::new(
+            self.seed ^ 0xF1EE_7000 ^ (device as u64),
+            (round as u64).wrapping_mul(GOLDEN_GAMMA) | 1,
+        );
+        for v in out.iter_mut() {
+            *v = (rng.f64() - 0.5) as f32;
+        }
+    }
+
+    /// Run one round; returns its log.
+    pub fn round(&mut self) -> FleetRoundLog {
+        let round = self.round;
+        let ids = self.sampler.draw(round);
+        let sampled = ids.len();
+
+        // materialize the sampled cohort: lazy-advance each backlog,
+        // size the batch, build the quantized EF-corrected row.
+        let mut rows: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(sampled);
+        let mut scratch = vec![0.0f32; self.d];
+        for &i in &ids {
+            let backlog = self.store.touch(i, self.now);
+            let batch = (backlog.floor() as usize).min(self.b_max);
+            if batch == 0 {
+                continue;
+            }
+            self.store.consume(i, batch as f64);
+            self.pseudo_grad(i, round, &mut scratch);
+            let residual = self.ef.entry(i).or_insert_with(|| vec![0.0f32; self.d]);
+            let mut row = vec![0.0f32; self.d];
+            for j in 0..self.d {
+                let want = scratch[j] + residual[j];
+                // q8-style grid: 1/64 steps, error banked for next time
+                let sent = (want * 64.0).round() / 64.0;
+                residual[j] = want - sent;
+                row[j] = sent;
+            }
+            rows.push((i, batch, row));
+        }
+
+        let committed = rows.len();
+        let global_batch: usize = rows.iter().map(|(_, b, _)| b).sum();
+
+        // sequential weighted left-fold in ascending device order —
+        // the same fixed reduction order the RoundEngine pins. With
+        // contiguous gateway blocks this flat fold IS the hierarchical
+        // device→gateway→cloud fold, bit for bit.
+        self.grad.iter_mut().for_each(|v| *v = 0.0);
+        if global_batch > 0 {
+            for (_, batch, row) in &rows {
+                let w = *batch as f32 / global_batch as f32;
+                for j in 0..self.d {
+                    self.grad[j] += w * row[j];
+                }
+            }
+            for j in 0..self.d {
+                self.params[j] -= self.lr * self.grad[j];
+            }
+        }
+
+        // compute barrier: the slowest committed member bounds the round
+        let max_compute = rows
+            .iter()
+            .map(|(i, b, _)| *b as f64 / self.store.compute_sps[*i])
+            .fold(0.0f64, f64::max);
+
+        // sync pricing: flat single ring, or per-tier with each tier on
+        // its own link (device uplinks below, gateway backhaul above)
+        let bytes = self.d as u64 * 4;
+        let sync_s = if committed == 0 {
+            0.0
+        } else if self.tiers.is_flat() {
+            let slowest = rows
+                .iter()
+                .map(|(i, _, _)| self.store.link_bps[*i])
+                .fold(f64::INFINITY, f64::min);
+            self.sync_bits += committed as u64 * self.d as u64 * 32;
+            self.network.allreduce_time_slowest(bytes, committed, slowest)
+        } else {
+            let g = self.tiers.gateways();
+            let mut tier1 = 0.0f64;
+            let mut g_active = 0usize;
+            let mut block = 0usize;
+            while block < rows.len() {
+                let gw = self.tiers.gateway_of(rows[block].0, self.m);
+                let mut end = block;
+                let mut slowest = f64::INFINITY;
+                while end < rows.len() && self.tiers.gateway_of(rows[end].0, self.m) == gw {
+                    slowest = slowest.min(self.store.link_bps[rows[end].0]);
+                    end += 1;
+                }
+                let n_g = end - block;
+                tier1 = tier1.max(self.network.allreduce_time_slowest(bytes, n_g, slowest));
+                g_active += 1;
+                block = end;
+            }
+            debug_assert!(g_active <= g);
+            let device_bits = committed as u64 * self.d as u64 * 32;
+            let gateway_bits = g_active as u64 * self.d as u64 * 32;
+            self.sync_bits += device_bits + gateway_bits;
+            self.registry.add(Counter::TierDeviceSyncBits, device_bits);
+            self.registry.add(Counter::TierGatewaySyncBits, gateway_bits);
+            let tier2 = self.network.allreduce_time_slowest(
+                bytes,
+                g_active,
+                self.network.bandwidth_bps * GATEWAY_UPLINK_X,
+            );
+            tier1 + tier2
+        };
+
+        // advance the virtual clock and the fleet's cohort estimates
+        let dt = if committed == 0 {
+            1.0 // idle beat: let streams accrue, try again
+        } else {
+            max_compute + sync_s
+        };
+        self.store.advance_estimates(self.now, self.now + dt);
+        self.now += dt;
+        self.round += 1;
+
+        self.registry.add(Counter::Rounds, 1);
+        self.registry.add(Counter::TrainedSamples, global_batch as u64);
+        self.registry.set_counter(Counter::SyncBits, self.sync_bits);
+        self.registry.set_gauge(Gauge::SampledDevices, sampled as f64);
+        self.registry.set_gauge(Gauge::VirtualTimeS, self.now);
+
+        FleetRoundLog {
+            round,
+            sampled,
+            committed,
+            global_batch,
+            sync_s,
+            wall_clock_s: self.now,
+            backlog_est: self.store.total_backlog_est(),
+        }
+    }
+}
+
+/// Peak resident-set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). 0 on platforms without procfs — the scale
+/// harness prints it per sweep cell to prove bounded memory.
+pub fn peak_rss_bytes() -> u64 {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+            for line in status.lines() {
+                if let Some(rest) = line.strip_prefix("VmHWM:") {
+                    let kb: u64 =
+                        rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0);
+                    return kb * 1024;
+                }
+            }
+        }
+        0
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_is_sorted_unique_and_sized() {
+        let mut rng = Pcg64::new(7, SAMPLE_RNG_STREAM);
+        let ids = sample_k_of_m(&mut rng, 64, 1000);
+        assert_eq!(ids.len(), 64);
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "sorted + unique");
+        assert!(ids.iter().all(|&i| i < 1000));
+        // k ≥ m degenerates to the full set
+        let mut rng = Pcg64::new(7, SAMPLE_RNG_STREAM);
+        assert_eq!(sample_k_of_m(&mut rng, 10, 10), (0..10).collect::<Vec<_>>());
+        let mut rng = Pcg64::new(7, SAMPLE_RNG_STREAM);
+        assert_eq!(sample_k_of_m(&mut rng, 99, 10).len(), 10);
+    }
+
+    #[test]
+    fn sampler_is_pure_in_seed_and_round() {
+        let mut a = FleetSampler::new(SamplePreset::Count(32), 1000, 42);
+        let mut b = FleetSampler::new(SamplePreset::Count(32), 1000, 42);
+        // same (seed, round) → same set, regardless of draw history
+        let r5_direct = b.draw(5);
+        for r in 0..5 {
+            let _ = a.draw(r);
+        }
+        assert_eq!(a.draw(5), r5_direct);
+        // different rounds and different seeds both move the set
+        assert_ne!(a.draw(6), r5_direct);
+        let mut c = FleetSampler::new(SamplePreset::Count(32), 1000, 43);
+        assert_ne!(c.draw(5), r5_direct);
+        // full-fraction sampling draws everyone
+        let mut f = FleetSampler::new(SamplePreset::frac(1.0), 10, 42);
+        assert_eq!(f.draw(0), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sampler_cursor_round_trips() {
+        let mut a = FleetSampler::new(SamplePreset::Count(8), 100, 1);
+        let c0 = a.cursor();
+        let _ = a.draw(0);
+        let c1 = a.cursor();
+        assert_ne!(c0, c1, "draw must move the cursor");
+        let mut b = FleetSampler::new(SamplePreset::Count(8), 100, 1);
+        b.restore_cursor(c1);
+        assert_eq!(b.cursor(), c1);
+        // purity means resumed draws still match
+        assert_eq!(b.draw(1), a.draw(1));
+    }
+
+    #[test]
+    fn draw_mask_matches_draw() {
+        let mut s = FleetSampler::new(SamplePreset::frac(0.1), 500, 9);
+        let ids = {
+            let mut t = FleetSampler::new(SamplePreset::frac(0.1), 500, 9);
+            t.draw(3)
+        };
+        let mut mask = Vec::new();
+        let k = s.draw_mask(3, &mut mask);
+        assert_eq!(k, ids.len());
+        assert_eq!(mask.len(), 500);
+        for (i, &inc) in mask.iter().enumerate() {
+            assert_eq!(inc, ids.binary_search(&i).is_ok(), "device {i}");
+        }
+    }
+
+    #[test]
+    fn lazy_advance_matches_stepped_advance() {
+        // one closed-form touch over [0, 10] ≡ many small touches
+        let mut lazy = CohortStore::new(64, 5);
+        let mut stepped = CohortStore::new(64, 5);
+        for step in 1..=100 {
+            let t = step as f64 * 0.1;
+            let _ = stepped.touch(17, t);
+        }
+        let a = lazy.touch(17, 10.0);
+        let b = stepped.touch(17, 10.0);
+        assert!((a - b).abs() < 1e-6, "lazy {a} vs stepped {b}");
+        // integral telescopes exactly in exact arithmetic
+        let whole = regime_integral(2, 0.0, 10.0);
+        let split = regime_integral(2, 0.0, 4.0) + regime_integral(2, 4.0, 10.0);
+        assert!((whole - split).abs() < 1e-9);
+        // the factor is always within [1−A, 1+A] of linear time
+        assert!(whole > 10.0 * (1.0 - REGIME_AMPLITUDE));
+        assert!(whole < 10.0 * (1.0 + REGIME_AMPLITUDE));
+    }
+
+    #[test]
+    fn cohorts_are_contiguous_and_cover_the_fleet() {
+        let store = CohortStore::new(1000, 3);
+        assert_eq!(store.len(), 1000);
+        assert_eq!(store.cohort_count(), 16);
+        let mut next = 0usize;
+        for c in store.cohorts() {
+            assert_eq!(c.start, next, "cohorts must tile the id space");
+            assert!(c.len > 0);
+            next = c.start + c.len;
+        }
+        assert_eq!(next, 1000);
+        // tiny fleets drop empty cohorts instead of crashing
+        let tiny = CohortStore::new(3, 3);
+        assert_eq!(tiny.len(), 3);
+        assert!(tiny.cohort_count() <= 3);
+    }
+
+    #[test]
+    fn consume_debits_device_and_cohort() {
+        let mut store = CohortStore::new(100, 11);
+        store.advance_estimates(0.0, 5.0);
+        let before = store.total_backlog_est();
+        let b = store.touch(0, 5.0);
+        assert!(b > 0.0);
+        store.consume(0, 3.0);
+        assert!((store.touch(0, 5.0) - (b - 3.0)).abs() < 1e-9);
+        assert!(store.total_backlog_est() < before);
+    }
+
+    /// The hierarchical contract in miniature: folding contiguous
+    /// gateway blocks into the shared accumulator replays the flat
+    /// device-order fold bit for bit.
+    #[test]
+    fn block_fold_is_bitwise_the_flat_fold() {
+        let d = 97;
+        let n = 23;
+        let mut rng = Pcg64::new(123, 1);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| (rng.f64() - 0.5) as f32).collect())
+            .collect();
+        let weights: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+        let tiers = TierPreset::gateways_preset(4);
+
+        let mut flat = vec![0.0f32; d];
+        for i in 0..n {
+            for j in 0..d {
+                flat[j] += weights[i] * rows[i][j];
+            }
+        }
+
+        let mut hier = vec![0.0f32; d];
+        for g in 0..4 {
+            for i in 0..n {
+                if tiers.gateway_of(i, n) == g {
+                    for j in 0..d {
+                        hier[j] += weights[i] * rows[i][j];
+                    }
+                }
+            }
+        }
+
+        for j in 0..d {
+            assert_eq!(flat[j].to_bits(), hier[j].to_bits(), "coord {j}");
+        }
+    }
+
+    #[test]
+    fn fleet_engine_is_deterministic() {
+        let mk = || {
+            FleetEngine::new(
+                500,
+                64,
+                SamplePreset::Count(32),
+                TierPreset::Flat,
+                42,
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..4 {
+            let la = a.round();
+            let lb = b.round();
+            assert_eq!(la, lb);
+        }
+        let pa: Vec<u32> = a.params().iter().map(|v| v.to_bits()).collect();
+        let pb: Vec<u32> = b.params().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(pa, pb);
+        assert!(a.registry().counter(Counter::Rounds) == 4);
+        assert!(a.registry().gauge(Gauge::CohortCount) == 16.0);
+        assert!(a.registry().gauge(Gauge::SampledDevices) == 32.0);
+    }
+
+    #[test]
+    fn fleet_engine_tiered_prices_both_tiers() {
+        let mut e = FleetEngine::new(
+            512,
+            64,
+            SamplePreset::Count(64),
+            TierPreset::gateways_preset(8),
+            7,
+        );
+        // warm the streams so the first training round commits
+        let mut committed = 0;
+        for _ in 0..4 {
+            committed += e.round().committed;
+        }
+        assert!(committed > 0, "some round must commit");
+        assert!(e.registry().counter(Counter::TierDeviceSyncBits) > 0);
+        assert!(e.registry().counter(Counter::TierGatewaySyncBits) > 0);
+        // device tier moves more bits than the gateway tier
+        assert!(
+            e.registry().counter(Counter::TierDeviceSyncBits)
+                >= e.registry().counter(Counter::TierGatewaySyncBits)
+        );
+    }
+
+    #[test]
+    fn ef_bank_is_bounded_by_ever_sampled() {
+        let mut e = FleetEngine::new(
+            1000,
+            32,
+            SamplePreset::Count(16),
+            TierPreset::Flat,
+            3,
+        );
+        for _ in 0..5 {
+            let _ = e.round();
+        }
+        assert!(e.ef.len() <= 5 * 16, "EF bank exceeded sampling budget");
+        assert!(e.ef.len() < 1000, "EF bank must not be O(m)");
+    }
+
+    #[test]
+    fn peak_rss_reports_on_linux() {
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            assert!(rss > 0, "VmHWM should parse on linux");
+        }
+    }
+}

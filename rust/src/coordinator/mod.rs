@@ -102,6 +102,7 @@ pub mod checkpoint;
 pub mod clock;
 pub mod device;
 pub mod engine;
+pub mod fleet;
 pub mod lr;
 pub mod plan;
 pub mod policy;
@@ -119,6 +120,7 @@ pub use backend::{Backend, MockBackend};
 pub use clock::{DevicePhase, RoundTiming, VirtualClock};
 pub use device::Device;
 pub use engine::{RoundEngine, TrainerOutput};
+pub use fleet::{CohortStore, FleetEngine, FleetRoundLog, FleetSampler};
 pub use lr::scaled_lr;
 pub use plan::{DevicePlan, RoundPlan};
 pub use policy::{Bsp, BoundedStaleness, KSync, LocalSgd, Participation, SyncPolicy};

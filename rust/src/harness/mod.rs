@@ -17,6 +17,7 @@ pub mod faults;
 pub mod fig6;
 pub mod hetero;
 pub mod resilience;
+pub mod scale;
 pub mod sync;
 pub mod training;
 
@@ -116,8 +117,17 @@ pub const EXPERIMENTS: &[&str] = &[
 ];
 
 /// Extension studies beyond the paper (DESIGN.md §5b).
-pub const EXTENSIONS: &[&str] =
-    &["ablation", "emd", "fedavg", "hetero", "dynamics", "sync", "faults", "resilience"];
+pub const EXTENSIONS: &[&str] = &[
+    "ablation",
+    "emd",
+    "fedavg",
+    "hetero",
+    "dynamics",
+    "sync",
+    "faults",
+    "resilience",
+    "scale",
+];
 
 /// Dispatch one experiment by id.
 pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
@@ -147,6 +157,7 @@ pub fn run(id: &str, opts: &HarnessOpts) -> Result<()> {
         "sync" => sync::sync(opts),
         "faults" => faults::faults(opts),
         "resilience" => resilience::resilience(opts),
+        "scale" => scale::scale(opts),
         "all" => {
             for e in EXPERIMENTS {
                 eprintln!("\n================ {e} ================");

@@ -73,6 +73,19 @@ USAGE:
                                heartbeat/witness-quorum state machine — the
                                trained model stays bitwise identical to the
                                lossless run)
+              [--sample K]    (per-round participant sampling: full | count k |
+                               fraction in (0,1]; e.g. --sample 256 or
+                               --sample 0.1 trains each round on a subset drawn
+                               pure in (seed, round); full builds no sampler —
+                               bitwise the unsampled engine — and --sample 1.0
+                               engages the sampler over the whole fleet,
+                               still bitwise identical)
+              [--tiers T]     (hierarchical aggregation: flat | gateways:G;
+                               devices fold into contiguous per-gateway
+                               partials, gateways reduce into the cloud root,
+                               each tier priced by its own link — the
+                               aggregate itself stays bitwise identical to
+                               flat; requires --agg mean)
               [--witnesses W] (witness-set size per round commit; 0 = every
                                committed device witnesses)
               [--quorum Q]    (witness acks required to commit; 0 = all
@@ -615,6 +628,8 @@ fn main() -> anyhow::Result<()> {
                 .agg(args.get_str("agg", "mean").parse()?)
                 .wire(args.get_str("wire", "f32").parse()?)
                 .net(args.get_str("net", "none").parse()?)
+                .sample(args.get_str("sample", "full").parse()?)
+                .tiers(args.get_str("tiers", "flat").parse()?)
                 .witnesses(args.get("witnesses", 0usize)?)
                 .quorum(args.get("quorum", 0usize)?)
                 .seed(args.get("seed", 42u64)?)

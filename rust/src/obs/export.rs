@@ -290,6 +290,10 @@ mod tests {
             "scadles_round_replays_total",
             "scadles_witness_acks_total",
             "scadles_witness_quorum",
+            "scadles_tier_device_sync_bits_total",
+            "scadles_tier_gateway_sync_bits_total",
+            "scadles_sampled_devices",
+            "scadles_cohort_count",
         ] {
             assert!(text.contains(name), "missing {name} in:\n{text}");
         }

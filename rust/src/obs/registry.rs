@@ -57,11 +57,16 @@ pub enum Counter {
     RoundReplays = 18,
     /// Runtime: witness attestations accepted across all commits.
     WitnessAcks = 19,
+    /// Fleet tiers: bits crossing device→gateway links (tier 1 of the
+    /// hierarchical aggregation; 0 when `--tiers` is flat).
+    TierDeviceSyncBits = 20,
+    /// Fleet tiers: bits crossing gateway→cloud backhaul (tier 2).
+    TierGatewaySyncBits = 21,
 }
 
 impl Counter {
     /// Every counter, in export order.
-    pub const ALL: [Counter; 20] = [
+    pub const ALL: [Counter; 22] = [
         Counter::SyncBits,
         Counter::FloatsSent,
         Counter::TrainedSamples,
@@ -82,6 +87,8 @@ impl Counter {
         Counter::Retransmits,
         Counter::RoundReplays,
         Counter::WitnessAcks,
+        Counter::TierDeviceSyncBits,
+        Counter::TierGatewaySyncBits,
     ];
 
     /// Prometheus metric name (already suffixed `_total`).
@@ -107,6 +114,8 @@ impl Counter {
             Counter::Retransmits => "scadles_retransmits_total",
             Counter::RoundReplays => "scadles_round_replays_total",
             Counter::WitnessAcks => "scadles_witness_acks_total",
+            Counter::TierDeviceSyncBits => "scadles_tier_device_sync_bits_total",
+            Counter::TierGatewaySyncBits => "scadles_tier_gateway_sync_bits_total",
         }
     }
 }
@@ -131,11 +140,17 @@ pub enum Gauge {
     /// Runtime: the witness-quorum threshold in force (acks required to
     /// commit a round; 0 when the runtime is not engaged).
     WitnessQuorum = 7,
+    /// Fleet sampling: participants drawn this round (0 when `--sample`
+    /// is full and no sampler is engaged).
+    SampledDevices = 8,
+    /// Fleet cohorts: contiguous (tier × regime) cohorts in the
+    /// struct-of-arrays store (0 outside the cohort engine).
+    CohortCount = 9,
 }
 
 impl Gauge {
     /// Every gauge, in export order.
-    pub const ALL: [Gauge; 8] = [
+    pub const ALL: [Gauge; 10] = [
         Gauge::BufferFinalSamples,
         Gauge::BufferPeakSamples,
         Gauge::BufferP50Samples,
@@ -144,6 +159,8 @@ impl Gauge {
         Gauge::RateEst,
         Gauge::VirtualTimeS,
         Gauge::WitnessQuorum,
+        Gauge::SampledDevices,
+        Gauge::CohortCount,
     ];
 
     /// Prometheus metric name.
@@ -157,6 +174,8 @@ impl Gauge {
             Gauge::RateEst => "scadles_rate_est_samples_per_s",
             Gauge::VirtualTimeS => "scadles_virtual_time_s",
             Gauge::WitnessQuorum => "scadles_witness_quorum",
+            Gauge::SampledDevices => "scadles_sampled_devices",
+            Gauge::CohortCount => "scadles_cohort_count",
         }
     }
 }
@@ -254,6 +273,15 @@ mod tests {
             "scadles_round_replays_total",
             "scadles_witness_acks_total",
             "scadles_witness_quorum",
+        ] {
+            assert!(seen.contains(name), "missing {name}");
+        }
+        // so are the fleet-scale metrics
+        for name in [
+            "scadles_tier_device_sync_bits_total",
+            "scadles_tier_gateway_sync_bits_total",
+            "scadles_sampled_devices",
+            "scadles_cohort_count",
         ] {
             assert!(seen.contains(name), "missing {name}");
         }

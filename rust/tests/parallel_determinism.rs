@@ -1045,3 +1045,124 @@ fn injection_path_is_deterministic_across_widths() {
     assert!(sequential.report.injection_bytes > 0);
     assert_outputs_identical(&sequential, &parallel, "injection devices=6");
 }
+
+#[test]
+fn full_sampling_reproduces_seed_trainer_bitwise() {
+    // The fleet-sampling acceptance anchor: `--sample 1.0` engages the
+    // whole sampler machinery — the per-round Pcg64 draw, the sampled
+    // mask AND-ed into device activity, the sampled-devices gauge, the
+    // checkpoint cursor — at its identity point (the draw returns the
+    // full fleet), and must be bitwise indistinguishable from the
+    // default engine at every pool width. Any behavioural drift the
+    // sampling layer introduced into the shared round phases would
+    // split the two. Labels differ by design (`-sample:1.0` is tagged);
+    // everything the engine computed must not.
+    let mk = |threads: usize, sampled: bool| {
+        let mut b = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(12)
+            .seed(7)
+            .preset(StreamPreset::S1)
+            .buffer_policy(BufferPolicy::Truncation)
+            .compression(CompressionConfig {
+                ratio: 0.1,
+                delta: 0.5,
+                ewma_alpha: 0.3,
+                error_feedback: true,
+            })
+            .hetero(HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 })
+            .rate_jitter(0.2)
+            .eval_every(4)
+            .worker_threads(threads);
+        if sampled {
+            b = b.sample("1.0".parse().unwrap());
+        }
+        let cfg = b.build().unwrap();
+        Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10)))
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    for threads in [1usize, 4, 8] {
+        let plain = mk(threads, false);
+        let sampled = mk(threads, true);
+        assert_outputs_identical(
+            &plain,
+            &sampled,
+            &format!("sample-1.0-vs-default threads={threads}"),
+        );
+    }
+}
+
+#[test]
+fn checkpoint_kill_and_restore_under_sampling_is_bitwise_identical() {
+    // Kill/resume under participant sampling: the sampler's RNG cursor
+    // and the sampled-set purity must survive the checkpoint round
+    // trip, and the resumed run's draws for rounds 7.. must be the
+    // draws the uninterrupted run made (they are pure in (seed, round),
+    // so the cursor is attestation — but the checkpoint layout and the
+    // config fingerprint must both cover the sampling config).
+    for threads in [1usize, 4] {
+        let cfg = ExperimentConfig::builder("mlp_c10")
+            .devices(8)
+            .rounds(12)
+            .seed(11)
+            .preset(StreamPreset::S1)
+            .buffer_policy(BufferPolicy::Truncation)
+            .compression(CompressionConfig {
+                ratio: 0.1,
+                delta: 0.5,
+                ewma_alpha: 0.3,
+                error_feedback: true,
+            })
+            .hetero(HeteroPreset::TwoTier { slow_fraction: 0.5, slowdown: 4.0 })
+            .sample("5".parse().unwrap())
+            .rate_jitter(0.2)
+            .eval_every(4)
+            .worker_threads(threads)
+            .build()
+            .unwrap();
+        let mk = || Trainer::with_backend(&cfg, Box::new(MockBackend::new(96, 10))).unwrap();
+        let uninterrupted = {
+            let mut t = mk();
+            t.run().unwrap()
+        };
+        let path = std::env::temp_dir().join(format!(
+            "scadles_ckpt_sample_{threads}_{}.ckpt",
+            std::process::id()
+        ));
+        {
+            let mut t = mk();
+            while t.rounds_completed() < 6 {
+                t.round().unwrap();
+            }
+            t.save_checkpoint(&path).unwrap();
+        }
+        let resumed = {
+            let mut t = mk();
+            t.restore_checkpoint(&path).unwrap();
+            assert_eq!(t.rounds_completed(), 6, "resumed round cursor");
+            t.run().unwrap()
+        };
+        // a sampling checkpoint must not restore into a non-sampling engine
+        {
+            let mut plain_cfg = cfg.clone();
+            plain_cfg.sample = scadles::config::SamplePreset::Full;
+            let err = Trainer::with_backend(&plain_cfg, Box::new(MockBackend::new(96, 10)))
+                .unwrap()
+                .restore_checkpoint(&path)
+                .unwrap_err()
+                .to_string();
+            assert!(
+                err.contains("different experiment config"),
+                "fingerprint must cover --sample: {err}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+        assert_outputs_identical(
+            &uninterrupted,
+            &resumed,
+            &format!("checkpoint sample=5 threads={threads}"),
+        );
+    }
+}
